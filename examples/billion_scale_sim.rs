@@ -1,0 +1,77 @@
+//! Billion-scale projection (paper Tables I & III): run the real system on
+//! the generated-*-sim datasets to calibrate, then extrapolate the paper's
+//! 6 overall-performance rows with the cost model + pipeline simulator.
+//!
+//! ```bash
+//! cargo run --release --example billion_scale_sim
+//! ```
+
+use tembed::cluster::ClusterSpec;
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::train_graph;
+use tembed::costmodel::{EpochModel, StorageCost};
+use tembed::gen::datasets;
+use tembed::pipeline::OverlapConfig;
+use tembed::util::{human_bytes, human_secs};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table I: memory cost at paper scale ==");
+    let c = StorageCost::paper_table1();
+    for (name, bytes, paper) in [
+        ("nodes", c.nodes_bytes, "3.91 GB"),
+        ("edges", c.edges_bytes, "2.24 TB"),
+        ("augmented edges", c.augmented_bytes, "22.4 TB"),
+        ("vertex embeddings", c.vertex_emb_bytes, "500.7 GB"),
+        ("context embeddings", c.context_emb_bytes, "500.7 GB"),
+    ] {
+        println!("  {name:<20} {:>12}   (paper: {paper})", human_bytes(bytes));
+    }
+
+    println!("\n== calibration: real runs on the sim-scale generated datasets ==");
+    for name in ["generated-c", "generated-b"] {
+        let spec = datasets::spec(name).unwrap();
+        let graph = spec.generate(3);
+        let cfg = TrainConfig {
+            nodes: 2,
+            gpus_per_node: 8,
+            dim: 32,
+            subparts: 4,
+            ..TrainConfig::default()
+        };
+        let (_, reports) = train_graph(&graph, cfg, 1, None)?;
+        let r = &reports[0];
+        println!(
+            "  {name:<13} {:>9} samples  sim {:>9}  wall {:>9}  {:.3e} samples/s",
+            r.samples,
+            human_secs(r.sim_secs),
+            human_secs(r.wall_secs),
+            r.sim_throughput()
+        );
+    }
+
+    println!("\n== Table III: one-epoch time, paper scale (cost-model projection) ==");
+    println!("  {:<40} {:>9} {:>11}", "row", "paper(s)", "model(s)");
+    let rows: [(&str, ClusterSpec, u64, u64, usize, f64); 5] = [
+        ("8 V100 / friendster / d=96", ClusterSpec::set_a(1, 8), 65_600_000, 1_800_000_000, 96, 3.12),
+        ("16 V100 / generated-B / d=96", ClusterSpec::set_a(2, 8), 100_000_000, 10_000_000_000, 96, 15.1),
+        ("16 V100 / generated-A / d=96", ClusterSpec::set_a(2, 8), 250_000_000, 20_000_000_000, 96, 27.9),
+        ("40 V100 / anonymized-A / d=128", ClusterSpec::set_a(5, 8), 1_050_000_000, 280_000_000_000, 128, 200.0),
+        ("40 P40  / anonymized-B / d=100", ClusterSpec::set_b(5, 8), 1_050_000_000, 300_000_000_000, 100, 1260.0),
+    ];
+    for (name, cluster, nodes, edges, dim, paper) in rows {
+        let m = EpochModel {
+            cluster,
+            epoch_samples: edges * 10,
+            dim,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        };
+        let t = m.epoch_secs(nodes, OverlapConfig::paper());
+        println!("  {name:<40} {paper:>9.1} {t:>11.1}");
+    }
+    println!("\n(absolute numbers come from the fabric model; the claim preserved is the");
+    println!(" *shape*: V100 ≫ P40, scaling with GPUs, and the ~200s / 1260s magnitudes)");
+    Ok(())
+}

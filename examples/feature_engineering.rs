@@ -1,0 +1,74 @@
+//! Feature engineering (paper Table V): embeddings feed a downstream
+//! logistic-regression task; compare the CPU LINE baseline against our
+//! GPU-cluster system after the same number of epochs (paper uses 10).
+//!
+//! ```bash
+//! cargo run --release --example feature_engineering
+//! ```
+
+use tembed::baseline::line_cpu::{LineCpuConfig, LineCpuTrainer};
+use tembed::config::TrainConfig;
+use tembed::coordinator::Trainer;
+use tembed::eval::downstream::feature_engineering_auc;
+use tembed::gen::datasets;
+
+fn main() -> anyhow::Result<()> {
+    // anonymized-A-sim: power-law + planted communities; community
+    // membership is the downstream label (the paper's internal task)
+    let spec = datasets::spec("anonymized-a").unwrap();
+    let (graph, labels) = spec.generate_with_labels(11);
+    let samples: Vec<_> = graph.edges().collect();
+    // real-world labels correlate imperfectly with structure: flip 40% of
+    // community labels to noise so the LR task sits in the paper's ~0.8
+    // AUC regime instead of saturating on the planted partition
+    let labels = {
+        let mut rng = tembed::util::Rng::new(0x1AB);
+        let c = spec.communities() as u32;
+        labels
+            .iter()
+            .map(|&l| if rng.f64() < 0.4 { rng.index(c as usize) as u32 } else { l })
+            .collect::<Vec<u32>>()
+    };
+    let epochs = 10; // "empirically enough to converge" (paper §V-C2)
+    let dim = 32;
+    println!(
+        "anonymized-A-sim: {} nodes, {} edges, {} communities",
+        graph.num_nodes(),
+        graph.num_edges(),
+        spec.communities()
+    );
+
+    // CPU embedding (LINE baseline)
+    let mut cpu = LineCpuTrainer::new(
+        graph.num_nodes(),
+        &graph.degrees(),
+        LineCpuConfig { dim, ..LineCpuConfig::default() },
+    );
+    for e in 0..epochs {
+        cpu.train_epoch(&samples, e);
+    }
+    let cpu_store = cpu.finish();
+
+    // GPU embedding (ours, simulated 8-GPU node)
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 8,
+        dim,
+        subparts: 4,
+        ..TrainConfig::default()
+    };
+    let mut gpu = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
+    for e in 0..epochs {
+        gpu.train_epoch(&mut samples.clone(), e);
+    }
+    let gpu_store = gpu.finish();
+
+    println!("\nTable V — downstream LR AUC (one-vs-rest on community 0):");
+    println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");
+    let (tr, ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5);
+    println!("{:<24} {:>12.5} {:>12.5}", "CPU Embedding (LINE)", tr, ev);
+    let (tr, ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5);
+    println!("{:<24} {:>12.5} {:>12.5}", "GPU Embedding (ours)", tr, ev);
+    println!("\npaper: CPU 0.81147/0.79996 vs GPU 0.80996/0.80008 — parity is the claim");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Link prediction (paper §V-C2, Table IV / Fig. 5): hold out 10% of
+//! edges, train ours and the GraphVite-schedule baseline on the rest, and
+//! track held-out AUC across epochs on youtube-sim and hyperlink-sim.
+//!
+//! ```bash
+//! cargo run --release --example link_prediction
+//! ```
+
+use tembed::baseline::GraphViteTrainer;
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::Driver;
+use tembed::eval::{link_auc, link_split};
+use tembed::gen::datasets;
+use tembed::graph::CsrGraph;
+use tembed::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    for name in ["youtube", "hyperlink-pld"] {
+        let spec = datasets::spec(name).unwrap();
+        let graph = spec.generate(7);
+        let mut rng = Rng::new(7 ^ 0xE);
+        let split = link_split(&graph, if name == "youtube" { 0.1 } else { 0.02 }, &mut rng);
+        let g_train = CsrGraph::from_edges(graph.num_nodes(), &split.train_edges, true);
+        println!(
+            "\n== {name}-sim: {} nodes, {} train edges, {} test pos ==",
+            graph.num_nodes(),
+            split.train_edges.len(),
+            split.test_pos.len()
+        );
+
+        let epochs = 30;
+        let cfg = TrainConfig {
+            nodes: 1,
+            gpus_per_node: 4,
+            dim: 32,
+            subparts: 4,
+            ..TrainConfig::default()
+        };
+
+        // ours: walk-augmented hierarchical training
+        let mut ours = Driver::new(&g_train, cfg.clone(), None)?;
+        // GraphVite baseline: same walk samples, PS schedule
+        let mut gv = GraphViteTrainer::new(
+            g_train.num_nodes(),
+            &g_train.degrees(),
+            TrainConfig { subparts: 1, ..cfg.clone() },
+        );
+        let engine = tembed::walk::WalkEngine::new(
+            &g_train,
+            tembed::walk::WalkConfig {
+                walk_length: cfg.walk_length,
+                walks_per_node: cfg.walks_per_node,
+                threads: cfg.threads,
+                seed: 99,
+            },
+        );
+        let walks = engine.run_epoch(0);
+        let gv_samples = tembed::walk::augment_walks(&walks, cfg.window, cfg.threads);
+
+        println!("epoch |  ours AUC |  graphvite AUC");
+        for epoch in 0..epochs {
+            ours.run_epoch(epoch);
+            gv.train_epoch(&mut gv_samples.clone(), epoch);
+            if epoch % 5 == 4 || epoch == 0 {
+                // snapshot AUC without consuming the trainers
+                let ours_store = snapshot(&ours);
+                let a_ours = link_auc(&ours_store, &split);
+                let a_gv = link_auc(&gv.store, &split);
+                println!("{epoch:>5} | {a_ours:>9.4} | {a_gv:>14.4}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot the driver's current model (contexts live on the simulated
+/// GPUs until finish(); rebuild a store view for mid-training eval).
+fn snapshot(driver: &Driver) -> tembed::embed::EmbeddingStore {
+    let mut store = driver.trainer.store.clone();
+    for g in 0..driver.trainer.plan.total_gpus() {
+        let range = driver.trainer.plan.context_range(g);
+        let ctx = driver.trainer.context_shard(g).to_vec();
+        store.checkin_context(range, &ctx);
+    }
+    store
+}

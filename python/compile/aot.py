@@ -1,0 +1,119 @@
+"""AOT-lower the L2 episode step to HLO text for the Rust PJRT runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`).
+The HLO text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Emits one artifact per shape variant plus a TSV manifest the Rust side
+parses (no JSON dependency offline):
+
+    artifacts/
+      sgns_p{P}_c{C}_b{B}_n{N}_d{D}.hlo.txt
+      score_p{P}_c{C}_b{B}_d{D}.hlo.txt
+      manifest.tsv      # kind  P  C  B  N  D  filename
+
+Run via `make artifacts` (a no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (P, C, B, N, d) variants compiled ahead of time; negatives are shared
+# per GROUP_SIZE samples so the vn input is [B/GROUP_SIZE * N]. The Rust
+# runtime picks the smallest variant that fits a shard and pads. Keep this
+# list small: each variant costs one XLA compile at tembed startup.
+VARIANTS = [
+    # tiny: unit tests and the quickstart example
+    (1024, 1024, 256, 5, 16),
+    # small: youtube-sim scale shards
+    (8192, 8192, 1024, 5, 32),
+    # medium: hyperlink/friendster-sim shards
+    (32768, 32768, 2048, 5, 64),
+    # large: paper-dimension (d=128) shards, generated/anonymized-sim
+    (65536, 65536, 4096, 5, 128),
+]
+
+# Link-prediction scorer variants: (P, C, B, d).
+SCORE_VARIANTS = [
+    (1024, 1024, 256, 16),
+    (8192, 8192, 1024, 32),
+    (32768, 32768, 2048, 64),
+    (65536, 65536, 4096, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(p, c, b, n, d) -> str:
+    args = model.make_example_args(p, c, b, n, d)
+    # donate the shard buffers: lets XLA update embeddings in place.
+    lowered = jax.jit(model.episode_step, donate_argnums=(0, 1)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_score(p, c, b, d) -> str:
+    import jax.numpy as jnp
+
+    args = (
+        jax.ShapeDtypeStruct((p, d), jnp.float32),
+        jax.ShapeDtypeStruct((c, d), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    lowered = jax.jit(model.score_edges).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ns = ap.parse_args()
+    out_dir = ns.out
+    if out_dir.endswith(".hlo.txt"):  # Makefile passes the sentinel file
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    rows = []
+    for p, c, b, n, d in VARIANTS:
+        name = f"sgns_p{p}_c{c}_b{b}_n{n}_d{d}.hlo.txt"
+        text = lower_step(p, c, b, n, d)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        rows.append(("sgns", p, c, b, n, d, name))
+        print(f"wrote {name} ({len(text)} chars)")
+    for p, c, b, d in SCORE_VARIANTS:
+        name = f"score_p{p}_c{c}_b{b}_d{d}.hlo.txt"
+        text = lower_score(p, c, b, d)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        rows.append(("score", p, c, b, 0, d, name))
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# kind\tP\tC\tB\tN\tD\tfile\n")
+        for kind, p, c, b, n, d, name in rows:
+            f.write(f"{kind}\t{p}\t{c}\t{b}\t{n}\t{d}\t{name}\n")
+    # sentinel for make
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("see manifest.tsv\n")
+    print(f"manifest: {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

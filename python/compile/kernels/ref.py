@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the grouped SGNS kernel (no Pallas). Ground truth
+for the L1 pytest suite and, transitively (via the PJRT equivalence
+integration test), for the Rust backends."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgns_grads_ref(vb, cp, cn):
+    """Reference grouped shared-negative SGNS gradients.
+
+    Same contract as `sgns.sgns_grads`: vb/cp are [B, d], cn is [G, N, d]
+    with samples `g*(B/G)..(g+1)*(B/G)` sharing group g's negatives.
+    """
+    b, d = vb.shape
+    g, n, _ = cn.shape
+    gs = b // g
+    vbg = vb.reshape(g, gs, d)
+    pos_logit = jnp.sum(vb * cp, axis=-1)
+    neg_logit = jnp.einsum("gsd,gnd->gsn", vbg, cn)
+    g_pos = jax.nn.sigmoid(pos_logit) - 1.0
+    g_neg = jax.nn.sigmoid(neg_logit)
+    gv = g_pos[:, None] * cp + jnp.einsum("gsn,gnd->gsd", g_neg, cn).reshape(b, d)
+    gcp = g_pos[:, None] * vb
+    gcn = jnp.einsum("gsn,gsd->gnd", g_neg, vbg)
+    loss = -jax.nn.log_sigmoid(pos_logit) - jnp.sum(
+        jax.nn.log_sigmoid(-neg_logit), axis=-1
+    ).reshape(b)
+    return gv, gcp, gcn, loss
+
+
+def sgns_loss_ref(vb, cp, cn):
+    """Scalar total loss — used to autodiff-check the hand-derived grads."""
+    b, d = vb.shape
+    g, n, _ = cn.shape
+    vbg = vb.reshape(g, b // g, d)
+    pos_logit = jnp.sum(vb * cp, axis=-1)
+    neg_logit = jnp.einsum("gsd,gnd->gsn", vbg, cn)
+    return jnp.sum(-jax.nn.log_sigmoid(pos_logit)) + jnp.sum(
+        -jax.nn.log_sigmoid(-neg_logit)
+    )
+
+
+def episode_step_ref(vertex, context, u_idx, vp_idx, vn_idx, lr, groups):
+    """Pure-jnp reference for the full L2 episode step (see model.py).
+
+    vn_idx is flat [G*N]; `groups` = G.
+    """
+    d = vertex.shape[1]
+    vb = vertex[u_idx]
+    cp = context[vp_idx]
+    cn = context[vn_idx].reshape(groups, -1, d)
+    gv, gcp, gcn, loss = sgns_grads_ref(vb, cp, cn)
+    new_vertex = vertex.at[u_idx].add(-lr * gv)
+    new_context = context.at[vp_idx].add(-lr * gcp)
+    new_context = new_context.at[vn_idx].add(-lr * gcn.reshape(-1, d))
+    return new_vertex, new_context, jnp.sum(loss)

@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernel: group-shared-negative SGNS gradient step.
+
+The paper's GPU hot loop trains skip-gram-with-negative-sampling edge
+samples: for each positive edge (u, v) and N negative contexts, compute
+sigmoid-dot-product gradients and update both embedding matrices.
+
+Hardware adaptation (CUDA -> TPU, see DESIGN.md §Hardware-Adaptation):
+the CUDA kernel gives one threadblock per sample and does warp-level dot
+products in shared memory. On TPU the win is to *share negatives within a
+group of GROUP_SIZE samples* (the Ji et al. / BlazingText level-3 BLAS
+formulation) so the hot loop becomes batched MXU matmuls
+
+    neg_logits[g] = Vb[g] @ Cneg[g].T        # [gs, N] per group
+    gV_neg[g]     = Gneg[g] @ Cneg[g]        # [gs, d]
+    gCneg[g]      = Gneg[g].T @ Vb[g]        # [N, d]
+
+while keeping the accumulated update on any single negative row bounded by
+GROUP_SIZE samples (sharing across the *whole* minibatch concentrates a
+B-fold gradient on N rows and detonates the context matrix — measured in
+EXPERIMENTS.md §Perf).
+
+The kernel is pure w.r.t. its refs: it consumes gathered blocks and emits
+*gradients*; gather/scatter-add (duplicate-index safe) live in Layer 2.
+B-tiles stream through VMEM; each tile's group-negative block rides along
+(gb, N, d per tile ≈ 8·5·128·4B = 20 KiB), so no cross-tile accumulation
+is needed.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpret path and the
+pure-jnp oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples per negative-sharing group. Must match
+# rust/src/embed/sgns.rs::GROUP_SIZE.
+GROUP_SIZE = 32
+
+
+def _sgns_kernel(vb_ref, cp_ref, cn_ref, gv_ref, gcp_ref, gcn_ref, loss_ref):
+    """One B-tile of the grouped SGNS gradient computation.
+
+    Refs (VMEM blocks):
+      vb_ref  [bb, d]      vertex embeddings of the tile's samples
+      cp_ref  [bb, d]      positive context embeddings (aligned with vb)
+      cn_ref  [gb, n, d]   per-group shared negative context embeddings
+    Outputs:
+      gv_ref   [bb, d]     dLoss/dVb
+      gcp_ref  [bb, d]     dLoss/dCpos
+      gcn_ref  [gb, n, d]  dLoss/dCneg (per group; no cross-tile overlap)
+      loss_ref [bb]        per-sample negative-sampling loss
+    """
+    vb = vb_ref[...]
+    cp = cp_ref[...]
+    cn = cn_ref[...]
+    bb, d = vb.shape
+    gb, n, _ = cn.shape
+    gs = bb // gb
+    vbg = vb.reshape(gb, gs, d)
+
+    # Positive pair: row-wise dot product (VPU).
+    pos_logit = jnp.sum(vb * cp, axis=-1)  # [bb]
+    # Negative pairs: batched MXU matmul against each group's block.
+    neg_logit = jnp.einsum(
+        "gsd,gnd->gsn", vbg, cn, preferred_element_type=jnp.float32
+    )  # [gb, gs, n]
+
+    # d/dx -log sigmoid(x)  = sigmoid(x) - 1   (positive, label 1)
+    # d/dx -log sigmoid(-x) = sigmoid(x)       (negative, label 0)
+    g_pos = jax.nn.sigmoid(pos_logit) - 1.0  # [bb]
+    g_neg = jax.nn.sigmoid(neg_logit)  # [gb, gs, n]
+
+    gv_neg = jnp.einsum(
+        "gsn,gnd->gsd", g_neg, cn, preferred_element_type=jnp.float32
+    ).reshape(bb, d)
+    gv_ref[...] = g_pos[:, None] * cp + gv_neg
+    gcp_ref[...] = g_pos[:, None] * vb
+    gcn_ref[...] = jnp.einsum(
+        "gsn,gsd->gnd", g_neg, vbg, preferred_element_type=jnp.float32
+    )
+    loss_ref[...] = -jax.nn.log_sigmoid(pos_logit) - jnp.sum(
+        jax.nn.log_sigmoid(-neg_logit), axis=-1
+    ).reshape(bb)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sgns_grads(vb, cp, cn, *, block_b: int = 256):
+    """Grouped shared-negative SGNS gradients via the Pallas kernel.
+
+    Args:
+      vb: [B, d] f32 — vertex embeddings for the minibatch.
+      cp: [B, d] f32 — positive context embeddings.
+      cn: [G, N, d] f32 — per-group negative context embeddings; samples
+        `g*(B/G) .. (g+1)*(B/G)` share group g's negatives.
+      block_b: B-tile size streamed through VMEM (multiple of B/G).
+
+    Returns:
+      (gv [B,d], gcp [B,d], gcn [G,N,d], loss [B]).
+    """
+    b, d = vb.shape
+    g, n, _ = cn.shape
+    if b % g != 0:
+        raise ValueError(f"batch {b} not divisible by groups {g}")
+    gs = b // g
+    bb = min(block_b, b)
+    if b % bb != 0 or bb % gs != 0:
+        raise ValueError(f"block_b {bb} must tile batch {b} in group multiples of {gs}")
+    gb = bb // gs  # groups per tile
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),  # vb: stream B-tiles
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),  # cp: stream B-tiles
+            pl.BlockSpec((gb, n, d), lambda i: (i, 0, 0)),  # tile's groups
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((gb, n, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((g, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(vb, cp, cn)
+
+
+def vmem_footprint_bytes(block_b: int, n: int, d: int, gs: int = GROUP_SIZE) -> int:
+    """Estimated VMEM residency of one grid step (f32), for DESIGN/EXPERIMENTS.
+
+    in: vb + cp tiles and the tile's negative groups; out mirrors in, plus
+    the loss tile. Double-buffered inputs (x2) per the standard pipeline.
+    """
+    tile = block_b * d * 4
+    neg = (block_b // gs) * n * d * 4
+    return 2 * (2 * tile + neg) + (2 * tile + neg) + 2 * block_b * 4
+
+
+def mxu_utilization_estimate(block_b: int, n: int, d: int) -> float:
+    """Fraction of kernel FLOPs on the MXU (batched matmuls) vs VPU.
+
+    Matmul FLOPs: 3 einsums of 2·bb·n·d each (grouping changes the shapes,
+    not the totals). VPU FLOPs: row-dot (2·bb·d), sigmoids/log-sigmoids
+    (~10 flops/elt on bb + 2·bb·n elts), scaling adds (~4·bb·d).
+    """
+    mxu = 3 * 2 * block_b * n * d
+    vpu = 2 * block_b * d + 10 * (block_b + 2 * block_b * n) + 4 * block_b * d
+    return mxu / (mxu + vpu)

@@ -1,0 +1,82 @@
+"""Layer-2 JAX model: one SGNS episode training step over local shards.
+
+This is the computation each simulated GPU executes per minibatch on the
+Rust hot path (as an AOT-compiled PJRT executable — Python never runs at
+training time):
+
+    vb  = vertex_shard[u_idx]          # gather the rotating vertex sub-part
+    cp  = context_shard[vp_idx]        # gather positive contexts (pinned shard)
+    cn  = context_shard[vn_idx]        # gather per-group shared negatives
+    g*  = sgns_grads(vb, cp, cn)       # Layer-1 Pallas kernel
+    vertex_shard  .at[u_idx ].add(-lr * gv)    # scatter-add (dup-index safe)
+    context_shard .at[vp_idx].add(-lr * gcp)
+                  .at[vn_idx].add(-lr * gcn)
+
+Shapes are fixed at AOT time per variant (P, C, B, N, d); negatives are
+shared per GROUP_SIZE samples, so vn_idx is [B/GROUP_SIZE * N]. The Rust
+side pads shards/batches to the variant it selected (see
+rust/src/runtime/): indices are i32 and *local* to the shard, the
+coordinator owns the global->local mapping, and padded samples point at a
+sacrificial zeroed row (P-1 / C-1) which makes their gradient exactly zero
+on real rows and their loss exactly (1+N)·ln2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sgns import sgns_grads, GROUP_SIZE
+
+
+def episode_step(vertex, context, u_idx, vp_idx, vn_idx, lr):
+    """One minibatch SGNS update against local shards.
+
+    Args:
+      vertex:  [P, d] f32 — vertex-embedding sub-part resident on this GPU.
+      context: [C, d] f32 — context-embedding shard pinned on this GPU.
+      u_idx:   [B] i32 — local vertex row per sample.
+      vp_idx:  [B] i32 — local positive-context row per sample.
+      vn_idx:  [B//GROUP_SIZE * N] i32 — per-group negative-context rows.
+      lr:      f32 scalar.
+
+    Returns:
+      (new_vertex [P,d], new_context [C,d], loss_sum f32)
+    """
+    d = vertex.shape[1]
+    b = u_idx.shape[0]
+    groups = max(b // GROUP_SIZE, 1)
+    vb = jnp.take(vertex, u_idx, axis=0)
+    cp = jnp.take(context, vp_idx, axis=0)
+    cn = jnp.take(context, vn_idx, axis=0).reshape(groups, -1, d)
+    gv, gcp, gcn, loss = sgns_grads(vb, cp, cn)
+    new_vertex = vertex.at[u_idx].add(-lr * gv)
+    new_context = context.at[vp_idx].add(-lr * gcp)
+    new_context = new_context.at[vn_idx].add(-lr * gcn.reshape(-1, d))
+    return new_vertex, new_context, jnp.sum(loss)
+
+
+def score_edges(vertex, context, u_idx, v_idx):
+    """Dot-product edge scorer used by link-prediction evaluation.
+
+    Args: vertex [P,d], context [C,d], u_idx [B] i32, v_idx [B] i32.
+    Returns: [B] f32 logits.
+    """
+    vb = jnp.take(vertex, u_idx, axis=0)
+    cb = jnp.take(context, v_idx, axis=0)
+    return jnp.sum(vb * cb, axis=-1)
+
+
+def make_example_args(p, c, b, n, d):
+    """ShapeDtypeStructs for AOT lowering of episode_step."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    groups = max(b // GROUP_SIZE, 1)
+    return (
+        jax.ShapeDtypeStruct((p, d), f32),
+        jax.ShapeDtypeStruct((c, d), f32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((b,), i32),
+        jax.ShapeDtypeStruct((groups * n,), i32),
+        jax.ShapeDtypeStruct((), f32),
+    )

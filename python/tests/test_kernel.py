@@ -1,0 +1,132 @@
+"""Pallas grouped-SGNS kernel vs pure-jnp oracle — the core L1 signal.
+
+hypothesis sweeps batch/group/negative/dim shapes and block sizes; every
+case asserts allclose between the kernel, the oracle, and (for gradients)
+jax autodiff of the scalar loss.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sgns_grads_ref, sgns_loss_ref
+from compile.kernels.sgns import (
+    GROUP_SIZE,
+    mxu_utilization_estimate,
+    sgns_grads,
+    vmem_footprint_bytes,
+)
+
+
+def _mk(b, groups, n, d, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    r = lambda k, *s: jax.random.normal(k, s, dtype=jnp.float32) * 0.3
+    return r(k1, b, d), r(k2, b, d), r(k3, groups, n, d)
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize(
+        "b,groups,n,d",
+        [(8, 2, 4, 8), (256, 8, 5, 16), (64, 2, 5, 24), (32, 1, 7, 8)],
+    )
+    def test_matches_ref(self, b, groups, n, d):
+        vb, cp, cn = _mk(b, groups, n, d)
+        got = sgns_grads(vb, cp, cn, block_b=b)
+        want = sgns_grads_ref(vb, cp, cn)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5)
+
+    def test_multi_tile_matches_single_tile(self):
+        """Grid over B-tiles must equal the single-tile run (per-tile
+        negative blocks ride along with their groups)."""
+        vb, cp, cn = _mk(128, 4, 5, 8, seed=3)
+        one = sgns_grads(vb, cp, cn, block_b=128)
+        four = sgns_grads(vb, cp, cn, block_b=32)
+        for a, b_ in zip(one, four):
+            np.testing.assert_allclose(a, b_, rtol=1e-5, atol=1e-5)
+
+    def test_grads_match_autodiff(self):
+        """Hand-derived kernel grads == jax.grad of the scalar loss."""
+        vb, cp, cn = _mk(32, 4, 6, 16, seed=7)
+        gv, gcp, gcn, _ = sgns_grads(vb, cp, cn, block_b=32)
+        agv, agcp, agcn = jax.grad(sgns_loss_ref, argnums=(0, 1, 2))(vb, cp, cn)
+        np.testing.assert_allclose(gv, agv, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(gcp, agcp, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(gcn, agcn, rtol=2e-5, atol=2e-5)
+
+    def test_loss_positive(self):
+        vb, cp, cn = _mk(64, 2, 5, 16, seed=11)
+        _, _, _, loss = sgns_grads(vb, cp, cn, block_b=64)
+        assert bool(jnp.all(loss > 0))
+
+    def test_bad_shapes_raise(self):
+        vb, cp, cn = _mk(100, 3, 5, 16)  # 100 % 3 != 0
+        with pytest.raises(ValueError):
+            sgns_grads(vb, cp, cn, block_b=100)
+        vb, cp, cn = _mk(64, 2, 5, 16)
+        with pytest.raises(ValueError):
+            sgns_grads(vb, cp, cn, block_b=48)  # not group-aligned
+
+    def test_group_isolation(self):
+        """Group g's negatives must not influence group h's gradients."""
+        vb, cp, cn = _mk(64, 2, 5, 8, seed=13)
+        base = sgns_grads(vb, cp, cn, block_b=64)
+        cn2 = cn.at[1].set(cn[1] * 3.0)  # perturb only group 1's negatives
+        pert = sgns_grads(vb, cp, cn2, block_b=64)
+        # group 0 samples (first 32 rows) unchanged
+        np.testing.assert_array_equal(base[0][:32], pert[0][:32])
+        np.testing.assert_array_equal(base[3][:32], pert[3][:32])
+        # group 1 affected
+        assert not np.allclose(base[0][32:], pert[0][32:])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    groups_per_tile=st.integers(1, 3),
+    gs=st.sampled_from([4, 8, 16]),
+    n=st.integers(1, 12),
+    d=st.sampled_from([4, 8, 16, 32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_hypothesis_shapes(tiles, groups_per_tile, gs, n, d, seed):
+    """Property: kernel == oracle across the (B, G, N, d, block) space."""
+    bb = groups_per_tile * gs
+    b = tiles * bb
+    groups = b // gs
+    vb, cp, cn = _mk(b, groups, n, d, seed=seed)
+    got = sgns_grads(vb, cp, cn, block_b=bb)
+    want = sgns_grads_ref(vb, cp, cn)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.01, 10.0), seed=st.integers(0, 2**16))
+def test_kernel_hypothesis_magnitudes(scale, seed):
+    """Property: numerically stable across embedding magnitudes (saturating
+    sigmoids must not produce NaN/inf)."""
+    vb, cp, cn = _mk(32, 2, 5, 16, seed=seed)
+    got = sgns_grads(vb * scale, cp * scale, cn * scale, block_b=32)
+    for g in got:
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+class TestPerfEstimates:
+    def test_vmem_fits_v100_analogue(self):
+        """Large variant's working set must fit a 16 MiB VMEM budget."""
+        assert vmem_footprint_bytes(256, 5, 128) < 16 * 1024 * 1024
+
+    def test_mxu_dominates_at_paper_negatives(self):
+        assert mxu_utilization_estimate(256, 5, 128) > 0.6
+
+    def test_mxu_grows_with_dim(self):
+        assert mxu_utilization_estimate(256, 5, 128) > mxu_utilization_estimate(
+            256, 5, 16
+        )
+
+    def test_group_size_constant_matches_rust(self):
+        # rust/src/embed/sgns.rs::GROUP_SIZE — keep in lockstep
+        assert GROUP_SIZE == 32

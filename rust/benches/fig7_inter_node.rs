@@ -1,0 +1,63 @@
+//! Bench: paper Fig. 7 — inter-node scalability: 8 GPUs (1 node) vs
+//! 16 GPUs (2 nodes) on generated-A-sim and generated-B-sim.
+//! The claim: 1.67x (generated-A) and 1.85x (generated-B) speedup.
+
+use tembed::cluster::ClusterSpec;
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::train_graph;
+use tembed::costmodel::EpochModel;
+use tembed::gen::datasets;
+use tembed::pipeline::OverlapConfig;
+use tembed::util::human_secs;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Fig 7 (sim-scale real runs) — epoch sim time, 1-node-8GPU vs 2-node-16GPU");
+    println!("{:<14} {:>12} {:>12} {:>9}", "dataset", "8 GPUs", "16 GPUs", "speedup");
+    for name in ["generated-b", "generated-a"] {
+        let spec = datasets::spec(name).unwrap();
+        let graph = spec.generate(5);
+        let mut times = Vec::new();
+        for nodes in [1usize, 2] {
+            let cfg = TrainConfig {
+                nodes,
+                gpus_per_node: 8,
+                dim: 32,
+                subparts: 4,
+                ..TrainConfig::default()
+            };
+            let (_, reports) = train_graph(&graph, cfg, 2, None)?;
+            let avg = reports.iter().map(|r| r.sim_secs).sum::<f64>() / reports.len() as f64;
+            times.push(avg);
+        }
+        println!(
+            "{:<14} {:>12} {:>12} {:>8.2}x",
+            name,
+            human_secs(times[0]),
+            human_secs(times[1]),
+            times[0] / times[1]
+        );
+    }
+
+    println!("\n# Fig 7 (paper scale, cost model) — paper: generated-B 1.85x, generated-A 1.67x");
+    for (name, nodes_count, edges, paper) in [
+        ("generated-b", 100_000_000u64, 10_000_000_000u64, 1.85),
+        ("generated-a", 250_000_000, 20_000_000_000, 1.67),
+    ] {
+        let mk = |n: usize| EpochModel {
+            cluster: ClusterSpec::set_a(n, 8),
+            epoch_samples: edges * 10,
+            dim: 96,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        };
+        let t8 = mk(1).epoch_secs(nodes_count, OverlapConfig::paper());
+        let t16 = mk(2).epoch_secs(nodes_count, OverlapConfig::paper());
+        println!(
+            "{:<14} 8gpu {:>8.1}s  16gpu {:>8.1}s  speedup {:.2}x (paper {paper}x)",
+            name, t8, t16, t8 / t16
+        );
+    }
+    Ok(())
+}

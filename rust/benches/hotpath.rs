@@ -1,0 +1,150 @@
+//! Hot-path microbenchmarks (the §Perf harness): wallclock throughput of
+//! the L3 pieces the profile says matter — the native SGNS step, the
+//! PJRT step (when artifacts exist), minibatch assembly, negative
+//! sampling, walk generation, and episode bucketing.
+
+use std::time::Instant;
+
+use tembed::embed::sgns::{groups_for, NativeBackend, StepBackend};
+use tembed::sample::{make_minibatches, NegativeSampler};
+use tembed::util::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>12.3} us/iter", per * 1e6);
+    per
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("# hotpath microbenches (wallclock on this testbed)\n");
+
+    // --- native SGNS step: batch 1024, d in {32, 128}, negs 5
+    for d in [32usize, 128] {
+        let rows = 8192;
+        let mut vertex: Vec<f32> = (0..rows * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+        let mut context = vertex.clone();
+        let b = 1024;
+        let u: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
+        let vp: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
+        let vn: Vec<i32> = (0..groups_for(b) * 5).map(|_| rng.index(rows) as i32).collect();
+        let mut be = NativeBackend::new();
+        let per = bench(&format!("native sgns step b=1024 d={d} n=5"), 50, || {
+            be.step(&mut vertex, &mut context, d, &u, &vp, &vn, 5, b, 0.025);
+        });
+        println!(
+            "{:<44} {:>12.2e} samples/s",
+            "  -> throughput", b as f64 / per
+        );
+    }
+
+    // --- PJRT step at the same shape (three-layer path)
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.tsv").exists() {
+        let rt = tembed::runtime::Runtime::open(artifacts).expect("runtime");
+        for d in [32usize] {
+            let rows = 4000;
+            let mut stepper = rt.stepper(rows, rows, d).expect("stepper");
+            let (_, _, b, n, _) = stepper.shapes();
+            let mut vertex: Vec<f32> =
+                (0..rows * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+            let mut context = vertex.clone();
+            let u: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
+            let vp: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
+            let vn: Vec<i32> =
+                (0..groups_for(b) * n).map(|_| rng.index(rows) as i32).collect();
+            let per = bench(&format!("pjrt sgns step b={b} d={d} n={n}"), 20, || {
+                stepper.step(&mut vertex, &mut context, d, &u, &vp, &vn, n, b, 0.025);
+            });
+            println!(
+                "{:<44} {:>12.2e} samples/s",
+                "  -> throughput", b as f64 / per
+            );
+        }
+        // block execution: device-resident shard chaining across 8
+        // minibatches vs 8 independent per-call steps
+        for d in [32usize] {
+            let rows = 4000;
+            let mut stepper = rt.stepper(rows, rows, d).expect("stepper");
+            let (_, _, b, n, _) = stepper.shapes();
+            let mut vertex: Vec<f32> =
+                (0..rows * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+            let mut context = vertex.clone();
+            let mbs: Vec<tembed::sample::MiniBatch> = (0..8)
+                .map(|_| tembed::sample::MiniBatch {
+                    u_local: (0..b).map(|_| rng.index(rows) as i32).collect(),
+                    v_local: (0..b).map(|_| rng.index(rows) as i32).collect(),
+                    real: b,
+                })
+                .collect();
+            let vns: Vec<Vec<i32>> = (0..8)
+                .map(|_| {
+                    (0..groups_for(b) * n).map(|_| rng.index(rows) as i32).collect()
+                })
+                .collect();
+            let per = bench(&format!("pjrt step_block 8x b={b} d={d} (chained)"), 10, || {
+                stepper.step_block(&mut vertex, &mut context, d, &mbs, &vns, n, 0.025);
+            });
+            println!(
+                "{:<44} {:>12.2e} samples/s",
+                "  -> throughput", (8 * b) as f64 / per
+            );
+        }
+    } else {
+        println!("(pjrt step skipped — run `make artifacts`)");
+    }
+
+    // --- minibatch assembly
+    let block: Vec<(u32, u32)> = (0..100_000)
+        .map(|_| (rng.index(4096) as u32, rng.index(4096) as u32))
+        .collect();
+    bench("make_minibatches 100k samples b=1024", 50, || {
+        let mbs = make_minibatches(&block, 1024, 0, 0, 0, 0);
+        std::hint::black_box(mbs.len());
+    });
+
+    // --- negative sampling
+    let degrees: Vec<u32> = (0..100_000).map(|_| rng.index(500) as u32 + 1).collect();
+    let sampler = NegativeSampler::new(&degrees, 0..100_000);
+    let mut srng = Rng::new(2);
+    bench("negative sampler: 160 draws (1 minibatch)", 1000, || {
+        std::hint::black_box(sampler.sample_local(160, &mut srng));
+    });
+
+    // --- walk engine throughput
+    let spec = tembed::gen::datasets::spec("youtube").unwrap();
+    let graph = spec.generate(1);
+    let engine = tembed::walk::WalkEngine::new(
+        &graph,
+        tembed::walk::WalkConfig::default(),
+    );
+    let t = Instant::now();
+    let walks = engine.run_epoch(0);
+    let wps = walks.num_walks() as f64 / t.elapsed().as_secs_f64();
+    println!("{:<44} {wps:>12.2e} walks/s", "walk engine (youtube-sim)");
+
+    // --- augmentation
+    let t = Instant::now();
+    let samples = tembed::walk::augment_walks(&walks, 3, 8);
+    println!(
+        "{:<44} {:>12.2e} samples/s",
+        "augmentation (window 3)",
+        samples.len() as f64 / t.elapsed().as_secs_f64()
+    );
+
+    // --- episode bucketing
+    let plan = tembed::partition::HierarchyPlan::new(2, 8, 4, graph.num_nodes());
+    let t = Instant::now();
+    let pool = tembed::sample::EpisodePool::build(&plan, &samples);
+    println!(
+        "{:<44} {:>12.2e} samples/s",
+        "episode 2D bucketing",
+        pool.total_samples() as f64 / t.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,40 @@
+//! Bench: paper Table I — memory cost of topology + embedding data.
+//!
+//! Analytic (exact byte formulas) plus a measured cross-check: generate
+//! each sim dataset and compare measured CSR bytes against the model.
+
+use tembed::costmodel::StorageCost;
+use tembed::gen::datasets;
+use tembed::util::human_bytes;
+
+fn main() {
+    println!("# Table I — memory cost (paper network: |V|=1.05B, |E|=300B, d=128)");
+    let c = StorageCost::paper_table1();
+    println!("{:<22} {:>12} {:>12}", "data", "ours", "paper");
+    for (name, bytes, paper) in [
+        ("nodes", c.nodes_bytes, "3.91 GB"),
+        ("edges", c.edges_bytes, "2.24 TB"),
+        ("augmented edges", c.augmented_bytes, "22.4 TB"),
+        ("vertex embeddings", c.vertex_emb_bytes, "500.7 GB"),
+        ("context embeddings", c.context_emb_bytes, "500.7 GB"),
+    ] {
+        println!("{:<22} {:>12} {:>12}", name, human_bytes(bytes), paper);
+    }
+
+    println!("\n# cross-check: measured CSR storage on sim datasets vs model");
+    println!("{:<15} {:>12} {:>12} {:>8}", "dataset", "measured", "model", "ratio");
+    for name in ["youtube", "kron", "delaunay"] {
+        let spec = datasets::spec(name).unwrap();
+        let g = spec.generate(1);
+        let measured = g.storage_bytes();
+        // model: offsets 8B/node + targets 4B/edge
+        let model = (g.num_nodes() as u64 + 1) * 8 + g.num_edges() * 4;
+        println!(
+            "{:<15} {:>12} {:>12} {:>8.3}",
+            name,
+            human_bytes(measured),
+            human_bytes(model),
+            measured as f64 / model as f64
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Bench: paper Table III — overall one-epoch performance.
+//!
+//! Two parts:
+//!  1. real runs on the sim-scale datasets across the paper's cluster
+//!     shapes (simulated fabric, real training), reporting sim epoch time;
+//!  2. the paper-scale rows via the calibrated cost model (the graphs the
+//!     paper used don't fit any testbed — see DESIGN.md §Substitutions).
+
+use tembed::baseline::GraphViteTrainer;
+use tembed::cluster::ClusterSpec;
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::train_graph;
+use tembed::costmodel::EpochModel;
+use tembed::gen::datasets;
+use tembed::pipeline::OverlapConfig;
+use tembed::util::human_secs;
+
+fn main() -> anyhow::Result<()> {
+    println!("# Table III (top) — sim-scale real runs, one epoch");
+    println!(
+        "{:<14} {:>6} {:>4} {:>10} {:>11} {:>11}",
+        "dataset", "gpus", "dim", "samples", "sim time", "wall time"
+    );
+    for (name, nodes, gpus, dim) in [
+        ("friendster", 1usize, 8usize, 32usize),
+        ("generated-b", 2, 8, 32),
+        ("generated-a", 2, 8, 32),
+        ("anonymized-a", 5, 8, 32),
+    ] {
+        let spec = datasets::spec(name).unwrap();
+        let graph = spec.generate(5);
+        let cfg = TrainConfig {
+            nodes,
+            gpus_per_node: gpus,
+            dim,
+            subparts: 4,
+            ..TrainConfig::default()
+        };
+        let (_, reports) = train_graph(&graph, cfg, 1, None)?;
+        let r = &reports[0];
+        println!(
+            "{:<14} {:>6} {:>4} {:>10} {:>11} {:>11}",
+            name,
+            nodes * gpus,
+            dim,
+            r.samples,
+            human_secs(r.sim_secs),
+            human_secs(r.wall_secs)
+        );
+    }
+
+    println!("\n# GraphVite head-to-head on friendster-sim (8 GPUs, paper: 45.04 vs 3.12 s)");
+    let spec = datasets::spec("friendster").unwrap();
+    let graph = spec.generate(5);
+    let samples: Vec<_> = graph.edges().collect();
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 8,
+        dim: 32,
+        subparts: 4,
+        episode_size: 4_000_000,
+        ..TrainConfig::default()
+    };
+    let mut ours =
+        tembed::coordinator::Trainer::new(graph.num_nodes(), &graph.degrees(), cfg.clone(), None)?;
+    let mut gv = GraphViteTrainer::new(
+        graph.num_nodes(),
+        &graph.degrees(),
+        TrainConfig { subparts: 1, ..cfg },
+    );
+    let r_ours = ours.train_epoch(&mut samples.clone(), 0);
+    let r_gv = gv.train_epoch(&mut samples.clone(), 0);
+    println!(
+        "ours {:>10}   graphvite {:>10}   speedup {:.1}x (paper: 14.4x)",
+        human_secs(r_ours.sim_secs),
+        human_secs(r_gv.sim_secs),
+        r_gv.sim_secs / r_ours.sim_secs
+    );
+
+    println!("\n# Table III (bottom) — paper-scale rows via cost model");
+    println!("{:<42} {:>9} {:>10}", "row", "paper(s)", "model(s)");
+    let rows: [(&str, ClusterSpec, u64, u64, usize, f64); 5] = [
+        ("8 V100 / friendster / d=96", ClusterSpec::set_a(1, 8), 65_600_000, 1_800_000_000, 96, 3.12),
+        ("16 V100 / generated-B / d=96", ClusterSpec::set_a(2, 8), 100_000_000, 10_000_000_000, 96, 15.1),
+        ("16 V100 / generated-A / d=96", ClusterSpec::set_a(2, 8), 250_000_000, 20_000_000_000, 96, 27.9),
+        ("40 V100 / anonymized-A / d=128", ClusterSpec::set_a(5, 8), 1_050_000_000, 280_000_000_000, 128, 200.0),
+        ("40 P40  / anonymized-B / d=100", ClusterSpec::set_b(5, 8), 1_050_000_000, 300_000_000_000, 100, 1260.0),
+    ];
+    for (name, cluster, nodes, edges, dim, paper) in rows {
+        let m = EpochModel {
+            cluster,
+            epoch_samples: edges * 10,
+            dim,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        };
+        let t = m.epoch_secs(nodes, OverlapConfig::paper());
+        println!("{:<42} {:>9.1} {:>10.1}", name, paper, t);
+    }
+    println!("\n# shape checks: generated-A/B runtime ratio (paper: +85% for 2.5x edges)");
+    let b = EpochModel {
+        cluster: ClusterSpec::set_a(2, 8),
+        epoch_samples: 100_000_000_000,
+        dim: 96,
+        negatives: 5,
+        batch: 4096,
+        subparts: 4,
+        episodes: 1,
+    };
+    let a = EpochModel { epoch_samples: 200_000_000_000, ..b.clone() };
+    let tb = b.epoch_secs(100_000_000, OverlapConfig::paper());
+    let ta = a.epoch_secs(250_000_000, OverlapConfig::paper());
+    println!("generated-B {tb:.1}s -> generated-A {ta:.1}s: +{:.0}%", (ta / tb - 1.0) * 100.0);
+    Ok(())
+}

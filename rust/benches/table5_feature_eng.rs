@@ -1,0 +1,59 @@
+//! Bench: paper Table V — feature-engineering AUC, CPU embedding (LINE)
+//! vs GPU embedding (ours), after the same 10 epochs. The claim: parity
+//! on train AUC (within 0.1%) and eval AUC.
+
+use tembed::baseline::line_cpu::{LineCpuConfig, LineCpuTrainer};
+use tembed::config::TrainConfig;
+use tembed::coordinator::Trainer;
+use tembed::eval::downstream::feature_engineering_auc;
+use tembed::gen::datasets;
+
+fn main() -> anyhow::Result<()> {
+    let spec = datasets::spec("anonymized-a").unwrap();
+    let (graph, labels) = spec.generate_with_labels(11);
+    let samples: Vec<_> = graph.edges().collect();
+    // real-world labels correlate imperfectly with structure: flip 40% of
+    // community labels to noise so the LR task sits in the paper's ~0.8
+    // AUC regime instead of saturating on the planted partition
+    let labels = {
+        let mut rng = tembed::util::Rng::new(0x1AB);
+        let c = spec.communities() as u32;
+        labels
+            .iter()
+            .map(|&l| if rng.f64() < 0.4 { rng.index(c as usize) as u32 } else { l })
+            .collect::<Vec<u32>>()
+    };
+    let (epochs, dim) = (10, 32);
+
+    let mut cpu = LineCpuTrainer::new(
+        graph.num_nodes(),
+        &graph.degrees(),
+        LineCpuConfig { dim, ..LineCpuConfig::default() },
+    );
+    for e in 0..epochs {
+        cpu.train_epoch(&samples, e);
+    }
+    let cpu_store = cpu.finish();
+
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 8,
+        dim,
+        subparts: 4,
+        ..TrainConfig::default()
+    };
+    let mut gpu = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
+    for e in 0..epochs {
+        gpu.train_epoch(&mut samples.clone(), e);
+    }
+    let gpu_store = gpu.finish();
+
+    println!("# Table V — downstream LR AUC after {epochs} epochs (paper: parity within 0.1%)");
+    println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");
+    let (cpu_tr, cpu_ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5);
+    println!("{:<24} {:>12.5} {:>12.5}   (paper 0.81147 / 0.79996)", "CPU Embedding", cpu_tr, cpu_ev);
+    let (gpu_tr, gpu_ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5);
+    println!("{:<24} {:>12.5} {:>12.5}   (paper 0.80996 / 0.80008)", "GPU Embedding (ours)", gpu_tr, gpu_ev);
+    println!("\ntrain-AUC gap: {:.4} (claim: competitive, paper gap 0.0015)", (cpu_tr - gpu_tr).abs());
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! GraphVite-schedule baseline (paper §VI-C, the Table VI comparator).
+//!
+//! GraphVite [Zhu et al., WWW'19] is single-node: it 2D-partitions samples
+//! into `n×n` blocks for `n` GPUs, trains orthogonal blocks per episode,
+//! and moves *all* embedding traffic through the CPU as a parameter
+//! server, with no pipeline overlap. Differences from our system that this
+//! reimplementation preserves (they are exactly what the paper credits
+//! for its speedup):
+//!
+//! 1. every block swap is D2H + H2D through the PS (2× PCIe traffic;
+//!    no peer-to-peer),
+//! 2. no ping-pong/pipeline: transfers serialize with compute,
+//! 3. context embeddings also rotate through the PS (not pinned),
+//! 4. the CPU that serves parameters ALSO generates walk samples online
+//!    (§VI-C: "uses CPU as a parameter server to run random walk online"),
+//!    so sample generation serializes with the episode instead of being
+//!    hidden by the decoupled offline walk engine,
+//! 5. single node only (the paper: "not scalable to multi-node").
+//!
+//! The SGNS math is the same `StepBackend` as ours — the comparison
+//! isolates the *coordination* design.
+
+use crate::cluster::ClusterSpec;
+use crate::config::TrainConfig;
+use crate::embed::sgns::{NativeBackend, StepBackend};
+use crate::embed::EmbeddingStore;
+use crate::graph::Edge;
+use crate::metrics::{EpochReport, Metrics, Timer};
+use crate::partition::TwoDPartition;
+use crate::pipeline::{simulate_step, OverlapConfig, PhaseDurations};
+use crate::sample::{make_minibatches, NegativeSampler};
+use crate::util::Rng;
+
+/// GraphVite-style single-node trainer.
+pub struct GraphViteTrainer {
+    pub cfg: TrainConfig,
+    pub cluster: ClusterSpec,
+    pub store: EmbeddingStore,
+    samplers: Vec<NegativeSampler>,
+    rng: Rng,
+    pub metrics: Metrics,
+}
+
+impl GraphViteTrainer {
+    pub fn new(num_nodes: usize, degrees: &[u32], cfg: TrainConfig) -> Self {
+        assert_eq!(cfg.nodes, 1, "GraphVite is single-node only");
+        let cluster = cfg.cluster();
+        let mut rng = Rng::new(cfg.seed);
+        let store = EmbeddingStore::init(num_nodes, cfg.dim, &mut rng);
+        let gpus = cfg.gpus_per_node;
+        let bounds = crate::partition::range_bounds(num_nodes, gpus);
+        let samplers = (0..gpus)
+            .map(|g| NegativeSampler::new(degrees, bounds[g]..bounds[g + 1]))
+            .collect();
+        GraphViteTrainer { cfg, cluster, store, samplers, rng, metrics: Metrics::new() }
+    }
+
+    /// One epoch: episodes of orthogonal `n×n` block rounds, all traffic
+    /// through the CPU parameter server, fully serialized.
+    pub fn train_epoch(&mut self, samples: &mut Vec<Edge>, epoch: usize) -> EpochReport {
+        let wall = Timer::start();
+        let gpus = self.cfg.gpus_per_node;
+        let n = self.store.num_nodes;
+        let mut rng = Rng::new(self.cfg.seed ^ (epoch as u64).wrapping_mul(0x6F));
+        let episodes = crate::sample::split_episodes(samples, self.cfg.episode_size, &mut rng);
+        let bounds = crate::partition::range_bounds(n, gpus);
+        let mut sim = 0.0;
+        let mut loss_sum = 0.0;
+        let mut total = 0u64;
+        for ep in &episodes {
+            // online walk/sample generation on the PS CPU, serialized with
+            // the episode (GraphVite's design — our system hides this
+            // behind training via the decoupled offline walk engine)
+            sim += ep.len() as f64 / self.cpu_sample_rate();
+            let part = TwoDPartition::build(n, ep, gpus, gpus);
+            // n rounds of orthogonal blocks: round r gives GPU g block
+            // (g, (g + r) % n)
+            for round in 0..gpus {
+                let outcomes = self.run_round(&part, &bounds, round);
+                let mut round_sim: f64 = 0.0;
+                for (d, l, s) in outcomes {
+                    round_sim = round_sim.max(simulate_step(&d, OverlapConfig::none()));
+                    loss_sum += l;
+                    total += s;
+                }
+                sim += round_sim;
+            }
+        }
+        self.metrics.add("episodes", episodes.len() as u64);
+        self.metrics.add("samples", total);
+        EpochReport {
+            epoch,
+            sim_secs: sim,
+            wall_secs: wall.secs(),
+            samples: total,
+            loss_sum,
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    fn run_round(
+        &mut self,
+        part: &TwoDPartition,
+        bounds: &[usize],
+        round: usize,
+    ) -> Vec<(PhaseDurations, f64, u64)> {
+        let gpus = self.cfg.gpus_per_node;
+        let cfg = &self.cfg;
+        let cluster = &self.cluster;
+        let store = &mut self.store;
+        let samplers = &self.samplers;
+        let rngs: Vec<Rng> = (0..gpus).map(|g| self.rng.fork(g as u64)).collect();
+        // GPUs train orthogonal blocks in parallel; each checks its block's
+        // vertex AND context rows out of the PS and back in (the 2× traffic)
+        let mut out = Vec::with_capacity(gpus);
+        // split both matrices by row-block so the borrow checker sees the
+        // disjointness: block g of vertex rows + block (g+round)%n context
+        let results: Vec<_> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            let store_ref = &*store;
+            for g in 0..gpus {
+                let j = (g + round) % gpus;
+                let vrange = bounds[g]..bounds[g + 1];
+                let crange = bounds[j]..bounds[j + 1];
+                let block = part.block(g, j);
+                let mut rng = rngs[g].clone();
+                handles.push(scope.spawn(move || {
+                    // PS checkout: vertex block H2D + context block H2D
+                    let mut vbuf = store_ref.checkout_vertex(vrange.clone());
+                    let mut cbuf = store_ref.checkout_context(crange.clone());
+                    let mbs =
+                        make_minibatches(block, cfg.batch, vrange.start, crange.start, 0, 0);
+                    let mut backend = NativeBackend::new();
+                    let mut loss = 0.0f64;
+                    for mb in &mbs {
+                        let groups = crate::embed::sgns::groups_for(mb.u_local.len());
+                        let negs: Vec<i32> = samplers[j]
+                            .sample_local(groups * cfg.negatives, &mut rng)
+                            .iter()
+                            .map(|&x| x as i32)
+                            .collect();
+                        loss += backend.step(
+                            &mut vbuf,
+                            &mut cbuf,
+                            cfg.dim,
+                            &mb.u_local,
+                            &mb.v_local,
+                            &negs,
+                            cfg.negatives,
+                            mb.real,
+                            cfg.learning_rate,
+                        ) as f64;
+                    }
+                    (g, vrange, crange, vbuf, cbuf, loss, block.len() as u64)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (g, vrange, crange, vbuf, cbuf, loss, count) in results {
+            let _ = g;
+            // PS checkin: D2H both blocks
+            let block_bytes = (vbuf.len() * 4) as u64 + (cbuf.len() * 4) as u64;
+            store.checkin_vertex(vrange, &vbuf);
+            store.checkin_context(crange, &cbuf);
+            use crate::comm::LinkClass::*;
+            let f = &cluster.fabric;
+            let d = PhaseDurations {
+                load_samples: f.transfer_secs(count * 8, H2D),
+                // PS hop: both matrices, both directions, over PCIe
+                d2h_writeback: f.transfer_secs(block_bytes, D2H),
+                train: cluster.node.gpu.train_secs(count, cfg.batch, cfg.negatives, cfg.dim),
+                p2p: 0.0, // GraphVite has no peer path
+                prefetch_h2d: f.transfer_secs(block_bytes, H2D),
+                inter_node: 0.0,
+                disk_prefetch: f.transfer_secs(count * 8, Disk),
+            };
+            out.push((d, loss, count));
+        }
+        out
+    }
+
+    /// Online augmentation throughput of the PS CPU (samples/sec):
+    /// ~50M/s on the paper's 96-thread Xeon (Plato-class walkers hit
+    /// 10⁷–10⁸ samples/s/node), scaled by core count.
+    fn cpu_sample_rate(&self) -> f64 {
+        50e6 * self.cluster.node.cpu_cores as f64 / 96.0
+    }
+
+    pub fn finish(self) -> EmbeddingStore {
+        self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    fn fixture(n: usize, m: usize, seed: u64) -> (Vec<u32>, Vec<Edge>) {
+        let mut rng = Rng::new(seed);
+        let g = gen::to_graph(n, gen::chung_lu(n, m, 2.3, &mut rng));
+        (g.degrees(), g.edges().collect())
+    }
+
+    fn cfg(gpus: usize) -> TrainConfig {
+        TrainConfig {
+            nodes: 1,
+            gpus_per_node: gpus,
+            dim: 8,
+            batch: 64,
+            episode_size: 10_000,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn trains_and_reduces_loss() {
+        let (deg, samples) = fixture(200, 2000, 1);
+        let mut t = GraphViteTrainer::new(200, &deg, cfg(2));
+        let first = t.train_epoch(&mut samples.clone(), 0);
+        let mut last = first.clone();
+        for e in 1..5 {
+            last = t.train_epoch(&mut samples.clone(), e);
+        }
+        assert!(last.mean_loss() < first.mean_loss());
+        assert_eq!(first.samples, samples.len() as u64);
+    }
+
+    #[test]
+    fn slower_than_our_system_in_sim_time() {
+        // the headline claim at like-for-like workload (Table VI shape).
+        // Needs embedding blocks big enough that bandwidth, not per-call
+        // latency, dominates — at toy scale both schedules are latency
+        // floors and the comparison is meaningless.
+        let (deg, samples) = fixture(50_000, 100_000, 2);
+        let base = TrainConfig {
+            nodes: 1,
+            gpus_per_node: 4,
+            dim: 64,
+            batch: 1024,
+            episode_size: 1_000_000,
+            ..TrainConfig::default()
+        };
+        let our_cfg = TrainConfig { subparts: 4, ..base.clone() };
+        let mut ours = crate::coordinator::Trainer::new(50_000, &deg, our_cfg, None).unwrap();
+        let mut gv = GraphViteTrainer::new(50_000, &deg, base);
+        let r_ours = ours.train_epoch(&mut samples.clone(), 0);
+        let r_gv = gv.train_epoch(&mut samples.clone(), 0);
+        assert!(
+            r_ours.sim_secs < r_gv.sim_secs,
+            "ours {} vs graphvite {}",
+            r_ours.sim_secs,
+            r_gv.sim_secs
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "single-node")]
+    fn rejects_multi_node() {
+        let (deg, _) = fixture(50, 100, 3);
+        let mut c = cfg(2);
+        c.nodes = 2;
+        GraphViteTrainer::new(50, &deg, c);
+    }
+}

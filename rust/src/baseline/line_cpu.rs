@@ -1,0 +1,237 @@
+//! CPU LINE-style SGNS trainer (the paper's Table V comparator).
+//!
+//! Multi-threaded Hogwild-style training over the full matrices in shared
+//! memory (LINE [Tang et al., WWW'15] trains lock-free with per-thread
+//! edge shards; benign races are part of the algorithm). Also serves as
+//! the pure-CPU reference the feature-engineering experiment compares
+//! GPU embeddings against.
+
+use crate::embed::EmbeddingStore;
+use crate::graph::Edge;
+use crate::metrics::{EpochReport, Metrics, Timer};
+use crate::util::Rng;
+use crate::walk::alias::AliasTable;
+
+/// CPU LINE trainer configuration.
+#[derive(Debug, Clone)]
+pub struct LineCpuConfig {
+    pub dim: usize,
+    pub negatives: usize,
+    pub learning_rate: f32,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for LineCpuConfig {
+    fn default() -> Self {
+        LineCpuConfig {
+            dim: 32,
+            negatives: 5,
+            learning_rate: 0.025,
+            threads: crate::util::pool::default_threads(),
+            seed: 7,
+        }
+    }
+}
+
+/// The trainer: owns the model; Hogwild updates via raw pointer shards.
+pub struct LineCpuTrainer {
+    pub cfg: LineCpuConfig,
+    pub store: EmbeddingStore,
+    neg_table: AliasTable,
+    pub metrics: Metrics,
+}
+
+// Wrapper making the shared mutable matrices Send for Hogwild threads.
+// Safety contract: racy f32 updates are benign for SGD (LINE/word2vec do
+// exactly this); no thread reads another's partial write as control flow.
+struct SharedModel {
+    vertex: *mut f32,
+    context: *mut f32,
+    len_v: usize,
+    len_c: usize,
+}
+unsafe impl Send for SharedModel {}
+unsafe impl Sync for SharedModel {}
+
+impl LineCpuTrainer {
+    pub fn new(num_nodes: usize, degrees: &[u32], cfg: LineCpuConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let store = EmbeddingStore::init(num_nodes, cfg.dim, &mut rng);
+        let neg_table = AliasTable::unigram(degrees, 0.75);
+        LineCpuTrainer { cfg, store, neg_table, metrics: Metrics::new() }
+    }
+
+    /// One epoch over the samples, Hogwild-parallel.
+    pub fn train_epoch(&mut self, samples: &[Edge], epoch: usize) -> EpochReport {
+        let wall = Timer::start();
+        let d = self.cfg.dim;
+        let lr = self.cfg.learning_rate;
+        let negs = self.cfg.negatives;
+        let shared = SharedModel {
+            vertex: self.store.vertex.as_mut_ptr(),
+            context: self.store.context.as_mut_ptr(),
+            len_v: self.store.vertex.len(),
+            len_c: self.store.context.len(),
+        };
+        let neg_table = &self.neg_table;
+        let seed = self.cfg.seed ^ (epoch as u64).wrapping_mul(0x51D);
+        let losses = crate::util::parallel_chunks(
+            samples.len(),
+            self.cfg.threads,
+            |t, range| {
+                let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0xABCD
+                ));
+                let mut loss = 0.0f64;
+                let shared = &shared;
+                for &(u, v) in &samples[range] {
+                    loss += unsafe {
+                        hogwild_step(shared, d, u, v, neg_table, negs, lr, &mut rng)
+                    } as f64;
+                }
+                loss
+            },
+        );
+        let loss_sum: f64 = losses.iter().sum();
+        self.metrics.add("samples", samples.len() as u64);
+        EpochReport {
+            epoch,
+            // CPU baseline: real wallclock IS the reported time
+            sim_secs: wall.secs(),
+            wall_secs: wall.secs(),
+            samples: samples.len() as u64,
+            loss_sum,
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    pub fn finish(self) -> EmbeddingStore {
+        self.store
+    }
+}
+
+/// One SGNS sample update (positive edge + `negs` sampled negatives).
+///
+/// # Safety
+/// Hogwild: rows are read/written without synchronization; callers
+/// guarantee indices are in-bounds (checked by debug_asserts).
+unsafe fn hogwild_step(
+    m: &SharedModel,
+    d: usize,
+    u: u32,
+    v: u32,
+    neg_table: &AliasTable,
+    negs: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> f32 {
+    let vu = m.vertex.add(u as usize * d);
+    debug_assert!((u as usize + 1) * d <= m.len_v);
+    let mut gu = vec![0.0f32; d];
+    let mut loss = 0.0f32;
+    // positive + negatives share the same inner update
+    let mut update = |target: u32, label: f32| {
+        debug_assert!((target as usize + 1) * d <= m.len_c);
+        let ct = m.context.add(target as usize * d);
+        let mut dot = 0.0f32;
+        for k in 0..d {
+            dot += *vu.add(k) * *ct.add(k);
+        }
+        let sig = 1.0 / (1.0 + (-dot).exp());
+        let g = sig - label;
+        loss += if label > 0.5 {
+            -(sig.max(1e-7)).ln()
+        } else {
+            -((1.0 - sig).max(1e-7)).ln()
+        };
+        for k in 0..d {
+            gu[k] += g * *ct.add(k);
+            *ct.add(k) -= lr * g * *vu.add(k);
+        }
+    };
+    update(v, 1.0);
+    for _ in 0..negs {
+        update(neg_table.sample(rng) as u32, 0.0);
+    }
+    for k in 0..d {
+        *vu.add(k) -= lr * gu[k];
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    fn fixture(seed: u64) -> (crate::graph::CsrGraph, Vec<Edge>) {
+        let mut rng = Rng::new(seed);
+        let g = gen::to_graph(300, gen::chung_lu(300, 3000, 2.3, &mut rng));
+        let e = g.edges().collect();
+        (g, e)
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let (g, samples) = fixture(1);
+        let mut t = LineCpuTrainer::new(300, &g.degrees(), LineCpuConfig { dim: 16, ..Default::default() });
+        let first = t.train_epoch(&samples, 0);
+        let mut last = first.clone();
+        for e in 1..6 {
+            last = t.train_epoch(&samples, e);
+        }
+        assert!(last.mean_loss() < first.mean_loss());
+    }
+
+    #[test]
+    fn positive_edges_outscore_random_after_training() {
+        let (g, samples) = fixture(2);
+        let mut t = LineCpuTrainer::new(
+            300,
+            &g.degrees(),
+            LineCpuConfig { dim: 16, threads: 4, ..Default::default() },
+        );
+        for e in 0..10 {
+            t.train_epoch(&samples, e);
+        }
+        let store = t.finish();
+        let mut rng = Rng::new(5);
+        let pos: f64 = samples.iter().take(400).map(|&(u, v)| store.score(u, v) as f64).sum();
+        let neg: f64 = (0..400)
+            .map(|_| store.score(rng.index(300) as u32, rng.index(300) as u32) as f64)
+            .sum();
+        assert!(pos > neg, "pos {pos} neg {neg}");
+    }
+
+    #[test]
+    fn single_thread_is_deterministic() {
+        let (g, samples) = fixture(3);
+        let mk = || {
+            LineCpuTrainer::new(
+                300,
+                &g.degrees(),
+                LineCpuConfig { dim: 8, threads: 1, ..Default::default() },
+            )
+        };
+        let mut a = mk();
+        let mut b = mk();
+        a.train_epoch(&samples, 0);
+        b.train_epoch(&samples, 0);
+        assert_eq!(a.store.vertex, b.store.vertex);
+    }
+
+    #[test]
+    fn embeddings_stay_finite_under_races() {
+        let (g, samples) = fixture(4);
+        let mut t = LineCpuTrainer::new(
+            300,
+            &g.degrees(),
+            LineCpuConfig { dim: 8, threads: 8, ..Default::default() },
+        );
+        for e in 0..5 {
+            t.train_epoch(&samples, e);
+        }
+        assert!(t.store.vertex.iter().all(|x| x.is_finite()));
+        assert!(t.store.context.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,14 @@
+//! Baselines the paper compares against.
+//!
+//! * `graphvite` — a faithful reimplementation of GraphVite's *schedule*
+//!   (single-node, CPU parameter server, orthogonal episodes, no
+//!   pipeline) on our substrate, so Table VI/Fig 6 compare scheduling
+//!   designs rather than kernels;
+//! * `line_cpu` — a multi-threaded CPU LINE/SGNS trainer (the paper's
+//!   Table V comparator and our pure-CPU reference).
+
+pub mod graphvite;
+pub mod line_cpu;
+
+pub use graphvite::GraphViteTrainer;
+pub use line_cpu::LineCpuTrainer;

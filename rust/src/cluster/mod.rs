@@ -1,0 +1,171 @@
+//! Simulated cluster description: device specs, node layout, and the
+//! derived per-device compute-time model.
+//!
+//! The paper's testbeds (§V-A) are encoded as presets. SGNS training is
+//! memory-bound (paper §II-C: O(1) arithmetic intensity), so simulated
+//! step time is driven by device memory traffic at the spec'd bandwidth,
+//! with a FLOP-based floor for completeness.
+
+use crate::comm::fabric::FabricModel;
+use crate::comm::topology::SocketTopology;
+
+/// GPU device spec (the numbers the cost model needs).
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub fp32_tflops: f64,
+    pub mem_gbps: f64,
+    pub mem_bytes: u64,
+}
+
+impl GpuSpec {
+    pub fn v100() -> Self {
+        GpuSpec { name: "V100-32GB", fp32_tflops: 15.7, mem_gbps: 900.0, mem_bytes: 32 << 30 }
+    }
+
+    pub fn p40() -> Self {
+        GpuSpec { name: "P40-24GB", fp32_tflops: 11.76, mem_gbps: 346.0, mem_bytes: 24 << 30 }
+    }
+
+    /// Simulated seconds to train `samples` SGNS edge samples with `negs`
+    /// shared negatives at dimension `dim`, batch `batch`.
+    ///
+    /// Memory traffic per batch: read+write vertex rows (B·d), positive
+    /// context rows (B·d), negative rows (N·d, read+write), plus logits;
+    /// ≈ 4·B·d + 2·N·d floats. FLOPs per batch ≈ 6·B·N·d (three matmuls)
+    /// + O(B·d). Step time = max(mem, flop) — memory wins at the paper's
+    /// N=5, confirming the O(1) arithmetic-intensity analysis.
+    pub fn train_secs(&self, samples: u64, batch: usize, negs: usize, dim: usize) -> f64 {
+        if samples == 0 {
+            return 0.0;
+        }
+        let batches = crate::util::ceil_div(samples as usize, batch) as f64;
+        let bytes_per_batch = (4 * batch * dim + 2 * negs * dim) as f64 * 4.0;
+        let flops_per_batch = (6 * batch * negs * dim + 8 * batch * dim) as f64;
+        let mem = bytes_per_batch / (self.mem_gbps * 1e9);
+        let flop = flops_per_batch / (self.fp32_tflops * 1e12);
+        // ~60% achievable bandwidth for gather/scatter-heavy kernels
+        batches * (mem / 0.6).max(flop / 0.5)
+    }
+}
+
+/// One machine in the cluster.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+    pub sockets: usize,
+    pub cpu_cores: usize,
+    pub host_mem_bytes: u64,
+}
+
+/// Cluster = homogeneous nodes + interconnect fabric.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub node: NodeSpec,
+    pub fabric: FabricModel,
+}
+
+impl ClusterSpec {
+    /// Paper Set A: 8×V100 per node, 2×24-core Xeon, 364 GB, NVMe, 100Gb IB.
+    pub fn set_a(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            node: NodeSpec {
+                gpus_per_node,
+                gpu: GpuSpec::v100(),
+                sockets: 2,
+                cpu_cores: 96,
+                host_mem_bytes: 364 << 30,
+            },
+            fabric: FabricModel::v100_set_a(),
+        }
+    }
+
+    /// Paper Set B: 8×P40 per node, 2×22-core Xeon, 239 GB, 40Gb network.
+    pub fn set_b(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            node: NodeSpec {
+                gpus_per_node,
+                gpu: GpuSpec::p40(),
+                sockets: 2,
+                cpu_cores: 88,
+                host_mem_bytes: 239 << 30,
+            },
+            fabric: FabricModel::p40_set_b(),
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    pub fn topology(&self) -> SocketTopology {
+        SocketTopology::new(self.node.gpus_per_node, self.node.sockets)
+    }
+
+    /// Total device memory across the cluster — the capacity wall that
+    /// motivates model parallelism (paper Table I).
+    pub fn total_device_mem(&self) -> u64 {
+        self.total_gpus() as u64 * self.node.gpu.mem_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_specs() {
+        let a = ClusterSpec::set_a(5, 8);
+        assert_eq!(a.total_gpus(), 40);
+        assert_eq!(a.node.gpu.name, "V100-32GB");
+        let b = ClusterSpec::set_b(5, 8);
+        assert_eq!(b.node.gpu.mem_bytes, 24 << 30);
+    }
+
+    #[test]
+    fn v100_trains_faster_than_p40() {
+        let v = GpuSpec::v100();
+        let p = GpuSpec::p40();
+        let (s, b, n, d) = (10_000_000u64, 4096, 5, 128);
+        assert!(v.train_secs(s, b, n, d) < p.train_secs(s, b, n, d));
+    }
+
+    #[test]
+    fn train_time_scales_linearly_with_samples() {
+        let v = GpuSpec::v100();
+        let t1 = v.train_secs(1_000_000, 1024, 5, 64);
+        let t2 = v.train_secs(2_000_000, 1024, 5, 64);
+        let ratio = t2 / t1;
+        assert!((1.9..2.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_bound_at_low_negatives() {
+        // at N=5 the memory term must dominate (paper's O(1) intensity)
+        let v = GpuSpec::v100();
+        let batch = 4096;
+        let dim = 128;
+        let bytes = (4 * batch * dim + 2 * 5 * dim) as f64 * 4.0;
+        let mem = bytes / (v.mem_gbps * 1e9) / 0.6;
+        let flops = (6 * batch * 5 * dim + 8 * batch * dim) as f64;
+        let fl = flops / (v.fp32_tflops * 1e12) / 0.5;
+        assert!(mem > fl, "mem {mem} flop {fl}");
+    }
+
+    #[test]
+    fn paper_scale_exceeds_single_node_memory() {
+        // Table I: embeddings alone ~1 TB >> 8 V100s (256 GB)
+        let one_node = ClusterSpec::set_a(1, 8);
+        let emb_bytes = 2u64 * 1_050_000_000 * 128 * 4;
+        assert!(emb_bytes > one_node.total_device_mem());
+    }
+
+    #[test]
+    fn zero_samples_zero_time() {
+        assert_eq!(GpuSpec::v100().train_secs(0, 1024, 5, 64), 0.0);
+    }
+}

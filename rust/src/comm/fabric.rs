@@ -1,0 +1,140 @@
+//! Interconnect cost model: seconds to move bytes over each link class.
+
+/// Class of physical link a transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Same-socket GPU peer-to-peer (NVLink on Set A, PCIe P2P on Set B).
+    GpuPeer,
+    /// Cross-socket GPU to GPU (must bounce through host memory).
+    CrossSocket,
+    /// Host-to-device over PCIe.
+    H2D,
+    /// Device-to-host over PCIe.
+    D2H,
+    /// Node-to-node network (InfiniBand / Ethernet).
+    InterNode,
+    /// NVMe/SSD to host memory.
+    Disk,
+}
+
+/// Bandwidth (GB/s) + latency (us) per link class.
+#[derive(Debug, Clone)]
+pub struct FabricModel {
+    pub gpu_peer_gbps: f64,
+    pub cross_socket_gbps: f64,
+    pub h2d_gbps: f64,
+    pub d2h_gbps: f64,
+    pub inter_node_gbps: f64,
+    pub disk_gbps: f64,
+    /// Per-transfer setup latency in microseconds, per class.
+    pub latency_us: f64,
+}
+
+impl FabricModel {
+    /// Set A (paper §V-A): V100 nodes, NVLink intra-socket, PCIe gen3
+    /// x16 to host, 100 Gb/s InfiniBand, NVMe SSD.
+    pub fn v100_set_a() -> Self {
+        FabricModel {
+            gpu_peer_gbps: 48.0,       // NVLink gen2 pair
+            cross_socket_gbps: 6.0,    // direct P2P over PCIe+QPI — the
+                                       // slow path §IV-C routes around
+            h2d_gbps: 12.0,            // PCIe gen3 x16 effective
+            d2h_gbps: 12.0,
+            inter_node_gbps: 12.5,     // 100 Gb/s IB
+            disk_gbps: 2.5,            // NVMe
+            latency_us: 10.0,
+        }
+    }
+
+    /// Set B: P40 nodes, no NVLink (PCIe peer), 40 Gb/s network, SATA-ish
+    /// disk. The paper attributes the P40 slowdown partly to these links.
+    pub fn p40_set_b() -> Self {
+        FabricModel {
+            gpu_peer_gbps: 10.0,       // PCIe P2P
+            cross_socket_gbps: 6.0,    // QPI-bottlenecked direct P2P
+            h2d_gbps: 10.0,
+            d2h_gbps: 10.0,
+            inter_node_gbps: 5.0,      // 40 Gb/s
+            disk_gbps: 0.8,
+            latency_us: 15.0,
+        }
+    }
+
+    fn gbps(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::GpuPeer => self.gpu_peer_gbps,
+            LinkClass::CrossSocket => self.cross_socket_gbps,
+            LinkClass::H2D => self.h2d_gbps,
+            LinkClass::D2H => self.d2h_gbps,
+            LinkClass::InterNode => self.inter_node_gbps,
+            LinkClass::Disk => self.disk_gbps,
+        }
+    }
+
+    /// Seconds to move `bytes` across `link` (bandwidth + setup latency).
+    pub fn transfer_secs(&self, bytes: u64, link: LinkClass) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.gbps(link) * 1e9)
+    }
+
+    /// Host-bounced cross-socket copy: D2H then H2D, pipelined in halves
+    /// (the paper overlaps the two PCIe directions), so the cost is the
+    /// slower direction plus half the faster one.
+    pub fn host_bounce_secs(&self, bytes: u64) -> f64 {
+        let d2h = self.transfer_secs(bytes, LinkClass::D2H);
+        let h2d = self.transfer_secs(bytes, LinkClass::H2D);
+        d2h.max(h2d) + 0.5 * d2h.min(h2d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_ordering_set_a() {
+        let f = FabricModel::v100_set_a();
+        let b = 64 * 1024 * 1024;
+        let peer = f.transfer_secs(b, LinkClass::GpuPeer);
+        let h2d = f.transfer_secs(b, LinkClass::H2D);
+        let net = f.transfer_secs(b, LinkClass::InterNode);
+        let disk = f.transfer_secs(b, LinkClass::Disk);
+        assert!(peer < h2d && h2d < disk, "peer {peer} h2d {h2d} disk {disk}");
+        assert!(net < disk);
+    }
+
+    #[test]
+    fn host_bounce_beats_direct_cross_socket() {
+        // the §IV-C optimization: pipelined D2H+H2D (~8 GB/s effective)
+        // beats QPI-limited direct P2P (6 GB/s) for large sub-parts
+        for f in [FabricModel::v100_set_a(), FabricModel::p40_set_b()] {
+            let b = 128 * 1024 * 1024;
+            let direct = f.transfer_secs(b, LinkClass::CrossSocket);
+            let bounce = f.host_bounce_secs(b);
+            assert!(bounce < direct, "bounce {bounce} direct {direct}");
+        }
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let f = FabricModel::v100_set_a();
+        let tiny = f.transfer_secs(16, LinkClass::GpuPeer);
+        assert!(tiny > 0.9e-5, "latency floor {tiny}");
+    }
+
+    #[test]
+    fn host_bounce_slower_than_peer() {
+        let f = FabricModel::v100_set_a();
+        let b = 32 * 1024 * 1024;
+        assert!(f.host_bounce_secs(b) > f.transfer_secs(b, LinkClass::GpuPeer));
+    }
+
+    #[test]
+    fn p40_fabric_is_uniformly_slower() {
+        let a = FabricModel::v100_set_a();
+        let bmod = FabricModel::p40_set_b();
+        let bytes = 256 * 1024 * 1024;
+        for link in [LinkClass::GpuPeer, LinkClass::InterNode, LinkClass::Disk] {
+            assert!(bmod.transfer_secs(bytes, link) > a.transfer_secs(bytes, link));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Communication substrate: the interconnect model (`fabric`), socket-aware
+//! intra-node routing (`topology`), and one/two-level ring schedules
+//! (`ring`).
+//!
+//! Bandwidth/latency parameters follow the paper's two testbeds (Set A:
+//! V100 + NVLink + 100Gb/s IB; Set B: P40 + PCIe + 40Gb/s Ethernet). The
+//! *simulated clock* advanced by these models is what the benches report;
+//! the relative link speeds — NVLink ≫ PCIe ≫ network — are what give the
+//! pipeline design its headroom, so the shape of every result transfers.
+
+pub mod fabric;
+pub mod ring;
+pub mod topology;
+
+pub use fabric::{FabricModel, LinkClass};
+pub use ring::{two_level_rings, Ring};
+pub use topology::{Route, SocketTopology};

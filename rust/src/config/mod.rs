@@ -1,0 +1,265 @@
+//! Configuration system: typed training/cluster/walk configs, a TOML-subset
+//! parser (offline environment has no serde/toml), and `key=value`
+//! override parsing for the CLI.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with integer,
+//! float, bool, and double-quoted string values, `#` comments.
+
+pub mod toml;
+
+use crate::pipeline::OverlapConfig;
+
+/// Which compute backend runs the SGNS step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust step (fast start, no artifacts needed).
+    Native,
+    /// Exact L2 semantics in Rust (equivalence testing).
+    Gathered,
+    /// AOT-compiled XLA executable via PJRT (the three-layer path).
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "gathered" => Ok(Backend::Gathered),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (native|gathered|pjrt)"),
+        }
+    }
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    // cluster
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// "set-a" (V100) or "set-b" (P40)
+    pub hardware: String,
+    // model
+    pub dim: usize,
+    pub negatives: usize,
+    pub batch: usize,
+    pub learning_rate: f32,
+    /// Linear LR decay over `epochs` (word2vec/GraphVite convention),
+    /// floored at 1e-4 of the initial rate.
+    pub lr_decay: bool,
+    // schedule
+    pub subparts: usize,
+    pub episode_size: usize,
+    pub epochs: usize,
+    pub pipeline: bool,
+    pub socket_aware: bool,
+    // walk engine
+    pub walk_length: usize,
+    pub walks_per_node: usize,
+    pub window: usize,
+    /// Generate walks once for this many epochs, then reuse (paper §V-C2).
+    pub walk_epochs: usize,
+    // misc
+    pub seed: u64,
+    pub threads: usize,
+    pub backend: Backend,
+    pub artifacts_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            nodes: 1,
+            gpus_per_node: 8,
+            hardware: "set-a".into(),
+            dim: 32,
+            negatives: 5,
+            batch: 1024,
+            learning_rate: 0.025,
+            lr_decay: false,
+            subparts: 4,
+            episode_size: 2_000_000,
+            epochs: 1,
+            pipeline: true,
+            socket_aware: true,
+            walk_length: 6,
+            walks_per_node: 2,
+            window: 3,
+            walk_epochs: 10,
+            seed: 42,
+            threads: crate::util::pool::default_threads(),
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Cluster spec implied by the config.
+    pub fn cluster(&self) -> crate::cluster::ClusterSpec {
+        match self.hardware.as_str() {
+            "set-b" => crate::cluster::ClusterSpec::set_b(self.nodes, self.gpus_per_node),
+            _ => crate::cluster::ClusterSpec::set_a(self.nodes, self.gpus_per_node),
+        }
+    }
+
+    pub fn overlap(&self) -> OverlapConfig {
+        OverlapConfig { pipeline: self.pipeline, subparts: self.subparts }
+    }
+
+    /// Load from a TOML-subset file (sections: [cluster] [model] [schedule]
+    /// [walk] [misc]; unknown keys are an error to catch typos).
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = TrainConfig::default();
+        for (section, key, value) in doc.entries() {
+            cfg.apply(&format!("{section}.{key}"), value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one dotted-path override (CLI `--set cluster.nodes=2`).
+    pub fn apply(&mut self, path: &str, value: &toml::Value) -> crate::Result<()> {
+        use toml::Value::*;
+        let as_usize = || -> crate::Result<usize> {
+            match value {
+                Int(i) if *i >= 0 => Ok(*i as usize),
+                _ => anyhow::bail!("{path}: expected non-negative integer, got {value:?}"),
+            }
+        };
+        match path {
+            "cluster.nodes" => self.nodes = as_usize()?,
+            "cluster.gpus_per_node" => self.gpus_per_node = as_usize()?,
+            "cluster.hardware" => match value {
+                Str(s) => self.hardware = s.clone(),
+                _ => anyhow::bail!("{path}: expected string"),
+            },
+            "model.dim" => self.dim = as_usize()?,
+            "model.negatives" => self.negatives = as_usize()?,
+            "model.batch" => self.batch = as_usize()?,
+            "model.learning_rate" => match value {
+                Float(f) => self.learning_rate = *f as f32,
+                Int(i) => self.learning_rate = *i as f32,
+                _ => anyhow::bail!("{path}: expected number"),
+            },
+            "model.lr_decay" => match value {
+                Bool(b) => self.lr_decay = *b,
+                _ => anyhow::bail!("{path}: expected bool"),
+            },
+            "schedule.subparts" => self.subparts = as_usize()?,
+            "schedule.episode_size" => self.episode_size = as_usize()?,
+            "schedule.epochs" => self.epochs = as_usize()?,
+            "schedule.pipeline" => match value {
+                Bool(b) => self.pipeline = *b,
+                _ => anyhow::bail!("{path}: expected bool"),
+            },
+            "schedule.socket_aware" => match value {
+                Bool(b) => self.socket_aware = *b,
+                _ => anyhow::bail!("{path}: expected bool"),
+            },
+            "walk.walk_length" => self.walk_length = as_usize()?,
+            "walk.walks_per_node" => self.walks_per_node = as_usize()?,
+            "walk.window" => self.window = as_usize()?,
+            "walk.walk_epochs" => self.walk_epochs = as_usize()?,
+            "misc.seed" => self.seed = as_usize()? as u64,
+            "misc.threads" => self.threads = as_usize()?,
+            "misc.backend" => match value {
+                Str(s) => self.backend = s.parse()?,
+                _ => anyhow::bail!("{path}: expected string"),
+            },
+            "misc.artifacts_dir" => match value {
+                Str(s) => self.artifacts_dir = s.clone(),
+                _ => anyhow::bail!("{path}: expected string"),
+            },
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI `section.key=value` override.
+    pub fn apply_cli(&mut self, kv: &str) -> crate::Result<()> {
+        let (path, raw) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override {kv:?} missing '='"))?;
+        let value = toml::Value::infer(raw.trim());
+        self.apply(path.trim(), &value)
+    }
+
+    /// Render the effective config (logged at startup for reproducibility).
+    pub fn render(&self) -> String {
+        format!(
+            "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\n\n\
+             [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
+             [schedule]\nsubparts = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\n\n\
+             [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
+             [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
+            self.nodes, self.gpus_per_node, self.hardware,
+            self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
+            self.subparts, self.episode_size, self.epochs, self.pipeline, self.socket_aware,
+            self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
+            self.seed, self.threads,
+            match self.backend { Backend::Native => "native", Backend::Gathered => "gathered", Backend::Pjrt => "pjrt" },
+            self.artifacts_dir,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = TrainConfig::default();
+        assert!(c.pipeline);
+        assert_eq!(c.subparts, 4); // the paper's tuned k
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        c.apply_cli("cluster.nodes=3").unwrap();
+        c.apply_cli("model.learning_rate=0.05").unwrap();
+        c.apply_cli("schedule.pipeline=false").unwrap();
+        c.apply_cli("misc.backend=pjrt").unwrap();
+        assert_eq!(c.nodes, 3);
+        assert_eq!(c.learning_rate, 0.05);
+        assert!(!c.pipeline);
+        assert_eq!(c.backend, Backend::Pjrt);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.apply_cli("model.dmi=64").is_err());
+        assert!(c.apply_cli("no-equals").is_err());
+    }
+
+    #[test]
+    fn render_round_trips_through_parser() {
+        let mut c = TrainConfig::default();
+        c.nodes = 2;
+        c.dim = 64;
+        c.pipeline = false;
+        let text = c.render();
+        let dir = std::env::temp_dir().join("tembed_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, &text).unwrap();
+        let back = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(back.nodes, 2);
+        assert_eq!(back.dim, 64);
+        assert!(!back.pipeline);
+        assert_eq!(back.learning_rate, c.learning_rate);
+    }
+
+    #[test]
+    fn cluster_spec_hardware_switch() {
+        let mut c = TrainConfig::default();
+        c.hardware = "set-b".into();
+        assert_eq!(c.cluster().node.gpu.name, "P40-24GB");
+    }
+}

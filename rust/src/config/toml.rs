@@ -1,0 +1,221 @@
+//! Minimal TOML-subset parser (no external crates offline).
+//!
+//! Grammar: `[section]` headers; `key = value` pairs; values are i64,
+//! f64, bool, or double-quoted strings (with `\"` and `\\` escapes);
+//! `#` comments; blank lines ignored. Duplicate keys: last wins.
+
+use anyhow::bail;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    /// Parse a raw token the way the document parser would.
+    pub fn infer(raw: &str) -> Value {
+        let raw = raw.trim();
+        if raw == "true" {
+            return Value::Bool(true);
+        }
+        if raw == "false" {
+            return Value::Bool(false);
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Value::Float(f);
+        }
+        let unquoted = raw.strip_prefix('"').and_then(|s| s.strip_suffix('"'));
+        Value::Str(unquoted.unwrap_or(raw).to_string())
+    }
+}
+
+/// A parsed document: `(section, key) -> value`, insertion-ordered.
+#[derive(Debug, Default)]
+pub struct Document {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl Document {
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+/// Strip a trailing `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escape = false;
+    for (i, ch) in line.char_indices() {
+        if escape {
+            escape = false;
+            continue;
+        }
+        match ch {
+            '\\' if in_str => escape = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string(raw: &str, lineno: usize) -> crate::Result<String> {
+    let inner = raw
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated string {raw:?}"))?;
+    let mut out = String::with_capacity(inner.len());
+    let mut escape = false;
+    for ch in inner.chars() {
+        if escape {
+            match ch {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                other => bail!("line {lineno}: bad escape \\{other}"),
+            }
+            escape = false;
+        } else if ch == '\\' {
+            escape = true;
+        } else if ch == '"' {
+            bail!("line {lineno}: stray quote inside string");
+        } else {
+            out.push(ch);
+        }
+    }
+    if escape {
+        bail!("line {lineno}: trailing backslash");
+    }
+    Ok(out)
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> crate::Result<Document> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated section"))?;
+            if name.is_empty() || name.contains(['[', ']']) {
+                bail!("line {lineno}: bad section name {name:?}");
+            }
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, raw_value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {lineno}: empty key");
+        }
+        let raw_value = raw_value.trim();
+        let value = if raw_value.starts_with('"') {
+            Value::Str(parse_string(raw_value, lineno)?)
+        } else if raw_value == "true" {
+            Value::Bool(true)
+        } else if raw_value == "false" {
+            Value::Bool(false)
+        } else if let Ok(n) = raw_value.parse::<i64>() {
+            Value::Int(n)
+        } else if let Ok(f) = raw_value.parse::<f64>() {
+            Value::Float(f)
+        } else {
+            bail!("line {lineno}: cannot parse value {raw_value:?}");
+        };
+        doc.entries.push((section.clone(), key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_types() {
+        let doc = parse(
+            "top = 1\n[a]\nx = 42\ny = 3.5\nz = true\nw = \"hi\"\n[b]\nx = -7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("a", "x"), Some(&Value::Int(42)));
+        assert_eq!(doc.get("a", "y"), Some(&Value::Float(3.5)));
+        assert_eq!(doc.get("a", "z"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("a", "w"), Some(&Value::Str("hi".into())));
+        assert_eq!(doc.get("b", "x"), Some(&Value::Int(-7)));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# header\n\n[s] # trailing\nk = 1 # eol\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse(r#"[s]
+k = "a\"b\\c\nd"
+"#)
+        .unwrap();
+        assert_eq!(doc.get("s", "k"), Some(&Value::Str("a\"b\\c\nd".into())));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, frag) in [
+            ("[unterminated\n", "line 1"),
+            ("k v\n", "line 1"),
+            ("[s]\nk = @@@\n", "line 2"),
+            ("[s]\nk = \"open\n", "line 2"),
+        ] {
+            let err = parse(text).unwrap_err().to_string();
+            assert!(err.contains(frag), "{text:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let doc = parse("[s]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn infer_matches_parser() {
+        assert_eq!(Value::infer("42"), Value::Int(42));
+        assert_eq!(Value::infer("4.5"), Value::Float(4.5));
+        assert_eq!(Value::infer("true"), Value::Bool(true));
+        assert_eq!(Value::infer("\"x\""), Value::Str("x".into()));
+        assert_eq!(Value::infer("bare"), Value::Str("bare".into()));
+    }
+}

@@ -1,0 +1,401 @@
+//! The hybrid model/data-parallel training coordinator (paper §III) —
+//! the system's L3 contribution.
+//!
+//! `Trainer` drives the simulated cluster through the hierarchical
+//! rotation schedule: episodes (data parallelism) × the `M·G·k` step
+//! schedule (model parallelism), with per-GPU worker threads doing real
+//! SGNS compute through a pluggable `StepBackend` (native Rust or the
+//! AOT PJRT executable), the fabric model pricing every transfer the
+//! schedule implies, and the pipeline simulator folding them into the
+//! simulated epoch time.
+//!
+//! `driver` composes the full system: generate/load graph → walk engine →
+//! augmentation → episodes → epochs, with the walk engine's next-epoch
+//! work overlapped against training (the paper's decoupled design).
+
+pub mod driver;
+
+use crate::cluster::ClusterSpec;
+use crate::comm::topology::Route;
+use crate::config::{Backend, TrainConfig};
+use crate::embed::sgns::{GatheredBackend, NativeBackend, StepBackend};
+use crate::embed::EmbeddingStore;
+use crate::graph::Edge;
+use crate::metrics::{EpochReport, Metrics, Timer};
+use crate::partition::HierarchyPlan;
+use crate::pipeline::{simulate_substep, PhaseBytes};
+use crate::sample::{make_minibatches, EpisodePool, NegativeSampler};
+use crate::util::Rng;
+
+/// The distributed embedding trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub plan: HierarchyPlan,
+    pub cluster: ClusterSpec,
+    /// Host-side full matrices (vertex rows live here between rotations).
+    pub store: EmbeddingStore,
+    /// Per-GPU pinned context shards (device-resident for all of training).
+    contexts: Vec<Vec<f32>>,
+    backends: Vec<Box<dyn StepBackend>>,
+    samplers: Vec<NegativeSampler>,
+    rngs: Vec<Rng>,
+    pub metrics: Metrics,
+}
+
+/// Per-GPU outcome of one scheduled step.
+struct StepOutcome {
+    subpart: usize,
+    trained: Vec<f32>,
+    loss: f64,
+    samples: u64,
+    bytes: PhaseBytes,
+}
+
+impl Trainer {
+    /// Build a trainer over `num_nodes` embedding rows with the graph's
+    /// `degrees` (negative-sampling distribution). Pass `runtime` when
+    /// `cfg.backend == Pjrt`.
+    pub fn new(
+        num_nodes: usize,
+        degrees: &[u32],
+        cfg: TrainConfig,
+        runtime: Option<&crate::runtime::Runtime>,
+    ) -> crate::Result<Self> {
+        let cluster = cfg.cluster();
+        let plan = HierarchyPlan::new(cfg.nodes, cfg.gpus_per_node, cfg.subparts, num_nodes);
+        let mut rng = Rng::new(cfg.seed);
+        let store = EmbeddingStore::init(num_nodes, cfg.dim, &mut rng);
+        let gpus = plan.total_gpus();
+        let contexts: Vec<Vec<f32>> =
+            (0..gpus).map(|g| store.checkout_context(plan.context_range(g))).collect();
+        let samplers: Vec<NegativeSampler> =
+            (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
+        let rngs: Vec<Rng> = (0..gpus).map(|g| rng.fork(g as u64)).collect();
+        let mut backends: Vec<Box<dyn StepBackend>> = Vec::with_capacity(gpus);
+        let max_subpart = (0..plan.total_subparts())
+            .map(|sp| plan.subpart_range(sp).len())
+            .max()
+            .unwrap_or(0);
+        let max_ctx = (0..gpus).map(|g| plan.context_range(g).len()).max().unwrap_or(0);
+        for _ in 0..gpus {
+            backends.push(match cfg.backend {
+                Backend::Native => Box::new(NativeBackend::new()),
+                Backend::Gathered => Box::new(GatheredBackend),
+                Backend::Pjrt => {
+                    let rt = runtime
+                        .ok_or_else(|| anyhow::anyhow!("pjrt backend requires a Runtime"))?;
+                    Box::new(rt.stepper(max_subpart, max_ctx, cfg.dim)?)
+                }
+            });
+        }
+        Ok(Trainer {
+            cfg,
+            plan,
+            cluster,
+            store,
+            contexts,
+            backends,
+            samplers,
+            rngs,
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// Effective learning rate for an epoch: linear decay over
+    /// `cfg.epochs` when `lr_decay` is set (word2vec convention), floored
+    /// at 1e-4 of the initial rate.
+    pub fn effective_lr(&self, epoch: usize) -> f32 {
+        if !self.cfg.lr_decay || self.cfg.epochs <= 1 {
+            return self.cfg.learning_rate;
+        }
+        let progress = epoch as f32 / self.cfg.epochs as f32;
+        self.cfg.learning_rate * (1.0 - progress).max(1e-4)
+    }
+
+    /// Train one epoch over `samples` (augmented positive edges).
+    /// Consumes the samples order (shuffles into episodes).
+    pub fn train_epoch(&mut self, samples: &mut Vec<Edge>, epoch: usize) -> EpochReport {
+        let wall = Timer::start();
+        let lr = self.effective_lr(epoch);
+        let mut rng = Rng::new(self.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C));
+        let episodes = crate::sample::split_episodes(samples, self.cfg.episode_size, &mut rng);
+        let mut sim_secs = 0.0;
+        let mut loss_sum = 0.0;
+        let mut total_samples = 0u64;
+        for ep in &episodes {
+            let pool = EpisodePool::build(&self.plan, ep);
+            let (ep_sim, ep_loss, ep_samples) = self.train_episode(&pool, lr);
+            sim_secs += ep_sim;
+            loss_sum += ep_loss;
+            total_samples += ep_samples;
+        }
+        self.metrics.add("episodes", episodes.len() as u64);
+        self.metrics.add("samples", total_samples);
+        self.metrics.add_secs("sim_epoch", sim_secs);
+        EpochReport {
+            epoch,
+            sim_secs,
+            wall_secs: wall.secs(),
+            samples: total_samples,
+            loss_sum,
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// One episode = one full rotation of the hierarchical schedule.
+    fn train_episode(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
+        let steps = self.plan.steps();
+        let mut sim = 0.0;
+        let mut loss = 0.0;
+        let mut samples = 0u64;
+        for step in &steps {
+            let outcomes = self.run_step(pool, &step.assignment, lr);
+            // sequential: write trained sub-parts back (D2H is priced by
+            // the pipeline model; the memcpy here is the real data motion)
+            let mut step_sim: f64 = 0.0;
+            for o in outcomes {
+                let range = self.plan.subpart_range(o.subpart);
+                self.store.checkin_vertex(range, &o.trained);
+                loss += o.loss;
+                samples += o.samples;
+                let mut d = o.bytes.durations(
+                    &self.cluster,
+                    self.cfg.batch,
+                    self.cfg.negatives,
+                    self.cfg.dim,
+                );
+                // topology-aware P2P pricing for the intra-node hop:
+                // the ring has `cross_hops` cross-socket hops per rotation;
+                // socket-aware routing bounces them through the host,
+                // naive routing pays the degraded direct path (§IV-C)
+                let topo = self.cluster.topology();
+                let cross_frac = topo.ring_cross_socket_hops() as f64
+                    / topo.gpus_per_node.max(1) as f64;
+                let cross_route = if self.cfg.socket_aware {
+                    Route::HostBounce
+                } else {
+                    Route::CrossSocketP2p
+                };
+                let cross = cross_route.secs(&self.cluster.fabric, o.bytes.subpart_bytes);
+                d.p2p = (1.0 - cross_frac) * d.p2p + cross_frac * cross;
+                // ping-pong: only a round's first sub-step pays the P2P
+                // stall; later sub-parts transfer under compute (§III-B)
+                let t = simulate_substep(&d, self.cfg.overlap(), step.sub == 0);
+                step_sim = step_sim.max(t); // GPUs run concurrently
+            }
+            sim += step_sim;
+        }
+        (sim, loss, samples)
+    }
+
+    /// Run one scheduled step: all GPUs in parallel worker threads.
+    fn run_step(
+        &mut self,
+        pool: &EpisodePool,
+        assignment: &[usize],
+        lr: f32,
+    ) -> Vec<StepOutcome> {
+        let plan = &self.plan;
+        let store = &self.store;
+        let cfg = &self.cfg;
+        let samplers = &self.samplers;
+        let crosses = plan.nodes > 1;
+        let results: Vec<StepOutcome> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(assignment.len());
+            for (g, ((ctx, backend), rng)) in self
+                .contexts
+                .iter_mut()
+                .zip(self.backends.iter_mut())
+                .zip(self.rngs.iter_mut())
+                .enumerate()
+            {
+                let sp = assignment[g];
+                handles.push(scope.spawn(move || {
+                    let vrange = plan.subpart_range(sp);
+                    let crange = plan.context_range(g);
+                    // H2D checkout (prefetch phase in the pipeline model)
+                    let mut vbuf = store.checkout_vertex(vrange.clone());
+                    let block = pool.block(sp, g);
+                    let mbs = make_minibatches(block, cfg.batch, vrange.start, crange.start, 0, 0);
+                    // per-group shared negatives (see embed::sgns), drawn
+                    // up front so the backend can run the whole block in
+                    // one device round trip (PJRT buffer chaining)
+                    let vns: Vec<Vec<i32>> = mbs
+                        .iter()
+                        .map(|mb| {
+                            let groups =
+                                crate::embed::sgns::groups_for(mb.u_local.len());
+                            samplers[g]
+                                .sample_local(groups * cfg.negatives, rng)
+                                .iter()
+                                .map(|&x| x as i32)
+                                .collect()
+                        })
+                        .collect();
+                    let loss = backend.step_block(
+                        &mut vbuf,
+                        ctx,
+                        cfg.dim,
+                        &mbs,
+                        &vns,
+                        cfg.negatives,
+                        lr,
+                    ) as f64;
+                    StepOutcome {
+                        subpart: sp,
+                        trained: vbuf,
+                        loss,
+                        samples: block.len() as u64,
+                        bytes: PhaseBytes {
+                            sample_bytes: block.len() as u64 * 8,
+                            subpart_bytes: (vrange.len() * cfg.dim * 4) as u64,
+                            train_samples: block.len() as u64,
+                            crosses_node: crosses,
+                        },
+                    }
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        results
+    }
+
+    /// Flush the pinned context shards back to the store and return it
+    /// (end of training; the store then holds the full trained model).
+    pub fn finish(mut self) -> EmbeddingStore {
+        for g in 0..self.plan.total_gpus() {
+            let range = self.plan.context_range(g);
+            let ctx = std::mem::take(&mut self.contexts[g]);
+            self.store.checkin_context(range, &ctx);
+        }
+        self.store
+    }
+
+    /// Read-only access to a GPU's pinned context shard (tests).
+    pub fn context_shard(&self, gpu: usize) -> &[f32] {
+        &self.contexts[gpu]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    fn small_cfg() -> TrainConfig {
+        TrainConfig {
+            nodes: 2,
+            gpus_per_node: 2,
+            dim: 8,
+            negatives: 3,
+            batch: 64,
+            subparts: 2,
+            episode_size: 5_000,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn graph_samples(n: usize, m: usize, seed: u64) -> (Vec<u32>, Vec<Edge>) {
+        let mut rng = Rng::new(seed);
+        let edges = gen::chung_lu(n, m, 2.3, &mut rng);
+        let g = gen::to_graph(n, edges);
+        let samples: Vec<Edge> = g.edges().collect();
+        (g.degrees(), samples)
+    }
+
+    #[test]
+    fn epoch_trains_and_reports() {
+        let (degrees, samples) = graph_samples(400, 3000, 1);
+        let mut t = Trainer::new(400, &degrees, small_cfg(), None).unwrap();
+        let r = t.train_epoch(&mut samples.clone(), 0);
+        assert_eq!(r.samples, samples.len() as u64);
+        assert!(r.sim_secs > 0.0);
+        assert!(r.loss_sum > 0.0);
+        let _ = samples;
+    }
+
+    #[test]
+    fn loss_decreases_across_epochs() {
+        let (degrees, samples) = graph_samples(300, 4000, 2);
+        let mut t = Trainer::new(300, &degrees, small_cfg(), None).unwrap();
+        let first = t.train_epoch(&mut samples.clone(), 0);
+        let mut last = first.clone();
+        for e in 1..6 {
+            last = t.train_epoch(&mut samples.clone(), e);
+        }
+        assert!(
+            last.mean_loss() < first.mean_loss(),
+            "first {} last {}",
+            first.mean_loss(),
+            last.mean_loss()
+        );
+    }
+
+    #[test]
+    fn embeddings_actually_move() {
+        let (degrees, samples) = graph_samples(200, 2000, 3);
+        let cfg = small_cfg();
+        let before = EmbeddingStore::init(200, cfg.dim, &mut Rng::new(cfg.seed));
+        let mut t = Trainer::new(200, &degrees, cfg, None).unwrap();
+        t.train_epoch(&mut samples.clone(), 0);
+        let after = t.finish();
+        let delta: f32 = before
+            .vertex
+            .iter()
+            .zip(&after.vertex)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(delta > 0.01, "vertex moved {delta}");
+        // context shards flushed: context no longer all zero
+        assert!(after.context.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn pipeline_on_is_simulated_faster() {
+        let (degrees, samples) = graph_samples(400, 6000, 4);
+        let mut on_cfg = small_cfg();
+        on_cfg.pipeline = true;
+        let mut off_cfg = small_cfg();
+        off_cfg.pipeline = false;
+        let mut t_on = Trainer::new(400, &degrees, on_cfg, None).unwrap();
+        let mut t_off = Trainer::new(400, &degrees, off_cfg, None).unwrap();
+        let r_on = t_on.train_epoch(&mut samples.clone(), 0);
+        let r_off = t_off.train_epoch(&mut samples.clone(), 0);
+        assert!(r_on.sim_secs < r_off.sim_secs, "{} vs {}", r_on.sim_secs, r_off.sim_secs);
+    }
+
+    #[test]
+    fn lr_decay_schedule() {
+        let (degrees, _) = graph_samples(100, 500, 9);
+        let mut cfg = small_cfg();
+        cfg.lr_decay = true;
+        cfg.epochs = 10;
+        cfg.learning_rate = 0.1;
+        let t = Trainer::new(100, &degrees, cfg, None).unwrap();
+        assert_eq!(t.effective_lr(0), 0.1);
+        assert!((t.effective_lr(5) - 0.05).abs() < 1e-6);
+        assert!(t.effective_lr(9) > 0.0);
+        assert!(t.effective_lr(9) < t.effective_lr(1));
+        // decay off: constant
+        let (degrees2, _) = graph_samples(100, 500, 9);
+        let t2 = Trainer::new(100, &degrees2, small_cfg(), None).unwrap();
+        assert_eq!(t2.effective_lr(7), t2.cfg.learning_rate);
+    }
+
+    #[test]
+    fn gathered_backend_matches_single_gpu_determinism() {
+        // same seed + same backend => identical runs
+        let (degrees, samples) = graph_samples(150, 1500, 5);
+        let mut cfg = small_cfg();
+        cfg.nodes = 1;
+        cfg.gpus_per_node = 1;
+        cfg.subparts = 1;
+        cfg.backend = Backend::Gathered;
+        let mut a = Trainer::new(150, &degrees, cfg.clone(), None).unwrap();
+        let mut b = Trainer::new(150, &degrees, cfg, None).unwrap();
+        let ra = a.train_epoch(&mut samples.clone(), 0);
+        let rb = b.train_epoch(&mut samples.clone(), 0);
+        assert_eq!(ra.loss_sum, rb.loss_sum);
+        assert_eq!(a.finish().vertex, b.finish().vertex);
+    }
+}

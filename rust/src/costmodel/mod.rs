@@ -1,0 +1,218 @@
+//! Analytic cost model: Table I storage accounting, the memory-bound
+//! roofline of §II-C, and the paper-scale epoch-time extrapolation used
+//! for the Table III rows our testbed cannot train for real.
+
+use crate::cluster::ClusterSpec;
+use crate::pipeline::{simulate_epoch, OverlapConfig, PhaseDurations};
+
+/// Storage cost of one dataset at given embedding dimension (paper
+/// Table I rows). All byte counts are exact formulas.
+#[derive(Debug, Clone)]
+pub struct StorageCost {
+    pub nodes_bytes: u64,
+    pub edges_bytes: u64,
+    pub augmented_bytes: u64,
+    pub vertex_emb_bytes: u64,
+    pub context_emb_bytes: u64,
+}
+
+impl StorageCost {
+    /// `aug_factor` = walk_length × context window (paper: E' ≈ 10×E).
+    pub fn compute(nodes: u64, edges: u64, dim: u64, aug_factor: u64) -> Self {
+        StorageCost {
+            // node id table: 4 bytes per node minimum (paper lists 3.91GB
+            // for 1.05B nodes ≈ 4B each)
+            nodes_bytes: nodes * 4,
+            // edge list: two 4-byte endpoints (paper: 2.24TB/300B ≈ 8B)
+            edges_bytes: edges * 8,
+            augmented_bytes: edges * aug_factor * 8,
+            vertex_emb_bytes: nodes * dim * 4,
+            context_emb_bytes: nodes * dim * 4,
+        }
+    }
+
+    pub fn total_embedding_bytes(&self) -> u64 {
+        self.vertex_emb_bytes + self.context_emb_bytes
+    }
+
+    /// Table I instance: 1.05B nodes, 300B edges, d=128, E'=10×E.
+    pub fn paper_table1() -> Self {
+        Self::compute(1_050_000_000, 300_000_000_000, 128, 10)
+    }
+}
+
+/// Parameters of one paper-scale training run to extrapolate.
+#[derive(Debug, Clone)]
+pub struct EpochModel {
+    pub cluster: ClusterSpec,
+    /// Edge samples trained per epoch (augmented).
+    pub epoch_samples: u64,
+    pub dim: usize,
+    pub negatives: usize,
+    pub batch: usize,
+    /// Sub-parts per GPU (paper tunes k=4).
+    pub subparts: usize,
+    /// Episodes per epoch (data-parallel splits).
+    pub episodes: usize,
+}
+
+impl EpochModel {
+    /// Per-step phase durations for the pipeline simulator, at paper scale.
+    ///
+    /// One *step* trains one (sub-part, GPU) block: samples/step =
+    /// epoch_samples / (gpus * steps_per_epoch_rotation). Embedding
+    /// transfer sizes follow the hierarchical plan's sub-part rows.
+    pub fn phase_durations(&self, num_nodes: u64) -> PhaseDurations {
+        let spec = &self.cluster;
+        let gpus = spec.total_gpus() as u64;
+        let g = spec.node.gpus_per_node as u64;
+        let m = spec.nodes as u64;
+        let k = self.subparts as u64;
+        let steps = m * g * k; // rotation steps per epoch
+        let samples_per_step = self.epoch_samples / (gpus * steps).max(1);
+        // sub-part rows per GPU buffer
+        let subpart_rows = num_nodes / (m * g * k).max(1);
+        let subpart_bytes = subpart_rows * self.dim as u64 * 4;
+        let sample_bytes = samples_per_step * 8;
+        let f = &spec.fabric;
+        use crate::comm::LinkClass::*;
+        PhaseDurations {
+            load_samples: f.transfer_secs(sample_bytes, H2D),
+            d2h_writeback: f.transfer_secs(subpart_bytes, D2H),
+            train: spec.node.gpu.train_secs(
+                samples_per_step,
+                self.batch,
+                self.negatives,
+                self.dim,
+            ),
+            p2p: f.transfer_secs(subpart_bytes, GpuPeer),
+            prefetch_h2d: f.transfer_secs(subpart_bytes, H2D),
+            inter_node: if spec.nodes > 1 {
+                // each stage ships G*k sub-parts per node over the network,
+                // amortized across the G*k steps of the stage
+                f.transfer_secs(subpart_bytes, InterNode)
+            } else {
+                0.0
+            },
+            disk_prefetch: f.transfer_secs(sample_bytes, Disk),
+        }
+    }
+
+    /// Extrapolated one-epoch time (the Table III estimator).
+    pub fn epoch_secs(&self, num_nodes: u64, overlap: OverlapConfig) -> f64 {
+        let spec = &self.cluster;
+        let steps =
+            spec.nodes * spec.node.gpus_per_node * self.subparts * self.episodes;
+        let per_step = self.phase_durations(num_nodes);
+        simulate_epoch(&per_step, steps, overlap)
+    }
+}
+
+/// Roofline: achievable samples/sec for a memory-bound SGNS kernel on one
+/// device (paper §II-C: O(nd) bytes and flops → O(1) intensity).
+pub fn roofline_samples_per_sec(spec: &crate::cluster::GpuSpec, dim: usize, negatives: usize) -> f64 {
+    // bytes per sample: vertex row r/w + pos context r/w + amortized
+    // negatives (shared across batch → negligible per sample)
+    let bytes = (4 * dim) as f64 * 4.0;
+    let flops = (2 * (negatives + 1) * dim + 6 * dim) as f64;
+    let mem_rate = spec.mem_gbps * 1e9 / bytes;
+    let flop_rate = spec.fp32_tflops * 1e12 / flops;
+    mem_rate.min(flop_rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::OverlapConfig;
+
+    #[test]
+    fn table1_matches_paper_magnitudes() {
+        let c = StorageCost::paper_table1();
+        // paper: nodes 3.91GB, edges 2.24TB, augmented 22.4TB, emb 500.7GB
+        assert!((c.nodes_bytes as f64 / 1e9 - 4.2).abs() < 0.5);
+        assert!((c.edges_bytes as f64 / 1e12 - 2.4).abs() < 0.3);
+        assert!((c.augmented_bytes as f64 / 1e12 - 24.0).abs() < 3.0);
+        assert!((c.vertex_emb_bytes as f64 / 1e9 - 537.6).abs() < 40.0);
+        assert_eq!(c.vertex_emb_bytes, c.context_emb_bytes);
+    }
+
+    #[test]
+    fn embeddings_exceed_40_gpu_memory() {
+        // the paper's capacity argument: even 40 V100s (1.28TB) barely hold
+        // both matrices + working set at d=128
+        let c = StorageCost::paper_table1();
+        let cluster = crate::cluster::ClusterSpec::set_a(5, 8);
+        assert!(c.total_embedding_bytes() > cluster.total_device_mem() / 2);
+    }
+
+    /// generated-B-like workload: 100M nodes, 10B edges ×10 augmentation,
+    /// d=96 — the Fig-7 scalability setting where training dominates.
+    fn model(nodes: usize, gpus: usize) -> EpochModel {
+        EpochModel {
+            cluster: crate::cluster::ClusterSpec::set_a(nodes, gpus),
+            epoch_samples: 100_000_000_000,
+            dim: 96,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        }
+    }
+
+    #[test]
+    fn more_gpus_faster_epoch_fig7_shape() {
+        let one = model(1, 8).epoch_secs(100_000_000, OverlapConfig::paper());
+        let two = model(2, 8).epoch_secs(100_000_000, OverlapConfig::paper());
+        assert!(two < one, "1-node {one} vs 2-node {two}");
+        // paper Fig 7: 1.67x-1.85x going 8 -> 16 GPUs
+        let speedup = one / two;
+        assert!(speedup > 1.5 && speedup < 2.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn pipeline_beats_no_pipeline() {
+        let m = model(2, 8);
+        let on = m.epoch_secs(100_000_000, OverlapConfig::paper());
+        let off = m.epoch_secs(100_000_000, OverlapConfig::none());
+        assert!(on < off, "overlap {on} vs serial {off}");
+    }
+
+    #[test]
+    fn rotation_transfer_floor_is_gpu_count_invariant() {
+        // every GPU sees the whole vertex matrix once per epoch, so the
+        // per-GPU prefetch traffic is constant in cluster size — scaling
+        // must come from the compute side (documented in DESIGN.md)
+        let d1 = model(1, 8).phase_durations(100_000_000);
+        let d2 = model(2, 8).phase_durations(100_000_000);
+        let steps1 = 1.0 * 8.0 * 4.0;
+        let steps2 = 2.0 * 8.0 * 4.0;
+        let t1 = d1.prefetch_h2d * steps1;
+        let t2 = d2.prefetch_h2d * steps2;
+        assert!((t1 - t2).abs() / t1 < 0.05, "prefetch totals {t1} vs {t2}");
+    }
+
+    #[test]
+    fn roofline_is_memory_bound_at_paper_params() {
+        let v = crate::cluster::GpuSpec::v100();
+        let r = roofline_samples_per_sec(&v, 128, 5);
+        let mem_only = v.mem_gbps * 1e9 / (4.0 * 128.0 * 4.0);
+        assert!((r - mem_only).abs() / mem_only < 1e-6, "roofline {r}");
+    }
+
+    #[test]
+    fn anonymized_a_epoch_near_paper_200s() {
+        // Table III row 5: 40 V100, 1.05B nodes, 280B edges (x10 augment),
+        // d=128 -> 200 s. Accept the right order of magnitude.
+        let m = EpochModel {
+            cluster: crate::cluster::ClusterSpec::set_a(5, 8),
+            epoch_samples: 2_800_000_000_000,
+            dim: 128,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        };
+        let t = m.epoch_secs(1_050_000_000, OverlapConfig::paper());
+        assert!(t > 40.0 && t < 1000.0, "epoch {t}");
+    }
+}

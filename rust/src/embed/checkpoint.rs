@@ -1,0 +1,132 @@
+//! Embedding checkpointing: binary save/load of the full model, plus a
+//! text export for downstream pipelines (the paper's feature-engineering
+//! consumers ingest plain id→vector tables).
+//!
+//! Binary layout: magic `TEMB`, u32 version, u64 num_nodes, u32 dim,
+//! vertex f32s, context f32s — all little-endian.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::EmbeddingStore;
+
+const MAGIC: &[u8; 4] = b"TEMB";
+const VERSION: u32 = 1;
+
+/// Save the full model.
+pub fn save(store: &EmbeddingStore, path: &Path) -> crate::Result<()> {
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(store.num_nodes as u64).to_le_bytes())?;
+    w.write_all(&(store.dim as u32).to_le_bytes())?;
+    for mat in [&store.vertex, &store.context] {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(mat.as_ptr() as *const u8, mat.len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a model saved by `save`.
+pub fn load(path: &Path) -> crate::Result<EmbeddingStore> {
+    let f = File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a tembed checkpoint", path.display());
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        bail!("{}: unsupported checkpoint version {version}", path.display());
+    }
+    r.read_exact(&mut b8)?;
+    let num_nodes = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b4)?;
+    let dim = u32::from_le_bytes(b4) as usize;
+    let read_mat = |r: &mut BufReader<File>| -> crate::Result<Vec<f32>> {
+        let mut raw = vec![0u8; num_nodes * dim * 4];
+        r.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let vertex = read_mat(&mut r)?;
+    let context = read_mat(&mut r)?;
+    Ok(EmbeddingStore { dim, num_nodes, vertex, context })
+}
+
+/// Export vertex embeddings as `node_id v0 v1 ...` text lines (word2vec
+/// text format minus the header, which downstream tools rarely agree on).
+pub fn export_text(store: &EmbeddingStore, path: &Path) -> crate::Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for v in 0..store.num_nodes {
+        write!(w, "{v}")?;
+        for x in store.vertex_row(v) {
+            write!(w, " {x}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tembed_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let mut rng = Rng::new(1);
+        let mut store = EmbeddingStore::init(100, 8, &mut rng);
+        store.context[5] = 3.25;
+        let p = tmp("rt.temb");
+        save(&store, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.num_nodes, 100);
+        assert_eq!(back.dim, 8);
+        assert_eq!(back.vertex, store.vertex);
+        assert_eq!(back.context, store.context);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad.temb");
+        std::fs::write(&p, b"NOPE123456789012").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn export_text_rows() {
+        let mut rng = Rng::new(2);
+        let store = EmbeddingStore::init(5, 3, &mut rng);
+        let p = tmp("exp.txt");
+        export_text(&store, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[0].starts_with("0 "));
+        assert_eq!(lines[2].split_whitespace().count(), 4);
+    }
+}

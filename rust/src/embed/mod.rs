@@ -1,0 +1,217 @@
+//! Embedding storage: the full vertex/context matrices (host side), the
+//! per-GPU resident state (pinned context shard + rotating sub-part
+//! ping-pong buffers), and the native Rust SGNS step used as the in-process
+//! compute backend and numerics oracle.
+
+pub mod checkpoint;
+pub mod sgns;
+
+use crate::partition::HierarchyPlan;
+use crate::util::Rng;
+
+/// Full embedding model: vertex + context matrices in host memory (the
+/// union of all node CPU memories in the simulation).
+#[derive(Debug, Clone)]
+pub struct EmbeddingStore {
+    pub dim: usize,
+    pub num_nodes: usize,
+    pub vertex: Vec<f32>,
+    pub context: Vec<f32>,
+}
+
+impl EmbeddingStore {
+    /// Initialize per GraphVite/word2vec convention: vertex uniform in
+    /// [-0.5/d, 0.5/d), context zero.
+    pub fn init(num_nodes: usize, dim: usize, rng: &mut Rng) -> Self {
+        let half = 0.5 / dim as f32;
+        let vertex = (0..num_nodes * dim).map(|_| rng.f32_range(-half, half)).collect();
+        let context = vec![0.0; num_nodes * dim];
+        EmbeddingStore { dim, num_nodes, vertex, context }
+    }
+
+    #[inline]
+    pub fn vertex_row(&self, v: usize) -> &[f32] {
+        &self.vertex[v * self.dim..(v + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn context_row(&self, v: usize) -> &[f32] {
+        &self.context[v * self.dim..(v + 1) * self.dim]
+    }
+
+    /// Copy a node-range of the vertex matrix out (H2D checkout of a
+    /// sub-part). Real memcpy — the simulation's data movement is real.
+    pub fn checkout_vertex(&self, range: std::ops::Range<usize>) -> Vec<f32> {
+        self.vertex[range.start * self.dim..range.end * self.dim].to_vec()
+    }
+
+    /// Write a trained sub-part back (D2H checkin).
+    pub fn checkin_vertex(&mut self, range: std::ops::Range<usize>, data: &[f32]) {
+        let dst = &mut self.vertex[range.start * self.dim..range.end * self.dim];
+        assert_eq!(dst.len(), data.len(), "sub-part size mismatch");
+        dst.copy_from_slice(data);
+    }
+
+    pub fn checkout_context(&self, range: std::ops::Range<usize>) -> Vec<f32> {
+        self.context[range.start * self.dim..range.end * self.dim].to_vec()
+    }
+
+    pub fn checkin_context(&mut self, range: std::ops::Range<usize>, data: &[f32]) {
+        let dst = &mut self.context[range.start * self.dim..range.end * self.dim];
+        assert_eq!(dst.len(), data.len(), "shard size mismatch");
+        dst.copy_from_slice(data);
+    }
+
+    /// Dot-product score of an edge (the link-prediction scorer).
+    pub fn score(&self, u: u32, v: u32) -> f32 {
+        let a = self.vertex_row(u as usize);
+        let b = self.context_row(v as usize);
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        ((self.vertex.len() + self.context.len()) * 4) as u64
+    }
+}
+
+/// Ping-pong pair of device buffers for the rotating vertex sub-part
+/// (paper §III-B): `front` is being trained while `back` receives the
+/// prefetch/P2P transfer for the next step; `swap` flips roles.
+#[derive(Debug, Default)]
+pub struct PingPong {
+    front: Vec<f32>,
+    back: Vec<f32>,
+}
+
+impl PingPong {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn load_front(&mut self, data: Vec<f32>) {
+        self.front = data;
+    }
+
+    /// Stage the next sub-part into the back buffer (overlappable phase).
+    pub fn stage_back(&mut self, data: Vec<f32>) {
+        self.back = data;
+    }
+
+    pub fn front(&self) -> &[f32] {
+        &self.front
+    }
+
+    pub fn front_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.front
+    }
+
+    /// Take the trained front out (to check in / P2P-send) and promote the
+    /// staged back buffer.
+    pub fn swap(&mut self) -> Vec<f32> {
+        let trained = std::mem::take(&mut self.front);
+        self.front = std::mem::take(&mut self.back);
+        trained
+    }
+
+    pub fn bytes(&self) -> u64 {
+        ((self.front.len() + self.back.len()) * 4) as u64
+    }
+}
+
+/// Per-GPU resident state: the pinned context shard plus the vertex
+/// sub-part ping-pong buffers. Device-memory accounting lives here.
+#[derive(Debug)]
+pub struct GpuState {
+    pub gpu: usize,
+    pub context_range: std::ops::Range<usize>,
+    pub context: Vec<f32>,
+    pub vertex_buf: PingPong,
+}
+
+impl GpuState {
+    /// Set up all GPUs of a plan from the store (the one-time context
+    /// load the paper's design optimizes for).
+    pub fn setup_all(plan: &HierarchyPlan, store: &EmbeddingStore) -> Vec<GpuState> {
+        (0..plan.total_gpus())
+            .map(|g| {
+                let range = plan.context_range(g);
+                GpuState {
+                    gpu: g,
+                    context_range: range.clone(),
+                    context: store.checkout_context(range),
+                    vertex_buf: PingPong::new(),
+                }
+            })
+            .collect()
+    }
+
+    /// Simulated device-memory footprint (context + ping-pong + samples).
+    pub fn device_bytes(&self) -> u64 {
+        (self.context.len() * 4) as u64 + self.vertex_buf.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_distributions() {
+        let mut rng = Rng::new(1);
+        let s = EmbeddingStore::init(100, 16, &mut rng);
+        assert_eq!(s.vertex.len(), 1600);
+        assert!(s.context.iter().all(|&x| x == 0.0));
+        let bound = 0.5 / 16.0;
+        assert!(s.vertex.iter().all(|&x| (-bound..bound).contains(&x)));
+        // not all identical
+        assert!(s.vertex.iter().any(|&x| x != s.vertex[0]));
+    }
+
+    #[test]
+    fn checkout_checkin_round_trip() {
+        let mut rng = Rng::new(2);
+        let mut s = EmbeddingStore::init(10, 4, &mut rng);
+        let mut part = s.checkout_vertex(2..5);
+        assert_eq!(part.len(), 12);
+        for v in &mut part {
+            *v += 1.0;
+        }
+        s.checkin_vertex(2..5, &part);
+        assert_eq!(s.vertex_row(2)[0], part[0]);
+        // outside range untouched
+        let before = EmbeddingStore::init(10, 4, &mut Rng::new(2));
+        assert_eq!(s.vertex_row(0), before.vertex_row(0));
+    }
+
+    #[test]
+    fn score_is_dot_product() {
+        let mut s = EmbeddingStore::init(4, 2, &mut Rng::new(3));
+        s.vertex[0] = 2.0;
+        s.vertex[1] = 3.0;
+        s.context[2] = 4.0; // node 1, dim 0
+        s.context[3] = 5.0;
+        assert_eq!(s.score(0, 1), 2.0 * 4.0 + 3.0 * 5.0);
+    }
+
+    #[test]
+    fn ping_pong_swap_semantics() {
+        let mut pp = PingPong::new();
+        pp.load_front(vec![1.0]);
+        pp.stage_back(vec![2.0]);
+        let trained = pp.swap();
+        assert_eq!(trained, vec![1.0]);
+        assert_eq!(pp.front(), &[2.0]);
+    }
+
+    #[test]
+    fn gpu_state_setup_partitions_context() {
+        let plan = HierarchyPlan::new(2, 2, 2, 40);
+        let store = EmbeddingStore::init(40, 8, &mut Rng::new(4));
+        let gpus = GpuState::setup_all(&plan, &store);
+        assert_eq!(gpus.len(), 4);
+        let total: usize = gpus.iter().map(|g| g.context.len()).sum();
+        assert_eq!(total, 40 * 8);
+        // shard content matches store
+        assert_eq!(gpus[1].context[0], store.context[gpus[1].context_range.start * 8]);
+    }
+}

@@ -1,0 +1,510 @@
+//! Native Rust SGNS step — the in-process compute backend.
+//!
+//! Implements exactly the L1/L2 math: **group-shared-negative** minibatch
+//! SGNS with scatter-add updates. Negatives are shared per `GROUP_SIZE`
+//! samples (the Ji et al. / BlazingText level-3 BLAS formulation the
+//! Pallas kernel feeds the MXU with); sharing across a whole large batch
+//! concentrates a B-fold gradient on N context rows and blows the context
+//! matrix up — see EXPERIMENTS.md §Perf for the measurement.
+//!
+//! The integration test `pjrt_equivalence` checks `GatheredBackend`
+//! against the AOT executable, which pytest checks against the pure-jnp
+//! oracle — closing the three-layer correctness loop.
+
+/// Samples per negative-sharing group. Must match
+/// `python/compile/kernels/sgns.py::GROUP_SIZE`.
+pub const GROUP_SIZE: usize = 32;
+
+/// The compute backend contract: one minibatch SGNS update against local
+/// shards. `u`/`vp` are rows into `vertex`/`context`; `vn` is the flat
+/// `[G * negs]` per-group negative rows (`G = ceil(u.len()/GROUP_SIZE)`,
+/// sample `i` uses group `i / GROUP_SIZE`); `real` caps how many samples
+/// are live (padding exclusion). Returns the summed loss over live samples.
+pub trait StepBackend: Send {
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        dim: usize,
+        u: &[i32],
+        vp: &[i32],
+        vn: &[i32],
+        negs: usize,
+        real: usize,
+        lr: f32,
+    ) -> f32;
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+
+    /// Run a whole step-block of minibatches against the same shards.
+    /// Default: loop `step`. The PJRT backend overrides this to keep the
+    /// shards device-resident across minibatches (donated-buffer
+    /// chaining), which is where its per-call H2D/D2H cost goes.
+    #[allow(clippy::too_many_arguments)]
+    fn step_block(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        dim: usize,
+        minibatches: &[crate::sample::MiniBatch],
+        vns: &[Vec<i32>],
+        negs: usize,
+        lr: f32,
+    ) -> f32 {
+        debug_assert_eq!(minibatches.len(), vns.len());
+        let mut loss = 0.0;
+        for (mb, vn) in minibatches.iter().zip(vns) {
+            loss += self.step(
+                vertex, context, dim, &mb.u_local, &mb.v_local, vn, negs, mb.real, lr,
+            );
+        }
+        loss
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn log_sigmoid(x: f32) -> f32 {
+    // numerically stable: -softplus(-x)
+    if x > 0.0 {
+        -(-x).exp().ln_1p()
+    } else {
+        x - x.exp().ln_1p()
+    }
+}
+
+// ---- fast transcendentals for the native hot loop ----------------------
+//
+// word2vec's classic EXP_TABLE trick: the SGNS inner loop spends most of
+// its time in exp/ln (measured in EXPERIMENTS.md §Perf), and a linearly
+// interpolated lookup table over [-16, 16] is accurate to ~2e-7 — far
+// below the f32 accumulation noise the equivalence tests already allow.
+
+const LUT_RANGE: f32 = 16.0;
+const LUT_SIZE: usize = 8192;
+
+struct SigmoidLut {
+    sig: Vec<f32>,
+    lsig: Vec<f32>,
+}
+
+static LUT: once_cell::sync::Lazy<SigmoidLut> = once_cell::sync::Lazy::new(|| {
+    let mut sig = Vec::with_capacity(LUT_SIZE + 2);
+    let mut lsig = Vec::with_capacity(LUT_SIZE + 2);
+    for i in 0..=(LUT_SIZE + 1) {
+        let x = -LUT_RANGE + 2.0 * LUT_RANGE * i as f32 / LUT_SIZE as f32;
+        sig.push(sigmoid(x));
+        lsig.push(log_sigmoid(x));
+    }
+    SigmoidLut { sig, lsig }
+});
+
+#[inline]
+fn lut_interp(table: &[f32], x: f32) -> f32 {
+    let t = (x + LUT_RANGE) * (LUT_SIZE as f32 / (2.0 * LUT_RANGE));
+    let i = t as usize; // x pre-clamped => in range
+    let frac = t - i as f32;
+    table[i] + frac * (table[i + 1] - table[i])
+}
+
+/// Fast sigmoid (interpolated LUT; exact tails).
+#[inline]
+fn sigmoid_fast(x: f32) -> f32 {
+    if x >= LUT_RANGE {
+        1.0
+    } else if x <= -LUT_RANGE {
+        0.0
+    } else {
+        lut_interp(&LUT.sig, x)
+    }
+}
+
+/// Fast log-sigmoid (interpolated LUT; exact tails: lsig(x) ≈ x for very
+/// negative x, ≈ 0 for very positive x).
+#[inline]
+fn log_sigmoid_fast(x: f32) -> f32 {
+    if x >= LUT_RANGE {
+        0.0
+    } else if x <= -LUT_RANGE {
+        x
+    } else {
+        lut_interp(&LUT.lsig, x)
+    }
+}
+
+/// Dot product of two equal-length rows. Four independent accumulators
+/// over 8-wide chunks: strict left-to-right float addition blocks SIMD, so
+/// we hand LLVM a reassociated form it can vectorize (≈3× on d=128).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ac = a.chunks_exact(8);
+    let bc = b.chunks_exact(8);
+    let (ra, rb) = (ac.remainder(), bc.remainder());
+    for (ca, cb) in ac.zip(bc) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// `y += alpha * x` over rows.
+#[inline]
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Pure-Rust backend (no PJRT): eager per-sample application of the
+/// vertex/positive updates, buffered group-negative updates. Fast path —
+/// all inner loops are contiguous-row dot/axpy so they auto-vectorize
+/// (see EXPERIMENTS.md §Perf for the before/after).
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend {
+    /// scratch: negative-gradient accumulator [G * negs, d]
+    gcn: Vec<f32>,
+    /// scratch: per-sample negative logits [negs]
+    neg_logit: Vec<f32>,
+    /// scratch: the sample's vertex-gradient row [d]
+    gv_row: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn step(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        dim: usize,
+        u: &[i32],
+        vp: &[i32],
+        vn: &[i32],
+        negs: usize,
+        real: usize,
+        lr: f32,
+    ) -> f32 {
+        let d = dim;
+        debug_assert_eq!(vn.len() % negs.max(1), 0);
+        self.gcn.clear();
+        self.gcn.resize(vn.len() * d, 0.0);
+        self.neg_logit.resize(negs, 0.0);
+        self.gv_row.resize(d, 0.0);
+        let mut loss = 0.0f32;
+
+        for i in 0..real.min(u.len()) {
+            let group = i / GROUP_SIZE;
+            let gvn = &vn[group * negs..(group + 1) * negs];
+            let ui = u[i] as usize * d;
+            let vi = vp[i] as usize * d;
+            let vb = &vertex[ui..ui + d];
+            // pos logit
+            let pos = dot(vb, &context[vi..vi + d]);
+            let gpos = sigmoid_fast(pos) - 1.0;
+            loss += -log_sigmoid_fast(pos);
+            // gv_row = gpos * cp  (start the vertex-gradient accumulator)
+            for (g, c) in self.gv_row.iter_mut().zip(&context[vi..vi + d]) {
+                *g = gpos * c;
+            }
+            // negatives: row-wise dot + two axpy per negative
+            let gbase = group * negs;
+            for (j, &vnj) in gvn.iter().enumerate() {
+                let cj = vnj as usize * d;
+                let cn = &context[cj..cj + d];
+                let s = dot(vb, cn);
+                let gneg = sigmoid_fast(s);
+                self.neg_logit[j] = gneg;
+                loss += -log_sigmoid_fast(-s);
+                axpy(gneg, cn, &mut self.gv_row);
+                axpy(gneg, vb, &mut self.gcn[(gbase + j) * d..(gbase + j + 1) * d]);
+            }
+            // eager updates: context[vp] -= lr*gpos*vb ; vertex[u] -= lr*gv
+            // (vb's shared borrow ends above; re-slice mutably below)
+            let (gpos_lr, lr_) = (lr * gpos, lr);
+            {
+                let cp = &mut context[vi..vi + d];
+                for (c, &v) in cp.iter_mut().zip(vertex[ui..ui + d].iter()) {
+                    *c -= gpos_lr * v;
+                }
+            }
+            {
+                let vrow = &mut vertex[ui..ui + d];
+                for (v, g) in vrow.iter_mut().zip(&self.gv_row) {
+                    *v -= lr_ * g;
+                }
+            }
+        }
+        // scatter the buffered group-negative gradients
+        for (slot, &vnj) in vn.iter().enumerate() {
+            let cj = vnj as usize * d;
+            axpy(-lr, &self.gcn[slot * d..(slot + 1) * d], &mut context[cj..cj + d]);
+        }
+        loss
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Batch-gathered step mirroring the L2 semantics *exactly* (all gradients
+/// from pre-update embeddings, then one scatter-add pass). `NativeBackend`
+/// applies vertex/pos updates eagerly, which differs only when a minibatch
+/// repeats a row; tests bound the drift and both converge.
+#[allow(clippy::too_many_arguments)]
+pub fn step_gathered(
+    vertex: &mut [f32],
+    context: &mut [f32],
+    dim: usize,
+    u: &[i32],
+    vp: &[i32],
+    vn: &[i32],
+    negs: usize,
+    real: usize,
+    lr: f32,
+) -> f32 {
+    let d = dim;
+    let b = real.min(u.len());
+    let mut loss = 0.0f32;
+    let mut gv = vec![0.0f32; b * d];
+    let mut gcp = vec![0.0f32; b * d];
+    let mut gcn = vec![0.0f32; vn.len() * d];
+    for i in 0..b {
+        let group = i / GROUP_SIZE;
+        let gvn = &vn[group * negs..(group + 1) * negs];
+        let ui = u[i] as usize * d;
+        let vi = vp[i] as usize * d;
+        let mut pos = 0.0;
+        for k in 0..d {
+            pos += vertex[ui + k] * context[vi + k];
+        }
+        let gpos = sigmoid(pos) - 1.0;
+        loss += -log_sigmoid(pos);
+        for (j, &vnj) in gvn.iter().enumerate() {
+            let cj = vnj as usize * d;
+            let mut s = 0.0;
+            for k in 0..d {
+                s += vertex[ui + k] * context[cj + k];
+            }
+            let gneg = sigmoid(s);
+            loss += -log_sigmoid(-s);
+            for k in 0..d {
+                gv[i * d + k] += gneg * context[cj + k];
+                gcn[(group * negs + j) * d + k] += gneg * vertex[ui + k];
+            }
+        }
+        for k in 0..d {
+            gv[i * d + k] += gpos * context[vi + k];
+            gcp[i * d + k] = gpos * vertex[ui + k];
+        }
+    }
+    // scatter-add
+    for i in 0..b {
+        let o = u[i] as usize * d;
+        for k in 0..d {
+            vertex[o + k] -= lr * gv[i * d + k];
+        }
+        let o = vp[i] as usize * d;
+        for k in 0..d {
+            context[o + k] -= lr * gcp[i * d + k];
+        }
+    }
+    for (slot, &vnj) in vn.iter().enumerate() {
+        let o = vnj as usize * d;
+        for k in 0..d {
+            context[o + k] -= lr * gcn[slot * d + k];
+        }
+    }
+    loss
+}
+
+/// Backend with *exact* L2 semantics, used for bit-comparable equivalence
+/// against the PJRT executable.
+#[derive(Debug, Default, Clone)]
+pub struct GatheredBackend;
+
+impl StepBackend for GatheredBackend {
+    fn step(
+        &mut self,
+        vertex: &mut [f32],
+        context: &mut [f32],
+        dim: usize,
+        u: &[i32],
+        vp: &[i32],
+        vn: &[i32],
+        negs: usize,
+        real: usize,
+        lr: f32,
+    ) -> f32 {
+        step_gathered(vertex, context, dim, u, vp, vn, negs, real, lr)
+    }
+
+    fn name(&self) -> &'static str {
+        "gathered"
+    }
+}
+
+/// Number of negative-sharing groups for a batch of `batch` samples.
+#[inline]
+pub fn groups_for(batch: usize) -> usize {
+    crate::util::ceil_div(batch.max(1), GROUP_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use crate::util::Rng;
+
+    fn setup(p: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let v: Vec<f32> = (0..p * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+        let c: Vec<f32> = (0..p * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+        (v, c)
+    }
+
+    #[test]
+    fn native_matches_gathered_when_rows_distinct() {
+        let d = 8;
+        let (mut v1, mut c1) = setup(20, d, 1);
+        let (mut v2, mut c2) = (v1.clone(), c1.clone());
+        let u = vec![0i32, 1, 2, 3];
+        let vp = vec![4i32, 5, 6, 7];
+        let vn = vec![10i32, 11]; // one group (b=4 < GROUP_SIZE), negs=2
+        let mut nb = NativeBackend::new();
+        let l1 = nb.step(&mut v1, &mut c1, d, &u, &vp, &vn, 2, 4, 0.1);
+        let l2 = step_gathered(&mut v2, &mut c2, d, &u, &vp, &vn, 2, 4, 0.1);
+        assert!((l1 - l2).abs() < 1e-4, "loss {l1} vs {l2}");
+        for (a, b) in v1.iter().zip(&v2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in c1.iter().zip(&c2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn groups_use_their_own_negatives() {
+        let d = 4;
+        let (mut v, mut c) = setup(200, d, 2);
+        let b = 2 * GROUP_SIZE;
+        let u: Vec<i32> = (0..b as i32).collect();
+        let vp: Vec<i32> = (100..100 + b as i32).collect();
+        // group 0 negatives: rows 180,181; group 1: rows 190,191
+        let vn = vec![180i32, 181, 190, 191];
+        let c0 = c.clone();
+        let mut nb = NativeBackend::new();
+        nb.step(&mut v, &mut c, d, &u, &vp, &vn, 2, b, 0.1);
+        for row in [180usize, 181, 190, 191] {
+            assert_ne!(&c[row * d..(row + 1) * d], &c0[row * d..(row + 1) * d]);
+        }
+        // an untouched row stays put (row 170: outside u 0..64,
+        // vp 100..164, and the negative rows)
+        assert_eq!(&c[170 * d..171 * d], &c0[170 * d..171 * d]);
+    }
+
+    #[test]
+    fn padding_is_ignored() {
+        let d = 4;
+        let (mut v, mut c) = setup(10, d, 2);
+        let (v0, c0) = (v.clone(), c.clone());
+        let u = vec![0i32, 9, 9, 9];
+        let vp = vec![1i32, 9, 9, 9];
+        let vn = vec![2i32];
+        let mut nb = NativeBackend::new();
+        let (mut v2, mut c2) = (v0.clone(), c0.clone());
+        let l_padded = nb.step(&mut v, &mut c, d, &u, &vp, &vn, 1, 1, 0.1);
+        let l_exact = nb.step(&mut v2, &mut c2, d, &[0], &[1], &vn, 1, 1, 0.1);
+        assert_eq!(l_padded, l_exact);
+        assert_eq!(v, v2);
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn loss_decreases_on_repeated_steps() {
+        let d = 16;
+        let (mut v, mut c) = setup(50, d, 3);
+        let mut rng = Rng::new(4);
+        let b = 32;
+        let u: Vec<i32> = (0..b).map(|_| rng.index(25) as i32).collect();
+        let vp: Vec<i32> = (0..b).map(|_| (25 + rng.index(25)) as i32).collect();
+        let vn: Vec<i32> = (0..5).map(|_| rng.index(50) as i32).collect();
+        let mut nb = NativeBackend::new();
+        let first = nb.step(&mut v, &mut c, d, &u, &vp, &vn, 5, b, 0.3);
+        let mut last = first;
+        for _ in 0..20 {
+            last = nb.step(&mut v, &mut c, d, &u, &vp, &vn, 5, b, 0.3);
+        }
+        assert!(last < first * 0.8, "first {first} last {last}");
+    }
+
+    #[test]
+    fn zero_lr_touches_nothing() {
+        let d = 4;
+        let (mut v, mut c) = setup(10, d, 5);
+        let (v0, c0) = (v.clone(), c.clone());
+        let mut nb = NativeBackend::new();
+        nb.step(&mut v, &mut c, d, &[0, 1], &[2, 3], &[4], 1, 2, 0.0);
+        assert_eq!(v, v0);
+        assert_eq!(c, c0);
+    }
+
+    #[test]
+    fn log_sigmoid_stable_at_extremes() {
+        assert!(log_sigmoid(100.0).abs() < 1e-6);
+        assert!((log_sigmoid(-100.0) + 100.0).abs() < 1e-3);
+        assert!(log_sigmoid(0.0) + std::f32::consts::LN_2 < 1e-6);
+    }
+
+    #[test]
+    fn groups_for_rounding() {
+        assert_eq!(groups_for(1), 1);
+        assert_eq!(groups_for(32), 1);
+        assert_eq!(groups_for(33), 2);
+        assert_eq!(groups_for(1024), 32);
+    }
+
+    #[test]
+    fn property_native_vs_gathered_distinct_rows() {
+        forall(30, 61, |g| {
+            let d = *g.pick(&[2, 4, 8]);
+            let p = 80;
+            let b = g.usize_in(1, 10);
+            let negs = g.usize_in(1, 3);
+            // draw distinct rows so eager == gathered exactly
+            let mut rng = Rng::new(g.u64());
+            let rows = rng.sample_distinct(p, 2 * b + negs);
+            let u: Vec<i32> = rows[..b].iter().map(|&x| x as i32).collect();
+            let vp: Vec<i32> = rows[b..2 * b].iter().map(|&x| x as i32).collect();
+            let vn: Vec<i32> = rows[2 * b..].iter().map(|&x| x as i32).collect();
+            let (mut v1, mut c1) = setup(p, d, g.u64());
+            let (mut v2, mut c2) = (v1.clone(), c1.clone());
+            let lr = g.f32_in(0.0, 0.5);
+            let mut nb = NativeBackend::new();
+            let l1 = nb.step(&mut v1, &mut c1, d, &u, &vp, &vn, negs, b, lr);
+            let l2 = step_gathered(&mut v2, &mut c2, d, &u, &vp, &vn, negs, b, lr);
+            assert!((l1 - l2).abs() / l1.max(1.0) < 1e-4);
+            for (a, b_) in v1.iter().zip(&v2) {
+                assert!((a - b_).abs() < 1e-4);
+            }
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Evaluation harnesses: AUC, the link-prediction protocol of §V-C2
+//! (GraphVite's protocol, which the paper adopts), and the downstream
+//! feature-engineering task of Table V.
+
+pub mod downstream;
+
+use crate::embed::EmbeddingStore;
+use crate::graph::{CsrGraph, Edge, NodeId};
+use crate::util::Rng;
+
+/// Area under the ROC curve from positive/negative score samples
+/// (rank-based Mann–Whitney estimator, ties get half credit).
+pub fn auc(pos: &[f32], neg: &[f32]) -> f64 {
+    assert!(!pos.is_empty() && !neg.is_empty(), "auc needs both classes");
+    let mut all: Vec<(f32, bool)> = pos
+        .iter()
+        .map(|&s| (s, true))
+        .chain(neg.iter().map(|&s| (s, false)))
+        .collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // average ranks over tie groups
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < all.len() {
+        let mut j = i;
+        while j + 1 < all.len() && all[j + 1].0 == all[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for item in &all[i..=j] {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let np = pos.len() as f64;
+    let nn = neg.len() as f64;
+    (rank_sum_pos - np * (np + 1.0) / 2.0) / (np * nn)
+}
+
+/// A link-prediction split: train edges + held-out positive test edges +
+/// sampled negative test pairs (non-edges).
+#[derive(Debug)]
+pub struct LinkSplit {
+    pub train_edges: Vec<Edge>,
+    pub test_pos: Vec<Edge>,
+    pub test_neg: Vec<Edge>,
+}
+
+/// Split a graph's edges for link prediction: hold out `test_frac` of
+/// edges as positives and sample an equal number of random non-edge pairs
+/// as negatives (the GraphVite protocol the paper follows).
+pub fn link_split(graph: &CsrGraph, test_frac: f64, rng: &mut Rng) -> LinkSplit {
+    // deduplicate direction: keep (u,v) with u < v once
+    let mut edges: Vec<Edge> = graph.edges().filter(|&(u, v)| u < v).collect();
+    rng.shuffle(&mut edges);
+    let n_test = ((edges.len() as f64 * test_frac) as usize).max(1);
+    let test_pos: Vec<Edge> = edges[..n_test].to_vec();
+    let train_edges: Vec<Edge> = edges[n_test..].to_vec();
+    let n = graph.num_nodes();
+    let mut test_neg = Vec::with_capacity(n_test);
+    while test_neg.len() < n_test {
+        let u = rng.index(n) as NodeId;
+        let v = rng.index(n) as NodeId;
+        if u != v && !graph.neighbors(u).contains(&v) {
+            test_neg.push((u, v));
+        }
+    }
+    LinkSplit { train_edges, test_pos, test_neg }
+}
+
+/// Score a set of edges with the trained model (symmetric average of both
+/// directions, since training emits both).
+pub fn score_edges(store: &EmbeddingStore, edges: &[Edge]) -> Vec<f32> {
+    edges
+        .iter()
+        .map(|&(u, v)| 0.5 * (store.score(u, v) + store.score(v, u)))
+        .collect()
+}
+
+/// Link-prediction AUC of a trained model on a split.
+pub fn link_auc(store: &EmbeddingStore, split: &LinkSplit) -> f64 {
+    let pos = score_edges(store, &split.test_pos);
+    let neg = score_edges(store, &split.test_neg);
+    auc(&pos, &neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn auc_perfect_and_random_and_inverted() {
+        assert_eq!(auc(&[2.0, 3.0], &[0.0, 1.0]), 1.0);
+        assert_eq!(auc(&[0.0, 1.0], &[2.0, 3.0]), 0.0);
+        let a = auc(&[1.0, 0.0], &[1.0, 0.0]);
+        assert!((a - 0.5).abs() < 1e-9, "ties -> 0.5, got {a}");
+    }
+
+    #[test]
+    fn auc_handles_interleaved() {
+        // pos: 3,1 ; neg: 2,0 -> pairs won: (3>2),(3>0),(1>0) = 3/4
+        let a = auc(&[3.0, 1.0], &[2.0, 0.0]);
+        assert!((a - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_is_disjoint_and_negative_pairs_are_nonedges() {
+        let mut rng = Rng::new(1);
+        let g = gen::to_graph(200, gen::erdos_renyi(200, 1000, &mut rng));
+        let split = link_split(&g, 0.1, &mut rng);
+        for &(u, v) in &split.test_neg {
+            assert!(!g.neighbors(u).contains(&v));
+        }
+        // train + test_pos = all deduped edges
+        let total: usize = g.edges().filter(|&(u, v)| u < v).count();
+        assert_eq!(split.train_edges.len() + split.test_pos.len(), total);
+    }
+
+    #[test]
+    fn trained_model_beats_untrained_on_link_auc() {
+        let mut rng = Rng::new(2);
+        let (edges, _) = gen::dcsbm(250, 2500, 10, 0.8, 2.3, &mut rng);
+        let g = gen::to_graph(250, edges);
+        let split = link_split(&g, 0.1, &mut rng);
+        // untrained: context is zero -> all scores 0 -> AUC 0.5
+        let untrained = EmbeddingStore::init(250, 16, &mut rng);
+        let a0 = link_auc(&untrained, &split);
+        assert!((a0 - 0.5).abs() < 0.05, "untrained auc {a0}");
+        // train on the training edges only
+        let cfg = crate::config::TrainConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            dim: 16,
+            subparts: 2,
+            epochs: 1,
+            ..Default::default()
+        };
+        let mut samples: Vec<Edge> = split
+            .train_edges
+            .iter()
+            .flat_map(|&(u, v)| [(u, v), (v, u)])
+            .collect();
+        let mut t = crate::coordinator::Trainer::new(250, &g.degrees(), cfg, None).unwrap();
+        for e in 0..20 {
+            t.train_epoch(&mut samples, e);
+        }
+        let store = t.finish();
+        let a1 = link_auc(&store, &split);
+        assert!(a1 > 0.6, "trained auc {a1}");
+        assert!(a1 > a0);
+    }
+}

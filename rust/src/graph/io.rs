@@ -1,0 +1,165 @@
+//! Edge-list I/O: a compact binary format (the walk engine's episode files
+//! use the same framing) and a whitespace text format for interchange.
+//!
+//! Binary layout: magic `TEB1`, u64 num_nodes, u64 num_edges, then
+//! `(u32 src, u32 dst)` pairs little-endian.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::{CsrGraph, Edge};
+
+const MAGIC: &[u8; 4] = b"TEB1";
+
+/// Write an edge list in the binary format.
+pub fn write_edges_bin(
+    path: &Path,
+    num_nodes: usize,
+    edges: &[Edge],
+) -> crate::Result<()> {
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(num_nodes as u64).to_le_bytes())?;
+    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    for &(s, d) in edges {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&d.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a binary edge list, returning `(num_nodes, edges)`.
+pub fn read_edges_bin(path: &Path) -> crate::Result<(usize, Vec<Edge>)> {
+    let f = File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let num_nodes = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let num_edges = u64::from_le_bytes(buf8) as usize;
+    let mut raw = vec![0u8; num_edges * 8];
+    r.read_exact(&mut raw)?;
+    let mut edges = Vec::with_capacity(num_edges);
+    for c in raw.chunks_exact(8) {
+        let s = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        let d = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        edges.push((s, d));
+    }
+    Ok((num_nodes, edges))
+}
+
+/// Write `src dst` text lines (interchange with external tools).
+pub fn write_edges_text(path: &Path, edges: &[Edge]) -> crate::Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for &(s, d) in edges {
+        writeln!(w, "{s} {d}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read whitespace-separated `src dst` pairs; `#`-prefixed lines skipped.
+/// Returns `(max_node_id + 1, edges)`.
+pub fn read_edges_text(path: &Path) -> crate::Result<(usize, Vec<Edge>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut edges = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let s: u32 = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
+        let d: u32 = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d));
+    }
+    let n = if edges.is_empty() { 0 } else { max_id as usize + 1 };
+    Ok((n, edges))
+}
+
+/// Load a CSR graph from either format, by extension (`.bin` / anything else
+/// is treated as text).
+pub fn load_graph(path: &Path, symmetric: bool) -> crate::Result<CsrGraph> {
+    let (n, edges) = if path.extension().map(|e| e == "bin").unwrap_or(false) {
+        read_edges_bin(path)?
+    } else {
+        read_edges_text(path)?
+    };
+    Ok(CsrGraph::from_edges(n, &edges, symmetric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tembed_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn bin_round_trip() {
+        let p = tmp("rt.bin");
+        let edges = vec![(0, 1), (7, 3), (2, 2)];
+        write_edges_bin(&p, 8, &edges).unwrap();
+        let (n, got) = read_edges_bin(&p).unwrap();
+        assert_eq!(n, 8);
+        assert_eq!(got, edges);
+    }
+
+    #[test]
+    fn text_round_trip_with_comments() {
+        let p = tmp("rt.txt");
+        std::fs::write(&p, "# comment\n0 1\n\n3 2\n").unwrap();
+        let (n, got) = read_edges_text(&p).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(got, vec![(0, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"XXXX\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0\0").unwrap();
+        assert!(read_edges_bin(&p).is_err());
+    }
+
+    #[test]
+    fn bad_text_line_reports_lineno() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0 1\nnot numbers\n").unwrap();
+        let err = read_edges_text(&p).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "err: {err}");
+    }
+
+    #[test]
+    fn load_graph_builds_csr() {
+        let p = tmp("g.bin");
+        write_edges_bin(&p, 3, &[(0, 1), (1, 2)]).unwrap();
+        let g = load_graph(&p, true).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 4);
+    }
+}

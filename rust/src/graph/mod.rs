@@ -1,0 +1,208 @@
+//! Graph substrate: CSR storage, builders, degree statistics.
+//!
+//! Networks are stored in compressed-sparse-row form — the same layout the
+//! paper's walk engine (Plato) uses — with `u32` node ids (the simulated
+//! datasets are scaled-down stand-ins; see `gen::datasets`) and `u64`
+//! offsets so edge counts past 4B still index correctly.
+
+pub mod io;
+
+/// Node identifier. Scaled-down graphs fit u32; offsets are u64.
+pub type NodeId = u32;
+
+/// A directed edge `(src, dst)`.
+pub type Edge = (NodeId, NodeId);
+
+/// Immutable CSR graph.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` with v's out-neighbors.
+    offsets: Vec<u64>,
+    targets: Vec<NodeId>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list. `symmetric` adds the reverse of every edge
+    /// (node-embedding training treats networks as undirected).
+    pub fn from_edges(num_nodes: usize, edges: &[Edge], symmetric: bool) -> Self {
+        let mut degree = vec![0u64; num_nodes];
+        for &(s, d) in edges {
+            debug_assert!((s as usize) < num_nodes && (d as usize) < num_nodes);
+            degree[s as usize] += 1;
+            if symmetric && s != d {
+                degree[d as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0u64; num_nodes + 1];
+        for v in 0..num_nodes {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets[..num_nodes].to_vec();
+        let mut targets = vec![0 as NodeId; offsets[num_nodes] as usize];
+        for &(s, d) in edges {
+            targets[cursor[s as usize] as usize] = d;
+            cursor[s as usize] += 1;
+            if symmetric && s != d {
+                targets[cursor[d as usize] as usize] = s;
+                cursor[d as usize] += 1;
+            }
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored (directed) edges.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        *self.offsets.last().unwrap()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// Iterate all stored edges `(src, dst)`.
+    pub fn edges(&self) -> impl Iterator<Item = Edge> + '_ {
+        (0..self.num_nodes() as NodeId).flat_map(move |v| {
+            self.neighbors(v).iter().map(move |&u| (v, u))
+        })
+    }
+
+    /// Out-degree array (used by degree-guided partitioning + negative
+    /// sampling's unigram^0.75 distribution).
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_nodes())
+            .map(|v| self.degree(v as NodeId) as u32)
+            .collect()
+    }
+
+    /// Max degree — cheap skew indicator used in reports.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes())
+            .map(|v| self.degree(v as NodeId))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Bytes of CSR storage (reported against the paper's Table I).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.targets.len() * 4) as u64
+    }
+
+    /// Nodes with degree > 0 (isolated nodes never appear in walks).
+    pub fn active_nodes(&self) -> Vec<NodeId> {
+        (0..self.num_nodes() as NodeId)
+            .filter(|&v| self.degree(v) > 0)
+            .collect()
+    }
+}
+
+/// Basic degree-distribution statistics for dataset reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    /// Gini coefficient of the degree distribution — 0 for uniform meshes
+    /// (delaunay), high (>0.5) for scale-free graphs (kron, social).
+    pub gini: f64,
+}
+
+impl CsrGraph {
+    pub fn degree_stats(&self) -> DegreeStats {
+        let mut degs: Vec<usize> =
+            (0..self.num_nodes()).map(|v| self.degree(v as NodeId)).collect();
+        degs.sort_unstable();
+        let n = degs.len().max(1) as f64;
+        let total: f64 = degs.iter().map(|&d| d as f64).sum();
+        let mean = total / n;
+        let mut weighted = 0.0;
+        for (i, &d) in degs.iter().enumerate() {
+            weighted += (2.0 * (i as f64 + 1.0) - n - 1.0) * d as f64;
+        }
+        let gini = if total > 0.0 { weighted / (n * total) } else { 0.0 };
+        DegreeStats {
+            min: degs.first().copied().unwrap_or(0),
+            max: degs.last().copied().unwrap_or(0),
+            mean,
+            gini,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> CsrGraph {
+        CsrGraph::from_edges(3, &[(0, 1), (1, 2), (2, 0)], true)
+    }
+
+    #[test]
+    fn csr_from_edges_directed() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (2, 3)], false);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[] as &[NodeId]);
+        assert_eq!(g.neighbors(2), &[3]);
+    }
+
+    #[test]
+    fn csr_symmetric_doubles_edges() {
+        let g = triangle();
+        assert_eq!(g.num_edges(), 6);
+        for v in 0..3 {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn self_loop_not_doubled() {
+        let g = CsrGraph::from_edges(2, &[(0, 0), (0, 1)], true);
+        assert_eq!(g.degree(0), 2); // self loop stored once + (0,1)
+        assert_eq!(g.degree(1), 1); // the mirrored (1,0)
+    }
+
+    #[test]
+    fn edges_iterator_covers_all() {
+        let g = triangle();
+        let edges: Vec<Edge> = g.edges().collect();
+        assert_eq!(edges.len(), 6);
+        assert!(edges.contains(&(0, 1)));
+        assert!(edges.contains(&(1, 0)));
+    }
+
+    #[test]
+    fn degree_stats_uniform_vs_star() {
+        let mesh = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], true);
+        let star_edges: Vec<Edge> = (1..100).map(|i| (0, i)).collect();
+        let star = CsrGraph::from_edges(100, &star_edges, true);
+        assert!(mesh.degree_stats().gini < 0.05);
+        assert!(star.degree_stats().gini > 0.4);
+    }
+
+    #[test]
+    fn active_nodes_skips_isolated() {
+        let g = CsrGraph::from_edges(5, &[(0, 1)], true);
+        assert_eq!(g.active_nodes(), vec![0, 1]);
+    }
+
+    #[test]
+    fn storage_bytes_counts_arrays() {
+        let g = triangle();
+        assert_eq!(g.storage_bytes(), (4 * 8 + 6 * 4) as u64);
+    }
+}

@@ -1,0 +1,40 @@
+//! # tembed — distributed multi-GPU node embedding (Tencent, CS.DC 2020)
+//!
+//! Production-quality reproduction of *"A Distributed Multi-GPU System for
+//! Large-Scale Node Embedding at Tencent"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: decoupled
+//!   walk engine, hierarchical data partitioning, hybrid model/data-parallel
+//!   episode scheduler, 7-phase embedding-training pipeline, two-level
+//!   ring communication, topology-aware transfer routing — driving a
+//!   *simulated* multi-node multi-GPU cluster whose per-device compute is
+//!   real (AOT-compiled XLA executables via PJRT).
+//! * **L2** — `python/compile/model.py`: the JAX episode step
+//!   (gather → kernel → scatter-add), lowered once to HLO text.
+//! * **L1** — `python/compile/kernels/sgns.py`: the Pallas shared-negative
+//!   SGNS kernel (MXU-friendly level-3 BLAS formulation).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod embed;
+pub mod eval;
+pub mod gen;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod pipeline;
+pub mod runtime;
+pub mod sample;
+pub mod util;
+pub mod walk;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

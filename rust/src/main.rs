@@ -1,0 +1,269 @@
+//! `tembed` — launcher CLI for the distributed node-embedding system.
+//!
+//! Subcommands (hand-rolled parser; the offline crate set has no clap):
+//!
+//! ```text
+//! tembed train   --dataset <name> [--epochs N] [--config f.toml] [--set k=v]...
+//! tembed walk    --dataset <name> --out <dir> [--set k=v]...
+//! tembed eval    --dataset <name> [--epochs N] [--set k=v]...   # link-pred AUC
+//! tembed memory                                            # paper Table I
+//! tembed extrapolate                                       # Table III paper rows
+//! tembed info                                              # datasets & clusters
+//! ```
+
+use std::path::PathBuf;
+
+use tembed::config::{Backend, TrainConfig};
+use tembed::coordinator::driver::Driver;
+use tembed::gen::datasets;
+use tembed::util::{human_bytes, human_secs};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Minimal flag parser: `--key value` pairs + repeated `--set k=v`.
+struct Flags {
+    values: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut values = Vec::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+            values.push((key.to_string(), val.clone()));
+        }
+        Ok(Flags { values })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.values.iter().filter(move |(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn build_config(flags: &Flags) -> anyhow::Result<TrainConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => TrainConfig::from_file(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    for kv in flags.all("set") {
+        cfg.apply_cli(kv)?;
+    }
+    if let Some(e) = flags.get("epochs") {
+        cfg.epochs = e.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn load_dataset(flags: &Flags, seed: u64) -> anyhow::Result<tembed::graph::CsrGraph> {
+    if let Some(path) = flags.get("graph") {
+        return tembed::graph::io::load_graph(std::path::Path::new(path), true);
+    }
+    let name = flags.get("dataset").unwrap_or("youtube");
+    let spec = datasets::spec(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?} (see `tembed info`)"))?;
+    Ok(spec.generate(seed))
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let (cmd, rest) = args
+        .split_first()
+        .ok_or_else(|| anyhow::anyhow!("usage: tembed <train|walk|eval|memory|extrapolate|info> ..."))?;
+    let flags = Flags::parse(rest)?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "walk" => cmd_walk(&flags),
+        "eval" => cmd_eval(&flags),
+        "memory" => cmd_memory(),
+        "extrapolate" => cmd_extrapolate(),
+        "info" => cmd_info(),
+        other => anyhow::bail!("unknown command {other:?}"),
+    }
+}
+
+fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = build_config(flags)?;
+    let graph = load_dataset(flags, cfg.seed)?;
+    println!("# effective config\n{}", cfg.render());
+    println!(
+        "graph: {} nodes, {} edges (gini {:.2})",
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.degree_stats().gini
+    );
+    let runtime = open_runtime_if_needed(&cfg)?;
+    let mut driver = Driver::new(&graph, cfg.clone(), runtime.as_ref())?;
+    for epoch in 0..cfg.epochs {
+        let r = driver.run_epoch(epoch);
+        println!(
+            "epoch {:>3}  sim {:>10}  wall {:>10}  samples {:>10}  mean-loss {:.4}  sim-throughput {:.2e}/s",
+            r.epoch,
+            human_secs(r.sim_secs),
+            human_secs(r.wall_secs),
+            r.samples,
+            r.mean_loss(),
+            r.sim_throughput(),
+        );
+    }
+    let store = driver.finish();
+    println!("model: {} of embeddings trained", human_bytes(store.storage_bytes()));
+    if let Some(path) = flags.get("save") {
+        tembed::embed::checkpoint::save(&store, std::path::Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    if let Some(path) = flags.get("export") {
+        tembed::embed::checkpoint::export_text(&store, std::path::Path::new(path))?;
+        println!("text embeddings exported to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_walk(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = build_config(flags)?;
+    let graph = load_dataset(flags, cfg.seed)?;
+    let out = PathBuf::from(flags.get("out").unwrap_or("walks"));
+    let engine = tembed::walk::WalkEngine::new(
+        &graph,
+        tembed::walk::WalkConfig {
+            walk_length: cfg.walk_length,
+            walks_per_node: cfg.walks_per_node,
+            threads: cfg.threads,
+            seed: cfg.seed,
+        },
+    );
+    let t = tembed::metrics::Timer::start();
+    let walks = engine.run_epoch(0);
+    let samples = tembed::walk::augment_walks(&walks, cfg.window, cfg.threads);
+    let episodes = tembed::util::ceil_div(samples.len(), cfg.episode_size);
+    let files = tembed::walk::augment::write_episode_files(
+        &out,
+        &samples,
+        episodes.max(1),
+        graph.num_nodes(),
+    )?;
+    println!(
+        "walked {} paths -> {} samples in {} -> {} episode files under {}",
+        walks.num_walks(),
+        samples.len(),
+        human_secs(t.secs()),
+        files.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = build_config(flags)?;
+    let graph = load_dataset(flags, cfg.seed)?;
+    let mut rng = tembed::util::Rng::new(cfg.seed ^ 0xE7A1);
+    let split = tembed::eval::link_split(&graph, 0.1, &mut rng);
+    // walk + train on the training graph only (paper protocol): walks
+    // provide the multi-hop proximity signal raw edges lack
+    let g_train = tembed::graph::CsrGraph::from_edges(
+        graph.num_nodes(),
+        &split.train_edges,
+        true,
+    );
+    let runtime = open_runtime_if_needed(&cfg)?;
+    let mut driver = Driver::new(&g_train, cfg.clone(), runtime.as_ref())?;
+    for epoch in 0..cfg.epochs {
+        let r = driver.run_epoch(epoch);
+        if epoch % 10 == 0 || epoch + 1 == cfg.epochs {
+            println!("epoch {:>3}  mean-loss {:.4}", epoch, r.mean_loss());
+        }
+    }
+    let store = driver.finish();
+    let auc = tembed::eval::link_auc(&store, &split);
+    println!("link-prediction AUC: {auc:.4}");
+    Ok(())
+}
+
+fn cmd_memory() -> anyhow::Result<()> {
+    use tembed::costmodel::StorageCost;
+    let c = StorageCost::paper_table1();
+    println!("Table I — memory cost (paper's 1.05B-node / 300B-edge network, d=128):");
+    println!("  nodes               {}", human_bytes(c.nodes_bytes));
+    println!("  edges               {}", human_bytes(c.edges_bytes));
+    println!("  augmented edges     {}", human_bytes(c.augmented_bytes));
+    println!("  vertex embeddings   {}", human_bytes(c.vertex_emb_bytes));
+    println!("  context embeddings  {}", human_bytes(c.context_emb_bytes));
+    let cluster = tembed::cluster::ClusterSpec::set_a(1, 8);
+    println!(
+        "  one 8xV100 node has {} device memory -> model parallelism is mandatory",
+        human_bytes(cluster.total_device_mem())
+    );
+    Ok(())
+}
+
+fn cmd_extrapolate() -> anyhow::Result<()> {
+    use tembed::cluster::ClusterSpec;
+    use tembed::costmodel::EpochModel;
+    use tembed::pipeline::OverlapConfig;
+    println!("Table III paper-scale rows (cost-model extrapolation):");
+    println!("{:<34} {:>10} {:>12}", "row", "paper (s)", "model (s)");
+    let rows: [(&str, ClusterSpec, u64, u64, usize, f64); 4] = [
+        ("16 V100 / generated-B / d=96", ClusterSpec::set_a(2, 8), 100_000_000, 10_000_000_000, 96, 15.1),
+        ("16 V100 / generated-A / d=96", ClusterSpec::set_a(2, 8), 250_000_000, 20_000_000_000, 96, 27.9),
+        ("40 V100 / anonymized-A / d=128", ClusterSpec::set_a(5, 8), 1_050_000_000, 280_000_000_000, 128, 200.0),
+        ("40 P40  / anonymized-B / d=100", ClusterSpec::set_b(5, 8), 1_050_000_000, 300_000_000_000, 100, 1260.0),
+    ];
+    for (name, cluster, nodes, edges, dim, paper) in rows {
+        let m = EpochModel {
+            cluster,
+            epoch_samples: edges * 10,
+            dim,
+            negatives: 5,
+            batch: 4096,
+            subparts: 4,
+            episodes: 1,
+        };
+        let t = m.epoch_secs(nodes, OverlapConfig::paper());
+        println!("{name:<34} {paper:>10.0} {t:>12.1}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("datasets (paper Table II -> simulated scale):");
+    println!(
+        "{:<15} {:>14} {:>16} {:>10} {:>12}  {}",
+        "name", "paper nodes", "paper edges", "sim nodes", "sim edges", "task"
+    );
+    for d in datasets::DATASETS {
+        println!(
+            "{:<15} {:>14} {:>16} {:>10} {:>12}  {}",
+            d.name, d.paper_nodes, d.paper_edges, d.sim_nodes, d.sim_edges, d.task
+        );
+    }
+    println!("\nclusters: set-a = 8xV100/node + NVLink + 100Gb IB; set-b = 8xP40/node + 40Gb");
+    Ok(())
+}
+
+fn open_runtime_if_needed(cfg: &TrainConfig) -> anyhow::Result<Option<tembed::runtime::Runtime>> {
+    if cfg.backend == Backend::Pjrt {
+        let rt = tembed::runtime::Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?;
+        println!("pjrt platform: {}", rt.platform());
+        Ok(Some(rt))
+    } else {
+        Ok(None)
+    }
+}

@@ -1,0 +1,159 @@
+//! Metrics: wallclock timers, byte/sample counters, and the per-phase
+//! simulated-time breakdown every report is built from.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Scoped wallclock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Named accumulators: counts, bytes, simulated seconds.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    seconds: BTreeMap<&'static str, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.counters.entry(key).or_insert(0) += n;
+    }
+
+    pub fn add_secs(&mut self, key: &'static str, s: f64) {
+        *self.seconds.entry(key).or_insert(0.0) += s;
+    }
+
+    pub fn count(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn secs(&self, key: &str) -> f64 {
+        self.seconds.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// Merge another metrics bag in (per-GPU workers fold into the epoch).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.seconds {
+            *self.seconds.entry(k).or_insert(0.0) += v;
+        }
+    }
+
+    /// Render as aligned `key: value` lines for reports.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k:<28} {v}\n"));
+        }
+        for (k, v) in &self.seconds {
+            out.push_str(&format!("  {k:<28} {}\n", crate::util::human_secs(*v)));
+        }
+        out
+    }
+}
+
+/// One epoch's outcome, the unit every bench row reports.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Simulated wall time of the epoch on the modelled cluster.
+    pub sim_secs: f64,
+    /// Real wallclock the simulation took on this testbed.
+    pub wall_secs: f64,
+    pub samples: u64,
+    pub loss_sum: f64,
+    pub metrics: Metrics,
+}
+
+impl EpochReport {
+    pub fn mean_loss(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.samples as f64
+        }
+    }
+
+    /// Simulated throughput in samples/sec — the paper's headline unit.
+    pub fn sim_throughput(&self) -> f64 {
+        if self.sim_secs > 0.0 {
+            self.samples as f64 / self.sim_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.add("samples", 10);
+        m.add("samples", 5);
+        assert_eq!(m.count("samples"), 15);
+        assert_eq!(m.count("missing"), 0);
+    }
+
+    #[test]
+    fn seconds_accumulate_and_merge() {
+        let mut a = Metrics::new();
+        a.add_secs("train", 1.5);
+        let mut b = Metrics::new();
+        b.add_secs("train", 0.5);
+        b.add("steps", 3);
+        a.merge(&b);
+        assert_eq!(a.secs("train"), 2.0);
+        assert_eq!(a.count("steps"), 3);
+    }
+
+    #[test]
+    fn report_derived_quantities() {
+        let r = EpochReport {
+            epoch: 0,
+            sim_secs: 2.0,
+            wall_secs: 0.1,
+            samples: 1000,
+            loss_sum: 500.0,
+            metrics: Metrics::new(),
+        };
+        assert_eq!(r.mean_loss(), 0.5);
+        assert_eq!(r.sim_throughput(), 500.0);
+    }
+
+    #[test]
+    fn render_is_stable_order() {
+        let mut m = Metrics::new();
+        m.add("b_key", 1);
+        m.add("a_key", 2);
+        let r = m.render();
+        assert!(r.find("a_key").unwrap() < r.find("b_key").unwrap());
+    }
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+}

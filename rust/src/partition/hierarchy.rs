@@ -1,0 +1,326 @@
+//! Hierarchical vertex-embedding partitioning + rotation schedule
+//! (paper §III-B, Figs. 1 & 4) — the heart of the hybrid model/data
+//! parallel design.
+//!
+//! With `M` nodes × `G` GPUs × `k` sub-parts:
+//!
+//! * **context** embeddings: `M*G` shards, shard `(n,g)` pinned on GPU
+//!   `(n,g)` for the whole training (loaded once — bandwidth optimization);
+//! * **vertex** embeddings: partitioned inter-node into `M` macro-blocks,
+//!   intra-node into `G` parts, then into `k` sub-parts each, i.e.
+//!   `M*G*k` ranges. Sub-parts *rotate*: within a node along the GPU ring
+//!   (one hop per intra-round, pipelined sub-part by sub-part with
+//!   ping-pong buffers), across nodes along the node ring (one hop per
+//!   inter-stage).
+//!
+//! The epoch schedule is the triple loop (inter-stage `t` ∈ 0..M,
+//! intra-round `r` ∈ 0..G, sub `s` ∈ 0..k); at each step GPU `(n,g)`
+//! trains sub-part `(macro=(n+t)%M, part=(g+r)%G, sub=s)` against its
+//! pinned context shard. Two invariants (tested below) make this correct:
+//!
+//! 1. **orthogonality** — at any step, no two GPUs hold the same sub-part;
+//! 2. **coverage** — over one epoch, every (sub-part, context-shard) pair
+//!    is trained exactly once, i.e. every 2D sample block `E_{i,j}` is
+//!    consumed exactly once.
+
+use super::range_bounds;
+
+/// Identifier of a vertex sub-part: `(macro, part, sub)` flattened.
+pub type SubpartId = usize;
+
+/// Global GPU index: `node * gpus_per_node + gpu`.
+pub type GpuId = usize;
+
+/// One scheduled training step: which sub-part every GPU trains.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepAssignment {
+    pub inter_stage: usize,
+    pub intra_round: usize,
+    pub sub: usize,
+    /// `assignment[gpu_global]` = sub-part trained by that GPU this step.
+    pub assignment: Vec<SubpartId>,
+}
+
+/// A peer-to-peer transfer of one sub-part between GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubpartTransfer {
+    pub subpart: SubpartId,
+    pub from: GpuId,
+    pub to: GpuId,
+}
+
+/// The hierarchical plan for a cluster of `nodes × gpus_per_node` devices
+/// with `subparts` sub-parts per GPU over `num_vertices` embedding rows.
+#[derive(Debug, Clone)]
+pub struct HierarchyPlan {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub subparts: usize,
+    pub num_vertices: usize,
+    /// Vertex row-range boundaries for the `M*G*k` sub-parts, in
+    /// `(macro, part, sub)` order.
+    pub vertex_bounds: Vec<usize>,
+    /// Context row-range boundaries for the `M*G` shards.
+    pub context_bounds: Vec<usize>,
+}
+
+impl HierarchyPlan {
+    pub fn new(
+        nodes: usize,
+        gpus_per_node: usize,
+        subparts: usize,
+        num_vertices: usize,
+    ) -> Self {
+        assert!(nodes > 0 && gpus_per_node > 0 && subparts > 0);
+        let total_sub = nodes * gpus_per_node * subparts;
+        HierarchyPlan {
+            nodes,
+            gpus_per_node,
+            subparts,
+            num_vertices,
+            vertex_bounds: range_bounds(num_vertices, total_sub),
+            context_bounds: range_bounds(num_vertices, nodes * gpus_per_node),
+        }
+    }
+
+    #[inline]
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    #[inline]
+    pub fn total_subparts(&self) -> usize {
+        self.total_gpus() * self.subparts
+    }
+
+    /// Flatten `(macro, part, sub)` to a sub-part id.
+    #[inline]
+    pub fn subpart_id(&self, macro_: usize, part: usize, sub: usize) -> SubpartId {
+        (macro_ * self.gpus_per_node + part) * self.subparts + sub
+    }
+
+    /// Vertex row range of a sub-part.
+    #[inline]
+    pub fn subpart_range(&self, id: SubpartId) -> std::ops::Range<usize> {
+        self.vertex_bounds[id]..self.vertex_bounds[id + 1]
+    }
+
+    /// Context row range pinned on a GPU.
+    #[inline]
+    pub fn context_range(&self, gpu: GpuId) -> std::ops::Range<usize> {
+        self.context_bounds[gpu]..self.context_bounds[gpu + 1]
+    }
+
+    /// Sub-part trained by GPU `(node, gpu)` at `(t, r, s)`.
+    #[inline]
+    pub fn subpart_at(
+        &self,
+        node: usize,
+        gpu: usize,
+        t: usize,
+        r: usize,
+        s: usize,
+    ) -> SubpartId {
+        let macro_ = (node + t) % self.nodes;
+        let part = (gpu + r) % self.gpus_per_node;
+        self.subpart_id(macro_, part, s)
+    }
+
+    /// Total steps per epoch: `M * G * k`.
+    pub fn steps_per_epoch(&self) -> usize {
+        self.nodes * self.gpus_per_node * self.subparts
+    }
+
+    /// Enumerate the epoch schedule in execution order.
+    pub fn steps(&self) -> Vec<StepAssignment> {
+        let mut out = Vec::with_capacity(self.steps_per_epoch());
+        for t in 0..self.nodes {
+            for r in 0..self.gpus_per_node {
+                for s in 0..self.subparts {
+                    let assignment = (0..self.total_gpus())
+                        .map(|gid| {
+                            let (n, g) =
+                                (gid / self.gpus_per_node, gid % self.gpus_per_node);
+                            self.subpart_at(n, g, t, r, s)
+                        })
+                        .collect();
+                    out.push(StepAssignment { inter_stage: t, intra_round: r, sub: s, assignment });
+                }
+            }
+        }
+        out
+    }
+
+    /// Intra-node P2P transfers moving sub-part `s` one hop along each
+    /// node's GPU ring after round `r` of stage `t` (ping-pong pipelined
+    /// with the training of sub `s+1` — paper Fig. 4).
+    pub fn intra_transfers(&self, t: usize, r: usize, s: usize) -> Vec<SubpartTransfer> {
+        if r + 1 >= self.gpus_per_node {
+            return Vec::new(); // last round: handled by the inter-node stage
+        }
+        let mut out = Vec::new();
+        for n in 0..self.nodes {
+            for g in 0..self.gpus_per_node {
+                // sub-part currently on (n,g) moves to the GPU that trains
+                // it next round: (g_next + r + 1) % G == (g + r) % G
+                let holder = self.subpart_at(n, g, t, r, s);
+                let to_gpu = (g + self.gpus_per_node - 1) % self.gpus_per_node;
+                out.push(SubpartTransfer {
+                    subpart: holder,
+                    from: n * self.gpus_per_node + g,
+                    to: n * self.gpus_per_node + to_gpu,
+                });
+            }
+        }
+        out
+    }
+
+    /// Inter-node transfers after stage `t`: every node ships all the
+    /// sub-parts of its current macro-block one hop along the node ring.
+    pub fn inter_transfers(&self, t: usize) -> Vec<SubpartTransfer> {
+        if t + 1 >= self.nodes {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for n in 0..self.nodes {
+            let macro_ = (n + t) % self.nodes;
+            // next stage node (n-1) trains this macro: (n-1 + t+1) == n + t
+            let to_node = (n + self.nodes - 1) % self.nodes;
+            for p in 0..self.gpus_per_node {
+                for s in 0..self.subparts {
+                    // at the end of stage t (after G rounds) part p sits on
+                    // GPU (p - (G-1)) mod G = (p+1) mod G of node n
+                    let from_gpu = (p + 1) % self.gpus_per_node;
+                    out.push(SubpartTransfer {
+                        subpart: self.subpart_id(macro_, p, s),
+                        from: n * self.gpus_per_node + from_gpu,
+                        // lands on the GPU that trains it first next stage
+                        to: to_node * self.gpus_per_node + p,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes of one sub-part's embedding rows at dimension `d` (f32).
+    pub fn subpart_bytes(&self, id: SubpartId, dim: usize) -> u64 {
+        (self.subpart_range(id).len() * dim * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+    use std::collections::HashSet;
+
+    #[test]
+    fn paper_example_two_nodes_eight_gpus() {
+        let p = HierarchyPlan::new(2, 8, 4, 1 << 20);
+        assert_eq!(p.total_subparts(), 64);
+        assert_eq!(p.steps_per_epoch(), 64);
+        assert_eq!(p.steps().len(), 64);
+    }
+
+    #[test]
+    fn orthogonality_no_two_gpus_share_a_subpart() {
+        let p = HierarchyPlan::new(3, 4, 2, 10_000);
+        for step in p.steps() {
+            let set: HashSet<_> = step.assignment.iter().collect();
+            assert_eq!(set.len(), step.assignment.len(), "conflict at {step:?}");
+        }
+    }
+
+    #[test]
+    fn coverage_every_pair_exactly_once() {
+        let p = HierarchyPlan::new(2, 3, 2, 6_000);
+        let mut seen = HashSet::new();
+        for step in p.steps() {
+            for (gpu, &sp) in step.assignment.iter().enumerate() {
+                assert!(seen.insert((gpu, sp)), "pair ({gpu},{sp}) repeated");
+            }
+        }
+        assert_eq!(seen.len(), p.total_gpus() * p.total_subparts());
+    }
+
+    #[test]
+    fn property_schedule_invariants() {
+        forall(30, 41, |g| {
+            let m = g.usize_in(1, 4);
+            let gp = g.usize_in(1, 8);
+            let k = g.usize_in(1, 4);
+            let n = g.usize_in(m * gp * k, 5000.max(m * gp * k));
+            let p = HierarchyPlan::new(m, gp, k, n);
+            // ranges tile [0, n)
+            assert_eq!(*p.vertex_bounds.last().unwrap(), n);
+            assert_eq!(*p.context_bounds.last().unwrap(), n);
+            // orthogonality + coverage
+            let mut seen = HashSet::new();
+            for step in p.steps() {
+                let uniq: HashSet<_> = step.assignment.iter().collect();
+                assert_eq!(uniq.len(), step.assignment.len());
+                for (gpu, &sp) in step.assignment.iter().enumerate() {
+                    assert!(seen.insert((gpu, sp)));
+                }
+            }
+            assert_eq!(seen.len(), p.total_gpus() * p.total_subparts());
+        });
+    }
+
+    #[test]
+    fn intra_transfers_deliver_to_next_trainer() {
+        let p = HierarchyPlan::new(1, 4, 2, 800);
+        for t in 0..1 {
+            for r in 0..3 {
+                for s in 0..2 {
+                    for tr in p.intra_transfers(t, r, s) {
+                        // the receiving GPU must train this sub-part at
+                        // round r+1
+                        let (n, g) = (tr.to / 4, tr.to % 4);
+                        assert_eq!(p.subpart_at(n, g, t, r + 1, s), tr.subpart);
+                        // and the sender trained it at round r
+                        let (n2, g2) = (tr.from / 4, tr.from % 4);
+                        assert_eq!(p.subpart_at(n2, g2, t, r, s), tr.subpart);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn last_round_has_no_intra_transfers() {
+        let p = HierarchyPlan::new(1, 4, 2, 800);
+        assert!(p.intra_transfers(0, 3, 0).is_empty());
+    }
+
+    #[test]
+    fn inter_transfers_deliver_to_next_stage_trainer() {
+        let p = HierarchyPlan::new(3, 2, 2, 1200);
+        for t in 0..2 {
+            for tr in p.inter_transfers(t) {
+                let (n, g) = (tr.to / 2, tr.to % 2);
+                // receiver trains it at stage t+1, round 0
+                assert_eq!(
+                    p.subpart_at(n, g, t + 1, 0, tr.subpart % p.subparts),
+                    tr.subpart
+                );
+                // transfer crosses nodes
+                assert_ne!(tr.from / 2, tr.to / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_has_no_inter_transfers() {
+        let p = HierarchyPlan::new(1, 8, 4, 4000);
+        assert!(p.inter_transfers(0).is_empty());
+    }
+
+    #[test]
+    fn subpart_bytes_accounts_rows() {
+        let p = HierarchyPlan::new(2, 2, 2, 64);
+        // 8 sub-parts over 64 rows = 8 rows each; d=16 -> 8*16*4 bytes
+        assert_eq!(p.subpart_bytes(0, 16), 8 * 16 * 4);
+    }
+}

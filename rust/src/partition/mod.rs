@@ -1,0 +1,87 @@
+//! Network & model partitioning (paper §II-B, §III-B).
+//!
+//! * `one_d` — vertex-centric edge-cut / vertex-cut baselines;
+//! * `two_d` — the 2D edge partition `E_{i,j}` the system trains on;
+//! * `hierarchy` — the hierarchical vertex-embedding partition
+//!   (inter-node → intra-node → k sub-parts) and the rotation schedule
+//!   that drives the hybrid model/data-parallel epoch.
+
+pub mod hierarchy;
+pub mod one_d;
+pub mod two_d;
+
+pub use hierarchy::{HierarchyPlan, StepAssignment, SubpartId};
+pub use two_d::TwoDPartition;
+
+use crate::graph::NodeId;
+
+/// Contiguous range partition of `n` nodes into `parts` near-equal blocks.
+/// Returns block boundaries of length `parts + 1`.
+pub fn range_bounds(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for p in 0..parts {
+        acc += base + usize::from(p < extra);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Which block a node falls into given `range_bounds` output.
+#[inline]
+pub fn block_of(bounds: &[usize], v: NodeId) -> usize {
+    // bounds is sorted; binary search for the containing range
+    match bounds.binary_search(&(v as usize)) {
+        Ok(i) => i.min(bounds.len() - 2),
+        Err(i) => i - 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn bounds_cover_exactly() {
+        let b = range_bounds(10, 3);
+        assert_eq!(b, vec![0, 4, 7, 10]);
+    }
+
+    #[test]
+    fn bounds_handle_small_n() {
+        let b = range_bounds(2, 4);
+        assert_eq!(*b.last().unwrap(), 2);
+        assert_eq!(b.len(), 5);
+    }
+
+    #[test]
+    fn block_of_boundaries() {
+        let b = range_bounds(10, 3); // [0,4,7,10]
+        assert_eq!(block_of(&b, 0), 0);
+        assert_eq!(block_of(&b, 3), 0);
+        assert_eq!(block_of(&b, 4), 1);
+        assert_eq!(block_of(&b, 6), 1);
+        assert_eq!(block_of(&b, 7), 2);
+        assert_eq!(block_of(&b, 9), 2);
+    }
+
+    #[test]
+    fn property_every_node_in_its_block() {
+        forall(100, 21, |g| {
+            let n = g.usize_in(1, 500);
+            let parts = g.usize_in(1, 16);
+            let b = range_bounds(n, parts);
+            assert_eq!(b.len(), parts + 1);
+            assert_eq!(*b.last().unwrap(), n);
+            for v in 0..n {
+                let blk = block_of(&b, v as NodeId);
+                assert!(b[blk] <= v && v < b[blk + 1], "v={v} blk={blk} b={b:?}");
+            }
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifest (`artifacts/manifest.tsv`) parsing & variant
+//! selection. TSV columns: `kind P C B N D file`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// Kind of compiled computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    /// The SGNS episode step (train path).
+    Sgns,
+    /// The dot-product edge scorer (evaluation path).
+    Score,
+}
+
+/// One AOT shape variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub kind: VariantKind,
+    pub p: usize,
+    pub c: usize,
+    pub b: usize,
+    pub n: usize,
+    pub d: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut variants = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                bail!("manifest line {}: expected 7 columns, got {}", i + 1, cols.len());
+            }
+            let kind = match cols[0] {
+                "sgns" => VariantKind::Sgns,
+                "score" => VariantKind::Score,
+                other => bail!("manifest line {}: unknown kind {other:?}", i + 1),
+            };
+            let num = |s: &str| -> crate::Result<usize> {
+                s.parse().map_err(|_| anyhow::anyhow!("manifest line {}: bad number {s:?}", i + 1))
+            };
+            variants.push(Variant {
+                kind,
+                p: num(cols[1])?,
+                c: num(cols[2])?,
+                b: num(cols[3])?,
+                n: num(cols[4])?,
+                d: num(cols[5])?,
+                file: cols[6].to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants — run `make artifacts`");
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Smallest variant of `kind` with capacity ≥ the requested shard rows
+    /// at exactly dimension `d`.
+    pub fn select(&self, kind: VariantKind, min_p: usize, min_c: usize, d: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.kind == kind && v.d == d && v.p >= min_p && v.c >= min_c)
+            .min_by_key(|v| v.p * v.c)
+    }
+
+    /// All supported embedding dimensions of a kind (for error messages).
+    pub fn dims(&self, kind: VariantKind) -> Vec<usize> {
+        let mut dims: Vec<usize> =
+            self.variants.iter().filter(|v| v.kind == kind).map(|v| v.d).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# kind\tP\tC\tB\tN\tD\tfile\n\
+        sgns\t1024\t1024\t256\t32\t16\ta.hlo.txt\n\
+        sgns\t8192\t8192\t1024\t64\t32\tb.hlo.txt\n\
+        score\t1024\t1024\t256\t0\t16\tc.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.variants[0].b, 256);
+        assert_eq!(m.variants[2].kind, VariantKind::Score);
+    }
+
+    #[test]
+    fn select_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.select(VariantKind::Sgns, 500, 500, 16).unwrap();
+        assert_eq!(v.file, "a.hlo.txt");
+        let v = m.select(VariantKind::Sgns, 2000, 500, 32).unwrap();
+        assert_eq!(v.file, "b.hlo.txt");
+        assert!(m.select(VariantKind::Sgns, 100_000, 1, 16).is_none());
+        assert!(m.select(VariantKind::Sgns, 10, 10, 99).is_none());
+    }
+
+    #[test]
+    fn dims_lists_unique_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dims(VariantKind::Sgns), vec![16, 32]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("sgns\t1\t2\n").is_err());
+        assert!(Manifest::parse("wat\t1\t1\t1\t1\t1\tf\n").is_err());
+        assert!(Manifest::parse("# only comments\n").is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Edge-sample management: episode pools, fine-grained 2D sample blocks
+//! aligned with the hierarchical plan, and the negative sampler.
+//!
+//! An **episode** (paper §II-A) is a fixed-size pool of augmented edge
+//! samples trained through one full rotation of the hierarchical schedule.
+//! Within an episode, samples are 2D-partitioned so block `(sp, gpu)`
+//! holds exactly the samples whose source lies in vertex sub-part `sp` and
+//! destination in GPU `gpu`'s pinned context shard — the unit of work of
+//! one scheduled step.
+
+use crate::graph::Edge;
+use crate::partition::HierarchyPlan;
+use crate::util::Rng;
+use crate::walk::alias::AliasTable;
+
+/// Samples of one episode, 2D-bucketed by (sub-part, context shard).
+#[derive(Debug)]
+pub struct EpisodePool {
+    pub subparts: usize,
+    pub gpus: usize,
+    /// `blocks[sp * gpus + gpu]` = samples for step (sp on gpu).
+    blocks: Vec<Vec<Edge>>,
+}
+
+impl EpisodePool {
+    /// Bucket `samples` against the plan's vertex/context ranges.
+    pub fn build(plan: &HierarchyPlan, samples: &[Edge]) -> Self {
+        let subparts = plan.total_subparts();
+        let gpus = plan.total_gpus();
+        let mut blocks = vec![Vec::new(); subparts * gpus];
+        for &(s, d) in samples {
+            let sp = crate::partition::block_of(&plan.vertex_bounds, s);
+            let g = crate::partition::block_of(&plan.context_bounds, d);
+            blocks[sp * gpus + g].push((s, d));
+        }
+        EpisodePool { subparts, gpus, blocks }
+    }
+
+    #[inline]
+    pub fn block(&self, subpart: usize, gpu: usize) -> &[Edge] {
+        &self.blocks[subpart * self.gpus + gpu]
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).sum()
+    }
+
+    /// Largest block (drives padded-batch count and step latency skew).
+    pub fn max_block(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).max().unwrap_or(0)
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.len() as u64 * 8).sum()
+    }
+}
+
+/// Split an epoch's samples into fixed-size episodes (the data-parallel
+/// axis). The tail episode may be short. Samples are shuffled first so
+/// episodes are i.i.d. — the walk engine's degree-guided partitioning
+/// does this at file-write time in the offline mode.
+pub fn split_episodes(
+    samples: &mut Vec<Edge>,
+    episode_size: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<Edge>> {
+    rng.shuffle(samples);
+    samples
+        .chunks(episode_size.max(1))
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+/// Negative sampler for one context shard: unigram^0.75 over the degrees
+/// of the shard's node range (word2vec convention), returning rows *local*
+/// to the shard — negatives are drawn shard-locally so the 2D orthogonal
+/// training property is preserved (no cross-GPU embedding reads), matching
+/// the paper's locality-preserving negative sampling.
+pub struct NegativeSampler {
+    table: AliasTable,
+    shard_lo: usize,
+}
+
+impl NegativeSampler {
+    /// `degrees` — global degree array; `range` — shard's node range.
+    pub fn new(degrees: &[u32], range: std::ops::Range<usize>) -> Self {
+        let shard_lo = range.start;
+        let local: Vec<u32> = degrees[range].to_vec();
+        NegativeSampler { table: AliasTable::unigram(&local, 0.75), shard_lo }
+    }
+
+    /// Draw `n` shared negatives, as shard-local row indices.
+    pub fn sample_local(&self, n: usize, rng: &mut Rng) -> Vec<u32> {
+        (0..n).map(|_| self.table.sample(rng) as u32).collect()
+    }
+
+    /// Same draws as global node ids (evaluation-side use).
+    pub fn sample_global(&self, n: usize, rng: &mut Rng) -> Vec<u32> {
+        self.sample_local(n, rng)
+            .into_iter()
+            .map(|l| (self.shard_lo + l as usize) as u32)
+            .collect()
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        self.table.storage_bytes()
+    }
+}
+
+/// A padded minibatch ready for the runtime: local indices into the
+/// sub-part (u) and context shard (v), padded to the executable's fixed
+/// batch size with the sacrificial last rows (see model.py docstring).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MiniBatch {
+    pub u_local: Vec<i32>,
+    pub v_local: Vec<i32>,
+    /// Number of real (non-padding) samples.
+    pub real: usize,
+}
+
+/// Cut a step's sample block into minibatches of exactly `batch` samples,
+/// mapping global node ids to sub-part/shard-local rows. `pad_u`/`pad_v`
+/// are the sacrificial local rows used for padding.
+pub fn make_minibatches(
+    block: &[Edge],
+    batch: usize,
+    subpart_lo: usize,
+    shard_lo: usize,
+    pad_u: i32,
+    pad_v: i32,
+) -> Vec<MiniBatch> {
+    let mut out = Vec::with_capacity(crate::util::ceil_div(block.len(), batch));
+    for chunk in block.chunks(batch) {
+        let mut u: Vec<i32> = chunk.iter().map(|e| (e.0 as usize - subpart_lo) as i32).collect();
+        let mut v: Vec<i32> = chunk.iter().map(|e| (e.1 as usize - shard_lo) as i32).collect();
+        let real = chunk.len();
+        u.resize(batch, pad_u);
+        v.resize(batch, pad_v);
+        out.push(MiniBatch { u_local: u, v_local: v, real });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn episode_pool_places_every_sample() {
+        let plan = HierarchyPlan::new(2, 2, 2, 80);
+        let mut rng = Rng::new(1);
+        let samples = gen::erdos_renyi(80, 500, &mut rng);
+        let pool = EpisodePool::build(&plan, &samples);
+        assert_eq!(pool.total_samples(), 500);
+        // every sample in its block satisfies the range predicate
+        for sp in 0..plan.total_subparts() {
+            let vr = plan.subpart_range(sp);
+            for g in 0..plan.total_gpus() {
+                let cr = plan.context_range(g);
+                for &(s, d) in pool.block(sp, g) {
+                    assert!(vr.contains(&(s as usize)));
+                    assert!(cr.contains(&(d as usize)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_episodes_partitions_all() {
+        let mut rng = Rng::new(2);
+        let mut samples = gen::erdos_renyi(100, 1000, &mut rng);
+        let orig = {
+            let mut s = samples.clone();
+            s.sort_unstable();
+            s
+        };
+        let eps = split_episodes(&mut samples, 300, &mut rng);
+        assert_eq!(eps.len(), 4);
+        assert_eq!(eps.last().unwrap().len(), 100);
+        let mut merged: Vec<Edge> = eps.concat();
+        merged.sort_unstable();
+        assert_eq!(merged, orig);
+    }
+
+    #[test]
+    fn negative_sampler_stays_in_shard() {
+        let degrees: Vec<u32> = (0..100).map(|i| (i % 7 + 1) as u32).collect();
+        let ns = NegativeSampler::new(&degrees, 40..60);
+        let mut rng = Rng::new(3);
+        let local = ns.sample_local(500, &mut rng);
+        assert!(local.iter().all(|&l| l < 20));
+        let global = ns.sample_global(500, &mut rng);
+        assert!(global.iter().all(|&g| (40..60).contains(&(g as usize))));
+    }
+
+    #[test]
+    fn negative_sampler_prefers_high_degree() {
+        let mut degrees = vec![1u32; 100];
+        degrees[10] = 10_000;
+        let ns = NegativeSampler::new(&degrees, 0..100);
+        let mut rng = Rng::new(4);
+        let draws = ns.sample_local(10_000, &mut rng);
+        let hot = draws.iter().filter(|&&l| l == 10).count();
+        assert!(hot > 2_000, "hot draws {hot}");
+    }
+
+    #[test]
+    fn minibatches_pad_and_localize() {
+        let block = vec![(12u32, 34u32), (13, 35), (14, 36)];
+        let mbs = make_minibatches(&block, 2, 10, 30, 7, 9);
+        assert_eq!(mbs.len(), 2);
+        assert_eq!(mbs[0], MiniBatch { u_local: vec![2, 3], v_local: vec![4, 5], real: 2 });
+        assert_eq!(mbs[1], MiniBatch { u_local: vec![4, 7], v_local: vec![6, 9], real: 1 });
+    }
+
+    #[test]
+    fn property_pool_blocks_disjoint_and_complete() {
+        forall(25, 51, |q| {
+            let m = q.usize_in(1, 3);
+            let g = q.usize_in(1, 4);
+            let k = q.usize_in(1, 3);
+            let n = q.usize_in(m * g * k, 400.max(m * g * k));
+            let plan = HierarchyPlan::new(m, g, k, n);
+            let edges = gen::erdos_renyi(n, q.usize_in(1, 800), q.rng());
+            let pool = EpisodePool::build(&plan, &edges);
+            assert_eq!(pool.total_samples(), edges.len());
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! The walk engine, sample generation, and the per-GPU worker loops all
+//! fan out through `parallel_for` / `parallel_map`, which split an index
+//! range into contiguous chunks, one scoped thread per chunk.
+
+/// Number of worker threads to use by default (logical cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Run `f(chunk_index, start..end)` over `n` items split into `threads`
+/// contiguous chunks, in parallel, collecting each chunk's output.
+pub fn parallel_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = crate::util::ceil_div(n.max(1), threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let f = &f;
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                scope.spawn(move || f(t, lo..hi))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Parallel for over `0..n`: `f(i)` with no return value.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_chunks(n, threads, |_, range| {
+        for i in range {
+            f(i);
+        }
+    });
+}
+
+/// Parallel map over `0..n` preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut chunks = parallel_chunks(n, threads, |_, range| {
+        range.map(&f).collect::<Vec<T>>()
+    });
+    let mut out = Vec::with_capacity(n);
+    for c in &mut chunks {
+        out.append(c);
+    }
+    out
+}
+
+/// Parallel map over mutable disjoint slices: splits `data` into `threads`
+/// contiguous chunks and runs `f(chunk_index, offset, chunk)` on each.
+pub fn parallel_slices<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = crate::util::ceil_div(n, threads);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0;
+        let mut t = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let ti = t;
+            let off = offset;
+            scope.spawn(move || f(ti, off, head));
+            rest = tail;
+            offset += take;
+            t += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(100, 7, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_for_visits_everything_once() {
+        let counter = AtomicUsize::new(0);
+        parallel_for(1000, 8, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_slices_disjoint_cover() {
+        let mut data = vec![0u32; 97];
+        parallel_slices(&mut data, 8, |_, off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (off + i) as u32;
+            }
+        });
+        let want: Vec<u32> = (0..97).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn handles_more_threads_than_items() {
+        let got = parallel_map(3, 16, |i| i + 1);
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn handles_zero_items() {
+        let got: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(got.is_empty());
+        parallel_for(0, 4, |_| panic!("must not be called"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Property-testing mini-framework (the offline crate set has no proptest).
+//!
+//! Usage (`no_run`: rustdoc test binaries miss the xla rpath flags):
+//! ```no_run
+//! use tembed::util::quickcheck::{forall, Gen};
+//! forall(200, 42, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 100);
+//!     let xs = g.vec_f32(n, -1.0, 1.0);
+//!     assert!(xs.len() == n);
+//! });
+//! ```
+//!
+//! On failure the panic message includes the case index and the seed so the
+//! exact case replays deterministically.
+
+use super::rng::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Inclusive bounds.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Access the underlying RNG (e.g. to seed a generator under test).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` random inputs derived from `seed`.
+pub fn forall<F: FnMut(&mut Gen)>(cases: usize, seed: u64, mut prop: F) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(100, 1, |g| {
+            let n = g.usize_in(0, 50);
+            let v = g.vec_f32(n, -2.0, 2.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures_with_seed() {
+        forall(50, 2, |g| {
+            assert!(g.usize_in(0, 10) < 10, "boundary hit");
+        });
+    }
+
+    #[test]
+    fn bounds_are_inclusive() {
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        forall(2000, 3, |g| {
+            let v = g.usize_in(3, 5);
+            assert!((3..=5).contains(&v));
+        });
+        let mut g = Gen::new(9);
+        for _ in 0..1000 {
+            match g.usize_in(0, 1) {
+                0 => saw_lo = true,
+                1 => saw_hi = true,
+                _ => unreachable!(),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

@@ -1,0 +1,167 @@
+//! Alias method for O(1) weighted sampling (Walker/Vose).
+//!
+//! Used by the negative sampler (unigram^0.75 over shard-local degrees),
+//! degree-weighted walk starts, and the Chung–Lu generator.
+
+use crate::util::Rng;
+
+/// Precomputed alias table over a weight vector.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f32>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights. Zero-total weight falls back to
+    /// uniform (callers may legitimately hand an all-isolated shard).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty weights");
+        let total: f64 = weights.iter().sum();
+        let scaled: Vec<f64> = if total <= 0.0 {
+            vec![1.0; n]
+        } else {
+            weights.iter().map(|w| w * n as f64 / total).collect()
+        };
+        let mut prob = vec![0f32; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        let mut p = scaled;
+        for (i, &v) in p.iter().enumerate() {
+            if v < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        loop {
+            match (small.pop(), large.pop()) {
+                (Some(s), Some(l)) => {
+                    prob[s] = p[s] as f32;
+                    alias[s] = l as u32;
+                    p[l] = (p[l] + p[s]) - 1.0;
+                    if p[l] < 1.0 {
+                        small.push(l);
+                    } else {
+                        large.push(l);
+                    }
+                }
+                // numerical leftovers: probability 1, self-alias
+                (Some(i), None) | (None, Some(i)) => {
+                    prob[i] = 1.0;
+                    alias[i] = i as u32;
+                }
+                (None, None) => break,
+            }
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Unigram^power table from integer degrees (word2vec uses power=0.75).
+    pub fn unigram(degrees: &[u32], power: f64) -> Self {
+        let w: Vec<f64> = degrees.iter().map(|&d| (d as f64).powf(power)).collect();
+        Self::new(&w)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one index ∝ weight.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.index(self.prob.len());
+        if rng.f32() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    /// Bytes of table storage (memory accounting).
+    pub fn storage_bytes(&self) -> u64 {
+        (self.prob.len() * 4 + self.alias.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    fn empirical(table: &AliasTable, draws: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_target_distribution() {
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w);
+        let e = empirical(&t, 200_000, 1);
+        for (i, &wi) in w.iter().enumerate() {
+            let want = wi / 10.0;
+            assert!((e[i] - want).abs() < 0.01, "bucket {i}: {} vs {want}", e[i]);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let e = empirical(&t, 50_000, 2);
+        assert_eq!(e[0], 0.0);
+        assert_eq!(e[2], 0.0);
+    }
+
+    #[test]
+    fn all_zero_falls_back_to_uniform() {
+        let t = AliasTable::new(&[0.0, 0.0, 0.0]);
+        let e = empirical(&t, 30_000, 3);
+        for p in e {
+            assert!((p - 1.0 / 3.0).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn unigram_power_flattens() {
+        let degrees = vec![1u32, 16];
+        let flat = AliasTable::unigram(&degrees, 0.75);
+        let e = empirical(&flat, 100_000, 4);
+        // 16^0.75 = 8, so ratios 1:8 not 1:16
+        assert!((e[1] / e[0] - 8.0).abs() < 1.0, "ratio {}", e[1] / e[0]);
+    }
+
+    #[test]
+    fn property_probabilities_sum_to_one_ish() {
+        forall(50, 5, |g| {
+            let n = g.usize_in(1, 64);
+            let w: Vec<f64> = (0..n).map(|_| g.f64() * 10.0).collect();
+            let t = AliasTable::new(&w);
+            assert_eq!(t.len(), n);
+            let mut rng = Rng::new(g.u64());
+            for _ in 0..100 {
+                assert!(t.sample(&mut rng) < n);
+            }
+        });
+    }
+
+    #[test]
+    fn single_element() {
+        let t = AliasTable::new(&[3.5]);
+        let mut rng = Rng::new(6);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+}

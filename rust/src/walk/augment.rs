@@ -1,0 +1,142 @@
+//! Network augmentation: walk paths → positive edge samples.
+//!
+//! Paper Algorithm 1: each node pair within `context_window` hops on a walk
+//! path becomes a positive sample, so one original edge yields ~k×l samples
+//! (walk distance k, context length l). Output can be partitioned into
+//! episode files (`write_episode_files`) so the training engine streams
+//! exactly one partition per episode — the paper's offline walk mode.
+
+use std::path::{Path, PathBuf};
+
+use crate::graph::Edge;
+use crate::util::parallel_chunks;
+
+use super::WalkSet;
+
+/// Expand walks into (center, context) positive samples.
+///
+/// For every position i in a path and offset 1..=window, emits both
+/// (path[i], path[i+off]) and (path[i+off], path[i]) — the symmetric
+/// skip-gram convention. Self-pairs from dead-end padding are dropped.
+pub fn augment_walks(walks: &WalkSet, window: usize, threads: usize) -> Vec<Edge> {
+    let n = walks.num_walks();
+    let chunks = parallel_chunks(n, threads, |_, range| {
+        let mut out = Vec::with_capacity(range.len() * walks.stride() * window);
+        for w in range {
+            let path = walks.walk(w);
+            for i in 0..path.len() {
+                let hi = (i + window).min(path.len() - 1);
+                for j in (i + 1)..=hi {
+                    let (a, b) = (path[i], path[j]);
+                    if a != b {
+                        out.push((a, b));
+                        out.push((b, a));
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut edges = Vec::new();
+    for mut c in chunks {
+        edges.append(&mut c);
+    }
+    edges
+}
+
+/// Expected sample count upper bound for capacity planning:
+/// `num_walks * walk_len * window * 2`.
+pub fn augmentation_bound(walks: &WalkSet, window: usize) -> usize {
+    walks.num_walks() * walks.walk_length * window * 2
+}
+
+/// Partition samples round-robin into `episodes` files under `dir`
+/// (paper: "write them into files partitioned by episode"). Returns paths.
+pub fn write_episode_files(
+    dir: &Path,
+    samples: &[Edge],
+    episodes: usize,
+    num_nodes: usize,
+) -> crate::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let per = crate::util::ceil_div(samples.len(), episodes.max(1));
+    let mut paths = Vec::new();
+    for (i, chunk) in samples.chunks(per.max(1)).enumerate() {
+        let p = dir.join(format!("episode_{i:04}.bin"));
+        crate::graph::io::write_edges_bin(&p, num_nodes, chunk)?;
+        paths.push(p);
+    }
+    Ok(paths)
+}
+
+/// Stream one episode partition back.
+pub fn read_episode_file(path: &Path) -> crate::Result<Vec<Edge>> {
+    Ok(crate::graph::io::read_edges_bin(path)?.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::walk::WalkSet;
+
+    fn ws(paths: Vec<u32>, len: usize) -> WalkSet {
+        WalkSet { walk_length: len, paths }
+    }
+
+    #[test]
+    fn window_pairs_both_directions() {
+        let w = ws(vec![0, 1, 2], 2);
+        let mut got = augment_walks(&w, 1, 1);
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (1, 0), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn window_two_reaches_two_hops() {
+        let w = ws(vec![0, 1, 2], 2);
+        let got = augment_walks(&w, 2, 1);
+        assert!(got.contains(&(0, 2)));
+        assert!(got.contains(&(2, 0)));
+        assert_eq!(got.len(), 6);
+    }
+
+    #[test]
+    fn dead_end_padding_dropped() {
+        let w = ws(vec![0, 1, 1, 1], 3); // dead end at node 1
+        let got = augment_walks(&w, 1, 1);
+        // (1,1) self pairs dropped; only (0,1)/(1,0) remain
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let paths: Vec<u32> = (0..400).map(|i| i % 37).collect();
+        let w = ws(paths, 7);
+        let mut a = augment_walks(&w, 3, 1);
+        let mut b = augment_walks(&w, 3, 8);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bound_holds() {
+        let paths: Vec<u32> = (0..64).collect();
+        let w = ws(paths, 7);
+        let got = augment_walks(&w, 3, 2);
+        assert!(got.len() <= augmentation_bound(&w, 3));
+    }
+
+    #[test]
+    fn episode_files_round_trip() {
+        let dir = std::env::temp_dir().join("tembed_episode_files");
+        let samples: Vec<Edge> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
+        let paths = write_episode_files(&dir, &samples, 4, 100).unwrap();
+        assert_eq!(paths.len(), 4);
+        let mut back = Vec::new();
+        for p in &paths {
+            back.extend(read_episode_file(p).unwrap());
+        }
+        assert_eq!(back, samples);
+    }
+}

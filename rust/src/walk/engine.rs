@@ -1,0 +1,189 @@
+//! Parallel random walker (DeepWalk-style uniform transition).
+
+use crate::graph::{CsrGraph, NodeId};
+use crate::util::{parallel_chunks, Rng};
+
+/// Walk-engine parameters (paper Algorithm 1: walk distance k, context l).
+#[derive(Debug, Clone)]
+pub struct WalkConfig {
+    /// Steps per walk ("walk distance" k).
+    pub walk_length: usize,
+    /// Walks started per active node per epoch.
+    pub walks_per_node: usize,
+    /// CPU threads for the walker.
+    pub threads: usize,
+    /// RNG seed (per-thread streams are forked from it).
+    pub seed: u64,
+}
+
+impl Default for WalkConfig {
+    fn default() -> Self {
+        WalkConfig { walk_length: 6, walks_per_node: 2, threads: crate::util::pool::default_threads(), seed: 0x7ea1 }
+    }
+}
+
+/// A batch of generated walks, flattened: `paths` holds
+/// `num_walks * (walk_length + 1)` node ids.
+#[derive(Debug, Clone)]
+pub struct WalkSet {
+    pub walk_length: usize,
+    pub paths: Vec<NodeId>,
+}
+
+impl WalkSet {
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.walk_length + 1
+    }
+
+    pub fn num_walks(&self) -> usize {
+        if self.paths.is_empty() {
+            0
+        } else {
+            self.paths.len() / self.stride()
+        }
+    }
+
+    pub fn walk(&self, i: usize) -> &[NodeId] {
+        let s = self.stride();
+        &self.paths[i * s..(i + 1) * s]
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        (self.paths.len() * 4) as u64
+    }
+}
+
+/// The walk engine. Holds a reference topology and produces `WalkSet`s.
+pub struct WalkEngine<'g> {
+    graph: &'g CsrGraph,
+    cfg: WalkConfig,
+}
+
+impl<'g> WalkEngine<'g> {
+    pub fn new(graph: &'g CsrGraph, cfg: WalkConfig) -> Self {
+        WalkEngine { graph, cfg }
+    }
+
+    /// Run one epoch of walks from every active node, in parallel.
+    /// `epoch` perturbs the seed so successive epochs differ (the paper
+    /// generates walks for E epochs then reuses them; the coordinator
+    /// decides the reuse policy).
+    pub fn run_epoch(&self, epoch: u64) -> WalkSet {
+        let starts = self.graph.active_nodes();
+        let total = starts.len() * self.cfg.walks_per_node;
+        let stride = self.cfg.walk_length + 1;
+        let mut root = Rng::new(self.cfg.seed ^ epoch.wrapping_mul(0x9E37));
+        let seeds: Vec<u64> = (0..self.cfg.threads.max(1))
+            .map(|_| root.next_u64())
+            .collect();
+        let chunks = parallel_chunks(total, self.cfg.threads, |t, range| {
+            let mut rng = Rng::new(seeds[t.min(seeds.len() - 1)]);
+            let mut out = Vec::with_capacity(range.len() * stride);
+            for i in range {
+                let start = starts[i / self.cfg.walks_per_node];
+                self.walk_from(start, &mut rng, &mut out);
+            }
+            out
+        });
+        let mut paths = Vec::with_capacity(total * stride);
+        for mut c in chunks {
+            paths.append(&mut c);
+        }
+        WalkSet { walk_length: self.cfg.walk_length, paths }
+    }
+
+    /// One uniform random walk of `walk_length` steps appended to `out`.
+    /// Dead ends (degree-0 after a directed hop) repeat the last node, so
+    /// every path has identical stride — keeps the augmentation kernel and
+    /// file framing branch-free.
+    fn walk_from(&self, start: NodeId, rng: &mut Rng, out: &mut Vec<NodeId>) {
+        let mut cur = start;
+        out.push(cur);
+        for _ in 0..self.cfg.walk_length {
+            let nbrs = self.graph.neighbors(cur);
+            if !nbrs.is_empty() {
+                cur = nbrs[rng.index(nbrs.len())];
+            }
+            out.push(cur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::quickcheck::forall;
+
+    fn ring(n: usize) -> CsrGraph {
+        let edges: Vec<_> = (0..n as u32).map(|v| (v, (v + 1) % n as u32)).collect();
+        CsrGraph::from_edges(n, &edges, true)
+    }
+
+    #[test]
+    fn walks_have_uniform_stride_and_valid_steps() {
+        let g = ring(16);
+        let eng = WalkEngine::new(&g, WalkConfig { walk_length: 5, walks_per_node: 3, threads: 4, seed: 1 });
+        let ws = eng.run_epoch(0);
+        assert_eq!(ws.num_walks(), 16 * 3);
+        for i in 0..ws.num_walks() {
+            let w = ws.walk(i);
+            assert_eq!(w.len(), 6);
+            for pair in w.windows(2) {
+                // every hop must be a real edge on the ring
+                assert!(g.neighbors(pair[0]).contains(&pair[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn dead_end_repeats_last_node() {
+        // directed path 0 -> 1, asymmetric: node 1 is a sink
+        let g = CsrGraph::from_edges(2, &[(0, 1)], false);
+        let eng = WalkEngine::new(&g, WalkConfig { walk_length: 4, walks_per_node: 1, threads: 1, seed: 2 });
+        let ws = eng.run_epoch(0);
+        assert_eq!(ws.num_walks(), 1); // only node 0 is active
+        assert_eq!(ws.walk(0), &[0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn epochs_differ_deterministically() {
+        let g = gen::to_graph(256, gen::erdos_renyi(256, 2000, &mut Rng::new(3)));
+        let eng = WalkEngine::new(&g, WalkConfig { walk_length: 8, walks_per_node: 1, threads: 2, seed: 5 });
+        let a0 = eng.run_epoch(0);
+        let b0 = eng.run_epoch(0);
+        let a1 = eng.run_epoch(1);
+        assert_eq!(a0.paths, b0.paths);
+        assert_ne!(a0.paths, a1.paths);
+    }
+
+    #[test]
+    fn walk_visits_are_edge_biased() {
+        // on a star, every second step returns to the hub
+        let edges: Vec<_> = (1..64u32).map(|i| (0, i)).collect();
+        let g = CsrGraph::from_edges(64, &edges, true);
+        let eng = WalkEngine::new(&g, WalkConfig { walk_length: 10, walks_per_node: 2, threads: 2, seed: 7 });
+        let ws = eng.run_epoch(0);
+        let hub_visits = ws.paths.iter().filter(|&&v| v == 0).count();
+        let frac = hub_visits as f64 / ws.paths.len() as f64;
+        assert!(frac > 0.35, "hub fraction {frac}");
+    }
+
+    #[test]
+    fn property_stride_invariant() {
+        forall(20, 11, |q| {
+            let n = q.usize_in(4, 128);
+            let m = q.usize_in(n, 4 * n);
+            let len = q.usize_in(1, 12);
+            let g = gen::to_graph(n, gen::erdos_renyi(n, m, q.rng()));
+            let eng = WalkEngine::new(
+                &g,
+                WalkConfig { walk_length: len, walks_per_node: 1, threads: 3, seed: q.u64() },
+            );
+            let ws = eng.run_epoch(0);
+            assert_eq!(ws.paths.len(), ws.num_walks() * (len + 1));
+            assert_eq!(ws.num_walks(), g.active_nodes().len());
+        });
+    }
+}

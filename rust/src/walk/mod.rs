@@ -1,0 +1,20 @@
+//! Walk engine — the decoupled network-augmentation component (paper §IV-A).
+//!
+//! Mirrors the Plato/KnightKing design the paper adopts: a multi-threaded
+//! random walker over CSR producing walk paths, which `augment` expands
+//! into positive edge samples with a sliding context window, written to
+//! **episode-partitioned walk files** so the embedding engine streams one
+//! partition per episode (the paper's "offline asynchronous" mode). The
+//! engine runs on CPU threads, fully independent of the training engine —
+//! the coordinator overlaps next-epoch walking with current-epoch training.
+
+pub mod alias;
+pub mod augment;
+pub mod engine;
+pub mod node2vec;
+pub mod partition;
+
+pub use augment::augment_walks;
+pub use engine::{WalkConfig, WalkEngine, WalkSet};
+pub use node2vec::{Node2VecEngine, Node2VecParams};
+pub use partition::degree_guided_split;

@@ -1,0 +1,178 @@
+//! Three-layer correctness loop: the AOT-compiled PJRT executable (L2+L1,
+//! lowered from JAX/Pallas) must match the Rust `GatheredBackend`
+//! bit-for-tolerance on identical inputs — and pytest already pins the
+//! Python side to the pure-jnp oracle, closing L3 == L2 == L1 == ref.
+//!
+//! Requires `make artifacts`; tests are skipped (pass trivially with a
+//! note) when the artifacts directory is absent so `cargo test` works in
+//! a fresh checkout.
+
+use tembed::config::{Backend, TrainConfig};
+use tembed::embed::sgns::{GatheredBackend, StepBackend, GROUP_SIZE};
+use tembed::runtime::Runtime;
+use tembed::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.f32_range(-scale, scale)).collect()
+}
+
+#[test]
+fn pjrt_step_matches_gathered_backend() {
+    let Some(rt) = runtime() else { return };
+    let dim = 16; // tiny variant
+    let rows_v = 500;
+    let rows_c = 700;
+    let mut stepper = rt.stepper(rows_v, rows_c, dim).expect("stepper");
+    let (_, _, b, n, d) = stepper.shapes();
+    assert_eq!(d, dim);
+
+    let mut rng = Rng::new(1);
+    let mut vertex_a = rand_vec(&mut rng, rows_v * dim, 0.3);
+    let mut context_a = rand_vec(&mut rng, rows_c * dim, 0.3);
+    let mut vertex_b = vertex_a.clone();
+    let mut context_b = context_a.clone();
+
+    // full batch, grouped negatives
+    let u: Vec<i32> = (0..b).map(|_| rng.index(rows_v) as i32).collect();
+    let vp: Vec<i32> = (0..b).map(|_| rng.index(rows_c) as i32).collect();
+    let groups = tembed::embed::sgns::groups_for(b);
+    let vn: Vec<i32> = (0..groups * n).map(|_| rng.index(rows_c) as i32).collect();
+
+    let lr = 0.05;
+    let loss_pjrt =
+        stepper.step(&mut vertex_a, &mut context_a, dim, &u, &vp, &vn, n, b, lr);
+    let loss_rust = GatheredBackend.step(
+        &mut vertex_b, &mut context_b, dim, &u, &vp, &vn, n, b, lr,
+    );
+
+    let rel = (loss_pjrt - loss_rust).abs() / loss_rust.abs().max(1.0);
+    assert!(rel < 1e-4, "loss pjrt {loss_pjrt} vs rust {loss_rust}");
+    for (i, (a, b_)) in vertex_a.iter().zip(&vertex_b).enumerate() {
+        assert!((a - b_).abs() < 1e-4, "vertex[{i}] {a} vs {b_}");
+    }
+    for (i, (a, b_)) in context_a.iter().zip(&context_b).enumerate() {
+        assert!((a - b_).abs() < 1e-4, "context[{i}] {a} vs {b_}");
+    }
+}
+
+#[test]
+fn pjrt_padding_is_neutral() {
+    let Some(rt) = runtime() else { return };
+    let dim = 16;
+    let rows = 200;
+    let mut stepper = rt.stepper(rows, rows, dim).expect("stepper");
+    let (_, _, _, n, _) = stepper.shapes();
+    let mut rng = Rng::new(2);
+    let mut vertex = rand_vec(&mut rng, rows * dim, 0.3);
+    let mut context = rand_vec(&mut rng, rows * dim, 0.3);
+    let mut vertex_ref = vertex.clone();
+    let mut context_ref = context.clone();
+
+    // a *partial* batch: 40 real samples, the executable pads to B
+    let real = 40;
+    let u: Vec<i32> = (0..real).map(|_| rng.index(rows) as i32).collect();
+    let vp: Vec<i32> = (0..real).map(|_| rng.index(rows) as i32).collect();
+    let groups = tembed::embed::sgns::groups_for(real);
+    let vn: Vec<i32> = (0..groups * n).map(|_| rng.index(rows) as i32).collect();
+
+    let lp = stepper.step(&mut vertex, &mut context, dim, &u, &vp, &vn, n, real, 0.05);
+    let lr_ = GatheredBackend.step(
+        &mut vertex_ref, &mut context_ref, dim, &u, &vp, &vn, n, real, 0.05,
+    );
+    assert!(
+        (lp - lr_).abs() / lr_.abs().max(1.0) < 1e-3,
+        "padded loss pjrt {lp} vs rust {lr_}"
+    );
+    for (a, b) in vertex.iter().zip(&vertex_ref) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    for (a, b) in context.iter().zip(&context_ref) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn trainer_with_pjrt_backend_trains() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let (edges, _) = tembed::gen::dcsbm(300, 2500, 10, 0.8, 2.3, &mut rng);
+    let g = tembed::gen::to_graph(300, edges);
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        dim: 16,
+        subparts: 2,
+        batch: 256,
+        backend: Backend::Pjrt,
+        ..TrainConfig::default()
+    };
+    let mut samples: Vec<_> = g.edges().collect();
+    let mut trainer =
+        tembed::coordinator::Trainer::new(300, &g.degrees(), cfg, Some(&rt)).unwrap();
+    let first = trainer.train_epoch(&mut samples, 0);
+    let mut last = first.clone();
+    for e in 1..4 {
+        last = trainer.train_epoch(&mut samples, e);
+    }
+    assert!(first.samples > 0);
+    assert!(
+        last.mean_loss() < first.mean_loss(),
+        "pjrt loss {} -> {}",
+        first.mean_loss(),
+        last.mean_loss()
+    );
+}
+
+#[test]
+fn pjrt_and_native_converge_to_similar_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(4);
+    let (edges, _) = tembed::gen::dcsbm(300, 2500, 10, 0.8, 2.3, &mut rng);
+    let g = tembed::gen::to_graph(300, edges);
+    let mk_cfg = |backend| TrainConfig {
+        nodes: 1,
+        gpus_per_node: 1,
+        dim: 16,
+        subparts: 1,
+        batch: 256,
+        backend,
+        ..TrainConfig::default()
+    };
+    let run = |backend| {
+        let mut samples: Vec<_> = g.edges().collect();
+        let mut t = tembed::coordinator::Trainer::new(
+            300,
+            &g.degrees(),
+            mk_cfg(backend),
+            Some(&rt),
+        )
+        .unwrap();
+        let mut loss = 0.0;
+        for e in 0..3 {
+            loss = t.train_epoch(&mut samples, e).mean_loss();
+        }
+        loss
+    };
+    let l_pjrt = run(Backend::Pjrt);
+    let l_gathered = run(Backend::Gathered);
+    // identical seeds + identical semantics => identical trajectories up
+    // to f32 accumulation order
+    let rel = (l_pjrt - l_gathered).abs() / l_gathered.max(1e-9);
+    assert!(rel < 1e-3, "pjrt {l_pjrt} vs gathered {l_gathered}");
+}
+
+#[test]
+fn group_size_constants_in_lockstep() {
+    // python/compile/kernels/sgns.py pins GROUP_SIZE == 32 and its pytest
+    // asserts the same; this is the rust side of the handshake
+    assert_eq!(GROUP_SIZE, 32);
+}

@@ -1,0 +1,190 @@
+//! Cross-module integration tests: the full system composed end-to-end
+//! (no PJRT required — the three-layer loop is covered by
+//! `pjrt_equivalence.rs`).
+
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::Driver;
+use tembed::coordinator::Trainer;
+use tembed::gen::{self, datasets};
+use tembed::graph::CsrGraph;
+use tembed::util::Rng;
+
+fn social_graph(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let (edges, _) = gen::dcsbm(n, m, 10, 0.8, 2.3, &mut rng);
+    gen::to_graph(n, edges)
+}
+
+/// Cluster shape must not change what is learned — only how fast. Same
+/// seed, same samples, different GPU/subpart layout: final link-AUC must
+/// land in the same band (not bitwise: schedules order updates
+/// differently, which is the documented SGD semantics).
+#[test]
+fn cluster_shape_invariance_of_quality() {
+    let g = social_graph(400, 4000, 1);
+    let mut rng = Rng::new(2);
+    let split = tembed::eval::link_split(&g, 0.1, &mut rng);
+    let samples: Vec<_> = split
+        .train_edges
+        .iter()
+        .flat_map(|&(u, v)| [(u, v), (v, u)])
+        .collect();
+    let mut aucs = Vec::new();
+    for (nodes, gpus, k) in [(1usize, 1usize, 1usize), (1, 4, 2), (2, 2, 4)] {
+        let cfg = TrainConfig {
+            nodes,
+            gpus_per_node: gpus,
+            subparts: k,
+            dim: 16,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
+        for e in 0..15 {
+            t.train_epoch(&mut samples.clone(), e);
+        }
+        let auc = tembed::eval::link_auc(&t.finish(), &split);
+        aucs.push(auc);
+    }
+    for &a in &aucs {
+        assert!(a > 0.7, "auc band violated: {aucs:?}");
+    }
+    let spread = aucs.iter().cloned().fold(f64::MIN, f64::max)
+        - aucs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 0.08, "quality depends on cluster shape: {aucs:?}");
+}
+
+/// Every sample must be trained exactly once per epoch regardless of the
+/// schedule (coverage through pool + rotation + minibatching).
+#[test]
+fn sample_conservation_across_shapes() {
+    let g = social_graph(300, 3000, 3);
+    let samples: Vec<_> = g.edges().collect();
+    for (nodes, gpus, k) in [(1usize, 1usize, 1usize), (2, 3, 2), (3, 2, 3)] {
+        let cfg = TrainConfig {
+            nodes,
+            gpus_per_node: gpus,
+            subparts: k,
+            dim: 8,
+            episode_size: 1000,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
+        let r = t.train_epoch(&mut samples.clone(), 0);
+        assert_eq!(r.samples, samples.len() as u64, "shape ({nodes},{gpus},{k})");
+    }
+}
+
+/// The offline walk mode: spool episode files, stream them back, train —
+/// the paper's "asynchronous offline process" (§IV-A, first bullet).
+#[test]
+fn offline_walk_files_round_trip_into_training() {
+    let g = social_graph(300, 2500, 4);
+    let dir = std::env::temp_dir().join("tembed_offline_walks");
+    let _ = std::fs::remove_dir_all(&dir);
+    // walk + augment + spool
+    let engine = tembed::walk::WalkEngine::new(
+        &g,
+        tembed::walk::WalkConfig { threads: 4, seed: 9, ..Default::default() },
+    );
+    let walks = engine.run_epoch(0);
+    let samples = tembed::walk::augment_walks(&walks, 3, 4);
+    let files =
+        tembed::walk::augment::write_episode_files(&dir, &samples, 4, g.num_nodes())
+            .unwrap();
+    assert_eq!(files.len(), 4);
+    // stream back episode by episode and train
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        subparts: 2,
+        dim: 8,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
+    let mut total = 0u64;
+    for f in &files {
+        let mut ep = tembed::walk::augment::read_episode_file(f).unwrap();
+        total += t.train_epoch(&mut ep, 0).samples;
+    }
+    assert_eq!(total, samples.len() as u64);
+}
+
+/// Dataset registry smoke: every dataset generates, has the declared
+/// scale, and trains one tiny epoch without panicking.
+#[test]
+fn all_registered_datasets_train() {
+    for spec in datasets::DATASETS {
+        let g = spec.generate(1);
+        assert_eq!(g.num_nodes(), spec.sim_nodes, "{}", spec.name);
+        let cfg = TrainConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            subparts: 2,
+            dim: 8,
+            episode_size: usize::MAX >> 1,
+            ..TrainConfig::default()
+        };
+        let mut samples: Vec<_> = g.edges().take(20_000).collect();
+        let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
+        let r = t.train_epoch(&mut samples, 0);
+        assert!(r.loss_sum > 0.0, "{}", spec.name);
+    }
+}
+
+/// GraphVite baseline and ours must agree on *what* is learned (same
+/// kernel family): both produce working embeddings on the same input.
+#[test]
+fn baseline_and_ours_learn_comparable_models() {
+    let g = social_graph(300, 3000, 5);
+    let mut rng = Rng::new(6);
+    let split = tembed::eval::link_split(&g, 0.1, &mut rng);
+    let samples: Vec<_> = split
+        .train_edges
+        .iter()
+        .flat_map(|&(u, v)| [(u, v), (v, u)])
+        .collect();
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 4,
+        subparts: 2,
+        dim: 16,
+        ..TrainConfig::default()
+    };
+    let mut ours = Trainer::new(g.num_nodes(), &g.degrees(), cfg.clone(), None).unwrap();
+    let mut gv = tembed::baseline::GraphViteTrainer::new(
+        g.num_nodes(),
+        &g.degrees(),
+        TrainConfig { subparts: 1, ..cfg },
+    );
+    for e in 0..15 {
+        ours.train_epoch(&mut samples.clone(), e);
+        gv.train_epoch(&mut samples.clone(), e);
+    }
+    let a_ours = tembed::eval::link_auc(&ours.finish(), &split);
+    let a_gv = tembed::eval::link_auc(&gv.finish(), &split);
+    assert!(a_ours > 0.7, "ours {a_ours}");
+    assert!(a_gv > 0.7, "graphvite {a_gv}");
+    assert!((a_ours - a_gv).abs() < 0.1, "ours {a_ours} vs gv {a_gv}");
+}
+
+/// Walk reuse (paper §V-C2: generate walks for E epochs, reuse for 100)
+/// must not change sample counts between reuse generations.
+#[test]
+fn walk_reuse_policy() {
+    let g = social_graph(200, 1500, 7);
+    let mut cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        subparts: 2,
+        dim: 8,
+        ..TrainConfig::default()
+    };
+    cfg.walk_epochs = 3;
+    let mut d = Driver::new(&g, cfg, None).unwrap();
+    let reports = d.run(7);
+    // epochs 0-2 share one walk generation, 3-5 the next, 6 a third
+    assert_eq!(reports[0].samples, reports[1].samples);
+    assert_eq!(reports[0].samples, reports[2].samples);
+    assert_eq!(reports[3].samples, reports[4].samples);
+    assert_eq!(reports[6].samples, reports[6].samples);
+}
