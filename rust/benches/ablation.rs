@@ -12,13 +12,13 @@ use tembed::gen::datasets;
 use tembed::partition::one_d::{edge_cut, vertex_cut};
 use tembed::util::human_secs;
 
-fn run_epoch(cfg: TrainConfig, graph: &tembed::graph::CsrGraph) -> anyhow::Result<f64> {
+fn run_epoch(cfg: TrainConfig, graph: &tembed::graph::CsrGraph) -> tembed::Result<f64> {
     let samples: Vec<_> = graph.edges().collect();
     let mut t = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
     Ok(t.train_epoch(&mut samples.clone(), 0).sim_secs)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     let spec = datasets::spec("friendster").unwrap();
     let graph = spec.generate(5);
     let base = TrainConfig {

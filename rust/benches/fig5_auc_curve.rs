@@ -11,7 +11,7 @@ use tembed::gen::datasets;
 use tembed::graph::CsrGraph;
 use tembed::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     for (name, frac) in [("youtube", 0.1), ("hyperlink-pld", 0.02)] {
         let spec = datasets::spec(name).unwrap();
         let graph = spec.generate(7);

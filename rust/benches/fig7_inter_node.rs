@@ -10,7 +10,7 @@ use tembed::gen::datasets;
 use tembed::pipeline::OverlapConfig;
 use tembed::util::human_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     println!("# Fig 7 (sim-scale real runs) — epoch sim time, 1-node-8GPU vs 2-node-16GPU");
     println!("{:<14} {:>12} {:>12} {:>9}", "dataset", "8 GPUs", "16 GPUs", "speedup");
     for name in ["generated-b", "generated-a"] {

@@ -44,7 +44,65 @@ fn main() {
         );
     }
 
-    // --- PJRT step at the same shape (three-layer path)
+    // --- PJRT step at the same shape (three-layer path; pjrt feature)
+    pjrt_benches(&mut rng);
+
+    // --- minibatch assembly
+    let block: Vec<(u32, u32)> = (0..100_000)
+        .map(|_| (rng.index(4096) as u32, rng.index(4096) as u32))
+        .collect();
+    bench("make_minibatches 100k samples b=1024", 50, || {
+        let mbs = make_minibatches(&block, 1024, 0, 0, 0, 0);
+        std::hint::black_box(mbs.len());
+    });
+
+    // --- negative sampling
+    let degrees: Vec<u32> = (0..100_000).map(|_| rng.index(500) as u32 + 1).collect();
+    let sampler = NegativeSampler::new(&degrees, 0..100_000);
+    let mut srng = Rng::new(2);
+    bench("negative sampler: 160 draws (1 minibatch)", 1000, || {
+        std::hint::black_box(sampler.sample_local(160, &mut srng));
+    });
+
+    // --- walk engine throughput
+    let spec = tembed::gen::datasets::spec("youtube").unwrap();
+    let graph = spec.generate(1);
+    let engine = tembed::walk::WalkEngine::new(
+        &graph,
+        tembed::walk::WalkConfig::default(),
+    );
+    let t = Instant::now();
+    let walks = engine.run_epoch(0);
+    let wps = walks.num_walks() as f64 / t.elapsed().as_secs_f64();
+    println!("{:<44} {wps:>12.2e} walks/s", "walk engine (youtube-sim)");
+
+    // --- augmentation
+    let t = Instant::now();
+    let samples = tembed::walk::augment_walks(&walks, 3, 8);
+    println!(
+        "{:<44} {:>12.2e} samples/s",
+        "augmentation (window 3)",
+        samples.len() as f64 / t.elapsed().as_secs_f64()
+    );
+
+    // --- episode bucketing
+    let plan = tembed::partition::HierarchyPlan::new(2, 8, 4, graph.num_nodes());
+    let t = Instant::now();
+    let pool = tembed::sample::EpisodePool::build(&plan, &samples);
+    println!(
+        "{:<44} {:>12.2e} samples/s",
+        "episode 2D bucketing",
+        pool.total_samples() as f64 / t.elapsed().as_secs_f64()
+    );
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_rng: &mut Rng) {
+    println!("(pjrt step skipped — built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(rng: &mut Rng) {
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.join("manifest.tsv").exists() {
         let rt = tembed::runtime::Runtime::open(artifacts).expect("runtime");
@@ -99,52 +157,4 @@ fn main() {
     } else {
         println!("(pjrt step skipped — run `make artifacts`)");
     }
-
-    // --- minibatch assembly
-    let block: Vec<(u32, u32)> = (0..100_000)
-        .map(|_| (rng.index(4096) as u32, rng.index(4096) as u32))
-        .collect();
-    bench("make_minibatches 100k samples b=1024", 50, || {
-        let mbs = make_minibatches(&block, 1024, 0, 0, 0, 0);
-        std::hint::black_box(mbs.len());
-    });
-
-    // --- negative sampling
-    let degrees: Vec<u32> = (0..100_000).map(|_| rng.index(500) as u32 + 1).collect();
-    let sampler = NegativeSampler::new(&degrees, 0..100_000);
-    let mut srng = Rng::new(2);
-    bench("negative sampler: 160 draws (1 minibatch)", 1000, || {
-        std::hint::black_box(sampler.sample_local(160, &mut srng));
-    });
-
-    // --- walk engine throughput
-    let spec = tembed::gen::datasets::spec("youtube").unwrap();
-    let graph = spec.generate(1);
-    let engine = tembed::walk::WalkEngine::new(
-        &graph,
-        tembed::walk::WalkConfig::default(),
-    );
-    let t = Instant::now();
-    let walks = engine.run_epoch(0);
-    let wps = walks.num_walks() as f64 / t.elapsed().as_secs_f64();
-    println!("{:<44} {wps:>12.2e} walks/s", "walk engine (youtube-sim)");
-
-    // --- augmentation
-    let t = Instant::now();
-    let samples = tembed::walk::augment_walks(&walks, 3, 8);
-    println!(
-        "{:<44} {:>12.2e} samples/s",
-        "augmentation (window 3)",
-        samples.len() as f64 / t.elapsed().as_secs_f64()
-    );
-
-    // --- episode bucketing
-    let plan = tembed::partition::HierarchyPlan::new(2, 8, 4, graph.num_nodes());
-    let t = Instant::now();
-    let pool = tembed::sample::EpisodePool::build(&plan, &samples);
-    println!(
-        "{:<44} {:>12.2e} samples/s",
-        "episode 2D bucketing",
-        pool.total_samples() as f64 / t.elapsed().as_secs_f64()
-    );
 }

@@ -15,7 +15,7 @@ use tembed::gen::datasets;
 use tembed::pipeline::OverlapConfig;
 use tembed::util::human_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     println!("# Table III (top) — sim-scale real runs, one epoch");
     println!(
         "{:<14} {:>6} {:>4} {:>10} {:>11} {:>11}",

@@ -8,7 +8,7 @@ use tembed::coordinator::Trainer;
 use tembed::eval::downstream::feature_engineering_auc;
 use tembed::gen::datasets;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     let spec = datasets::spec("anonymized-a").unwrap();
     let (graph, labels) = spec.generate_with_labels(11);
     let samples: Vec<_> = graph.edges().collect();

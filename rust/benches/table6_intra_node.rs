@@ -8,7 +8,7 @@ use tembed::config::TrainConfig;
 use tembed::coordinator::Trainer;
 use tembed::gen::datasets;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     println!("# Table VI — avg per-epoch sim time (sec), 1/2/4/8 GPUs");
     println!(
         "{:<15} {:<10} {:>10} {:>10} {:>10} {:>10}",

@@ -7,7 +7,7 @@ use tembed::config::TrainConfig;
 use tembed::coordinator::Trainer;
 use tembed::gen::datasets;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     println!("# Table VII — ours, avg per-epoch sim time (sec) at 1/2/4/8 GPUs");
     println!("{:<15} {:>10} {:>10} {:>10} {:>10} {:>7}", "dataset", "1", "2", "4", "8", "1->8");
     for name in [

@@ -14,7 +14,7 @@ use tembed::gen::datasets;
 use tembed::pipeline::OverlapConfig;
 use tembed::util::{human_bytes, human_secs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     println!("== Table I: memory cost at paper scale ==");
     let c = StorageCost::paper_table1();
     for (name, bytes, paper) in [

@@ -12,7 +12,7 @@ use tembed::coordinator::Trainer;
 use tembed::eval::downstream::feature_engineering_auc;
 use tembed::gen::datasets;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     // anonymized-A-sim: power-law + planted communities; community
     // membership is the downstream label (the paper's internal task)
     let spec = datasets::spec("anonymized-a").unwrap();

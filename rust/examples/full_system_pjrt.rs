@@ -7,7 +7,7 @@
 //!
 //! ```bash
 //! make artifacts   # once: lowers L2/L1 to artifacts/*.hlo.txt
-//! cargo run --release --example full_system_pjrt
+//! cargo run --release --features pjrt --example full_system_pjrt
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
@@ -20,10 +20,10 @@ use tembed::graph::CsrGraph;
 use tembed::runtime::Runtime;
 use tembed::util::{human_secs, Rng};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("manifest.tsv").exists() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        tembed::bail!("artifacts missing — run `make artifacts` first");
     }
     let rt = Runtime::open(artifacts)?;
     println!(
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     let store = driver.finish();
     let auc = link_auc(&store, &split);
     println!("\nheld-out link-prediction AUC: {auc:.4}");
-    anyhow::ensure!(auc > 0.6, "end-to-end AUC too low: {auc}");
+    tembed::ensure!(auc > 0.6, "end-to-end AUC too low: {auc}");
     println!("three-layer composition verified: rust -> PJRT -> XLA(JAX+Pallas) OK");
     Ok(())
 }

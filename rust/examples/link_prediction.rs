@@ -14,7 +14,7 @@ use tembed::gen::datasets;
 use tembed::graph::CsrGraph;
 use tembed::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     for name in ["youtube", "hyperlink-pld"] {
         let spec = datasets::spec(name).unwrap();
         let graph = spec.generate(7);

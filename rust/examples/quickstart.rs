@@ -11,7 +11,7 @@ use tembed::coordinator::driver::Driver;
 use tembed::gen::datasets;
 use tembed::util::{human_bytes, human_secs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tembed::Result<()> {
     let spec = datasets::spec("youtube").expect("registered dataset");
     let graph = spec.generate(42);
     println!(

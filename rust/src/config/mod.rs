@@ -21,14 +21,14 @@ pub enum Backend {
 }
 
 impl std::str::FromStr for Backend {
-    type Err = anyhow::Error;
+    type Err = crate::Error;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "native" => Ok(Backend::Native),
             "gathered" => Ok(Backend::Gathered),
             "pjrt" => Ok(Backend::Pjrt),
-            other => anyhow::bail!("unknown backend {other:?} (native|gathered|pjrt)"),
+            other => crate::bail!("unknown backend {other:?} (native|gathered|pjrt)"),
         }
     }
 }
@@ -55,6 +55,11 @@ pub struct TrainConfig {
     pub epochs: usize,
     pub pipeline: bool,
     pub socket_aware: bool,
+    /// Drive episodes through the multi-threaded data-parallel executor
+    /// (`exec` module): one worker thread per simulated GPU with
+    /// double-buffered sub-part rotation over channels. Off = the serial
+    /// reference schedule (same math, one step at a time).
+    pub executor: bool,
     // walk engine
     pub walk_length: usize,
     pub walks_per_node: usize,
@@ -84,6 +89,7 @@ impl Default for TrainConfig {
             epochs: 1,
             pipeline: true,
             socket_aware: true,
+            executor: true,
             walk_length: 6,
             walks_per_node: 2,
             window: 3,
@@ -127,7 +133,7 @@ impl TrainConfig {
         let as_usize = || -> crate::Result<usize> {
             match value {
                 Int(i) if *i >= 0 => Ok(*i as usize),
-                _ => anyhow::bail!("{path}: expected non-negative integer, got {value:?}"),
+                _ => crate::bail!("{path}: expected non-negative integer, got {value:?}"),
             }
         };
         match path {
@@ -135,7 +141,7 @@ impl TrainConfig {
             "cluster.gpus_per_node" => self.gpus_per_node = as_usize()?,
             "cluster.hardware" => match value {
                 Str(s) => self.hardware = s.clone(),
-                _ => anyhow::bail!("{path}: expected string"),
+                _ => crate::bail!("{path}: expected string"),
             },
             "model.dim" => self.dim = as_usize()?,
             "model.negatives" => self.negatives = as_usize()?,
@@ -143,22 +149,26 @@ impl TrainConfig {
             "model.learning_rate" => match value {
                 Float(f) => self.learning_rate = *f as f32,
                 Int(i) => self.learning_rate = *i as f32,
-                _ => anyhow::bail!("{path}: expected number"),
+                _ => crate::bail!("{path}: expected number"),
             },
             "model.lr_decay" => match value {
                 Bool(b) => self.lr_decay = *b,
-                _ => anyhow::bail!("{path}: expected bool"),
+                _ => crate::bail!("{path}: expected bool"),
             },
             "schedule.subparts" => self.subparts = as_usize()?,
             "schedule.episode_size" => self.episode_size = as_usize()?,
             "schedule.epochs" => self.epochs = as_usize()?,
             "schedule.pipeline" => match value {
                 Bool(b) => self.pipeline = *b,
-                _ => anyhow::bail!("{path}: expected bool"),
+                _ => crate::bail!("{path}: expected bool"),
             },
             "schedule.socket_aware" => match value {
                 Bool(b) => self.socket_aware = *b,
-                _ => anyhow::bail!("{path}: expected bool"),
+                _ => crate::bail!("{path}: expected bool"),
+            },
+            "schedule.executor" => match value {
+                Bool(b) => self.executor = *b,
+                _ => crate::bail!("{path}: expected bool"),
             },
             "walk.walk_length" => self.walk_length = as_usize()?,
             "walk.walks_per_node" => self.walks_per_node = as_usize()?,
@@ -168,13 +178,13 @@ impl TrainConfig {
             "misc.threads" => self.threads = as_usize()?,
             "misc.backend" => match value {
                 Str(s) => self.backend = s.parse()?,
-                _ => anyhow::bail!("{path}: expected string"),
+                _ => crate::bail!("{path}: expected string"),
             },
             "misc.artifacts_dir" => match value {
                 Str(s) => self.artifacts_dir = s.clone(),
-                _ => anyhow::bail!("{path}: expected string"),
+                _ => crate::bail!("{path}: expected string"),
             },
-            other => anyhow::bail!("unknown config key {other:?}"),
+            other => crate::bail!("unknown config key {other:?}"),
         }
         Ok(())
     }
@@ -183,7 +193,7 @@ impl TrainConfig {
     pub fn apply_cli(&mut self, kv: &str) -> crate::Result<()> {
         let (path, raw) = kv
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("override {kv:?} missing '='"))?;
+            .ok_or_else(|| crate::anyhow!("override {kv:?} missing '='"))?;
         let value = toml::Value::infer(raw.trim());
         self.apply(path.trim(), &value)
     }
@@ -193,12 +203,13 @@ impl TrainConfig {
         format!(
             "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
-             [schedule]\nsubparts = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\n\n\
+             [schedule]\nsubparts = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
             self.nodes, self.gpus_per_node, self.hardware,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
             self.subparts, self.episode_size, self.epochs, self.pipeline, self.socket_aware,
+            self.executor,
             self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
             self.seed, self.threads,
             match self.backend { Backend::Native => "native", Backend::Gathered => "gathered", Backend::Pjrt => "pjrt" },
@@ -229,6 +240,14 @@ mod tests {
         assert_eq!(c.learning_rate, 0.05);
         assert!(!c.pipeline);
         assert_eq!(c.backend, Backend::Pjrt);
+    }
+
+    #[test]
+    fn executor_toggle_defaults_on() {
+        let mut c = TrainConfig::default();
+        assert!(c.executor);
+        c.apply_cli("schedule.executor=false").unwrap();
+        assert!(!c.executor);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! f64, bool, or double-quoted strings (with `\"` and `\\` escapes);
 //! `#` comments; blank lines ignored. Duplicate keys: last wins.
 
-use anyhow::bail;
+use crate::bail;
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -79,7 +79,7 @@ fn parse_string(raw: &str, lineno: usize) -> crate::Result<String> {
     let inner = raw
         .strip_prefix('"')
         .and_then(|s| s.strip_suffix('"'))
-        .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated string {raw:?}"))?;
+        .ok_or_else(|| crate::anyhow!("line {lineno}: unterminated string {raw:?}"))?;
     let mut out = String::with_capacity(inner.len());
     let mut escape = false;
     for ch in inner.chars() {
@@ -119,7 +119,7 @@ pub fn parse(text: &str) -> crate::Result<Document> {
         if let Some(rest) = line.strip_prefix('[') {
             let name = rest
                 .strip_suffix(']')
-                .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated section"))?;
+                .ok_or_else(|| crate::anyhow!("line {lineno}: unterminated section"))?;
             if name.is_empty() || name.contains(['[', ']']) {
                 bail!("line {lineno}: bad section name {name:?}");
             }
@@ -128,7 +128,7 @@ pub fn parse(text: &str) -> crate::Result<Document> {
         }
         let (key, raw_value) = line
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("line {lineno}: expected key = value"))?;
+            .ok_or_else(|| crate::anyhow!("line {lineno}: expected key = value"))?;
         let key = key.trim();
         if key.is_empty() {
             bail!("line {lineno}: empty key");

@@ -120,6 +120,17 @@ impl<'g> Driver<'g> {
             report.metrics.add_secs("walk_stall", self.walk_sim_secs - report.sim_secs);
             report.sim_secs = self.walk_sim_secs;
         }
+        // validation hook: replay the executor's *measured* per-phase
+        // timings through the same discrete-event model that produces the
+        // simulated clock, so reports carry model-vs-measured side by side
+        if let Some(d) = self.trainer.measured_durations() {
+            let modeled = crate::pipeline::simulate_step(d, self.cfg.overlap());
+            report.metrics.add_secs("measured_step_model", modeled);
+            report.metrics.add_secs("measured_train_phase", d.train);
+        }
+        if let Some(eff) = self.trainer.measured_overlap_efficiency() {
+            report.metrics.add("exec_overlap_pct", (eff * 100.0).round() as u64);
+        }
         report
     }
 
@@ -217,6 +228,19 @@ mod tests {
         let store = d.finish();
         let auc = crate::eval::link_auc(&store, &split);
         assert!(auc > 0.65, "held-out auc {auc}");
+    }
+
+    #[test]
+    fn reports_carry_measured_executor_timings() {
+        let g = tiny_graph(5);
+        let mut d = Driver::new(&g, tiny_cfg(), None).unwrap();
+        let r = d.run_epoch(0);
+        // the executor's measured phase timings, replayed through the
+        // discrete-event model, land in the epoch report
+        assert!(r.metrics.secs("measured_train_phase") > 0.0);
+        assert!(r.metrics.secs("measured_step_model") > 0.0);
+        assert!(r.metrics.secs("exec_wall") > 0.0);
+        assert!(r.metrics.count("exec_overlap_pct") <= 100);
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! schedule implies, and the pipeline simulator folding them into the
 //! simulated epoch time.
 //!
+//! Episodes execute through the `exec` module by default (one worker
+//! thread per simulated GPU, double-buffered sub-part rotation over
+//! channels, no global barrier); `cfg.executor = false` selects the
+//! serial reference schedule. Both orders of execution apply identical
+//! updates — the executor-parity tests pin this.
+//!
 //! `driver` composes the full system: generate/load graph → walk engine →
 //! augmentation → episodes → epochs, with the walk engine's next-epoch
 //! work overlapped against training (the paper's decoupled design).
@@ -23,8 +29,8 @@ use crate::embed::EmbeddingStore;
 use crate::graph::Edge;
 use crate::metrics::{EpochReport, Metrics, Timer};
 use crate::partition::HierarchyPlan;
-use crate::pipeline::{simulate_substep, PhaseBytes};
-use crate::sample::{make_minibatches, EpisodePool, NegativeSampler};
+use crate::pipeline::{simulate_substep, PhaseBytes, PhaseDurations};
+use crate::sample::{EpisodePool, NegativeSampler};
 use crate::util::Rng;
 
 /// The distributed embedding trainer.
@@ -40,6 +46,11 @@ pub struct Trainer {
     samplers: Vec<NegativeSampler>,
     rngs: Vec<Rng>,
     pub metrics: Metrics,
+    /// Measured per-phase durations of the most recent executor episode
+    /// (None before the first episode or with `executor = false`).
+    last_exec: Option<PhaseDurations>,
+    /// Measured overlap efficiency of the most recent executor episode.
+    last_overlap: Option<f64>,
 }
 
 /// Per-GPU outcome of one scheduled step.
@@ -83,7 +94,7 @@ impl Trainer {
                 Backend::Gathered => Box::new(GatheredBackend),
                 Backend::Pjrt => {
                     let rt = runtime
-                        .ok_or_else(|| anyhow::anyhow!("pjrt backend requires a Runtime"))?;
+                        .ok_or_else(|| crate::anyhow!("pjrt backend requires a Runtime"))?;
                     Box::new(rt.stepper(max_subpart, max_ctx, cfg.dim)?)
                 }
             });
@@ -98,7 +109,22 @@ impl Trainer {
             samplers,
             rngs,
             metrics: Metrics::new(),
+            last_exec: None,
+            last_overlap: None,
         })
+    }
+
+    /// Measured per-phase durations of the most recent executor episode —
+    /// the validation hook feeding `pipeline::simulate_step` with real
+    /// wall-clock phase timings (see `exec::ExecRun::measured_durations`).
+    pub fn measured_durations(&self) -> Option<&PhaseDurations> {
+        self.last_exec.as_ref()
+    }
+
+    /// Measured overlap efficiency of the most recent executor episode
+    /// (compute / (compute + stall) across all workers).
+    pub fn measured_overlap_efficiency(&self) -> Option<f64> {
+        self.last_overlap
     }
 
     /// Effective learning rate for an epoch: linear decay over
@@ -143,7 +169,42 @@ impl Trainer {
     }
 
     /// One episode = one full rotation of the hierarchical schedule.
+    /// `cfg.executor` picks the multi-threaded executor (one worker per
+    /// GPU, channel-based sub-part rotation — see `exec`) or the serial
+    /// reference schedule. Both apply identical updates in identical
+    /// order, so they produce the same model and the same simulated time;
+    /// the executor additionally measures real overlap.
     fn train_episode(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
+        if self.cfg.executor {
+            self.train_episode_exec(pool, lr)
+        } else {
+            self.train_episode_serial(pool, lr)
+        }
+    }
+
+    /// Simulated duration of one (GPU, step) outcome: fabric-priced byte
+    /// counters with topology-aware P2P routing for the cross-socket hops
+    /// (§IV-C), under the ping-pong rule that only a round's first
+    /// sub-step pays the P2P stall (§III-B).
+    fn substep_sim(&self, bytes: &PhaseBytes, first_sub: bool) -> f64 {
+        let mut d =
+            bytes.durations(&self.cluster, self.cfg.batch, self.cfg.negatives, self.cfg.dim);
+        let topo = self.cluster.topology();
+        let cross_frac =
+            topo.ring_cross_socket_hops() as f64 / topo.gpus_per_node.max(1) as f64;
+        let cross_route = if self.cfg.socket_aware {
+            Route::HostBounce
+        } else {
+            Route::CrossSocketP2p
+        };
+        let cross = cross_route.secs(&self.cluster.fabric, bytes.subpart_bytes);
+        d.p2p = (1.0 - cross_frac) * d.p2p + cross_frac * cross;
+        simulate_substep(&d, self.cfg.overlap(), first_sub)
+    }
+
+    /// The serial reference schedule: one step at a time, all GPUs joined
+    /// per step, trained sub-parts written back between steps.
+    fn train_episode_serial(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
         let steps = self.plan.steps();
         let mut sim = 0.0;
         let mut loss = 0.0;
@@ -158,33 +219,65 @@ impl Trainer {
                 self.store.checkin_vertex(range, &o.trained);
                 loss += o.loss;
                 samples += o.samples;
-                let mut d = o.bytes.durations(
-                    &self.cluster,
-                    self.cfg.batch,
-                    self.cfg.negatives,
-                    self.cfg.dim,
-                );
-                // topology-aware P2P pricing for the intra-node hop:
-                // the ring has `cross_hops` cross-socket hops per rotation;
-                // socket-aware routing bounces them through the host,
-                // naive routing pays the degraded direct path (§IV-C)
-                let topo = self.cluster.topology();
-                let cross_frac = topo.ring_cross_socket_hops() as f64
-                    / topo.gpus_per_node.max(1) as f64;
-                let cross_route = if self.cfg.socket_aware {
-                    Route::HostBounce
-                } else {
-                    Route::CrossSocketP2p
-                };
-                let cross = cross_route.secs(&self.cluster.fabric, o.bytes.subpart_bytes);
-                d.p2p = (1.0 - cross_frac) * d.p2p + cross_frac * cross;
-                // ping-pong: only a round's first sub-step pays the P2P
-                // stall; later sub-parts transfer under compute (§III-B)
-                let t = simulate_substep(&d, self.cfg.overlap(), step.sub == 0);
+                let t = self.substep_sim(&o.bytes, step.sub == 0);
                 step_sim = step_sim.max(t); // GPUs run concurrently
             }
             sim += step_sim;
         }
+        (sim, loss, samples)
+    }
+
+    /// The multi-threaded executor path: run the episode for real through
+    /// `exec::run_episode`, then fold its per-step traces through the same
+    /// discrete-event pricing as the serial path and record the measured
+    /// phase timings for the report path.
+    fn train_episode_exec(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
+        let ctx = crate::exec::ExecCtx {
+            plan: &self.plan,
+            pool,
+            batch: self.cfg.batch,
+            negatives: self.cfg.negatives,
+            dim: self.cfg.dim,
+            lr,
+            crosses_node: self.plan.nodes > 1,
+        };
+        let run = crate::exec::run_episode(
+            &ctx,
+            &mut self.store,
+            &mut self.contexts,
+            &mut self.backends,
+            &self.samplers,
+            &mut self.rngs,
+        );
+        let steps = self.plan.steps();
+        let mut sim = 0.0;
+        let mut loss = 0.0;
+        let mut samples = 0u64;
+        let mut i = 0;
+        for (si, step) in steps.iter().enumerate() {
+            let mut step_sim: f64 = 0.0;
+            while i < run.traces.len() && run.traces[i].step == si {
+                let tr = &run.traces[i];
+                loss += tr.loss;
+                samples += tr.samples;
+                step_sim = step_sim.max(self.substep_sim(&tr.bytes, step.sub == 0));
+                i += 1;
+            }
+            sim += step_sim;
+        }
+        // measured-overlap telemetry into the existing report path
+        self.metrics.add("exec_episodes", 1);
+        self.metrics.add_secs("exec_wall", run.measure.wall_secs);
+        self.metrics.add_secs("exec_compute", run.measure.compute_secs);
+        self.metrics.add_secs("exec_stall", run.measure.stall_secs);
+        self.metrics.add("exec_util_pct", (run.measure.utilization() * 100.0).round() as u64);
+        self.last_overlap = Some(run.measure.overlap_efficiency());
+        self.last_exec = Some(run.measured_durations(
+            &self.cluster,
+            self.cfg.batch,
+            self.cfg.negatives,
+            self.cfg.dim,
+        ));
         (sim, loss, samples)
     }
 
@@ -216,22 +309,19 @@ impl Trainer {
                     // H2D checkout (prefetch phase in the pipeline model)
                     let mut vbuf = store.checkout_vertex(vrange.clone());
                     let block = pool.block(sp, g);
-                    let mbs = make_minibatches(block, cfg.batch, vrange.start, crange.start, 0, 0);
-                    // per-group shared negatives (see embed::sgns), drawn
-                    // up front so the backend can run the whole block in
-                    // one device round trip (PJRT buffer chaining)
-                    let vns: Vec<Vec<i32>> = mbs
-                        .iter()
-                        .map(|mb| {
-                            let groups =
-                                crate::embed::sgns::groups_for(mb.u_local.len());
-                            samplers[g]
-                                .sample_local(groups * cfg.negatives, rng)
-                                .iter()
-                                .map(|&x| x as i32)
-                                .collect()
-                        })
-                        .collect();
+                    // minibatches + per-group shared negatives, drawn up
+                    // front so the backend can run the whole block in one
+                    // device round trip (PJRT buffer chaining); shared
+                    // with the exec worker via sample::assemble_block
+                    let (mbs, vns) = crate::sample::assemble_block(
+                        block,
+                        cfg.batch,
+                        vrange.start,
+                        crange.start,
+                        cfg.negatives,
+                        &samplers[g],
+                        rng,
+                    );
                     let loss = backend.step_block(
                         &mut vbuf,
                         ctx,
@@ -380,6 +470,35 @@ mod tests {
         let (degrees2, _) = graph_samples(100, 500, 9);
         let t2 = Trainer::new(100, &degrees2, small_cfg(), None).unwrap();
         assert_eq!(t2.effective_lr(7), t2.cfg.learning_rate);
+    }
+
+    #[test]
+    fn executor_matches_serial_reference() {
+        // the exec module's channel-rotated episode must reproduce the
+        // serial schedule exactly: same loss trajectory, same simulated
+        // time, same final model
+        let (degrees, samples) = graph_samples(300, 3000, 11);
+        let on_cfg = small_cfg(); // executor defaults on
+        let mut off_cfg = small_cfg();
+        off_cfg.executor = false;
+        let mut a = Trainer::new(300, &degrees, on_cfg, None).unwrap();
+        let mut b = Trainer::new(300, &degrees, off_cfg, None).unwrap();
+        for e in 0..3 {
+            let ra = a.train_epoch(&mut samples.clone(), e);
+            let rb = b.train_epoch(&mut samples.clone(), e);
+            let rel = (ra.loss_sum - rb.loss_sum).abs() / rb.loss_sum.max(1.0);
+            assert!(rel < 1e-9, "epoch {e}: exec {} vs serial {}", ra.loss_sum, rb.loss_sum);
+            assert_eq!(ra.samples, rb.samples);
+            assert!((ra.sim_secs - rb.sim_secs).abs() < 1e-12, "sim drifted");
+        }
+        let eff = a.measured_overlap_efficiency().expect("measured efficiency");
+        assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
+        assert!(a.measured_durations().expect("measured durations").train > 0.0);
+        assert!(b.measured_overlap_efficiency().is_none());
+        let sa = a.finish();
+        let sb = b.finish();
+        assert_eq!(sa.vertex, sb.vertex);
+        assert_eq!(sa.context, sb.context);
     }
 
     #[test]

@@ -94,16 +94,20 @@ struct SigmoidLut {
     lsig: Vec<f32>,
 }
 
-static LUT: once_cell::sync::Lazy<SigmoidLut> = once_cell::sync::Lazy::new(|| {
-    let mut sig = Vec::with_capacity(LUT_SIZE + 2);
-    let mut lsig = Vec::with_capacity(LUT_SIZE + 2);
-    for i in 0..=(LUT_SIZE + 1) {
-        let x = -LUT_RANGE + 2.0 * LUT_RANGE * i as f32 / LUT_SIZE as f32;
-        sig.push(sigmoid(x));
-        lsig.push(log_sigmoid(x));
-    }
-    SigmoidLut { sig, lsig }
-});
+static LUT: std::sync::OnceLock<SigmoidLut> = std::sync::OnceLock::new();
+
+fn lut() -> &'static SigmoidLut {
+    LUT.get_or_init(|| {
+        let mut sig = Vec::with_capacity(LUT_SIZE + 2);
+        let mut lsig = Vec::with_capacity(LUT_SIZE + 2);
+        for i in 0..=(LUT_SIZE + 1) {
+            let x = -LUT_RANGE + 2.0 * LUT_RANGE * i as f32 / LUT_SIZE as f32;
+            sig.push(sigmoid(x));
+            lsig.push(log_sigmoid(x));
+        }
+        SigmoidLut { sig, lsig }
+    })
+}
 
 #[inline]
 fn lut_interp(table: &[f32], x: f32) -> f32 {
@@ -121,7 +125,7 @@ fn sigmoid_fast(x: f32) -> f32 {
     } else if x <= -LUT_RANGE {
         0.0
     } else {
-        lut_interp(&LUT.sig, x)
+        lut_interp(&lut().sig, x)
     }
 }
 
@@ -134,7 +138,7 @@ fn log_sigmoid_fast(x: f32) -> f32 {
     } else if x <= -LUT_RANGE {
         x
     } else {
-        lut_interp(&LUT.lsig, x)
+        lut_interp(&lut().lsig, x)
     }
 }
 

@@ -1,0 +1,611 @@
+//! Multi-threaded data-parallel episode executor — the §III schedule
+//! *actually running* instead of being priced by the discrete-event model.
+//!
+//! One worker thread per simulated GPU owns that GPU's pinned context
+//! shard and compute backend (model parallelism). Vertex sub-parts rotate
+//! between workers over channels exactly along the hierarchical schedule's
+//! ownership chain: after GPU `g` trains sub-part `s` at step `t`, the
+//! trained buffer is sent directly to the GPU scheduled to train `s` next
+//! (the §III-B P2P rotation), or back to the host store after the chain's
+//! last step. Each worker keeps a reorder stage (`pending`) of sub-parts
+//! that arrived early — the double-buffered ping-pong: while the front
+//! sub-part trains, the next one lands in the back buffer.
+//!
+//! There is **no global barrier**: workers drift freely and synchronize
+//! only through the data dependencies the schedule implies. Correctness
+//! rests on the plan's orthogonality invariant (no two GPUs ever hold the
+//! same sub-part at one step) plus the chain hand-off: a sub-part is
+//! reachable by exactly one worker at any moment. Deadlock-freedom:
+//! consider the blocked worker waiting on the smallest step index — its
+//! dependency is an earlier step, so that step's worker is either
+//! computing (progress) or blocked on a still-smaller step, contradiction.
+//!
+//! Because each worker draws its per-step negatives in its own schedule
+//! order and every buffer hand-off carries exact values, the executor is
+//! **bit-identical** to the serial reference schedule (the
+//! `executor = false` path in the coordinator) — the parity test in
+//! `tests/executor_parity.rs` holds to strict tolerance.
+//!
+//! Measured wall-clock phase timings (compute vs. stall per step) are
+//! reported through [`ExecMeasure`] and folded into the existing
+//! `pipeline::PhaseBytes`/`simulate_step` report path by the coordinator,
+//! so the simulator is validated against a run that genuinely overlaps
+//! compute and transfer.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::cluster::ClusterSpec;
+use crate::embed::sgns::StepBackend;
+use crate::embed::EmbeddingStore;
+use crate::metrics::Timer;
+use crate::partition::HierarchyPlan;
+use crate::pipeline::{PhaseBytes, PhaseDurations};
+use crate::sample::{assemble_block, EpisodePool, NegativeSampler};
+use crate::util::Rng;
+
+/// A sub-part moving along the rotation ring: `(subpart id, rows)`.
+type RingMsg = (usize, Vec<f32>);
+
+/// Sentinel sub-part id broadcast to every worker when one panics, so
+/// peers blocked in `recv` abort instead of deadlocking (no real
+/// sub-part id can reach `usize::MAX`).
+const POISON: usize = usize::MAX;
+
+/// Immutable inputs of one episode run.
+pub struct ExecCtx<'a> {
+    pub plan: &'a HierarchyPlan,
+    pub pool: &'a EpisodePool,
+    pub batch: usize,
+    pub negatives: usize,
+    pub dim: usize,
+    pub lr: f32,
+    /// Whether sub-part rotation crosses node boundaries (prices the
+    /// inter-node phase in the simulator).
+    pub crosses_node: bool,
+}
+
+/// One worker's outcome for one scheduled step: the training result plus
+/// the measured wall-clock split between stall and compute.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Global step index in the rotation schedule.
+    pub step: usize,
+    /// Global GPU (worker) index.
+    pub gpu: usize,
+    /// Sub-part trained at this step.
+    pub subpart: usize,
+    pub loss: f64,
+    pub samples: u64,
+    /// Byte counters for the discrete-event pipeline model.
+    pub bytes: PhaseBytes,
+    /// Seconds this worker spent blocked waiting for the sub-part to
+    /// arrive — the *exposed* (un-overlapped) transfer latency.
+    pub stall_secs: f64,
+    /// Seconds inside the backend's `step_block` (the compute phase).
+    pub compute_secs: f64,
+}
+
+/// Aggregate measurement of one episode across all workers.
+#[derive(Debug, Default, Clone)]
+pub struct ExecMeasure {
+    /// Wall time of the whole episode (staging + all workers).
+    pub wall_secs: f64,
+    /// Summed per-worker compute seconds.
+    pub compute_secs: f64,
+    /// Summed per-worker stall seconds.
+    pub stall_secs: f64,
+    pub workers: usize,
+    pub steps: usize,
+}
+
+impl ExecMeasure {
+    /// Fraction of worker-active time spent computing rather than stalled
+    /// on sub-part arrival — the measured counterpart of the §III-C
+    /// overlap-efficiency number (1.0 = transfers fully hidden).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let denom = self.compute_secs + self.stall_secs;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.compute_secs / denom
+        }
+    }
+
+    /// Worker-occupancy: summed compute over (workers × wall). Below 1/workers
+    /// means the run was serial in practice; near 1.0 means linear scaling.
+    pub fn utilization(&self) -> f64 {
+        if self.wall_secs <= 0.0 || self.workers == 0 {
+            return 0.0;
+        }
+        self.compute_secs / (self.wall_secs * self.workers as f64)
+    }
+}
+
+/// Result of one executed episode: per-step traces sorted by
+/// `(step, gpu)` — the same fold order as the serial reference — plus the
+/// aggregate measurement.
+#[derive(Debug)]
+pub struct ExecRun {
+    pub traces: Vec<StepTrace>,
+    pub measure: ExecMeasure,
+}
+
+impl ExecRun {
+    /// Fold the measured run into the discrete-event model's inputs: the
+    /// mean measured compute per step becomes the `train` phase, while
+    /// the transfer phases are priced from the aggregated byte counters
+    /// through `spec`'s fabric — `PhaseBytes::durations` on real counts.
+    /// Feeding this to `pipeline::simulate_step` validates the simulator
+    /// against a run that genuinely overlapped compute and transfer.
+    pub fn measured_durations(
+        &self,
+        spec: &ClusterSpec,
+        batch: usize,
+        negatives: usize,
+        dim: usize,
+    ) -> PhaseDurations {
+        let n = self.traces.len().max(1) as u64;
+        let mut agg = PhaseBytes::default();
+        for t in &self.traces {
+            agg.sample_bytes += t.bytes.sample_bytes;
+            agg.subpart_bytes += t.bytes.subpart_bytes;
+            agg.train_samples += t.bytes.train_samples;
+            agg.crosses_node |= t.bytes.crosses_node;
+        }
+        let mean = PhaseBytes {
+            sample_bytes: agg.sample_bytes / n,
+            subpart_bytes: agg.subpart_bytes / n,
+            train_samples: agg.train_samples / n,
+            crosses_node: agg.crosses_node,
+        };
+        let mut d = mean.durations(spec, batch, negatives, dim);
+        d.train = self.measure.compute_secs / n as f64;
+        d
+    }
+}
+
+/// Where a trained sub-part goes after a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dest {
+    /// Hand off to the worker that trains it next (P2P rotation).
+    Gpu(usize),
+    /// Chain finished: return to the host store (D2H write-back).
+    Host,
+}
+
+/// Per-episode routing derived from the hierarchical schedule.
+struct Routing {
+    /// `sched[g]` = this worker's `(step index, subpart)` sequence.
+    sched: Vec<Vec<(usize, usize)>>,
+    /// `dest[g][step]` = where worker `g` sends the sub-part it trained
+    /// at that step.
+    dest: Vec<Vec<Dest>>,
+    /// `(subpart, first owner)` pairs — the initial H2D staging.
+    heads: Vec<(usize, usize)>,
+}
+
+fn build_routing(plan: &HierarchyPlan) -> Routing {
+    let gpus = plan.total_gpus();
+    let steps = plan.steps();
+    // ownership chain of every sub-part, in step order
+    let mut chains: Vec<Vec<(usize, usize)>> = vec![Vec::new(); plan.total_subparts()];
+    let mut sched: Vec<Vec<(usize, usize)>> =
+        vec![Vec::with_capacity(steps.len()); gpus];
+    for (si, st) in steps.iter().enumerate() {
+        for (g, &sp) in st.assignment.iter().enumerate() {
+            chains[sp].push((si, g));
+            sched[g].push((si, sp));
+        }
+    }
+    let mut dest: Vec<Vec<Dest>> = vec![vec![Dest::Host; steps.len()]; gpus];
+    let mut heads = Vec::with_capacity(chains.len());
+    for (sp, chain) in chains.iter().enumerate() {
+        if let Some(&(_, g0)) = chain.first() {
+            heads.push((sp, g0));
+        }
+        for w in chain.windows(2) {
+            let (si, g) = w[0];
+            let (_, g_next) = w[1];
+            dest[g][si] = Dest::Gpu(g_next);
+        }
+    }
+    Routing { sched, dest, heads }
+}
+
+/// Per-worker seat: inbox plus routing slices.
+struct Seat {
+    inbox: Receiver<RingMsg>,
+    sched: Vec<(usize, usize)>,
+    dest: Vec<Dest>,
+}
+
+struct WorkerOut {
+    traces: Vec<StepTrace>,
+    finals: Vec<(usize, Vec<f32>)>,
+}
+
+/// Run one episode of the rotation schedule with one worker thread per
+/// GPU. `contexts`, `backends`, `samplers`, and `rngs` are indexed by
+/// global GPU id (the coordinator's per-GPU state); the store provides
+/// the initial sub-part checkouts and receives the final check-ins.
+pub fn run_episode(
+    ctx: &ExecCtx<'_>,
+    store: &mut EmbeddingStore,
+    contexts: &mut [Vec<f32>],
+    backends: &mut [Box<dyn StepBackend>],
+    samplers: &[NegativeSampler],
+    rngs: &mut [Rng],
+) -> ExecRun {
+    let gpus = ctx.plan.total_gpus();
+    assert_eq!(contexts.len(), gpus);
+    assert_eq!(backends.len(), gpus);
+    assert_eq!(samplers.len(), gpus);
+    assert_eq!(rngs.len(), gpus);
+    let routing = build_routing(ctx.plan);
+    let total_steps = routing.sched.first().map(|s| s.len()).unwrap_or(0);
+
+    let wall = Timer::start();
+    let mut txs: Vec<Sender<RingMsg>> = Vec::with_capacity(gpus);
+    let mut seats: Vec<Seat> = Vec::with_capacity(gpus);
+    let mut sched_it = routing.sched.into_iter();
+    let mut dest_it = routing.dest.into_iter();
+    for _ in 0..gpus {
+        let (tx, rx) = channel::<RingMsg>();
+        txs.push(tx);
+        seats.push(Seat {
+            inbox: rx,
+            sched: sched_it.next().unwrap(),
+            dest: dest_it.next().unwrap(),
+        });
+    }
+    // Stage every chain head: the episode's initial H2D checkouts. The
+    // whole vertex matrix is staged up front — same total bytes as the
+    // serial schedule's lazy checkouts, but held concurrently: peak
+    // memory carries one extra vertex-matrix copy at episode start,
+    // draining as chains consume it. Fine at simulation scale; a bounded
+    // staging window is a ROADMAP item for billion-row runs.
+    for &(sp, g0) in &routing.heads {
+        let buf = store.checkout_vertex(ctx.plan.subpart_range(sp));
+        txs[g0].send((sp, buf)).expect("stage initial sub-part");
+    }
+
+    let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(gpus);
+        for (g, ((seat, shard), (backend, rng))) in seats
+            .into_iter()
+            .zip(contexts.iter_mut())
+            .zip(backends.iter_mut().zip(rngs.iter_mut()))
+            .enumerate()
+        {
+            let peers = txs.clone();
+            handles.push(scope.spawn(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker(g, seat, shard, &mut **backend, rng, &peers, ctx, samplers)
+                }));
+                match out {
+                    Ok(v) => v,
+                    Err(payload) => {
+                        // unblock peers stuck in recv before propagating
+                        // (sends to already-finished workers just fail)
+                        for p in &peers {
+                            let _ = p.send((POISON, Vec::new()));
+                        }
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("exec worker panicked"))
+            .collect()
+    });
+    let wall_secs = wall.secs();
+
+    let mut traces = Vec::with_capacity(total_steps * gpus);
+    let mut compute_secs = 0.0;
+    let mut stall_secs = 0.0;
+    for out in outs {
+        for (sp, buf) in out.finals {
+            store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
+        }
+        for t in &out.traces {
+            compute_secs += t.compute_secs;
+            stall_secs += t.stall_secs;
+        }
+        traces.extend(out.traces);
+    }
+    traces.sort_by_key(|t| (t.step, t.gpu));
+    ExecRun {
+        traces,
+        measure: ExecMeasure {
+            wall_secs,
+            compute_secs,
+            stall_secs,
+            workers: gpus,
+            steps: total_steps,
+        },
+    }
+}
+
+/// One worker: receive each scheduled sub-part (buffering early arrivals
+/// — the ping-pong back buffer), train it against the pinned context
+/// shard, and pass it to the next scheduled owner.
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    g: usize,
+    seat: Seat,
+    shard: &mut Vec<f32>,
+    backend: &mut dyn StepBackend,
+    rng: &mut Rng,
+    peers: &[Sender<RingMsg>],
+    ctx: &ExecCtx<'_>,
+    samplers: &[NegativeSampler],
+) -> WorkerOut {
+    let mut pending: HashMap<usize, Vec<f32>> = HashMap::new();
+    let mut traces = Vec::with_capacity(seat.sched.len());
+    let mut finals = Vec::new();
+    let crange = ctx.plan.context_range(g);
+    for &(step_idx, sp) in &seat.sched {
+        // front-buffer fill: block only if the sub-part has not arrived
+        let wait = Timer::start();
+        let mut vbuf = loop {
+            if let Some(b) = pending.remove(&sp) {
+                break b;
+            }
+            let (got, b) = seat.inbox.recv().expect("sub-part ring closed early");
+            assert_ne!(got, POISON, "exec peer worker panicked; aborting episode");
+            if got == sp {
+                break b;
+            }
+            pending.insert(got, b);
+        };
+        let stall_secs = wait.secs();
+
+        let vrange = ctx.plan.subpart_range(sp);
+        let block = ctx.pool.block(sp, g);
+        // minibatches + per-group shared negatives, drawn in this
+        // worker's schedule order — the exact helper the serial reference
+        // uses, so the two paths cannot drift apart
+        let (mbs, vns) = assemble_block(
+            block,
+            ctx.batch,
+            vrange.start,
+            crange.start,
+            ctx.negatives,
+            &samplers[g],
+            rng,
+        );
+        let t = Timer::start();
+        let loss = backend.step_block(
+            &mut vbuf,
+            shard,
+            ctx.dim,
+            &mbs,
+            &vns,
+            ctx.negatives,
+            ctx.lr,
+        ) as f64;
+        let compute_secs = t.secs();
+
+        let bytes = PhaseBytes {
+            sample_bytes: block.len() as u64 * 8,
+            subpart_bytes: (vrange.len() * ctx.dim * 4) as u64,
+            train_samples: block.len() as u64,
+            crosses_node: ctx.crosses_node,
+        };
+        match seat.dest[step_idx] {
+            Dest::Gpu(to) => peers[to].send((sp, vbuf)).expect("sub-part hand-off"),
+            Dest::Host => finals.push((sp, vbuf)),
+        }
+        traces.push(StepTrace {
+            step: step_idx,
+            gpu: g,
+            subpart: sp,
+            loss,
+            samples: block.len() as u64,
+            bytes,
+            stall_secs,
+            compute_secs,
+        });
+    }
+    WorkerOut { traces, finals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::sgns::NativeBackend;
+    use crate::gen;
+
+    fn fixture(
+        nodes: usize,
+        gpus_per_node: usize,
+        k: usize,
+        n: usize,
+        m: usize,
+        seed: u64,
+    ) -> (HierarchyPlan, EmbeddingStore, Vec<u32>, Vec<crate::graph::Edge>) {
+        let mut rng = Rng::new(seed);
+        let graph = gen::to_graph(n, gen::erdos_renyi(n, m, &mut rng));
+        let plan = HierarchyPlan::new(nodes, gpus_per_node, k, n);
+        let store = EmbeddingStore::init(n, 8, &mut Rng::new(seed ^ 0xE));
+        (plan, store, graph.degrees(), graph.edges().collect())
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn gpu_state(
+        plan: &HierarchyPlan,
+        store: &EmbeddingStore,
+        degrees: &[u32],
+        seed: u64,
+    ) -> (Vec<Vec<f32>>, Vec<Box<dyn StepBackend>>, Vec<NegativeSampler>, Vec<Rng>) {
+        let gpus = plan.total_gpus();
+        let contexts: Vec<Vec<f32>> =
+            (0..gpus).map(|g| store.checkout_context(plan.context_range(g))).collect();
+        let backends: Vec<Box<dyn StepBackend>> = (0..gpus)
+            .map(|_| Box::new(NativeBackend::new()) as Box<dyn StepBackend>)
+            .collect();
+        let samplers: Vec<NegativeSampler> =
+            (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
+        let mut root = Rng::new(seed);
+        let rngs: Vec<Rng> = (0..gpus).map(|g| root.fork(g as u64)).collect();
+        (contexts, backends, samplers, rngs)
+    }
+
+    fn run(
+        plan: &HierarchyPlan,
+        store: &mut EmbeddingStore,
+        degrees: &[u32],
+        samples: &[crate::graph::Edge],
+        seed: u64,
+    ) -> (ExecRun, Vec<Vec<f32>>) {
+        let pool = EpisodePool::build(plan, samples);
+        let (mut contexts, mut backends, samplers, mut rngs) =
+            gpu_state(plan, store, degrees, seed);
+        let ctx = ExecCtx {
+            plan,
+            pool: &pool,
+            batch: 64,
+            negatives: 3,
+            dim: 8,
+            lr: 0.05,
+            crosses_node: plan.nodes > 1,
+        };
+        let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
+        (run, contexts)
+    }
+
+    #[test]
+    fn routing_chains_deliver_every_subpart_once_per_gpu() {
+        let plan = HierarchyPlan::new(2, 2, 2, 64);
+        let r = build_routing(&plan);
+        let gpus = plan.total_gpus();
+        let steps = plan.steps();
+        assert_eq!(r.heads.len(), plan.total_subparts());
+        // every worker trains every step exactly once, in step order
+        for (g, sched) in r.sched.iter().enumerate() {
+            assert_eq!(sched.len(), steps.len());
+            for (i, &(si, sp)) in sched.iter().enumerate() {
+                assert_eq!(si, i);
+                assert_eq!(steps[si].assignment[g], sp);
+            }
+        }
+        // replay the hand-offs: ownership must always match the schedule
+        let mut owner: Vec<usize> = vec![usize::MAX; plan.total_subparts()];
+        for &(sp, g0) in &r.heads {
+            owner[sp] = g0;
+        }
+        for (si, st) in steps.iter().enumerate() {
+            for (g, &sp) in st.assignment.iter().enumerate() {
+                assert_eq!(owner[sp], g, "step {si}: sub-part {sp} not at gpu {g}");
+                match r.dest[g][si] {
+                    Dest::Gpu(next) => owner[sp] = next,
+                    Dest::Host => owner[sp] = usize::MAX,
+                }
+            }
+        }
+        // all chains ended at the host
+        assert!(owner.iter().all(|&o| o == usize::MAX));
+        assert_eq!(gpus, 4);
+    }
+
+    #[test]
+    fn episode_trains_and_measures_overlap() {
+        let (plan, mut store, degrees, samples) = fixture(2, 2, 2, 120, 1500, 1);
+        let before = store.clone();
+        let (run, _) = run(&plan, &mut store, &degrees, &samples, 7);
+        assert_eq!(run.traces.len(), plan.steps_per_epoch() * plan.total_gpus());
+        let total: u64 = run.traces.iter().map(|t| t.samples).sum();
+        assert_eq!(total, samples.len() as u64);
+        assert!(run.traces.iter().map(|t| t.loss).sum::<f64>() > 0.0);
+        // measured overlap efficiency and utilization are positive and sane
+        let eff = run.measure.overlap_efficiency();
+        assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
+        let util = run.measure.utilization();
+        assert!(util > 0.0 && util <= 1.0, "utilization {util}");
+        assert!(run.measure.wall_secs > 0.0);
+        // the model actually moved
+        let delta: f32 = before
+            .vertex
+            .iter()
+            .zip(&store.vertex)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(delta > 0.0, "vertex unchanged");
+    }
+
+    #[test]
+    fn executor_is_deterministic() {
+        let (plan, store0, degrees, samples) = fixture(1, 4, 2, 100, 1200, 2);
+        let mut s1 = store0.clone();
+        let mut s2 = store0.clone();
+        let (r1, c1) = run(&plan, &mut s1, &degrees, &samples, 9);
+        let (r2, c2) = run(&plan, &mut s2, &degrees, &samples, 9);
+        assert_eq!(s1.vertex, s2.vertex);
+        assert_eq!(c1, c2);
+        let l1: Vec<f64> = r1.traces.iter().map(|t| t.loss).collect();
+        let l2: Vec<f64> = r2.traces.iter().map(|t| t.loss).collect();
+        assert_eq!(l1, l2);
+    }
+
+    /// Backend that blows up on its first step — stands in for a runtime
+    /// failure (e.g. a PJRT execute error) inside one worker.
+    struct PanickyBackend;
+
+    impl StepBackend for PanickyBackend {
+        #[allow(clippy::too_many_arguments)]
+        fn step(
+            &mut self,
+            _vertex: &mut [f32],
+            _context: &mut [f32],
+            _dim: usize,
+            _u: &[i32],
+            _vp: &[i32],
+            _vn: &[i32],
+            _negs: usize,
+            _real: usize,
+            _lr: f32,
+        ) -> f32 {
+            panic!("injected backend failure");
+        }
+
+        fn name(&self) -> &'static str {
+            "panicky"
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exec worker panicked")]
+    fn worker_panic_propagates_instead_of_deadlocking() {
+        let (plan, mut store, degrees, samples) = fixture(1, 4, 1, 100, 1200, 6);
+        let pool = EpisodePool::build(&plan, &samples);
+        let (mut contexts, mut backends, samplers, mut rngs) =
+            gpu_state(&plan, &store, &degrees, 6);
+        backends[1] = Box::new(PanickyBackend);
+        let ctx = ExecCtx {
+            plan: &plan,
+            pool: &pool,
+            batch: 64,
+            negatives: 3,
+            dim: 8,
+            lr: 0.05,
+            crosses_node: false,
+        };
+        // must panic (poison broadcast unblocks the other workers), not hang
+        run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
+    }
+
+    #[test]
+    fn measured_durations_feed_the_simulator() {
+        let (plan, mut store, degrees, samples) = fixture(2, 2, 1, 80, 900, 3);
+        let (run, _) = run(&plan, &mut store, &degrees, &samples, 4);
+        let spec = crate::cluster::ClusterSpec::set_a(2, 2);
+        let d = run.measured_durations(&spec, 64, 3, 8);
+        assert!(d.train > 0.0, "measured train phase {d:?}");
+        assert!(d.prefetch_h2d > 0.0);
+        let step = crate::pipeline::simulate_step(&d, crate::pipeline::OverlapConfig::paper());
+        assert!(step > 0.0 && step.is_finite());
+    }
+}

@@ -8,7 +8,8 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 use super::{CsrGraph, Edge};
 

@@ -15,6 +15,12 @@
 //! * **L1** — `python/compile/kernels/sgns.py`: the Pallas shared-negative
 //!   SGNS kernel (MXU-friendly level-3 BLAS formulation).
 //!
+//! The default build is pure Rust with zero external dependencies: the
+//! native SGNS backend plus the `exec` multi-threaded episode executor.
+//! The XLA/PJRT path (L2/L1 execution) is gated behind the `pjrt` cargo
+//! feature and compiles against the in-tree `xla` API stub unless a real
+//! `xla` crate is patched in (see README §Building).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -26,6 +32,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod embed;
 pub mod eval;
+pub mod exec;
 pub mod gen;
 pub mod graph;
 pub mod metrics;
@@ -36,5 +43,8 @@ pub mod sample;
 pub mod util;
 pub mod walk;
 
+/// Crate-wide error type (std-only `anyhow` workalike; see `util::error`).
+pub use util::error::Error;
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = util::error::Result<T>;

@@ -36,16 +36,16 @@ struct Flags {
 }
 
 impl Flags {
-    fn parse(args: &[String]) -> anyhow::Result<Self> {
+    fn parse(args: &[String]) -> tembed::Result<Self> {
         let mut values = Vec::new();
         let mut it = args.iter();
         while let Some(a) = it.next() {
             let key = a
                 .strip_prefix("--")
-                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
+                .ok_or_else(|| tembed::anyhow!("expected --flag, got {a:?}"))?;
             let val = it
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                .ok_or_else(|| tembed::anyhow!("--{key} needs a value"))?;
             values.push((key.to_string(), val.clone()));
         }
         Ok(Flags { values })
@@ -60,7 +60,7 @@ impl Flags {
     }
 }
 
-fn build_config(flags: &Flags) -> anyhow::Result<TrainConfig> {
+fn build_config(flags: &Flags) -> tembed::Result<TrainConfig> {
     let mut cfg = match flags.get("config") {
         Some(path) => TrainConfig::from_file(std::path::Path::new(path))?,
         None => TrainConfig::default(),
@@ -74,20 +74,20 @@ fn build_config(flags: &Flags) -> anyhow::Result<TrainConfig> {
     Ok(cfg)
 }
 
-fn load_dataset(flags: &Flags, seed: u64) -> anyhow::Result<tembed::graph::CsrGraph> {
+fn load_dataset(flags: &Flags, seed: u64) -> tembed::Result<tembed::graph::CsrGraph> {
     if let Some(path) = flags.get("graph") {
         return tembed::graph::io::load_graph(std::path::Path::new(path), true);
     }
     let name = flags.get("dataset").unwrap_or("youtube");
     let spec = datasets::spec(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?} (see `tembed info`)"))?;
+        .ok_or_else(|| tembed::anyhow!("unknown dataset {name:?} (see `tembed info`)"))?;
     Ok(spec.generate(seed))
 }
 
-fn run(args: &[String]) -> anyhow::Result<()> {
+fn run(args: &[String]) -> tembed::Result<()> {
     let (cmd, rest) = args
         .split_first()
-        .ok_or_else(|| anyhow::anyhow!("usage: tembed <train|walk|eval|memory|extrapolate|info> ..."))?;
+        .ok_or_else(|| tembed::anyhow!("usage: tembed <train|walk|eval|memory|extrapolate|info> ..."))?;
     let flags = Flags::parse(rest)?;
     match cmd.as_str() {
         "train" => cmd_train(&flags),
@@ -96,11 +96,11 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "memory" => cmd_memory(),
         "extrapolate" => cmd_extrapolate(),
         "info" => cmd_info(),
-        other => anyhow::bail!("unknown command {other:?}"),
+        other => tembed::bail!("unknown command {other:?}"),
     }
 }
 
-fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     let cfg = build_config(flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
     println!("# effective config\n{}", cfg.render());
@@ -137,7 +137,7 @@ fn cmd_train(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_walk(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_walk(flags: &Flags) -> tembed::Result<()> {
     let cfg = build_config(flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
     let out = PathBuf::from(flags.get("out").unwrap_or("walks"));
@@ -171,7 +171,7 @@ fn cmd_walk(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_eval(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_eval(flags: &Flags) -> tembed::Result<()> {
     let cfg = build_config(flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
     let mut rng = tembed::util::Rng::new(cfg.seed ^ 0xE7A1);
@@ -197,7 +197,7 @@ fn cmd_eval(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_memory() -> anyhow::Result<()> {
+fn cmd_memory() -> tembed::Result<()> {
     use tembed::costmodel::StorageCost;
     let c = StorageCost::paper_table1();
     println!("Table I — memory cost (paper's 1.05B-node / 300B-edge network, d=128):");
@@ -214,7 +214,7 @@ fn cmd_memory() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_extrapolate() -> anyhow::Result<()> {
+fn cmd_extrapolate() -> tembed::Result<()> {
     use tembed::cluster::ClusterSpec;
     use tembed::costmodel::EpochModel;
     use tembed::pipeline::OverlapConfig;
@@ -242,7 +242,7 @@ fn cmd_extrapolate() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> tembed::Result<()> {
     println!("datasets (paper Table II -> simulated scale):");
     println!(
         "{:<15} {:>14} {:>16} {:>10} {:>12}  {}",
@@ -258,7 +258,7 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn open_runtime_if_needed(cfg: &TrainConfig) -> anyhow::Result<Option<tembed::runtime::Runtime>> {
+fn open_runtime_if_needed(cfg: &TrainConfig) -> tembed::Result<Option<tembed::runtime::Runtime>> {
     if cfg.backend == Backend::Pjrt {
         let rt = tembed::runtime::Runtime::open(std::path::Path::new(&cfg.artifacts_dir))?;
         println!("pjrt platform: {}", rt.platform());

@@ -3,7 +3,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::util::error::Context;
 
 /// Kind of compiled computation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,7 +57,7 @@ impl Manifest {
                 other => bail!("manifest line {}: unknown kind {other:?}", i + 1),
             };
             let num = |s: &str| -> crate::Result<usize> {
-                s.parse().map_err(|_| anyhow::anyhow!("manifest line {}: bad number {s:?}", i + 1))
+                s.parse().map_err(|_| crate::anyhow!("manifest line {}: bad number {s:?}", i + 1))
             };
             variants.push(Variant {
                 kind,

@@ -141,6 +141,39 @@ pub fn make_minibatches(
     out
 }
 
+/// Assemble one scheduled step's backend inputs: cut the `(sub-part,
+/// shard)` block into padded minibatches and draw each minibatch's
+/// group-shared negatives from the shard's sampler (one draw of
+/// `groups × negatives` rows per minibatch, in minibatch order).
+///
+/// Both the serial coordinator schedule and the `exec` worker threads
+/// call this, so the executor's bit-parity with the serial reference is
+/// structural — the two paths cannot drift apart in minibatch layout or
+/// negative-stream consumption.
+pub fn assemble_block(
+    block: &[Edge],
+    batch: usize,
+    subpart_lo: usize,
+    shard_lo: usize,
+    negatives: usize,
+    sampler: &NegativeSampler,
+    rng: &mut Rng,
+) -> (Vec<MiniBatch>, Vec<Vec<i32>>) {
+    let mbs = make_minibatches(block, batch, subpart_lo, shard_lo, 0, 0);
+    let vns: Vec<Vec<i32>> = mbs
+        .iter()
+        .map(|mb| {
+            let groups = crate::embed::sgns::groups_for(mb.u_local.len());
+            sampler
+                .sample_local(groups * negatives, rng)
+                .iter()
+                .map(|&x| x as i32)
+                .collect()
+        })
+        .collect();
+    (mbs, vns)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,236 @@
+//! Minimal `anyhow`-style error handling built on `std` only.
+//!
+//! The offline crate set has no `anyhow`, and the default build must
+//! compile with zero external dependencies (see the workspace README), so
+//! this module provides the small slice of the `anyhow` API the repo
+//! actually uses: a type-erased [`Error`] with context frames, the
+//! [`Context`] extension trait for `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros (exported at the crate root).
+//!
+//! Display semantics mirror `anyhow`: `{}` prints only the outermost
+//! message (the most recently attached context), `{:#}` prints the whole
+//! chain separated by `: `, and `{:?}` prints the message plus a
+//! `Caused by:` list.
+//!
+//! NOTE: [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent (the same
+//! trick `anyhow` uses).
+
+use std::fmt;
+
+/// Type-erased error: an innermost message plus outer context frames.
+pub struct Error {
+    /// `frames[0]` is the root cause; later entries are contexts added
+    /// around it (outermost last).
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (consuming builder form).
+    pub fn wrap(mut self, c: impl fmt::Display) -> Self {
+        self.frames.push(c.to_string());
+        self
+    }
+
+    fn outermost(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(frame)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.outermost())?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for frame in self.frames.iter().rev().skip(1) {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The `anyhow` coherence trick: `Error` itself is not `std::error::Error`,
+// so this blanket conversion does not overlap with `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (re-exported as `crate::Result`).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context` workalike for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, turning the error (or `None`) into
+    /// [`Error`] with the context as its outermost frame.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+/// Erase `e` into [`Error`] keeping an existing frame chain intact:
+/// a `crate::Error` passes through by downcast (so nested contexts keep
+/// their root cause in `{:#}`/`{:?}`); anything else contributes its
+/// `Display` rendering as the root frame.
+fn erase<E: fmt::Display + 'static>(e: E) -> Error {
+    let rendered = e.to_string();
+    let boxed: Box<dyn std::any::Any> = Box::new(e);
+    match boxed.downcast::<Error>() {
+        Ok(err) => *err,
+        Err(_) => Error::msg(rendered),
+    }
+}
+
+impl<T, E: fmt::Display + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| erase(e).wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| erase(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e = io_fail().unwrap_err();
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "chain: {full}");
+        assert!(full.len() > "reading config: ".len());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").wrap("mid").wrap("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_converts_none() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn nested_error_chain_survives_context() {
+        // contexting a crate::Error must keep its root cause, not
+        // flatten to the outermost frame (the anyhow behavior)
+        fn inner() -> Result<()> {
+            std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+                .context("reading manifest")?;
+            Ok(())
+        }
+        let e = inner().context("loading runtime").unwrap_err();
+        assert_eq!(e.to_string(), "loading runtime");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("loading runtime: reading manifest: "), "chain: {full}");
+        assert!(full.len() > "loading runtime: reading manifest: ".len(), "root cause lost");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            crate::ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                crate::bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is not allowed");
+        assert_eq!(f(-3).unwrap_err().to_string(), "negative input -3");
+        let e = crate::anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

@@ -1,11 +1,13 @@
 //! Small self-contained substrates the offline environment forces us to
-//! build from scratch: a deterministic PRNG, a scoped thread pool, and a
-//! property-testing mini-framework.
+//! build from scratch: a deterministic PRNG, a scoped thread pool, an
+//! `anyhow`-style error type, and a property-testing mini-framework.
 
+pub mod error;
 pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 
+pub use error::Context;
 pub use pool::{parallel_chunks, parallel_for, parallel_map};
 pub use rng::Rng;
 

@@ -1,0 +1,277 @@
+//! API-compatible **stub** of the `xla` PJRT bindings used by tembed.
+//!
+//! Purpose: the `pjrt` feature's code path (`rust/src/runtime/pjrt.rs`)
+//! must keep compiling on machines with no XLA/PJRT toolchain — CI runs
+//! `cargo check --features pjrt` against this crate so the gated code can
+//! never silently rot. At runtime the stub refuses to construct a client
+//! (`PjRtClient::cpu()` errors), so callers fail fast with a clear
+//! message instead of producing wrong numbers.
+//!
+//! [`Literal`] is implemented for real (bytes + element type + dims) so
+//! the pure host-side helpers and their unit tests work; everything that
+//! would need a device is uninhabited (`enum Void {}`) and therefore
+//! statically unreachable.
+//!
+//! To execute the PJRT path, point the `xla` dependency in
+//! `rust/Cargo.toml` at a real crate in place of this stub (Cargo's
+//! `[patch]` cannot override a path dependency):
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { path = "/opt/xla-rs", optional = true }
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type surfaced by every fallible stub call.
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT unavailable — tembed was built against the in-tree \
+         xla API stub; point the `xla` dependency in rust/Cargo.toml at \
+         a real xla crate to run the PJRT backend"
+    ))
+}
+
+/// Element types of the literals tembed builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Conversion trait tying Rust scalar types to [`ElementType`].
+pub trait NativeType: Copy {
+    const ELEMENT: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// Host-side literal: fully functional (stores bytes + shape).
+pub struct Literal {
+    element: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw little-endian bytes; the byte count must
+    /// match the shape exactly.
+    pub fn create_from_shape_and_untyped_data(
+        element: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * element.byte_size();
+        if bytes.len() != want {
+            return Err(XlaError(format!(
+                "literal shape mismatch: {} bytes for dims {dims:?} (want {want})"
+            )));
+        }
+        Ok(Literal { element, dims: dims.to_vec(), bytes: bytes.to_vec() })
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { element: ElementType::F32, dims: Vec::new(), bytes: v.to_le_bytes().to_vec() }
+    }
+
+    /// Shape of this literal.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Copy the contents out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.element != T::ELEMENT {
+            return Err(XlaError(format!(
+                "element type mismatch: literal is {:?}, requested {:?}",
+                self.element,
+                T::ELEMENT
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Stub literals are never tuples.
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(XlaError("stub literal is not a tuple".to_string()))
+    }
+}
+
+/// Parsed HLO module (text is retained, never compiled by the stub).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact from disk.
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("read {}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// Byte length of the retained HLO text.
+    pub fn text_len(&self) -> usize {
+        self.text.len()
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device handle. Never constructed by the stub (`addressable_devices`
+/// returns an empty list).
+pub struct PjRtDevice {
+    _priv: (),
+}
+
+/// Device buffer. Never constructed by the stub (every upload fails), so
+/// its methods are statically dead — they still return honest errors.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable. Never constructed by the stub (`compile` fails).
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+/// PJRT client. The stub never hands one out: [`PjRtClient::cpu`] errors.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub (no PJRT plugin is linked in).
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        Vec::new()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let data = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+            .unwrap();
+        assert_eq!(l.dims(), &[3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), data.to_vec());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_rejects_shape_mismatch() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn scalar_is_zero_dim() {
+        let s = Literal::scalar(0.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn client_refuses_to_exist() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
