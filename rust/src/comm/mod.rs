@@ -1,6 +1,7 @@
 //! Communication substrate: the interconnect model (`fabric`), socket-aware
-//! intra-node routing (`topology`), and one/two-level ring schedules
-//! (`ring`).
+//! intra-node routing (`topology`), one/two-level ring schedules (`ring`),
+//! and the real message-passing layer the inter-node executor runs on
+//! (`transport`).
 //!
 //! Bandwidth/latency parameters follow the paper's two testbeds (Set A:
 //! V100 + NVLink + 100Gb/s IB; Set B: P40 + PCIe + 40Gb/s Ethernet). The
@@ -11,7 +12,9 @@
 pub mod fabric;
 pub mod ring;
 pub mod topology;
+pub mod transport;
 
 pub use fabric::{FabricModel, LinkClass};
 pub use ring::{two_level_rings, Ring};
 pub use topology::{Route, SocketTopology};
+pub use transport::{DemuxHub, Transport, WireMsg};

@@ -8,10 +8,13 @@
 //! each payload crossing the slow network only `nodes - 1` times.
 
 /// A ring over `members` (arbitrary ids). One rotation step sends each
-/// member's current payload to its successor.
+/// member's current payload to its successor. The successor map is
+/// precomputed at construction so per-hop lookups during schedule
+/// generation are O(1) instead of an O(n) position scan.
 #[derive(Debug, Clone)]
 pub struct Ring {
     pub members: Vec<usize>,
+    succ: std::collections::HashMap<usize, usize>,
 }
 
 /// One hop: `payload_origin` moving `from → to` at rotation step `step`.
@@ -25,7 +28,13 @@ pub struct Hop {
 impl Ring {
     pub fn new(members: Vec<usize>) -> Self {
         assert!(!members.is_empty());
-        Ring { members }
+        let n = members.len();
+        let mut succ = std::collections::HashMap::with_capacity(n);
+        for (i, &m) in members.iter().enumerate() {
+            // first occurrence wins, matching the old linear-scan semantics
+            succ.entry(m).or_insert(members[(i + 1) % n]);
+        }
+        Ring { members, succ }
     }
 
     pub fn len(&self) -> usize {
@@ -36,10 +45,9 @@ impl Ring {
         self.members.is_empty()
     }
 
-    /// Successor of a member in ring order.
+    /// Successor of a member in ring order (O(1) via the precomputed map).
     pub fn next(&self, member: usize) -> usize {
-        let i = self.members.iter().position(|&m| m == member).expect("member in ring");
-        self.members[(i + 1) % self.members.len()]
+        *self.succ.get(&member).expect("member in ring")
     }
 
     /// All hops of a full rotation (`len - 1` steps; after them every
@@ -129,6 +137,21 @@ mod tests {
     #[test]
     fn single_member_ring_has_no_hops() {
         assert!(Ring::new(vec![0]).full_rotation().is_empty());
+    }
+
+    #[test]
+    fn successor_map_matches_linear_scan() {
+        crate::util::quickcheck::forall(50, 7, |g| {
+            let n = g.usize_in(1, 24);
+            // distinct arbitrary ids: spread by a stride + offset
+            let stride = g.usize_in(1, 9);
+            let base = g.usize_in(0, 1000);
+            let members: Vec<usize> = (0..n).map(|i| base + i * stride).collect();
+            let r = Ring::new(members.clone());
+            for (i, &m) in members.iter().enumerate() {
+                assert_eq!(r.next(m), members[(i + 1) % n]);
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,923 @@
+//! Message-passing transport for the inter-node executor (paper §IV-B
+//! made real): length-prefixed manual framing over Unix-domain or TCP
+//! socket pairs, plus an in-process loopback implementation for tests.
+//!
+//! The executor's cross-node hops (`exec::run_episode_ranked`) move
+//! sub-parts through the [`Transport`] trait instead of in-process
+//! channels, so two OS processes can each own one simulated node's
+//! workers and run the node-ring stages for real. Intra-node hops stay on
+//! `std::sync::mpsc` — only the hops the fabric model prices as
+//! `LinkClass::InterNode` cross a socket.
+//!
+//! ## Wire format
+//!
+//! Every frame is `[kind u8][dest u32 LE][tag u64 LE][len u32 LE][payload]`.
+//! `dest` addresses a global GPU id (SUBPART/CONTEXT frames) or carries the
+//! sender's rank (HELLO); `tag` carries a sub-part id (SUBPART/FINAL) or a
+//! digest (PLAN_ACK). Payloads are raw little-endian bytes built with
+//! [`PayloadWriter`]; embedding rows travel as packed `f32` LE. There is
+//! deliberately no serde/bincode — the offline crate set has none, and the
+//! manual framing keeps the format inspectable and versionable.
+//!
+//! ## Topology
+//!
+//! [`connect_mesh`] brings up a full mesh: rank `r` listens on `addrs[r]`,
+//! dials every lower rank (announcing itself with a HELLO frame), and
+//! accepts one connection from every higher rank. The coordinator layers
+//! its driver-election and plan handshake on top (`coordinator::multirank`).
+//!
+//! ## Demultiplexing
+//!
+//! One [`DemuxHub`] per process routes inbound frames to the executor's
+//! per-worker inboxes (SUBPART), the episode finals collector (FINAL), the
+//! driver's measurement fold (MEASURE), and the end-of-training context
+//! gather (CONTEXT). Frames that arrive before their episode installs a
+//! route are parked in a pending queue and flushed on install, so a rank
+//! that finishes an episode barrier early cannot lose messages racing the
+//! next episode's setup. A POISON frame (or a dead peer socket) aborts
+//! every waiting consumer instead of deadlocking it.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::error::Context as _;
+
+/// A sub-part moving between workers: `(subpart id, embedding rows)`.
+/// Same shape the executor's in-process channels carry.
+pub type SubpartMsg = (usize, Vec<f32>);
+
+/// Sentinel sub-part id meaning "a peer aborted — stop waiting". No real
+/// sub-part id can reach `usize::MAX`.
+pub const POISON_SUBPART: usize = usize::MAX;
+
+/// Frame kinds. Unknown kinds are dropped by the demux (forward compat).
+pub const KIND_SUBPART: u8 = 1;
+pub const KIND_POISON: u8 = 2;
+pub const KIND_HELLO: u8 = 3;
+pub const KIND_PLAN: u8 = 4;
+pub const KIND_PLAN_ACK: u8 = 5;
+pub const KIND_FINAL: u8 = 6;
+pub const KIND_MEASURE: u8 = 7;
+pub const KIND_CONTEXT: u8 = 8;
+pub const KIND_SHUTDOWN: u8 = 9;
+
+/// Hard ceiling on a frame payload (1 GiB) — a corrupt length prefix must
+/// fail fast instead of attempting a huge allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
+
+const HEADER_LEN: usize = 1 + 4 + 8 + 4;
+
+/// One framed message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireMsg {
+    pub kind: u8,
+    /// Global GPU id (SUBPART/CONTEXT), sender rank (HELLO), else 0.
+    pub dest: u32,
+    /// Sub-part id (SUBPART/FINAL), digest (PLAN_ACK), else 0.
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+impl WireMsg {
+    /// Header-only frame (no payload).
+    pub fn signal(kind: u8, dest: u32, tag: u64) -> Self {
+        WireMsg { kind, dest, tag, payload: Vec::new() }
+    }
+}
+
+/// Write one frame. The caller decides when to flush.
+pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> crate::Result<()> {
+    crate::ensure!(
+        msg.payload.len() <= MAX_FRAME_PAYLOAD,
+        "frame payload {} exceeds cap {}",
+        msg.payload.len(),
+        MAX_FRAME_PAYLOAD
+    );
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = msg.kind;
+    header[1..5].copy_from_slice(&msg.dest.to_le_bytes());
+    header[5..13].copy_from_slice(&msg.tag.to_le_bytes());
+    header[13..17].copy_from_slice(&(msg.payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(&msg.payload)?;
+    Ok(())
+}
+
+/// Read one frame. Built on `read_exact`, so partial reads (short socket
+/// returns) are retried until the frame is complete — the property tests
+/// drive this through 1-byte-at-a-time readers.
+pub fn read_frame<R: Read>(r: &mut R) -> crate::Result<WireMsg> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("read frame header")?;
+    let kind = header[0];
+    let dest = u32::from_le_bytes([header[1], header[2], header[3], header[4]]);
+    let mut tag8 = [0u8; 8];
+    tag8.copy_from_slice(&header[5..13]);
+    let tag = u64::from_le_bytes(tag8);
+    let len = u32::from_le_bytes([header[13], header[14], header[15], header[16]]) as usize;
+    crate::ensure!(len <= MAX_FRAME_PAYLOAD, "frame length {len} exceeds cap (corrupt stream?)");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    Ok(WireMsg { kind, dest, tag, payload })
+}
+
+/// Pack `f32` rows as little-endian bytes (the sub-part payload codec).
+pub fn encode_f32s(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_f32s`]; bit-exact round trip.
+pub fn decode_f32s(bytes: &[u8]) -> crate::Result<Vec<f32>> {
+    crate::ensure!(bytes.len() % 4 == 0, "f32 payload length {} not a multiple of 4", bytes.len());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Append-only little-endian payload builder (the repo has no serde).
+#[derive(Debug, Default)]
+pub struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed byte slice.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked reader over a payload written with [`PayloadWriter`].
+#[derive(Debug)]
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        crate::ensure!(
+            self.pos + n <= self.buf.len(),
+            "payload truncated: need {n} bytes at offset {} of {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> crate::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self) -> crate::Result<u64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self) -> crate::Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn f64(&mut self) -> crate::Result<f64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn bytes(&mut self) -> crate::Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+}
+
+/// A rank-to-rank address: `uds:/path/to.sock` or `tcp:host:port`
+/// (a bare `host:port` is TCP).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Addr {
+    Tcp(String),
+    #[cfg(unix)]
+    Uds(PathBuf),
+}
+
+impl Addr {
+    pub fn parse(s: &str) -> crate::Result<Addr> {
+        if let Some(path) = s.strip_prefix("uds:") {
+            #[cfg(unix)]
+            return Ok(Addr::Uds(PathBuf::from(path)));
+            #[cfg(not(unix))]
+            crate::bail!("uds addresses are unix-only: {s:?}");
+        }
+        let hostport = s.strip_prefix("tcp:").unwrap_or(s);
+        crate::ensure!(hostport.contains(':'), "address {s:?} is not uds:PATH or tcp:HOST:PORT");
+        Ok(Addr::Tcp(hostport.to_string()))
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Tcp(hp) => write!(f, "tcp:{hp}"),
+            #[cfg(unix)]
+            Addr::Uds(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+/// A connected byte stream (TCP or Unix-domain), clonable into separate
+/// reader/writer halves.
+#[derive(Debug)]
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.try_clone().map(Stream::Uds),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &Addr) -> crate::Result<Listener> {
+        match addr {
+            Addr::Tcp(hp) => Ok(Listener::Tcp(
+                TcpListener::bind(hp).with_context(|| format!("bind {addr}"))?,
+            )),
+            #[cfg(unix)]
+            Addr::Uds(path) => {
+                // a stale socket file from a previous run blocks bind
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Uds(
+                    UnixListener::bind(path).with_context(|| format!("bind {addr}"))?,
+                ))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.accept().map(|(s, _)| Stream::Uds(s)),
+        }
+    }
+}
+
+fn dial(addr: &Addr, deadline: Instant) -> crate::Result<Stream> {
+    loop {
+        let attempt = match addr {
+            Addr::Tcp(hp) => TcpStream::connect(hp).map(Stream::Tcp),
+            #[cfg(unix)]
+            Addr::Uds(path) => UnixStream::connect(path).map(Stream::Uds),
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(crate::anyhow!("dial {addr} timed out: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// A bidirectional rank-to-rank message link. Send is callable from many
+/// threads (frames are serialized under a writer lock); recv is intended
+/// for a single reader (the [`DemuxHub`] thread or a handshake).
+pub trait Transport: Send + Sync {
+    fn peer_rank(&self) -> usize;
+    fn send(&self, msg: &WireMsg) -> crate::Result<()>;
+    fn recv(&self) -> crate::Result<WireMsg>;
+
+    /// Bound (or unbound) blocking reads. Sockets start with a handshake
+    /// timeout so a stuck bring-up fails instead of wedging; the demux
+    /// reader clears it once steady-state routing takes over, because
+    /// healthy links are legitimately idle for long stretches (walk
+    /// regeneration, slow ranks) and a dead peer surfaces as EOF anyway.
+    fn set_read_timeout(&self, _d: Option<std::time::Duration>) {}
+}
+
+/// Framed transport over a connected socket (TCP or Unix-domain).
+pub struct SocketTransport {
+    peer: std::sync::atomic::AtomicUsize,
+    writer: Mutex<BufWriter<Stream>>,
+    reader: Mutex<BufReader<Stream>>,
+}
+
+impl SocketTransport {
+    fn from_stream(stream: Stream, peer: usize) -> crate::Result<Self> {
+        // a generous read timeout bounds the synchronous bring-up reads
+        // (HELLO/PLAN/ACK), so a stuck handshake fails instead of wedging
+        // CI forever; DemuxHub::spawn_reader lifts it for steady state
+        let timeout = std::env::var("TEMBED_NET_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(300);
+        stream.set_read_timeout(Some(Duration::from_secs(timeout.max(1))))?;
+        let rd = stream.try_clone().context("clone stream for reader half")?;
+        Ok(SocketTransport {
+            peer: std::sync::atomic::AtomicUsize::new(peer),
+            writer: Mutex::new(BufWriter::new(stream)),
+            reader: Mutex::new(BufReader::new(rd)),
+        })
+    }
+
+    fn set_peer(&self, rank: usize) {
+        self.peer.store(rank, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+impl Transport for SocketTransport {
+    fn peer_rank(&self) -> usize {
+        self.peer.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn send(&self, msg: &WireMsg) -> crate::Result<()> {
+        let mut w = self.writer.lock().expect("transport writer lock");
+        write_frame(&mut *w, msg)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn recv(&self) -> crate::Result<WireMsg> {
+        let mut r = self.reader.lock().expect("transport reader lock");
+        read_frame(&mut *r)
+    }
+
+    fn set_read_timeout(&self, d: Option<std::time::Duration>) {
+        let r = self.reader.lock().expect("transport reader lock");
+        let _ = r.get_ref().set_read_timeout(d);
+    }
+}
+
+/// In-process transport: a pair of mpsc channels wearing the same trait,
+/// for tests and single-host wiring without sockets.
+pub struct LoopbackTransport {
+    peer: usize,
+    tx: Mutex<Sender<WireMsg>>,
+    rx: Mutex<Receiver<WireMsg>>,
+}
+
+/// Two connected loopback endpoints: the first talks to `rank_b`, the
+/// second to `rank_a`.
+pub fn loopback_pair(rank_a: usize, rank_b: usize) -> (LoopbackTransport, LoopbackTransport) {
+    let (ab_tx, ab_rx) = channel();
+    let (ba_tx, ba_rx) = channel();
+    (
+        LoopbackTransport { peer: rank_b, tx: Mutex::new(ab_tx), rx: Mutex::new(ba_rx) },
+        LoopbackTransport { peer: rank_a, tx: Mutex::new(ba_tx), rx: Mutex::new(ab_rx) },
+    )
+}
+
+impl Transport for LoopbackTransport {
+    fn peer_rank(&self) -> usize {
+        self.peer
+    }
+
+    fn send(&self, msg: &WireMsg) -> crate::Result<()> {
+        self.tx
+            .lock()
+            .expect("loopback tx lock")
+            .send(msg.clone())
+            .map_err(|_| crate::anyhow!("loopback peer {} closed", self.peer))
+    }
+
+    fn recv(&self) -> crate::Result<WireMsg> {
+        self.rx
+            .lock()
+            .expect("loopback rx lock")
+            .recv()
+            .map_err(|_| crate::anyhow!("loopback peer {} closed", self.peer))
+    }
+}
+
+/// Bring up the full rank mesh: rank `r` listens on `addrs[r]`, dials every
+/// lower rank (sending HELLO with its own rank), and accepts one HELLO from
+/// every higher rank. Returns rank-indexed transports (`None` at `rank`).
+pub fn connect_mesh(
+    rank: usize,
+    addrs: &[Addr],
+    timeout: Duration,
+) -> crate::Result<Vec<Option<Arc<dyn Transport>>>> {
+    let world = addrs.len();
+    crate::ensure!(world >= 2, "mesh needs at least 2 ranks, got {world}");
+    crate::ensure!(rank < world, "rank {rank} out of range for {world} addresses");
+    let deadline = Instant::now() + timeout;
+    let listener = Listener::bind(&addrs[rank])?;
+    let mut peers: Vec<Option<Arc<dyn Transport>>> = (0..world).map(|_| None).collect();
+    for (r, addr) in addrs.iter().enumerate().take(rank) {
+        let stream = dial(addr, deadline)?;
+        let t = SocketTransport::from_stream(stream, r)?;
+        t.send(&WireMsg::signal(KIND_HELLO, rank as u32, 0))
+            .with_context(|| format!("hello to rank {r}"))?;
+        peers[r] = Some(Arc::new(t));
+    }
+    listener.set_nonblocking(true)?;
+    for _ in rank + 1..world {
+        let stream = loop {
+            match listener.accept() {
+                Ok(s) => break s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    crate::ensure!(
+                        Instant::now() < deadline,
+                        "rank {rank}: timed out waiting for higher ranks to connect"
+                    );
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(crate::anyhow!("accept on {}: {e}", addrs[rank])),
+            }
+        };
+        stream.set_nonblocking(false)?;
+        let t = SocketTransport::from_stream(stream, usize::MAX)?;
+        let hello = t.recv().context("read peer hello")?;
+        crate::ensure!(hello.kind == KIND_HELLO, "expected HELLO, got kind {}", hello.kind);
+        let peer = hello.dest as usize;
+        crate::ensure!(
+            peer > rank && peer < world,
+            "unexpected hello from rank {peer} (I am {rank} of {world})"
+        );
+        crate::ensure!(peers[peer].is_none(), "duplicate connection from rank {peer}");
+        t.set_peer(peer);
+        peers[peer] = Some(Arc::new(t));
+    }
+    Ok(peers)
+}
+
+/// Routing state behind the [`DemuxHub`].
+#[derive(Default)]
+struct Routes {
+    /// Per-worker episode inboxes, keyed by global GPU id.
+    subpart: HashMap<u32, Sender<SubpartMsg>>,
+    finals: Option<Sender<SubpartMsg>>,
+    measures: Option<Sender<Vec<u8>>>,
+    contexts: Option<Sender<SubpartMsg>>,
+    /// Frames that arrived before their route was installed (episode
+    /// setup races); flushed on every install.
+    pending: Vec<WireMsg>,
+    /// Sticky abort: once a POISON frame (or peer death) is seen, every
+    /// newly installed route is poisoned immediately.
+    poisoned: bool,
+    /// Set when a SHUTDOWN frame arrives (the driver releasing workers).
+    shutdown: bool,
+}
+
+/// Routes inbound frames from every peer's reader thread to the executor's
+/// consumers. One hub per process, shared across episodes.
+#[derive(Clone, Default)]
+pub struct DemuxHub {
+    routes: Arc<Mutex<Routes>>,
+}
+
+impl DemuxHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Spawn the blocking reader loop for one peer transport. The thread
+    /// exits on SHUTDOWN or when the peer closes; a read error aborts all
+    /// local consumers (poison) so nobody deadlocks on a dead peer.
+    pub fn spawn_reader(&self, t: Arc<dyn Transport>) -> std::thread::JoinHandle<()> {
+        let hub = self.clone();
+        // steady-state links may idle far longer than the handshake
+        // timeout; a dead peer is an EOF, so unbounded reads are safe here
+        t.set_read_timeout(None);
+        std::thread::spawn(move || loop {
+            match t.recv() {
+                Ok(msg) if msg.kind == KIND_SHUTDOWN => {
+                    hub.mark_shutdown();
+                    break;
+                }
+                Ok(msg) => hub.dispatch(msg),
+                Err(_) => {
+                    hub.dispatch(WireMsg::signal(KIND_POISON, 0, 0));
+                    break;
+                }
+            }
+        })
+    }
+
+    /// Route one inbound frame (also the loopback tests' entry point).
+    pub fn dispatch(&self, msg: WireMsg) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        Self::dispatch_locked(&mut r, msg);
+    }
+
+    fn dispatch_locked(r: &mut Routes, msg: WireMsg) {
+        match msg.kind {
+            KIND_SUBPART => {
+                let Some(tx) = r.subpart.get(&msg.dest) else {
+                    r.pending.push(msg);
+                    return;
+                };
+                let rows = match decode_f32s(&msg.payload) {
+                    Ok(rows) => rows,
+                    Err(_) => {
+                        Self::poison_locked(r);
+                        return;
+                    }
+                };
+                if let Err(back) = tx.send((msg.tag as usize, rows)) {
+                    // stale route from a finished episode: park the frame
+                    // for the next episode's install
+                    r.subpart.remove(&msg.dest);
+                    let (sp, rows) = back.0;
+                    r.pending.push(WireMsg {
+                        kind: KIND_SUBPART,
+                        dest: msg.dest,
+                        tag: sp as u64,
+                        payload: encode_f32s(&rows),
+                    });
+                }
+            }
+            KIND_POISON => Self::poison_locked(r),
+            KIND_FINAL => match (&r.finals, decode_f32s(&msg.payload)) {
+                (Some(tx), Ok(rows)) => {
+                    let _ = tx.send((msg.tag as usize, rows));
+                }
+                (None, _) => r.pending.push(msg),
+                (_, Err(_)) => Self::poison_locked(r),
+            },
+            KIND_MEASURE => match &r.measures {
+                Some(tx) => {
+                    let _ = tx.send(msg.payload);
+                }
+                None => r.pending.push(msg),
+            },
+            KIND_CONTEXT => match (&r.contexts, decode_f32s(&msg.payload)) {
+                (Some(tx), Ok(rows)) => {
+                    let _ = tx.send((msg.dest as usize, rows));
+                }
+                (None, _) => r.pending.push(msg),
+                (_, Err(_)) => Self::poison_locked(r),
+            },
+            _ => {} // unknown kind: drop
+        }
+    }
+
+    /// Abort every consumer: sentinel on each channel + sticky flag.
+    fn poison_locked(r: &mut Routes) {
+        r.poisoned = true;
+        for tx in r.subpart.values() {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+        if let Some(tx) = &r.finals {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+        if let Some(tx) = &r.measures {
+            let _ = tx.send(Vec::new());
+        }
+        if let Some(tx) = &r.contexts {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+    }
+
+    fn drain_pending(r: &mut Routes) {
+        let pending = std::mem::take(&mut r.pending);
+        for msg in pending {
+            Self::dispatch_locked(r, msg);
+        }
+    }
+
+    /// Install a worker inbox for one global GPU id, flushing any frames
+    /// that raced ahead of episode setup.
+    pub fn install_subpart(&self, gpu: u32, tx: Sender<SubpartMsg>) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        if r.poisoned {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+        r.subpart.insert(gpu, tx);
+        Self::drain_pending(&mut r);
+    }
+
+    pub fn install_finals(&self, tx: Sender<SubpartMsg>) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        if r.poisoned {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+        r.finals = Some(tx);
+        Self::drain_pending(&mut r);
+    }
+
+    pub fn install_measures(&self, tx: Sender<Vec<u8>>) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        if r.poisoned {
+            let _ = tx.send(Vec::new());
+        }
+        r.measures = Some(tx);
+        Self::drain_pending(&mut r);
+    }
+
+    pub fn install_contexts(&self, tx: Sender<SubpartMsg>) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        if r.poisoned {
+            let _ = tx.send((POISON_SUBPART, Vec::new()));
+        }
+        r.contexts = Some(tx);
+        Self::drain_pending(&mut r);
+    }
+
+    /// Tear down one episode's routes (the cross-episode channels —
+    /// contexts — survive; parked frames survive too).
+    pub fn clear_episode_routes(&self) {
+        let mut r = self.routes.lock().expect("demux routes lock");
+        r.subpart.clear();
+        r.finals = None;
+        r.measures = None;
+    }
+
+    /// Whether a peer has aborted (sticky).
+    pub fn is_poisoned(&self) -> bool {
+        self.routes.lock().expect("demux routes lock").poisoned
+    }
+
+    fn mark_shutdown(&self) {
+        self.routes.lock().expect("demux routes lock").shutdown = true;
+    }
+
+    /// Block (polling) until a SHUTDOWN frame arrives, a peer aborts, or
+    /// `timeout` elapses — the worker's end-of-run linger, so its socket
+    /// does not EOF (and poison the driver) while other ranks' final
+    /// frames are still in flight.
+    pub fn wait_shutdown(&self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let r = self.routes.lock().expect("demux routes lock");
+                if r.shutdown || r.poisoned {
+                    return;
+                }
+            }
+            if Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(kind: u8, dest: u32, tag: u64, payload: Vec<u8>) -> WireMsg {
+        WireMsg { kind, dest, tag, payload }
+    }
+
+    #[test]
+    fn frame_round_trips_through_a_buffer() {
+        let m = msg(KIND_SUBPART, 3, 17, encode_f32s(&[1.5, -2.25, 0.0]));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &m).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(decode_f32s(&back.payload).unwrap(), vec![1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg(KIND_PLAN, 0, 0, vec![7; 32])).unwrap();
+        // corrupt the length field to a huge value
+        buf[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn payload_writer_reader_round_trip() {
+        let mut w = PayloadWriter::new();
+        w.put_u8(9);
+        w.put_u32(70_000);
+        w.put_u64(1 << 40);
+        w.put_f32(-1.25);
+        w.put_f64(std::f64::consts::PI);
+        w.put_bytes(b"hello");
+        let buf = w.finish();
+        let mut r = PayloadReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 9);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -1.25);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.bytes().unwrap(), b"hello");
+        assert!(r.is_empty());
+        assert!(r.u8().is_err(), "reads past the end error");
+    }
+
+    #[test]
+    fn addr_parse_variants() {
+        assert_eq!(Addr::parse("tcp:127.0.0.1:9000").unwrap(), Addr::Tcp("127.0.0.1:9000".into()));
+        assert_eq!(Addr::parse("127.0.0.1:9000").unwrap(), Addr::Tcp("127.0.0.1:9000".into()));
+        assert!(Addr::parse("not-an-address").is_err());
+        #[cfg(unix)]
+        assert_eq!(Addr::parse("uds:/tmp/x.sock").unwrap(), Addr::Uds("/tmp/x.sock".into()));
+    }
+
+    #[test]
+    fn loopback_pair_delivers_both_ways() {
+        let (a, b) = loopback_pair(0, 1);
+        assert_eq!(a.peer_rank(), 1);
+        assert_eq!(b.peer_rank(), 0);
+        a.send(&msg(KIND_FINAL, 0, 5, encode_f32s(&[0.5]))).unwrap();
+        let got = b.recv().unwrap();
+        assert_eq!(got.tag, 5);
+        b.send(&WireMsg::signal(KIND_SHUTDOWN, 0, 0)).unwrap();
+        assert_eq!(a.recv().unwrap().kind, KIND_SHUTDOWN);
+    }
+
+    #[test]
+    fn demux_parks_early_frames_and_flushes_on_install() {
+        let hub = DemuxHub::new();
+        hub.dispatch(msg(KIND_SUBPART, 2, 11, encode_f32s(&[1.0, 2.0])));
+        let (tx, rx) = channel();
+        hub.install_subpart(2, tx);
+        let (sp, rows) = rx.recv().unwrap();
+        assert_eq!(sp, 11);
+        assert_eq!(rows, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn demux_requeues_frames_sent_to_a_finished_episode() {
+        let hub = DemuxHub::new();
+        let (tx, rx) = channel();
+        hub.install_subpart(4, tx);
+        drop(rx); // episode over: receiver gone
+        hub.dispatch(msg(KIND_SUBPART, 4, 9, encode_f32s(&[3.0])));
+        // next episode installs a live inbox and gets the parked frame
+        let (tx2, rx2) = channel();
+        hub.install_subpart(4, tx2);
+        let (sp, rows) = rx2.recv().unwrap();
+        assert_eq!(sp, 9);
+        assert_eq!(rows, vec![3.0]);
+    }
+
+    #[test]
+    fn poison_reaches_every_consumer_and_sticks() {
+        let hub = DemuxHub::new();
+        let (stx, srx) = channel();
+        let (ftx, frx) = channel();
+        hub.install_subpart(0, stx);
+        hub.install_finals(ftx);
+        hub.dispatch(WireMsg::signal(KIND_POISON, 0, 0));
+        assert_eq!(srx.recv().unwrap().0, POISON_SUBPART);
+        assert_eq!(frx.recv().unwrap().0, POISON_SUBPART);
+        assert!(hub.is_poisoned());
+        // routes installed after the abort are poisoned immediately
+        let (ltx, lrx) = channel();
+        hub.install_subpart(7, ltx);
+        assert_eq!(lrx.recv().unwrap().0, POISON_SUBPART);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_mesh_two_ranks_exchanges_frames() {
+        let dir = std::env::temp_dir().join(format!("tembed_mesh_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let addrs = vec![
+            Addr::parse(&format!("uds:{}", dir.join("r0.sock").display())).unwrap(),
+            Addr::parse(&format!("uds:{}", dir.join("r1.sock").display())).unwrap(),
+        ];
+        let addrs2 = addrs.clone();
+        let peer_thread = std::thread::spawn(move || {
+            let peers = connect_mesh(1, &addrs2, Duration::from_secs(20)).unwrap();
+            let t0 = peers[0].as_ref().unwrap();
+            assert_eq!(t0.peer_rank(), 0);
+            let got = t0.recv().unwrap();
+            assert_eq!(got.kind, KIND_SUBPART);
+            assert_eq!(decode_f32s(&got.payload).unwrap(), vec![4.0, 5.0]);
+            t0.send(&WireMsg::signal(KIND_PLAN_ACK, 0, got.tag)).unwrap();
+        });
+        let peers = connect_mesh(0, &addrs, Duration::from_secs(20)).unwrap();
+        let t1 = peers[1].as_ref().unwrap();
+        assert_eq!(t1.peer_rank(), 1);
+        t1.send(&msg(KIND_SUBPART, 2, 42, encode_f32s(&[4.0, 5.0]))).unwrap();
+        let ack = t1.recv().unwrap();
+        assert_eq!(ack.kind, KIND_PLAN_ACK);
+        assert_eq!(ack.tag, 42);
+        peer_thread.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -41,6 +41,13 @@ pub struct TrainConfig {
     pub gpus_per_node: usize,
     /// "set-a" (V100) or "set-b" (P40)
     pub hardware: String,
+    /// This process's rank in a multi-process cluster (0 = driver). Only
+    /// meaningful when `peers` is non-empty; one rank per simulated node.
+    pub rank: usize,
+    /// Comma-separated rank addresses (`uds:/path.sock` or
+    /// `tcp:host:port`), rank `r` listening on entry `r`. Empty = run the
+    /// whole simulated cluster in this process.
+    pub peers: String,
     // model
     pub dim: usize,
     pub negatives: usize,
@@ -79,6 +86,8 @@ impl Default for TrainConfig {
             nodes: 1,
             gpus_per_node: 8,
             hardware: "set-a".into(),
+            rank: 0,
+            peers: String::new(),
             dim: 32,
             negatives: 5,
             batch: 1024,
@@ -115,6 +124,17 @@ impl TrainConfig {
         OverlapConfig { pipeline: self.pipeline, subparts: self.subparts }
     }
 
+    /// The `cluster.peers` address list, split and trimmed (empty when
+    /// this process simulates the whole cluster alone).
+    pub fn peer_list(&self) -> Vec<String> {
+        self.peers
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
     /// Load from a TOML-subset file (sections: [cluster] [model] [schedule]
     /// [walk] [misc]; unknown keys are an error to catch typos).
     pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
@@ -141,6 +161,11 @@ impl TrainConfig {
             "cluster.gpus_per_node" => self.gpus_per_node = as_usize()?,
             "cluster.hardware" => match value {
                 Str(s) => self.hardware = s.clone(),
+                _ => crate::bail!("{path}: expected string"),
+            },
+            "cluster.rank" => self.rank = as_usize()?,
+            "cluster.peers" => match value {
+                Str(s) => self.peers = s.clone(),
                 _ => crate::bail!("{path}: expected string"),
             },
             "model.dim" => self.dim = as_usize()?,
@@ -201,12 +226,12 @@ impl TrainConfig {
     /// Render the effective config (logged at startup for reproducibility).
     pub fn render(&self) -> String {
         format!(
-            "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\n\n\
+            "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\nrank = {}\npeers = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
              [schedule]\nsubparts = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
-            self.nodes, self.gpus_per_node, self.hardware,
+            self.nodes, self.gpus_per_node, self.hardware, self.rank, self.peers,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
             self.subparts, self.episode_size, self.epochs, self.pipeline, self.socket_aware,
             self.executor,
@@ -248,6 +273,17 @@ mod tests {
         assert!(c.executor);
         c.apply_cli("schedule.executor=false").unwrap();
         assert!(!c.executor);
+    }
+
+    #[test]
+    fn cluster_rank_and_peers_parse() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.rank, 0);
+        assert!(c.peer_list().is_empty());
+        c.apply_cli("cluster.rank=1").unwrap();
+        c.apply_cli(r#"cluster.peers="uds:/tmp/r0.sock, tcp:10.0.0.2:7070""#).unwrap();
+        assert_eq!(c.rank, 1);
+        assert_eq!(c.peer_list(), vec!["uds:/tmp/r0.sock", "tcp:10.0.0.2:7070"]);
     }
 
     #[test]

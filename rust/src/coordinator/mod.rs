@@ -20,6 +20,9 @@
 //! work overlapped against training (the paper's decoupled design).
 
 pub mod driver;
+pub mod multirank;
+
+use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
 use crate::comm::topology::Route;
@@ -51,6 +54,10 @@ pub struct Trainer {
     last_exec: Option<PhaseDurations>,
     /// Measured overlap efficiency of the most recent executor episode.
     last_overlap: Option<f64>,
+    /// Multi-process cluster membership: set, this rank runs only its own
+    /// node's workers and episodes hop across the transport (`exec`
+    /// ranked path). None = the whole simulated cluster in this process.
+    cluster_handle: Option<Arc<multirank::ClusterHandle>>,
 }
 
 /// Per-GPU outcome of one scheduled step.
@@ -111,7 +118,25 @@ impl Trainer {
             metrics: Metrics::new(),
             last_exec: None,
             last_overlap: None,
+            cluster_handle: None,
         })
+    }
+
+    /// Join a multi-process cluster (see `coordinator::multirank`): every
+    /// episode then runs through `exec::run_episode_ranked`, with this
+    /// rank owning the workers of node `handle.rank` and cross-node hops
+    /// travelling over the transport.
+    pub fn attach_cluster(&mut self, handle: Arc<multirank::ClusterHandle>) -> crate::Result<()> {
+        crate::ensure!(self.cfg.executor, "the inter-node transport requires schedule.executor");
+        crate::ensure!(
+            handle.world == self.plan.nodes,
+            "cluster has {} ranks but the plan simulates {} nodes (one rank per node)",
+            handle.world,
+            self.plan.nodes
+        );
+        crate::ensure!(handle.rank < handle.world, "rank out of range");
+        self.cluster_handle = Some(handle);
+        Ok(())
     }
 
     /// Measured per-phase durations of the most recent executor episode —
@@ -241,13 +266,15 @@ impl Trainer {
             lr,
             crosses_node: self.plan.nodes > 1,
         };
-        let run = crate::exec::run_episode(
+        let view = self.cluster_handle.as_deref().map(|h| h.view());
+        let run = crate::exec::run_episode_ranked(
             &ctx,
             &mut self.store,
             &mut self.contexts,
             &mut self.backends,
             &self.samplers,
             &mut self.rngs,
+            view.as_ref(),
         );
         let steps = self.plan.steps();
         let mut sim = 0.0;
@@ -270,6 +297,12 @@ impl Trainer {
         self.metrics.add_secs("exec_wall", run.measure.wall_secs);
         self.metrics.add_secs("exec_compute", run.measure.compute_secs);
         self.metrics.add_secs("exec_stall", run.measure.stall_secs);
+        if run.measure.inter_node_secs > 0.0 {
+            // genuine network hops (multi-process runs only)
+            self.metrics.add_secs("exec_inter_node", run.measure.inter_node_secs);
+            let remote_hops = run.traces.iter().filter(|t| t.hop_secs > 0.0).count();
+            self.metrics.add("exec_remote_hops", remote_hops as u64);
+        }
         self.metrics.add("exec_util_pct", (run.measure.utilization() * 100.0).round() as u64);
         self.last_overlap = Some(run.measure.overlap_efficiency());
         self.last_exec = Some(run.measured_durations(

@@ -1,0 +1,500 @@
+//! Multi-rank driver/worker glue: the coordinator side of the inter-node
+//! executor (paper §IV-B running across OS processes).
+//!
+//! One rank per simulated node, rank 0 elected driver. Bring-up:
+//!
+//! 1. [`transport::connect_mesh`] wires the full rank mesh from the
+//!    `cluster.peers` address list (rank `r` listens on entry `r`).
+//! 2. The driver broadcasts a [`PlanMsg`] — the `HierarchyPlan` parameters
+//!    plus every config field that shapes the schedule, the sample stream,
+//!    or the RNG streams — and each worker **adopts** those values, then
+//!    answers with a PLAN_ACK carrying its graph digest. A digest mismatch
+//!    (different graph on disk, different generator seed) fails the run at
+//!    handshake time instead of as silent divergence.
+//! 3. Every rank runs the same `Driver` epoch loop; episodes synchronize
+//!    through the executor's finals barrier (`exec::run_episode_ranked`),
+//!    so no extra epoch-level control messages are needed.
+//! 4. After the last epoch each worker ships its pinned context shards to
+//!    the driver ([`ClusterHandle::send_context_shards`]), which folds them
+//!    into its store ([`ClusterHandle::collect_remote_state`]) so `--save`
+//!    and `--export` see the full trained model; vertex rows are already
+//!    replicated by the per-episode finals broadcast.
+
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::transport::{
+    self, Addr, DemuxHub, PayloadReader, PayloadWriter, Transport, WireMsg, KIND_PLAN,
+    KIND_PLAN_ACK, KIND_SHUTDOWN, POISON_SUBPART,
+};
+use crate::config::TrainConfig;
+use crate::embed::EmbeddingStore;
+use crate::exec::ClusterView;
+use crate::graph::CsrGraph;
+use crate::partition::HierarchyPlan;
+use crate::util::error::Context as _;
+
+use super::driver::Driver;
+use super::Trainer;
+
+/// Default handshake/bring-up timeout (dial retries + accept waits).
+pub const MESH_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A connected multi-rank cluster: the mesh transports plus the demux hub
+/// routing this process's inbound frames.
+pub struct ClusterHandle {
+    pub rank: usize,
+    pub world: usize,
+    peers: Vec<Option<Arc<dyn Transport>>>,
+    pub hub: DemuxHub,
+}
+
+impl ClusterHandle {
+    pub fn is_driver(&self) -> bool {
+        self.rank == 0
+    }
+
+    fn peer(&self, rank: usize) -> &Arc<dyn Transport> {
+        self.peers[rank].as_ref().expect("peer transport present")
+    }
+
+    /// The executor-facing view (borrowed; one per episode call).
+    pub fn view(&self) -> ClusterView<'_> {
+        ClusterView { rank: self.rank, world: self.world, peers: &self.peers, hub: &self.hub }
+    }
+
+    /// Global GPU ids owned by one rank (one rank per simulated node).
+    pub fn local_gpus(&self, plan: &HierarchyPlan) -> std::ops::Range<usize> {
+        self.rank * plan.gpus_per_node..(self.rank + 1) * plan.gpus_per_node
+    }
+
+    /// Spawn the demux reader threads — call once, after the handshake
+    /// (the handshake reads the transports directly).
+    pub fn start_readers(&self) {
+        for p in self.peers.iter().flatten() {
+            self.hub.spawn_reader(p.clone());
+        }
+    }
+
+    /// Worker → driver: acknowledge the adopted plan with the local graph
+    /// digest.
+    pub fn ack_plan(&self, digest: u64) -> crate::Result<()> {
+        self.peer(0)
+            .send(&WireMsg::signal(KIND_PLAN_ACK, self.rank as u32, digest))
+            .context("send plan ack")
+    }
+
+    /// Worker → driver: ship the locally trained context shards at the end
+    /// of training.
+    pub fn send_context_shards(&self, plan: &HierarchyPlan, trainer: &Trainer) -> crate::Result<()> {
+        for g in self.local_gpus(plan) {
+            self.peer(0)
+                .send(&WireMsg {
+                    kind: transport::KIND_CONTEXT,
+                    dest: g as u32,
+                    tag: 0,
+                    payload: transport::encode_f32s(trainer.context_shard(g)),
+                })
+                .with_context(|| format!("send context shard of gpu {g}"))?;
+        }
+        Ok(())
+    }
+
+    /// Driver: fold every remote rank's context shards into the trained
+    /// store, then release the workers with a shutdown frame.
+    pub fn collect_remote_state(
+        &self,
+        plan: &HierarchyPlan,
+        store: &mut EmbeddingStore,
+    ) -> crate::Result<()> {
+        crate::ensure!(self.is_driver(), "only rank 0 collects remote state");
+        let (tx, rx) = channel();
+        self.hub.install_contexts(tx);
+        let expect = (self.world - 1) * plan.gpus_per_node;
+        for _ in 0..expect {
+            let (gpu, rows) = rx.recv().map_err(|_| {
+                crate::anyhow!("context-shard channel closed before all shards arrived")
+            })?;
+            crate::ensure!(gpu != POISON_SUBPART, "a worker rank died before shipping its shards");
+            crate::ensure!(gpu < plan.total_gpus(), "context shard for unknown gpu {gpu}");
+            store.checkin_context(plan.context_range(gpu), &rows);
+        }
+        for r in 1..self.world {
+            let _ = self.peer(r).send(&WireMsg::signal(KIND_SHUTDOWN, 0, 0));
+        }
+        Ok(())
+    }
+}
+
+/// The handshake message rank 0 broadcasts after the mesh is up: every
+/// parameter that must agree for the ranks to run the same schedule over
+/// the same sample stream with the same RNG streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanMsg {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub subparts: usize,
+    pub dim: usize,
+    pub negatives: usize,
+    pub batch: usize,
+    pub episode_size: usize,
+    pub epochs: usize,
+    /// Walker thread count — chunk boundaries shape the walk order, so
+    /// ranks must match it even across heterogeneous hosts.
+    pub threads: usize,
+    pub walk_length: usize,
+    pub walks_per_node: usize,
+    pub window: usize,
+    pub walk_epochs: usize,
+    pub seed: u64,
+    pub learning_rate: f32,
+    pub lr_decay: bool,
+    /// Train on the raw graph edges instead of generated walks (the smoke
+    /// test path; removes the walk engine from the parity equation).
+    pub fixed_edge_samples: bool,
+    /// Digest of the driver's graph; workers must match it.
+    pub graph_digest: u64,
+}
+
+impl PlanMsg {
+    pub fn from_config(cfg: &TrainConfig, fixed_edge_samples: bool, graph_digest: u64) -> Self {
+        PlanMsg {
+            nodes: cfg.nodes,
+            gpus_per_node: cfg.gpus_per_node,
+            subparts: cfg.subparts,
+            dim: cfg.dim,
+            negatives: cfg.negatives,
+            batch: cfg.batch,
+            episode_size: cfg.episode_size,
+            epochs: cfg.epochs,
+            threads: cfg.threads,
+            walk_length: cfg.walk_length,
+            walks_per_node: cfg.walks_per_node,
+            window: cfg.window,
+            walk_epochs: cfg.walk_epochs,
+            seed: cfg.seed,
+            learning_rate: cfg.learning_rate,
+            lr_decay: cfg.lr_decay,
+            fixed_edge_samples,
+            graph_digest,
+        }
+    }
+
+    /// Worker side: adopt the driver's schedule/sampling parameters so
+    /// both processes compute identical episodes.
+    pub fn apply(&self, cfg: &mut TrainConfig) {
+        cfg.nodes = self.nodes;
+        cfg.gpus_per_node = self.gpus_per_node;
+        cfg.subparts = self.subparts;
+        cfg.dim = self.dim;
+        cfg.negatives = self.negatives;
+        cfg.batch = self.batch;
+        cfg.episode_size = self.episode_size;
+        cfg.epochs = self.epochs;
+        cfg.threads = self.threads;
+        cfg.walk_length = self.walk_length;
+        cfg.walks_per_node = self.walks_per_node;
+        cfg.window = self.window;
+        cfg.walk_epochs = self.walk_epochs;
+        cfg.seed = self.seed;
+        cfg.learning_rate = self.learning_rate;
+        cfg.lr_decay = self.lr_decay;
+        cfg.executor = true; // the transport path only exists in the executor
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        for v in [
+            self.nodes,
+            self.gpus_per_node,
+            self.subparts,
+            self.dim,
+            self.negatives,
+            self.batch,
+            self.episode_size,
+            self.epochs,
+            self.threads,
+            self.walk_length,
+            self.walks_per_node,
+            self.window,
+            self.walk_epochs,
+        ] {
+            w.put_u64(v as u64);
+        }
+        w.put_u64(self.seed);
+        w.put_f32(self.learning_rate);
+        w.put_u8(self.lr_decay as u8);
+        w.put_u8(self.fixed_edge_samples as u8);
+        w.put_u64(self.graph_digest);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> crate::Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let mut next = || -> crate::Result<usize> { Ok(r.u64()? as usize) };
+        let nodes = next()?;
+        let gpus_per_node = next()?;
+        let subparts = next()?;
+        let dim = next()?;
+        let negatives = next()?;
+        let batch = next()?;
+        let episode_size = next()?;
+        let epochs = next()?;
+        let threads = next()?;
+        let walk_length = next()?;
+        let walks_per_node = next()?;
+        let window = next()?;
+        let walk_epochs = next()?;
+        let seed = r.u64()?;
+        let learning_rate = r.f32()?;
+        let lr_decay = r.u8()? != 0;
+        let fixed_edge_samples = r.u8()? != 0;
+        let graph_digest = r.u64()?;
+        Ok(PlanMsg {
+            nodes,
+            gpus_per_node,
+            subparts,
+            dim,
+            negatives,
+            batch,
+            episode_size,
+            epochs,
+            threads,
+            walk_length,
+            walks_per_node,
+            window,
+            walk_epochs,
+            seed,
+            learning_rate,
+            lr_decay,
+            fixed_edge_samples,
+            graph_digest,
+        })
+    }
+}
+
+/// FNV-1a digest of a graph's shape and degree sequence — cheap, stable,
+/// and sensitive to any node/edge drift between ranks.
+pub fn graph_digest(graph: &CsrGraph) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(graph.num_nodes() as u64);
+    eat(graph.num_edges() as u64);
+    for d in graph.degrees() {
+        eat(d as u64);
+    }
+    h
+}
+
+fn parse_peer_addrs(cfg: &TrainConfig) -> crate::Result<Vec<Addr>> {
+    let peers = cfg.peer_list();
+    crate::ensure!(
+        peers.len() >= 2,
+        "cluster.peers needs at least 2 comma-separated addresses, got {:?}",
+        cfg.peers
+    );
+    peers.iter().map(|p| Addr::parse(p)).collect()
+}
+
+/// Rank 0: bring up the mesh, broadcast the plan, verify every worker's
+/// graph digest, and start the demux readers.
+pub fn connect_driver(cfg: &TrainConfig, plan_msg: &PlanMsg) -> crate::Result<ClusterHandle> {
+    crate::ensure!(cfg.rank == 0, "the driver must be rank 0 (use `tembed worker` on other ranks)");
+    let addrs = parse_peer_addrs(cfg)?;
+    // workers adopt `nodes` from the plan; only the driver can check it
+    crate::ensure!(
+        addrs.len() == cfg.nodes,
+        "cluster.peers lists {} ranks but cluster.nodes = {} (one rank per node)",
+        addrs.len(),
+        cfg.nodes
+    );
+    let peers = transport::connect_mesh(0, &addrs, MESH_TIMEOUT)?;
+    let world = addrs.len();
+    let payload = plan_msg.encode();
+    for (r, p) in peers.iter().enumerate().skip(1) {
+        p.as_ref()
+            .expect("mesh transport")
+            .send(&WireMsg { kind: KIND_PLAN, dest: 0, tag: 0, payload: payload.clone() })
+            .with_context(|| format!("send plan to rank {r}"))?;
+    }
+    for (r, p) in peers.iter().enumerate().skip(1) {
+        let ack = p.as_ref().expect("mesh transport").recv().with_context(|| {
+            format!("await plan ack from rank {r}")
+        })?;
+        crate::ensure!(ack.kind == KIND_PLAN_ACK, "rank {r}: expected PLAN_ACK, got {}", ack.kind);
+        crate::ensure!(
+            ack.tag == plan_msg.graph_digest,
+            "rank {r} trains a different graph (digest {:#018x} vs driver {:#018x}) — \
+             point every rank at the same --graph/--dataset and seed",
+            ack.tag,
+            plan_msg.graph_digest
+        );
+    }
+    let handle = ClusterHandle { rank: 0, world, peers, hub: DemuxHub::new() };
+    handle.start_readers();
+    Ok(handle)
+}
+
+/// Worker rank: join the mesh and receive the driver's plan. The caller
+/// adopts the plan into its config, loads the graph, then completes the
+/// handshake with [`ClusterHandle::ack_plan`] and
+/// [`ClusterHandle::start_readers`].
+pub fn connect_worker(cfg: &TrainConfig) -> crate::Result<(ClusterHandle, PlanMsg)> {
+    crate::ensure!(cfg.rank >= 1, "worker ranks start at 1 (rank 0 runs `tembed train`)");
+    let addrs = parse_peer_addrs(cfg)?;
+    crate::ensure!(cfg.rank < addrs.len(), "rank {} not in the peer list", cfg.rank);
+    let peers = transport::connect_mesh(cfg.rank, &addrs, MESH_TIMEOUT)?;
+    let world = addrs.len();
+    let plan_frame = peers[0]
+        .as_ref()
+        .expect("driver transport")
+        .recv()
+        .context("await plan from driver")?;
+    crate::ensure!(
+        plan_frame.kind == KIND_PLAN,
+        "expected PLAN from driver, got kind {}",
+        plan_frame.kind
+    );
+    let plan_msg = PlanMsg::decode(&plan_frame.payload)?;
+    Ok((ClusterHandle { rank: cfg.rank, world, peers, hub: DemuxHub::new() }, plan_msg))
+}
+
+/// The whole worker-process lifecycle behind `tembed worker`: join the
+/// mesh, adopt the driver's plan, verify the graph, run the lock-stepped
+/// epochs, and ship the trained context shards home.
+pub fn worker_main<F>(mut cfg: TrainConfig, load_graph: F) -> crate::Result<()>
+where
+    F: FnOnce(&TrainConfig) -> crate::Result<CsrGraph>,
+{
+    let (handle, plan_msg) = connect_worker(&cfg)?;
+    plan_msg.apply(&mut cfg);
+    let graph = load_graph(&cfg)?;
+    let digest = graph_digest(&graph);
+    crate::ensure!(
+        digest == plan_msg.graph_digest,
+        "worker graph digest {digest:#018x} does not match the driver's {:#018x}",
+        plan_msg.graph_digest
+    );
+    handle.ack_plan(digest)?;
+    handle.start_readers();
+    let handle = Arc::new(handle);
+    eprintln!(
+        "[worker {}] joined {}-rank cluster; {} epochs of {} gpus/node",
+        cfg.rank, handle.world, plan_msg.epochs, cfg.gpus_per_node
+    );
+    let mut driver = Driver::new(&graph, cfg.clone(), None)?;
+    if plan_msg.fixed_edge_samples {
+        driver = driver.with_fixed_samples(graph.edges().collect());
+    }
+    driver.trainer.attach_cluster(handle.clone())?;
+    for epoch in 0..plan_msg.epochs {
+        let r = driver.run_epoch(epoch);
+        eprintln!("[worker {}] epoch {:>3} local mean-loss {:.4}", cfg.rank, epoch, r.mean_loss());
+    }
+    let plan = driver.trainer.plan.clone();
+    handle.send_context_shards(&plan, &driver.trainer)?;
+    // linger until the driver's SHUTDOWN (or a bounded timeout): exiting
+    // now would EOF this socket, and with 3+ ranks that death notice can
+    // race ahead of a slower rank's still-in-flight context shards on the
+    // driver's hub
+    handle.hub.wait_shutdown(Duration::from_secs(60));
+    Ok(())
+}
+
+/// Convenience for `main.rs` and the smoke test: the driver-side
+/// connection from a config + graph (rank 0 of `cfg.peer_list()`).
+pub fn driver_cluster(
+    cfg: &TrainConfig,
+    graph: &CsrGraph,
+    fixed_edge_samples: bool,
+) -> crate::Result<Arc<ClusterHandle>> {
+    let plan_msg = PlanMsg::from_config(cfg, fixed_edge_samples, graph_digest(graph));
+    Ok(Arc::new(connect_driver(cfg, &plan_msg)?))
+}
+
+/// Shared loader used by both `tembed train` and `tembed worker` so the
+/// ranks resolve `--graph`/`--dataset` identically.
+pub fn load_graph_for_rank(
+    graph_path: Option<&Path>,
+    dataset: Option<&str>,
+    seed: u64,
+) -> crate::Result<CsrGraph> {
+    if let Some(path) = graph_path {
+        return crate::graph::io::load_graph(path, true);
+    }
+    let name = dataset.unwrap_or("youtube");
+    let spec = crate::gen::datasets::spec(name)
+        .ok_or_else(|| crate::anyhow!("unknown dataset {name:?} (see `tembed info`)"))?;
+    Ok(spec.generate(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn plan_msg_round_trips() {
+        let cfg = TrainConfig { nodes: 2, gpus_per_node: 4, epochs: 7, ..TrainConfig::default() };
+        let m = PlanMsg::from_config(&cfg, true, 0xDEADBEEF);
+        let back = PlanMsg::decode(&m.encode()).unwrap();
+        assert_eq!(back, m);
+        assert!(PlanMsg::decode(&m.encode()[..10]).is_err(), "truncated plan rejected");
+    }
+
+    #[test]
+    fn plan_apply_adopts_schedule_fields() {
+        let driver_cfg = TrainConfig {
+            nodes: 2,
+            gpus_per_node: 2,
+            subparts: 3,
+            dim: 16,
+            seed: 99,
+            threads: 3,
+            epochs: 5,
+            ..TrainConfig::default()
+        };
+        let m = PlanMsg::from_config(&driver_cfg, false, 1);
+        let mut worker_cfg = TrainConfig { executor: false, ..TrainConfig::default() };
+        m.apply(&mut worker_cfg);
+        assert_eq!(worker_cfg.subparts, 3);
+        assert_eq!(worker_cfg.dim, 16);
+        assert_eq!(worker_cfg.seed, 99);
+        assert_eq!(worker_cfg.threads, 3);
+        assert_eq!(worker_cfg.epochs, 5);
+        assert!(worker_cfg.executor, "transport requires the executor path");
+    }
+
+    #[test]
+    fn graph_digest_is_stable_and_sensitive() {
+        let mut rng = Rng::new(4);
+        let g1 = gen::to_graph(50, gen::erdos_renyi(50, 200, &mut rng));
+        let mut rng2 = Rng::new(4);
+        let g2 = gen::to_graph(50, gen::erdos_renyi(50, 200, &mut rng2));
+        assert_eq!(graph_digest(&g1), graph_digest(&g2), "same seed, same digest");
+        let mut rng3 = Rng::new(5);
+        let g3 = gen::to_graph(50, gen::erdos_renyi(50, 200, &mut rng3));
+        assert_ne!(graph_digest(&g1), graph_digest(&g3), "different graph, different digest");
+    }
+
+    #[test]
+    fn peer_addr_validation() {
+        let mut cfg = TrainConfig { nodes: 2, ..TrainConfig::default() };
+        cfg.peers = String::new();
+        assert!(parse_peer_addrs(&cfg).is_err(), "empty peer list rejected");
+        cfg.peers = "one-address-only".into();
+        assert!(parse_peer_addrs(&cfg).is_err(), "a single peer is not a cluster");
+        cfg.peers = "tcp:127.0.0.1:1, tcp:127.0.0.1:2".into();
+        assert_eq!(parse_peer_addrs(&cfg).unwrap().len(), 2);
+    }
+}

@@ -3,13 +3,23 @@
 //!
 //! One worker thread per simulated GPU owns that GPU's pinned context
 //! shard and compute backend (model parallelism). Vertex sub-parts rotate
-//! between workers over channels exactly along the hierarchical schedule's
-//! ownership chain: after GPU `g` trains sub-part `s` at step `t`, the
-//! trained buffer is sent directly to the GPU scheduled to train `s` next
-//! (the §III-B P2P rotation), or back to the host store after the chain's
-//! last step. Each worker keeps a reorder stage (`pending`) of sub-parts
-//! that arrived early — the double-buffered ping-pong: while the front
-//! sub-part trains, the next one lands in the back buffer.
+//! between workers along the hierarchical schedule's ownership chain:
+//! after GPU `g` trains sub-part `s` at step `t`, the trained buffer is
+//! sent directly to the GPU scheduled to train `s` next (the §III-B P2P
+//! rotation), or back to the host store after the chain's last step. Each
+//! worker keeps a reorder stage (`pending`) of sub-parts that arrived
+//! early — the double-buffered ping-pong: while the front sub-part trains,
+//! the next one lands in the back buffer.
+//!
+//! Every hand-off goes through a **hop endpoint** ([`Outbox`]): an
+//! intra-node hop is an in-process channel send (exactly the pre-transport
+//! behavior, so single-process runs stay bit-identical), while an
+//! inter-node hop — a destination GPU owned by another rank — is a framed
+//! message over `comm::transport`. [`run_episode`] is the single-process
+//! entry; [`run_episode_ranked`] runs one rank's workers of a multi-process
+//! cluster, with chain-end sub-parts broadcast to every rank (keeping the
+//! replicated host stores identical) and each rank's measured traces folded
+//! back to the rank-0 driver over the same transport.
 //!
 //! There is **no global barrier**: workers drift freely and synchronize
 //! only through the data dependencies the schedule implies. Correctness
@@ -19,23 +29,31 @@
 //! consider the blocked worker waiting on the smallest step index — its
 //! dependency is an earlier step, so that step's worker is either
 //! computing (progress) or blocked on a still-smaller step, contradiction.
+//! The argument is rank-agnostic: a socket hop is just a slower channel.
 //!
 //! Because each worker draws its per-step negatives in its own schedule
 //! order and every buffer hand-off carries exact values, the executor is
 //! **bit-identical** to the serial reference schedule (the
 //! `executor = false` path in the coordinator) — the parity test in
-//! `tests/executor_parity.rs` holds to strict tolerance.
+//! `tests/executor_parity.rs` holds to strict tolerance, and
+//! `tests/internode_smoke.rs` holds the same parity across two OS
+//! processes.
 //!
-//! Measured wall-clock phase timings (compute vs. stall per step) are
-//! reported through [`ExecMeasure`] and folded into the existing
-//! `pipeline::PhaseBytes`/`simulate_step` report path by the coordinator,
-//! so the simulator is validated against a run that genuinely overlaps
-//! compute and transfer.
+//! Measured wall-clock phase timings (compute vs. stall vs. inter-node
+//! hop per step) are reported through [`ExecMeasure`] and folded into the
+//! existing `pipeline::PhaseBytes`/`simulate_step` report path by the
+//! coordinator, so the simulator is validated against a run that genuinely
+//! overlaps compute and transfer — including real network hops.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use crate::cluster::ClusterSpec;
+use crate::comm::transport::{
+    self, DemuxHub, PayloadReader, PayloadWriter, Transport, WireMsg, KIND_FINAL, KIND_MEASURE,
+    KIND_POISON, KIND_SUBPART, POISON_SUBPART,
+};
 use crate::embed::sgns::StepBackend;
 use crate::embed::EmbeddingStore;
 use crate::metrics::Timer;
@@ -47,10 +65,10 @@ use crate::util::Rng;
 /// A sub-part moving along the rotation ring: `(subpart id, rows)`.
 type RingMsg = (usize, Vec<f32>);
 
-/// Sentinel sub-part id broadcast to every worker when one panics, so
-/// peers blocked in `recv` abort instead of deadlocking (no real
-/// sub-part id can reach `usize::MAX`).
-const POISON: usize = usize::MAX;
+/// Sentinel sub-part id broadcast to every worker when one panics (or a
+/// peer rank dies), so peers blocked in `recv` abort instead of
+/// deadlocking (no real sub-part id can reach `usize::MAX`).
+const POISON: usize = POISON_SUBPART;
 
 /// Immutable inputs of one episode run.
 pub struct ExecCtx<'a> {
@@ -65,8 +83,31 @@ pub struct ExecCtx<'a> {
     pub crosses_node: bool,
 }
 
+/// One rank's view of the multi-process cluster: one rank per simulated
+/// node, rank 0 the driver. `None` cluster = single process, all GPUs
+/// local.
+pub struct ClusterView<'a> {
+    pub rank: usize,
+    pub world: usize,
+    /// Rank-indexed endpoints (`None` at `rank`).
+    pub peers: &'a [Option<Arc<dyn Transport>>],
+    /// Routes this process's inbound frames.
+    pub hub: &'a DemuxHub,
+}
+
+impl ClusterView<'_> {
+    /// Rank owning a global GPU (one rank per simulated node).
+    pub fn owner(&self, gpu: usize, plan: &HierarchyPlan) -> usize {
+        gpu / plan.gpus_per_node
+    }
+
+    fn peer(&self, rank: usize) -> &Arc<dyn Transport> {
+        self.peers[rank].as_ref().expect("peer transport present")
+    }
+}
+
 /// One worker's outcome for one scheduled step: the training result plus
-/// the measured wall-clock split between stall and compute.
+/// the measured wall-clock split between stall, compute, and hand-off.
 #[derive(Debug, Clone)]
 pub struct StepTrace {
     /// Global step index in the rotation schedule.
@@ -84,17 +125,24 @@ pub struct StepTrace {
     pub stall_secs: f64,
     /// Seconds inside the backend's `step_block` (the compute phase).
     pub compute_secs: f64,
+    /// Seconds spent pushing the trained sub-part across a rank boundary
+    /// (framing + socket write). Zero for intra-node channel hops.
+    pub hop_secs: f64,
 }
 
 /// Aggregate measurement of one episode across all workers.
 #[derive(Debug, Default, Clone)]
 pub struct ExecMeasure {
-    /// Wall time of the whole episode (staging + all workers).
+    /// Wall time of the whole episode (staging + all workers; across
+    /// ranks this is the max of the per-rank walls).
     pub wall_secs: f64,
     /// Summed per-worker compute seconds.
     pub compute_secs: f64,
     /// Summed per-worker stall seconds.
     pub stall_secs: f64,
+    /// Summed per-worker seconds inside genuine inter-node hops (framed
+    /// socket sends). Zero in single-process runs.
+    pub inter_node_secs: f64,
     pub workers: usize,
     pub steps: usize,
 }
@@ -124,7 +172,9 @@ impl ExecMeasure {
 
 /// Result of one executed episode: per-step traces sorted by
 /// `(step, gpu)` — the same fold order as the serial reference — plus the
-/// aggregate measurement.
+/// aggregate measurement. On the multi-process driver the traces cover
+/// every rank's workers (folded back over the transport); on a non-driver
+/// rank they cover only the local workers.
 #[derive(Debug)]
 pub struct ExecRun {
     pub traces: Vec<StepTrace>,
@@ -133,11 +183,13 @@ pub struct ExecRun {
 
 impl ExecRun {
     /// Fold the measured run into the discrete-event model's inputs: the
-    /// mean measured compute per step becomes the `train` phase, while
-    /// the transfer phases are priced from the aggregated byte counters
-    /// through `spec`'s fabric — `PhaseBytes::durations` on real counts.
-    /// Feeding this to `pipeline::simulate_step` validates the simulator
-    /// against a run that genuinely overlapped compute and transfer.
+    /// mean measured compute per step becomes the `train` phase, the
+    /// measured inter-node hop seconds (when any hop actually crossed a
+    /// socket) become the `inter_node` phase, and the remaining transfer
+    /// phases are priced from the aggregated byte counters through
+    /// `spec`'s fabric — `PhaseBytes::durations` on real counts. Feeding
+    /// this to `pipeline::simulate_step` validates the simulator against
+    /// a run that genuinely overlapped compute and transfer.
     pub fn measured_durations(
         &self,
         spec: &ClusterSpec,
@@ -161,6 +213,11 @@ impl ExecRun {
         };
         let mut d = mean.durations(spec, batch, negatives, dim);
         d.train = self.measure.compute_secs / n as f64;
+        if self.measure.inter_node_secs > 0.0 {
+            // real network hops were measured: report them instead of the
+            // fabric estimate (single-process runs keep the estimate)
+            d.inter_node = self.measure.inter_node_secs / n as f64;
+        }
         d
     }
 }
@@ -220,15 +277,69 @@ struct Seat {
     dest: Vec<Dest>,
 }
 
+/// One outbound hop endpoint per global GPU: the in-process channel of a
+/// local worker, or the framed transport to the rank owning a remote one.
+enum Hop {
+    Local(Sender<RingMsg>),
+    Remote(Arc<dyn Transport>),
+}
+
+/// The executor's hand-off path: every worker sends trained sub-parts
+/// through here, local or not.
+struct Outbox {
+    hops: Vec<Hop>,
+    /// One transport per remote rank, for abort broadcasts.
+    remotes: Vec<Arc<dyn Transport>>,
+}
+
+impl Outbox {
+    /// Deliver sub-part `sp` to global GPU `to`. Returns the seconds the
+    /// hop took when it crossed a rank boundary (framing + socket write),
+    /// 0.0 for local channel hand-offs.
+    fn send(&self, to: usize, sp: usize, buf: Vec<f32>) -> f64 {
+        match &self.hops[to] {
+            Hop::Local(tx) => {
+                tx.send((sp, buf)).expect("sub-part hand-off");
+                0.0
+            }
+            Hop::Remote(t) => {
+                let timer = Timer::start();
+                let msg = WireMsg {
+                    kind: KIND_SUBPART,
+                    dest: to as u32,
+                    tag: sp as u64,
+                    payload: transport::encode_f32s(&buf),
+                };
+                t.send(&msg).expect("inter-node sub-part hand-off");
+                timer.secs()
+            }
+        }
+    }
+
+    /// Unblock every local worker and every remote rank before a panic
+    /// propagates (sends to already-finished workers just fail).
+    fn poison(&self) {
+        for hop in &self.hops {
+            if let Hop::Local(tx) = hop {
+                let _ = tx.send((POISON, Vec::new()));
+            }
+        }
+        for t in &self.remotes {
+            let _ = t.send(&WireMsg::signal(KIND_POISON, 0, 0));
+        }
+    }
+}
+
 struct WorkerOut {
     traces: Vec<StepTrace>,
     finals: Vec<(usize, Vec<f32>)>,
 }
 
 /// Run one episode of the rotation schedule with one worker thread per
-/// GPU. `contexts`, `backends`, `samplers`, and `rngs` are indexed by
-/// global GPU id (the coordinator's per-GPU state); the store provides
-/// the initial sub-part checkouts and receives the final check-ins.
+/// GPU, all in this process. `contexts`, `backends`, `samplers`, and
+/// `rngs` are indexed by global GPU id (the coordinator's per-GPU state);
+/// the store provides the initial sub-part checkouts and receives the
+/// final check-ins.
 pub fn run_episode(
     ctx: &ExecCtx<'_>,
     store: &mut EmbeddingStore,
@@ -237,60 +348,135 @@ pub fn run_episode(
     samplers: &[NegativeSampler],
     rngs: &mut [Rng],
 ) -> ExecRun {
-    let gpus = ctx.plan.total_gpus();
+    run_episode_ranked(ctx, store, contexts, backends, samplers, rngs, None)
+}
+
+/// Run one rank's share of an episode. With `cluster = None` this is the
+/// single-process executor, bit-identical to the pre-transport behavior.
+/// With a cluster view, this rank spawns workers only for its own node's
+/// GPUs; cross-rank hand-offs travel as framed sub-part messages, chain
+/// ends are broadcast so every rank's host store stays identical, and the
+/// measured traces fold back to the rank-0 driver (whose returned
+/// [`ExecRun`] then covers the whole cluster).
+#[allow(clippy::too_many_arguments)]
+pub fn run_episode_ranked(
+    ctx: &ExecCtx<'_>,
+    store: &mut EmbeddingStore,
+    contexts: &mut [Vec<f32>],
+    backends: &mut [Box<dyn StepBackend>],
+    samplers: &[NegativeSampler],
+    rngs: &mut [Rng],
+    cluster: Option<&ClusterView<'_>>,
+) -> ExecRun {
+    let plan = ctx.plan;
+    let gpus = plan.total_gpus();
     assert_eq!(contexts.len(), gpus);
     assert_eq!(backends.len(), gpus);
     assert_eq!(samplers.len(), gpus);
     assert_eq!(rngs.len(), gpus);
-    let routing = build_routing(ctx.plan);
+    if let Some(c) = cluster {
+        assert!(c.world >= 2, "cluster views need at least 2 ranks");
+        assert_eq!(c.world, plan.nodes, "one rank per simulated node");
+        assert!(c.rank < c.world);
+    }
+    let mut routing = build_routing(plan);
     let total_steps = routing.sched.first().map(|s| s.len()).unwrap_or(0);
 
     let wall = Timer::start();
-    let mut txs: Vec<Sender<RingMsg>> = Vec::with_capacity(gpus);
-    let mut seats: Vec<Seat> = Vec::with_capacity(gpus);
-    let mut sched_it = routing.sched.into_iter();
-    let mut dest_it = routing.dest.into_iter();
-    for _ in 0..gpus {
+    // per-local-GPU inboxes; the demux hub feeds the same senders with
+    // sub-parts arriving from remote ranks
+    let mut local_tx: Vec<Option<Sender<RingMsg>>> = (0..gpus).map(|_| None).collect();
+    let mut seat_of: HashMap<usize, Seat> = HashMap::new();
+    for g in 0..gpus {
+        let local = match cluster {
+            None => true,
+            Some(c) => c.owner(g, plan) == c.rank,
+        };
+        if !local {
+            continue;
+        }
         let (tx, rx) = channel::<RingMsg>();
-        txs.push(tx);
-        seats.push(Seat {
-            inbox: rx,
-            sched: sched_it.next().unwrap(),
-            dest: dest_it.next().unwrap(),
-        });
+        if let Some(c) = cluster {
+            c.hub.install_subpart(g as u32, tx.clone());
+        }
+        seat_of.insert(
+            g,
+            Seat {
+                inbox: rx,
+                sched: std::mem::take(&mut routing.sched[g]),
+                dest: std::mem::take(&mut routing.dest[g]),
+            },
+        );
+        local_tx[g] = Some(tx);
     }
-    // Stage every chain head: the episode's initial H2D checkouts. The
+    // episode-scoped collector channels for cross-rank traffic
+    let mut finals_rx: Option<Receiver<RingMsg>> = None;
+    let mut measures_rx: Option<Receiver<Vec<u8>>> = None;
+    if let Some(c) = cluster {
+        let (ftx, frx) = channel();
+        c.hub.install_finals(ftx);
+        finals_rx = Some(frx);
+        if c.rank == 0 {
+            let (mtx, mrx) = channel();
+            c.hub.install_measures(mtx);
+            measures_rx = Some(mrx);
+        }
+    }
+
+    let outbox = {
+        let mut remotes: Vec<Arc<dyn Transport>> = Vec::new();
+        if let Some(c) = cluster {
+            for (r, p) in c.peers.iter().enumerate() {
+                if r != c.rank {
+                    remotes.push(p.as_ref().expect("peer transport present").clone());
+                }
+            }
+        }
+        let hops = (0..gpus)
+            .map(|g| match &local_tx[g] {
+                Some(tx) => Hop::Local(tx.clone()),
+                None => {
+                    let c = cluster.expect("remote gpu implies a cluster view");
+                    Hop::Remote(c.peer(c.owner(g, plan)).clone())
+                }
+            })
+            .collect();
+        Outbox { hops, remotes }
+    };
+
+    // Stage every locally-owned chain head: the episode's initial H2D
+    // checkouts (each rank stages from its own replicated store). The
     // whole vertex matrix is staged up front — same total bytes as the
     // serial schedule's lazy checkouts, but held concurrently: peak
     // memory carries one extra vertex-matrix copy at episode start,
     // draining as chains consume it. Fine at simulation scale; a bounded
     // staging window is a ROADMAP item for billion-row runs.
     for &(sp, g0) in &routing.heads {
-        let buf = store.checkout_vertex(ctx.plan.subpart_range(sp));
-        txs[g0].send((sp, buf)).expect("stage initial sub-part");
+        if let Some(tx) = &local_tx[g0] {
+            let buf = store.checkout_vertex(ctx.plan.subpart_range(sp));
+            tx.send((sp, buf)).expect("stage initial sub-part");
+        }
     }
 
     let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(gpus);
-        for (g, ((seat, shard), (backend, rng))) in seats
-            .into_iter()
-            .zip(contexts.iter_mut())
+        let mut handles = Vec::with_capacity(seat_of.len());
+        for (g, (shard, (backend, rng))) in contexts
+            .iter_mut()
             .zip(backends.iter_mut().zip(rngs.iter_mut()))
             .enumerate()
         {
-            let peers = txs.clone();
+            let Some(seat) = seat_of.remove(&g) else { continue };
+            let ob = &outbox;
             handles.push(scope.spawn(move || {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    worker(g, seat, shard, &mut **backend, rng, &peers, ctx, samplers)
+                    worker(g, seat, shard, &mut **backend, rng, ob, ctx, samplers)
                 }));
                 match out {
                     Ok(v) => v,
                     Err(payload) => {
-                        // unblock peers stuck in recv before propagating
-                        // (sends to already-finished workers just fail)
-                        for p in &peers {
-                            let _ = p.send((POISON, Vec::new()));
-                        }
+                        // unblock local peers stuck in recv and abort the
+                        // remote ranks before propagating
+                        ob.poison();
                         std::panic::resume_unwind(payload);
                     }
                 }
@@ -301,28 +487,75 @@ pub fn run_episode(
             .map(|h| h.join().expect("exec worker panicked"))
             .collect()
     });
-    let wall_secs = wall.secs();
+    let mut wall_secs = wall.secs();
 
     let mut traces = Vec::with_capacity(total_steps * gpus);
-    let mut compute_secs = 0.0;
-    let mut stall_secs = 0.0;
+    let mut finalized = 0usize;
     for out in outs {
         for (sp, buf) in out.finals {
             store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
-        }
-        for t in &out.traces {
-            compute_secs += t.compute_secs;
-            stall_secs += t.stall_secs;
+            if cluster.is_some() {
+                let msg = WireMsg {
+                    kind: KIND_FINAL,
+                    dest: 0,
+                    tag: sp as u64,
+                    payload: transport::encode_f32s(&buf),
+                };
+                for t in &outbox.remotes {
+                    t.send(&msg).expect("broadcast chain-end sub-part");
+                }
+            }
+            finalized += 1;
         }
         traces.extend(out.traces);
     }
+
+    if let Some(c) = cluster {
+        // the finals exchange doubles as the episode barrier: every rank
+        // blocks here until all chains — local and remote — checked in,
+        // so the replicated stores leave the episode identical
+        let frx = finals_rx.as_ref().expect("finals channel installed");
+        let total_chains = routing.heads.len();
+        while finalized < total_chains {
+            let (sp, buf) = frx.recv().expect("peer rank closed before episode completed");
+            assert_ne!(sp, POISON, "peer rank aborted the episode");
+            store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
+            finalized += 1;
+        }
+        if c.rank == 0 {
+            let mrx = measures_rx.as_ref().expect("measures channel installed");
+            for _ in 1..c.world {
+                let payload = mrx.recv().expect("worker rank measures");
+                let (peer_traces, peer_wall) =
+                    decode_measure(&payload).expect("decode peer rank measures");
+                wall_secs = wall_secs.max(peer_wall);
+                traces.extend(peer_traces);
+            }
+        } else {
+            let payload = encode_measure(&traces, wall_secs);
+            c.peer(0)
+                .send(&WireMsg { kind: KIND_MEASURE, dest: 0, tag: 0, payload })
+                .expect("report measures to driver");
+        }
+        c.hub.clear_episode_routes();
+    }
+
     traces.sort_by_key(|t| (t.step, t.gpu));
+    let mut compute_secs = 0.0;
+    let mut stall_secs = 0.0;
+    let mut inter_node_secs = 0.0;
+    for t in &traces {
+        compute_secs += t.compute_secs;
+        stall_secs += t.stall_secs;
+        inter_node_secs += t.hop_secs;
+    }
     ExecRun {
         traces,
         measure: ExecMeasure {
             wall_secs,
             compute_secs,
             stall_secs,
+            inter_node_secs,
             workers: gpus,
             steps: total_steps,
         },
@@ -331,7 +564,7 @@ pub fn run_episode(
 
 /// One worker: receive each scheduled sub-part (buffering early arrivals
 /// — the ping-pong back buffer), train it against the pinned context
-/// shard, and pass it to the next scheduled owner.
+/// shard, and pass it to the next scheduled owner through the outbox.
 #[allow(clippy::too_many_arguments)]
 fn worker(
     g: usize,
@@ -339,7 +572,7 @@ fn worker(
     shard: &mut Vec<f32>,
     backend: &mut dyn StepBackend,
     rng: &mut Rng,
-    peers: &[Sender<RingMsg>],
+    outbox: &Outbox,
     ctx: &ExecCtx<'_>,
     samplers: &[NegativeSampler],
 ) -> WorkerOut {
@@ -395,10 +628,13 @@ fn worker(
             train_samples: block.len() as u64,
             crosses_node: ctx.crosses_node,
         };
-        match seat.dest[step_idx] {
-            Dest::Gpu(to) => peers[to].send((sp, vbuf)).expect("sub-part hand-off"),
-            Dest::Host => finals.push((sp, vbuf)),
-        }
+        let hop_secs = match seat.dest[step_idx] {
+            Dest::Gpu(to) => outbox.send(to, sp, vbuf),
+            Dest::Host => {
+                finals.push((sp, vbuf));
+                0.0
+            }
+        };
         traces.push(StepTrace {
             step: step_idx,
             gpu: g,
@@ -408,9 +644,75 @@ fn worker(
             bytes,
             stall_secs,
             compute_secs,
+            hop_secs,
         });
     }
     WorkerOut { traces, finals }
+}
+
+/// Serialize one rank's traces + episode wall for the KIND_MEASURE fold.
+fn encode_measure(traces: &[StepTrace], wall_secs: f64) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_f64(wall_secs);
+    w.put_u64(traces.len() as u64);
+    for t in traces {
+        w.put_u64(t.step as u64);
+        w.put_u64(t.gpu as u64);
+        w.put_u64(t.subpart as u64);
+        w.put_f64(t.loss);
+        w.put_u64(t.samples);
+        w.put_u64(t.bytes.sample_bytes);
+        w.put_u64(t.bytes.subpart_bytes);
+        w.put_u64(t.bytes.train_samples);
+        w.put_u8(t.bytes.crosses_node as u8);
+        w.put_f64(t.stall_secs);
+        w.put_f64(t.compute_secs);
+        w.put_f64(t.hop_secs);
+    }
+    w.finish()
+}
+
+fn decode_measure(payload: &[u8]) -> crate::Result<(Vec<StepTrace>, f64)> {
+    crate::ensure!(!payload.is_empty(), "peer rank aborted before reporting measures");
+    let mut r = PayloadReader::new(payload);
+    let wall_secs = r.f64()?;
+    let n = r.u64()? as usize;
+    // 89 bytes per encoded trace; clamp before allocating so a corrupt
+    // count errors on read instead of aborting on a giant reservation
+    crate::ensure!(
+        n <= payload.len() / 89,
+        "measure payload claims {n} traces but only carries {} bytes",
+        payload.len()
+    );
+    let mut traces = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = r.u64()? as usize;
+        let gpu = r.u64()? as usize;
+        let subpart = r.u64()? as usize;
+        let loss = r.f64()?;
+        let samples = r.u64()?;
+        let bytes = PhaseBytes {
+            sample_bytes: r.u64()?,
+            subpart_bytes: r.u64()?,
+            train_samples: r.u64()?,
+            crosses_node: r.u8()? != 0,
+        };
+        let stall_secs = r.f64()?;
+        let compute_secs = r.f64()?;
+        let hop_secs = r.f64()?;
+        traces.push(StepTrace {
+            step,
+            gpu,
+            subpart,
+            loss,
+            samples,
+            bytes,
+            stall_secs,
+            compute_secs,
+            hop_secs,
+        });
+    }
+    Ok((traces, wall_secs))
 }
 
 #[cfg(test)]
@@ -526,6 +828,8 @@ mod tests {
         let util = run.measure.utilization();
         assert!(util > 0.0 && util <= 1.0, "utilization {util}");
         assert!(run.measure.wall_secs > 0.0);
+        // no socket hops in a single-process run
+        assert_eq!(run.measure.inter_node_secs, 0.0);
         // the model actually moved
         let delta: f32 = before
             .vertex
@@ -607,5 +911,133 @@ mod tests {
         assert!(d.prefetch_h2d > 0.0);
         let step = crate::pipeline::simulate_step(&d, crate::pipeline::OverlapConfig::paper());
         assert!(step > 0.0 && step.is_finite());
+    }
+
+    #[test]
+    fn measure_codec_round_trips() {
+        let traces = vec![StepTrace {
+            step: 3,
+            gpu: 1,
+            subpart: 7,
+            loss: 0.625,
+            samples: 41,
+            bytes: PhaseBytes {
+                sample_bytes: 328,
+                subpart_bytes: 4096,
+                train_samples: 41,
+                crosses_node: true,
+            },
+            stall_secs: 1e-4,
+            compute_secs: 2e-3,
+            hop_secs: 5e-5,
+        }];
+        let payload = encode_measure(&traces, 0.125);
+        let (back, wall) = decode_measure(&payload).unwrap();
+        assert_eq!(wall, 0.125);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].subpart, 7);
+        assert_eq!(back[0].loss, 0.625);
+        assert_eq!(back[0].hop_secs, 5e-5);
+        assert!(back[0].bytes.crosses_node);
+        assert!(decode_measure(&[]).is_err(), "empty payload is the abort sentinel");
+    }
+
+    /// The tentpole invariant: a two-rank episode over the loopback
+    /// transport reproduces the single-process executor exactly — same
+    /// losses, same final store — and measures real inter-node hops.
+    #[test]
+    fn ranked_episode_over_loopback_matches_single_process() {
+        let (plan, store0, degrees, samples) = fixture(2, 2, 2, 96, 1000, 8);
+        // reference: single-process run
+        let mut sref = store0.clone();
+        let (ref_run, _) = run(&plan, &mut sref, &degrees, &samples, 21);
+
+        // two ranks wired by a loopback pair, each with an identical
+        // replica of the initial state
+        let (t01, t10) = transport::loopback_pair(0, 1);
+        let t01: Arc<dyn Transport> = Arc::new(t01);
+        let t10: Arc<dyn Transport> = Arc::new(t10);
+        let hub0 = DemuxHub::new();
+        let hub1 = DemuxHub::new();
+        hub0.spawn_reader(t01.clone());
+        hub1.spawn_reader(t10.clone());
+        let peers0: Vec<Option<Arc<dyn Transport>>> = vec![None, Some(t01)];
+        let peers1: Vec<Option<Arc<dyn Transport>>> = vec![Some(t10), None];
+
+        let pool = EpisodePool::build(&plan, &samples);
+        let mut stores = [store0.clone(), store0.clone()];
+        let (lo, hi) = stores.split_at_mut(1);
+        let s0 = &mut lo[0];
+        let s1 = &mut hi[0];
+        let run0 = std::thread::scope(|scope| {
+            let (plan_r, pool_r, degrees_r) = (&plan, &pool, &degrees);
+            let (peers1_r, hub1_r) = (&peers1, &hub1);
+            let h1 = scope.spawn(move || {
+                let (mut contexts, mut backends, samplers, mut rngs) =
+                    gpu_state(plan_r, s1, degrees_r, 21);
+                let ctx = ExecCtx {
+                    plan: plan_r,
+                    pool: pool_r,
+                    batch: 64,
+                    negatives: 3,
+                    dim: 8,
+                    lr: 0.05,
+                    crosses_node: true,
+                };
+                let view =
+                    ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
+                run_episode_ranked(
+                    &ctx,
+                    s1,
+                    &mut contexts,
+                    &mut backends,
+                    &samplers,
+                    &mut rngs,
+                    Some(&view),
+                )
+            });
+            let (mut contexts, mut backends, samplers, mut rngs) =
+                gpu_state(&plan, s0, &degrees, 21);
+            let ctx = ExecCtx {
+                plan: &plan,
+                pool: &pool,
+                batch: 64,
+                negatives: 3,
+                dim: 8,
+                lr: 0.05,
+                crosses_node: true,
+            };
+            let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
+            let run0 = run_episode_ranked(
+                &ctx,
+                s0,
+                &mut contexts,
+                &mut backends,
+                &samplers,
+                &mut rngs,
+                Some(&view),
+            );
+            h1.join().expect("rank 1 episode");
+            run0
+        });
+        // release the reader threads (they block in recv otherwise)
+        for p in peers0.iter().chain(peers1.iter()).flatten() {
+            let _ = p.send(&WireMsg::signal(transport::KIND_SHUTDOWN, 0, 0));
+        }
+
+        // driver's merged traces are the full cluster, loss-for-loss
+        assert_eq!(run0.traces.len(), ref_run.traces.len());
+        for (a, b) in run0.traces.iter().zip(&ref_run.traces) {
+            assert_eq!((a.step, a.gpu, a.subpart), (b.step, b.gpu, b.subpart));
+            assert_eq!(a.loss, b.loss, "loss drifted at step {} gpu {}", a.step, a.gpu);
+        }
+        // the finals barrier left both replicated stores identical to the
+        // single-process result
+        assert_eq!(stores[0].vertex, sref.vertex);
+        assert_eq!(stores[1].vertex, sref.vertex);
+        // cross-rank hops were measured for real
+        assert!(run0.measure.inter_node_secs > 0.0, "no inter-node hops measured");
+        let d = run0.measured_durations(&crate::cluster::ClusterSpec::set_a(2, 2), 64, 3, 8);
+        assert!(d.inter_node > 0.0, "measured hops missing from the phase split");
     }
 }

@@ -4,12 +4,20 @@
 //!
 //! ```text
 //! tembed train   --dataset <name> [--epochs N] [--config f.toml] [--set k=v]...
+//!                [--peers a0,a1,...] [--samples edges|walks]   # rank-0 driver
+//! tembed worker  --rank R --peers a0,a1,... [--listen ADDR] [--dataset|--graph ...]
 //! tembed walk    --dataset <name> --out <dir> [--set k=v]...
 //! tembed eval    --dataset <name> [--epochs N] [--set k=v]...   # link-pred AUC
 //! tembed memory                                            # paper Table I
 //! tembed extrapolate                                       # Table III paper rows
 //! tembed info                                              # datasets & clusters
 //! ```
+//!
+//! The `--peers` list (or `cluster.peers`) turns `train` into the rank-0
+//! driver of a real multi-process cluster: each address is one rank's
+//! listening endpoint (`uds:/path.sock` or `tcp:host:port`), one rank per
+//! simulated node, and every other rank runs `tembed worker`. See README
+//! §"Running a two-process cluster locally".
 
 use std::path::PathBuf;
 
@@ -74,23 +82,27 @@ fn build_config(flags: &Flags) -> tembed::Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Resolve `--graph`/`--dataset` through the same loader the worker ranks
+/// use, so driver and workers cannot diverge (the digest handshake would
+/// catch it, but with a confusing error).
 fn load_dataset(flags: &Flags, seed: u64) -> tembed::Result<tembed::graph::CsrGraph> {
-    if let Some(path) = flags.get("graph") {
-        return tembed::graph::io::load_graph(std::path::Path::new(path), true);
-    }
-    let name = flags.get("dataset").unwrap_or("youtube");
-    let spec = datasets::spec(name)
-        .ok_or_else(|| tembed::anyhow!("unknown dataset {name:?} (see `tembed info`)"))?;
-    Ok(spec.generate(seed))
+    tembed::coordinator::multirank::load_graph_for_rank(
+        flags.get("graph").map(std::path::Path::new),
+        flags.get("dataset"),
+        seed,
+    )
 }
 
 fn run(args: &[String]) -> tembed::Result<()> {
     let (cmd, rest) = args
         .split_first()
-        .ok_or_else(|| tembed::anyhow!("usage: tembed <train|walk|eval|memory|extrapolate|info> ..."))?;
+        .ok_or_else(|| {
+            tembed::anyhow!("usage: tembed <train|worker|walk|eval|memory|extrapolate|info> ...")
+        })?;
     let flags = Flags::parse(rest)?;
     match cmd.as_str() {
         "train" => cmd_train(&flags),
+        "worker" => cmd_worker(&flags),
         "walk" => cmd_walk(&flags),
         "eval" => cmd_eval(&flags),
         "memory" => cmd_memory(),
@@ -100,8 +112,34 @@ fn run(args: &[String]) -> tembed::Result<()> {
     }
 }
 
+/// Fold the dedicated cluster flags (`--rank R`, `--peers a0,a1`,
+/// `--listen ADDR`) into the config, so they compose with `--set` and
+/// config files.
+fn apply_cluster_flags(cfg: &mut TrainConfig, flags: &Flags) -> tembed::Result<()> {
+    if let Some(r) = flags.get("rank") {
+        cfg.rank = r.parse()?;
+    }
+    if let Some(p) = flags.get("peers") {
+        cfg.peers = p.to_string();
+    }
+    if let Some(listen) = flags.get("listen") {
+        // override this rank's own entry in the peer list
+        let mut peers = cfg.peer_list();
+        tembed::ensure!(
+            cfg.rank < peers.len(),
+            "--listen needs --peers to already list rank {} (got {} entries)",
+            cfg.rank,
+            peers.len()
+        );
+        peers[cfg.rank] = listen.to_string();
+        cfg.peers = peers.join(",");
+    }
+    Ok(())
+}
+
 fn cmd_train(flags: &Flags) -> tembed::Result<()> {
-    let cfg = build_config(flags)?;
+    let mut cfg = build_config(flags)?;
+    apply_cluster_flags(&mut cfg, flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
     println!("# effective config\n{}", cfg.render());
     println!(
@@ -110,8 +148,34 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         graph.num_edges(),
         graph.degree_stats().gini
     );
+    let fixed_edges = matches!(flags.get("samples"), Some("edges"));
+    tembed::ensure!(
+        cfg.peer_list().len() != 1,
+        "--peers lists a single address; a cluster needs one address per rank \
+         (or drop --peers to simulate in-process)"
+    );
+    let cluster = if cfg.peer_list().len() >= 2 {
+        let handle = tembed::coordinator::multirank::driver_cluster(&cfg, &graph, fixed_edges)?;
+        println!(
+            "cluster: rank 0 driving {} worker rank(s) over {}",
+            handle.world - 1,
+            cfg.peers
+        );
+        Some(handle)
+    } else {
+        None
+    };
     let runtime = open_runtime_if_needed(&cfg)?;
     let mut driver = Driver::new(&graph, cfg.clone(), runtime.as_ref())?;
+    if fixed_edges {
+        driver = driver.with_fixed_samples(graph.edges().collect());
+    }
+    if let Some(handle) = &cluster {
+        driver.trainer.attach_cluster(handle.clone())?;
+    }
+    // EpochReport.metrics accumulates across epochs; report hop deltas
+    let mut hop_secs_seen = 0.0;
+    let mut hop_sends_seen = 0u64;
     for epoch in 0..cfg.epochs {
         let r = driver.run_epoch(epoch);
         println!(
@@ -123,8 +187,24 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
             r.mean_loss(),
             r.sim_throughput(),
         );
+        let hop = r.metrics.secs("exec_inter_node") - hop_secs_seen;
+        let sends = r.metrics.count("exec_remote_hops") - hop_sends_seen;
+        if hop > 0.0 {
+            println!(
+                "           measured inter-node hops: {} ({} sub-part sends)",
+                human_secs(hop),
+                sends,
+            );
+        }
+        hop_secs_seen += hop;
+        hop_sends_seen += sends;
     }
-    let store = driver.finish();
+    let plan = driver.trainer.plan.clone();
+    let mut store = driver.finish();
+    if let Some(handle) = &cluster {
+        handle.collect_remote_state(&plan, &mut store)?;
+        println!("cluster: collected {} remote context shard(s)", plan.total_gpus() - plan.gpus_per_node);
+    }
     println!("model: {} of embeddings trained", human_bytes(store.storage_bytes()));
     if let Some(path) = flags.get("save") {
         tembed::embed::checkpoint::save(&store, std::path::Path::new(path))?;
@@ -135,6 +215,27 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         println!("text embeddings exported to {path}");
     }
     Ok(())
+}
+
+/// A non-driver rank of the multi-process cluster: joins the mesh, adopts
+/// the driver's plan (schedule, seeds, walk parameters), verifies it loads
+/// the same graph, and runs the lock-stepped epochs.
+fn cmd_worker(flags: &Flags) -> tembed::Result<()> {
+    let mut cfg = build_config(flags)?;
+    apply_cluster_flags(&mut cfg, flags)?;
+    tembed::ensure!(
+        cfg.rank >= 1,
+        "worker ranks start at 1; rank 0 is the driver (`tembed train --peers ...`)"
+    );
+    let graph_flag = flags.get("graph").map(PathBuf::from);
+    let dataset_flag = flags.get("dataset").map(str::to_string);
+    tembed::coordinator::multirank::worker_main(cfg, move |cfg| {
+        tembed::coordinator::multirank::load_graph_for_rank(
+            graph_flag.as_deref(),
+            dataset_flag.as_deref(),
+            cfg.seed,
+        )
+    })
 }
 
 fn cmd_walk(flags: &Flags) -> tembed::Result<()> {

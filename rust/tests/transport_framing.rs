@@ -1,0 +1,152 @@
+//! Property tests for the `comm::transport` wire format: round-trip of
+//! arbitrary `RingMsg`-shaped payloads, partial-read resilience (frames
+//! reassembled from 1..k-byte socket returns), and poison/abort
+//! propagation across a real socket pair — driven by the repo's
+//! `util::quickcheck` mini-framework.
+
+use std::io::Read;
+
+use tembed::comm::transport::{
+    decode_f32s, encode_f32s, loopback_pair, read_frame, write_frame, DemuxHub, Transport,
+    WireMsg, KIND_FINAL, KIND_POISON, KIND_SUBPART, MAX_FRAME_PAYLOAD, POISON_SUBPART,
+};
+use tembed::util::quickcheck::{forall, Gen};
+
+/// A reader that returns at most `chunk` bytes per `read` call —
+/// simulating short socket reads so `read_frame`'s reassembly is exercised
+/// for real.
+struct Trickle<'a> {
+    data: &'a [u8],
+    pos: usize,
+    chunk: usize,
+}
+
+impl Read for Trickle<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.chunk).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn arbitrary_msg(g: &mut Gen) -> WireMsg {
+    let rows = g.usize_in(0, 64);
+    let payload = encode_f32s(&g.vec_f32(rows, -1e6, 1e6));
+    WireMsg {
+        kind: *g.pick(&[KIND_SUBPART, KIND_FINAL, KIND_POISON]),
+        dest: g.u64() as u32,
+        tag: g.u64(),
+        payload,
+    }
+}
+
+#[test]
+fn frames_round_trip_arbitrary_ring_payloads() {
+    forall(200, 0xF3A1, |g| {
+        let msg = arbitrary_msg(g);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+        // the f32 codec is bit-exact both ways
+        let rows = decode_f32s(&msg.payload).unwrap();
+        assert_eq!(encode_f32s(&rows), msg.payload);
+    });
+}
+
+#[test]
+fn frames_survive_partial_reads() {
+    forall(120, 0xBEEF, |g| {
+        // several frames back to back, trickled through tiny reads
+        let count = g.usize_in(1, 5);
+        let msgs: Vec<WireMsg> = (0..count).map(|_| arbitrary_msg(g)).collect();
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut r = Trickle { data: &buf, pos: 0, chunk: g.usize_in(1, 7) };
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut r).unwrap(), m);
+        }
+        // stream fully consumed: another read hits clean EOF
+        assert!(read_frame(&mut r).is_err());
+    });
+}
+
+#[test]
+fn truncated_streams_error_instead_of_hanging_or_panicking() {
+    forall(100, 0x7EA0, |g| {
+        let msg = arbitrary_msg(g);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        let cut = g.usize_in(0, buf.len().saturating_sub(1));
+        assert!(read_frame(&mut &buf[..cut]).is_err(), "truncated at {cut} of {}", buf.len());
+    });
+}
+
+#[test]
+fn corrupt_length_prefixes_are_rejected_cheaply() {
+    forall(100, 0xC0DE, |g| {
+        let msg = arbitrary_msg(g);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        // overwrite the length field with something past the cap
+        let bogus = MAX_FRAME_PAYLOAD as u32 + 1 + (g.u64() % 1000) as u32;
+        buf[13..17].copy_from_slice(&bogus.to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    });
+}
+
+#[test]
+fn odd_sized_f32_payloads_are_rejected() {
+    forall(50, 0x0DD, |g| {
+        let n = g.usize_in(0, 40);
+        let mut bytes = encode_f32s(&g.vec_f32(n, -1.0, 1.0));
+        bytes.push(0xAB); // no longer a multiple of 4
+        assert!(decode_f32s(&bytes).is_err());
+    });
+}
+
+/// Poison and abort propagation over a transport: a POISON frame — or the
+/// peer dying outright — must unblock every installed consumer with the
+/// sentinel instead of deadlocking it.
+#[test]
+fn poison_propagates_across_the_transport() {
+    // explicit POISON frame
+    let (a, b) = loopback_pair(0, 1);
+    let hub = DemuxHub::new();
+    let b: std::sync::Arc<dyn Transport> = std::sync::Arc::new(b);
+    hub.spawn_reader(b);
+    let (tx, rx) = std::sync::mpsc::channel();
+    hub.install_subpart(3, tx);
+    a.send(&WireMsg {
+        kind: KIND_SUBPART,
+        dest: 3,
+        tag: 9,
+        payload: encode_f32s(&[1.0, 2.0]),
+    })
+    .unwrap();
+    a.send(&WireMsg::signal(KIND_POISON, 0, 0)).unwrap();
+    let (sp, rows) = rx.recv().unwrap();
+    assert_eq!((sp, rows), (9, vec![1.0, 2.0]), "real frame delivered first");
+    assert_eq!(rx.recv().unwrap().0, POISON_SUBPART, "poison follows in order");
+    assert!(hub.is_poisoned());
+}
+
+#[test]
+fn peer_death_poisons_blocked_consumers() {
+    let (a, b) = loopback_pair(0, 1);
+    let hub = DemuxHub::new();
+    let b: std::sync::Arc<dyn Transport> = std::sync::Arc::new(b);
+    hub.spawn_reader(b);
+    let (ftx, frx) = std::sync::mpsc::channel();
+    hub.install_finals(ftx);
+    drop(a); // peer process gone: reader sees the closed stream
+    assert_eq!(
+        frx.recv().unwrap().0,
+        POISON_SUBPART,
+        "a dead peer must abort waiting consumers"
+    );
+    assert!(hub.is_poisoned());
+}
