@@ -94,6 +94,48 @@ fn main() {
         "episode 2D bucketing",
         pool.total_samples() as f64 / t.elapsed().as_secs_f64()
     );
+
+    // --- executor stage-window sweep: the memory/throughput trade of the
+    // bounded host feeder. Tighter windows cap episode-start staging (peak
+    // buffers) at the cost of workers waiting on H2D credits; "inf" stages
+    // every chain head as fast as workers drain them. Windows below the
+    // GPU count are clamped up by the config layer, so the row label
+    // carries the effective window actually run.
+    println!("\n# stage-window sweep (windowed host feeder, 2 GPUs x k=4)\n");
+    let sweep_samples: Vec<tembed::graph::Edge> =
+        samples.iter().copied().take(60_000).collect();
+    for window in [1usize, 2, 4, usize::MAX] {
+        let cfg = tembed::config::TrainConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            subparts: 4,
+            stage_window: Some(window),
+            dim: 32,
+            episode_size: 20_000,
+            ..tembed::config::TrainConfig::default()
+        };
+        let mut trainer = tembed::coordinator::Trainer::new(
+            graph.num_nodes(),
+            &graph.degrees(),
+            cfg,
+            None,
+        )
+        .expect("trainer");
+        let t = Instant::now();
+        let r = trainer.train_epoch(&mut sweep_samples.clone(), 0);
+        let label: String =
+            if window == usize::MAX { "inf".into() } else { window.to_string() };
+        let effective = r.metrics.count("exec_stage_window");
+        let eff_label: String =
+            if window == usize::MAX { "inf".into() } else { effective.to_string() };
+        let row = format!("executor epoch, stage_window={label}");
+        println!(
+            "{:<44} {:>12.2e} samples/s  (peak staged {}, effective window {eff_label})",
+            row,
+            r.samples as f64 / t.elapsed().as_secs_f64(),
+            r.metrics.count("exec_peak_staged"),
+        );
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

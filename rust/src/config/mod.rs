@@ -58,6 +58,12 @@ pub struct TrainConfig {
     pub lr_decay: bool,
     // schedule
     pub subparts: usize,
+    /// Max chain-head sub-part buffers the executor's host feeder holds
+    /// staged-but-unconsumed (bounds episode-start peak memory). `None` =
+    /// auto (2 buffers per worker this process runs); explicit values
+    /// below that worker count are clamped up (see
+    /// [`TrainConfig::effective_stage_window`]).
+    pub stage_window: Option<usize>,
     pub episode_size: usize,
     pub epochs: usize,
     pub pipeline: bool,
@@ -94,6 +100,7 @@ impl Default for TrainConfig {
             learning_rate: 0.025,
             lr_decay: false,
             subparts: 4,
+            stage_window: None,
             episode_size: 2_000_000,
             epochs: 1,
             pipeline: true,
@@ -122,6 +129,26 @@ impl TrainConfig {
 
     pub fn overlap(&self) -> OverlapConfig {
         OverlapConfig { pipeline: self.pipeline, subparts: self.subparts }
+    }
+
+    /// The staging window the executor's host feeder actually runs with:
+    /// the configured `schedule.stage_window`, defaulting to two buffers
+    /// per worker *this process* runs (every simulated GPU single-process,
+    /// one node's GPUs per rank of a real cluster) and clamped up to that
+    /// worker count so one credit can be in flight per worker —
+    /// deadlock-proof by construction. The [`crate::coordinator::Trainer`]
+    /// warns once when a configured value gets clamped.
+    pub fn effective_stage_window(&self) -> usize {
+        let local_gpus = if self.peer_list().is_empty() {
+            self.nodes * self.gpus_per_node
+        } else {
+            self.gpus_per_node
+        };
+        let local_gpus = local_gpus.max(1);
+        match self.stage_window {
+            None => 2 * local_gpus,
+            Some(w) => w.max(local_gpus),
+        }
     }
 
     /// The `cluster.peers` address list, split and trimmed (empty when
@@ -180,7 +207,23 @@ impl TrainConfig {
                 Bool(b) => self.lr_decay = *b,
                 _ => crate::bail!("{path}: expected bool"),
             },
-            "schedule.subparts" => self.subparts = as_usize()?,
+            "schedule.subparts" => {
+                let k = as_usize()?;
+                crate::ensure!(
+                    k >= 1,
+                    "{path}: must be at least 1 (0 sub-parts cannot form a rotation schedule)"
+                );
+                self.subparts = k;
+            }
+            "schedule.stage_window" => {
+                let w = as_usize()?;
+                crate::ensure!(
+                    w >= 1,
+                    "{path}: must be at least 1 (the host feeder needs one staging buffer; \
+                     windows below the GPU count are clamped up at run time)"
+                );
+                self.stage_window = Some(w);
+            }
             "schedule.episode_size" => self.episode_size = as_usize()?,
             "schedule.epochs" => self.epochs = as_usize()?,
             "schedule.pipeline" => match value {
@@ -224,17 +267,23 @@ impl TrainConfig {
     }
 
     /// Render the effective config (logged at startup for reproducibility).
+    /// `stage_window` is only rendered when explicitly configured, so the
+    /// auto default survives a render → parse round trip.
     pub fn render(&self) -> String {
+        let stage_window = self
+            .stage_window
+            .map(|w| format!("stage_window = {w}\n"))
+            .unwrap_or_default();
         format!(
             "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\nrank = {}\npeers = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
-             [schedule]\nsubparts = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
+             [schedule]\nsubparts = {}\n{}episode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
             self.nodes, self.gpus_per_node, self.hardware, self.rank, self.peers,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
-            self.subparts, self.episode_size, self.epochs, self.pipeline, self.socket_aware,
-            self.executor,
+            self.subparts, stage_window, self.episode_size, self.epochs, self.pipeline,
+            self.socket_aware, self.executor,
             self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
             self.seed, self.threads,
             match self.backend { Backend::Native => "native", Backend::Gathered => "gathered", Backend::Pjrt => "pjrt" },
@@ -291,6 +340,53 @@ mod tests {
         let mut c = TrainConfig::default();
         assert!(c.apply_cli("model.dmi=64").is_err());
         assert!(c.apply_cli("no-equals").is_err());
+    }
+
+    #[test]
+    fn zero_subparts_rejected_at_parse_time() {
+        let mut c = TrainConfig::default();
+        let err = c.apply_cli("schedule.subparts=0").unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        assert_eq!(c.subparts, 4, "rejected value must not stick");
+        assert!(c.apply_cli("schedule.subparts=2").is_ok());
+        assert_eq!(c.subparts, 2);
+        // same rejection through the file parser
+        let dir = std::env::temp_dir().join("tembed_cfg_subparts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.toml");
+        std::fs::write(&p, "[schedule]\nsubparts = 0\n").unwrap();
+        assert!(TrainConfig::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn stage_window_validation_and_clamping() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.stage_window, None);
+        // auto default: 2 buffers per GPU
+        assert_eq!(c.effective_stage_window(), 2 * c.nodes * c.gpus_per_node);
+        let err = c.apply_cli("schedule.stage_window=0").unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        c.apply_cli("schedule.stage_window=3").unwrap();
+        assert_eq!(c.stage_window, Some(3));
+        // 3 < 8 GPUs: clamped up to the GPU count (deadlock-proof floor)
+        assert_eq!(c.effective_stage_window(), c.nodes * c.gpus_per_node);
+        c.apply_cli("schedule.stage_window=32").unwrap();
+        assert_eq!(c.effective_stage_window(), 32);
+    }
+
+    #[test]
+    fn stage_window_renders_only_when_set() {
+        let mut c = TrainConfig::default();
+        assert!(!c.render().contains("stage_window"));
+        c.stage_window = Some(7);
+        assert!(c.render().contains("stage_window = 7"));
+        // and round-trips through the parser
+        let dir = std::env::temp_dir().join("tembed_cfg_window_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, c.render()).unwrap();
+        let back = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(back.stage_window, Some(7));
     }
 
     #[test]

@@ -211,6 +211,26 @@ k = "a\"b\\c\nd"
     }
 
     #[test]
+    fn schedule_section_reaches_entries_in_document_order() {
+        // the config layer validates schedule.subparts/stage_window as the
+        // entries stream out of here — order and typing must be stable
+        let doc = parse("[schedule]\nsubparts = 4\nstage_window = 16\nexecutor = true\n").unwrap();
+        let got: Vec<_> = doc.entries().collect();
+        assert_eq!(
+            got,
+            vec![
+                ("schedule", "subparts", &Value::Int(4)),
+                ("schedule", "stage_window", &Value::Int(16)),
+                ("schedule", "executor", &Value::Bool(true)),
+            ]
+        );
+        // negative windows arrive as Int(-1), not a silent usize wrap —
+        // the config's non-negative check depends on this
+        let neg = parse("[schedule]\nstage_window = -1\n").unwrap();
+        assert_eq!(neg.get("schedule", "stage_window"), Some(&Value::Int(-1)));
+    }
+
+    #[test]
     fn infer_matches_parser() {
         assert_eq!(Value::infer("42"), Value::Int(42));
         assert_eq!(Value::infer("4.5"), Value::Float(4.5));

@@ -123,10 +123,20 @@ impl<'g> Driver<'g> {
         // validation hook: replay the executor's *measured* per-phase
         // timings through the same discrete-event model that produces the
         // simulated clock, so reports carry model-vs-measured side by side
+        // for every Fig. 3 phase, not just one blended number
         if let Some(d) = self.trainer.measured_durations() {
             let modeled = crate::pipeline::simulate_step(d, self.cfg.overlap());
             report.metrics.add_secs("measured_step_model", modeled);
             report.metrics.add_secs("measured_train_phase", d.train);
+            report.metrics.add_secs("measured_sample_phase", d.load_samples);
+            report.metrics.add_secs("measured_h2d_phase", d.prefetch_h2d);
+            report.metrics.add_secs("measured_d2h_phase", d.d2h_writeback);
+            report.metrics.add_secs("measured_intra_hop_phase", d.p2p);
+            report.metrics.add_secs("measured_inter_hop_phase", d.inter_node);
+        }
+        if let Some(s) = self.trainer.simulated_durations() {
+            let modeled = crate::pipeline::simulate_step(s, self.cfg.overlap());
+            report.metrics.add_secs("simulated_step_model", modeled);
         }
         if let Some(eff) = self.trainer.measured_overlap_efficiency() {
             report.metrics.add("exec_overlap_pct", (eff * 100.0).round() as u64);
@@ -241,6 +251,18 @@ mod tests {
         assert!(r.metrics.secs("measured_step_model") > 0.0);
         assert!(r.metrics.secs("exec_wall") > 0.0);
         assert!(r.metrics.count("exec_overlap_pct") <= 100);
+        // every measured phase reaches the report next to the simulated
+        // step cost, so the simulator is validated leg by leg
+        assert!(r.metrics.secs("measured_sample_phase") > 0.0);
+        assert!(r.metrics.secs("measured_h2d_phase") > 0.0);
+        assert!(r.metrics.secs("measured_d2h_phase") > 0.0);
+        assert!(r.metrics.secs("measured_intra_hop_phase") > 0.0);
+        assert!(r.metrics.secs("simulated_step_model") > 0.0);
+        // single node: no inter-node hops, measured or otherwise
+        assert_eq!(r.metrics.secs("measured_inter_hop_phase"), 0.0);
+        // the bounded feeder's gauge rode along
+        let peak = r.metrics.count("exec_peak_staged");
+        assert!(peak >= 1 && peak <= r.metrics.count("exec_stage_window"));
     }
 
     #[test]

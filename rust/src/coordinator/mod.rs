@@ -52,6 +52,9 @@ pub struct Trainer {
     /// Measured per-phase durations of the most recent executor episode
     /// (None before the first episode or with `executor = false`).
     last_exec: Option<PhaseDurations>,
+    /// The discrete-event model's fabric-priced durations of the same
+    /// episode — the simulated column of the per-phase validation table.
+    last_sim: Option<PhaseDurations>,
     /// Measured overlap efficiency of the most recent executor episode.
     last_overlap: Option<f64>,
     /// Multi-process cluster membership: set, this rank runs only its own
@@ -89,6 +92,16 @@ impl Trainer {
         let samplers: Vec<NegativeSampler> =
             (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
         let rngs: Vec<Rng> = (0..gpus).map(|g| rng.fork(g as u64)).collect();
+        if let Some(w) = cfg.stage_window {
+            let eff = cfg.effective_stage_window();
+            if eff > w {
+                eprintln!(
+                    "warning: schedule.stage_window = {w} is below this process's worker \
+                     count; clamping to {eff} (one staging credit per worker keeps the \
+                     feeder deadlock-proof)"
+                );
+            }
+        }
         let mut backends: Vec<Box<dyn StepBackend>> = Vec::with_capacity(gpus);
         let max_subpart = (0..plan.total_subparts())
             .map(|sp| plan.subpart_range(sp).len())
@@ -117,6 +130,7 @@ impl Trainer {
             rngs,
             metrics: Metrics::new(),
             last_exec: None,
+            last_sim: None,
             last_overlap: None,
             cluster_handle: None,
         })
@@ -144,6 +158,24 @@ impl Trainer {
     /// wall-clock phase timings (see `exec::ExecRun::measured_durations`).
     pub fn measured_durations(&self) -> Option<&PhaseDurations> {
         self.last_exec.as_ref()
+    }
+
+    /// The discrete-event model's fabric-priced durations of the same
+    /// episode (see `exec::ExecRun::simulated_durations`) — what the
+    /// measured phases are validated against.
+    pub fn simulated_durations(&self) -> Option<&PhaseDurations> {
+        self.last_sim.as_ref()
+    }
+
+    /// The per-phase measured-vs-simulated validation table of the most
+    /// recent executor episode (None with `executor = false` or before
+    /// the first episode) — each of the seven Fig. 3 phases next to its
+    /// simulated counterpart, plus the step cost each side implies.
+    pub fn phase_table(&self) -> Option<String> {
+        match (&self.last_exec, &self.last_sim) {
+            (Some(m), Some(s)) => Some(crate::pipeline::phase_table(m, s, self.cfg.overlap())),
+            _ => None,
+        }
     }
 
     /// Measured overlap efficiency of the most recent executor episode
@@ -265,6 +297,7 @@ impl Trainer {
             dim: self.cfg.dim,
             lr,
             crosses_node: self.plan.nodes > 1,
+            stage_window: self.cfg.effective_stage_window(),
         };
         let view = self.cluster_handle.as_deref().map(|h| h.view());
         let run = crate::exec::run_episode_ranked(
@@ -297,6 +330,15 @@ impl Trainer {
         self.metrics.add_secs("exec_wall", run.measure.wall_secs);
         self.metrics.add_secs("exec_compute", run.measure.compute_secs);
         self.metrics.add_secs("exec_stall", run.measure.stall_secs);
+        // the per-phase clocks (sample load, H2D staging, D2H write-back,
+        // intra-node hop) ride alongside the aggregates
+        self.metrics.add_secs("exec_sample_load", run.measure.sample_secs);
+        self.metrics.add_secs("exec_h2d_stage", run.measure.h2d_secs);
+        self.metrics.add_secs("exec_d2h_writeback", run.measure.d2h_secs);
+        self.metrics.add_secs("exec_intra_hop", run.measure.intra_secs);
+        // the bounded-feeder gauge: high-water staged buffers vs window
+        self.metrics.add_max("exec_peak_staged", run.measure.peak_staged as u64);
+        self.metrics.add_max("exec_stage_window", run.measure.stage_window as u64);
         if run.measure.inter_node_secs > 0.0 {
             // genuine network hops (multi-process runs only)
             self.metrics.add_secs("exec_inter_node", run.measure.inter_node_secs);
@@ -305,12 +347,15 @@ impl Trainer {
         }
         self.metrics.add("exec_util_pct", (run.measure.utilization() * 100.0).round() as u64);
         self.last_overlap = Some(run.measure.overlap_efficiency());
-        self.last_exec = Some(run.measured_durations(
+        // one trace aggregation serves both sides of the validation table
+        let sim_d = run.simulated_durations(
             &self.cluster,
             self.cfg.batch,
             self.cfg.negatives,
             self.cfg.dim,
-        ));
+        );
+        self.last_exec = Some(run.measured_from(sim_d.clone()));
+        self.last_sim = Some(sim_d);
         (sim, loss, samples)
     }
 
@@ -526,8 +571,22 @@ mod tests {
         }
         let eff = a.measured_overlap_efficiency().expect("measured efficiency");
         assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
-        assert!(a.measured_durations().expect("measured durations").train > 0.0);
+        let md = a.measured_durations().expect("measured durations");
+        assert!(md.train > 0.0);
+        // every executor-side phase carries its own measured clock
+        assert!(md.load_samples > 0.0 && md.prefetch_h2d > 0.0);
+        assert!(md.d2h_writeback > 0.0 && md.p2p > 0.0);
+        assert!(a.simulated_durations().expect("simulated durations").train > 0.0);
+        let table = a.phase_table().expect("phase table");
+        for name in crate::pipeline::PhaseDurations::NAMES {
+            assert!(table.contains(name), "phase {name} missing:\n{table}");
+        }
+        // the bounded feeder ran and its gauge respected the window
+        let peak = a.metrics.count("exec_peak_staged");
+        let window = a.metrics.count("exec_stage_window");
+        assert!(peak >= 1 && peak <= window, "peak {peak} vs window {window}");
         assert!(b.measured_overlap_efficiency().is_none());
+        assert!(b.phase_table().is_none(), "serial path has no measured table");
         let sa = a.finish();
         let sb = b.finish();
         assert_eq!(sa.vertex, sb.vertex);

@@ -136,6 +136,9 @@ pub struct PlanMsg {
     pub nodes: usize,
     pub gpus_per_node: usize,
     pub subparts: usize,
+    /// The driver's configured staging window (None = auto), adopted so
+    /// every rank's feeder honors the same memory bound.
+    pub stage_window: Option<usize>,
     pub dim: usize,
     pub negatives: usize,
     pub batch: usize,
@@ -164,6 +167,7 @@ impl PlanMsg {
             nodes: cfg.nodes,
             gpus_per_node: cfg.gpus_per_node,
             subparts: cfg.subparts,
+            stage_window: cfg.stage_window,
             dim: cfg.dim,
             negatives: cfg.negatives,
             batch: cfg.batch,
@@ -188,6 +192,7 @@ impl PlanMsg {
         cfg.nodes = self.nodes;
         cfg.gpus_per_node = self.gpus_per_node;
         cfg.subparts = self.subparts;
+        cfg.stage_window = self.stage_window;
         cfg.dim = self.dim;
         cfg.negatives = self.negatives;
         cfg.batch = self.batch;
@@ -223,6 +228,8 @@ impl PlanMsg {
         ] {
             w.put_u64(v as u64);
         }
+        // 0 = auto window (explicit 0 is rejected at config parse time)
+        w.put_u64(self.stage_window.map_or(0, |w| w as u64));
         w.put_u64(self.seed);
         w.put_f32(self.learning_rate);
         w.put_u8(self.lr_decay as u8);
@@ -247,6 +254,10 @@ impl PlanMsg {
         let walks_per_node = next()?;
         let window = next()?;
         let walk_epochs = next()?;
+        let stage_window = match next()? {
+            0 => None,
+            w => Some(w),
+        };
         let seed = r.u64()?;
         let learning_rate = r.f32()?;
         let lr_decay = r.u8()? != 0;
@@ -256,6 +267,7 @@ impl PlanMsg {
             nodes,
             gpus_per_node,
             subparts,
+            stage_window,
             dim,
             negatives,
             batch,
@@ -447,9 +459,15 @@ mod tests {
     fn plan_msg_round_trips() {
         let cfg = TrainConfig { nodes: 2, gpus_per_node: 4, epochs: 7, ..TrainConfig::default() };
         let m = PlanMsg::from_config(&cfg, true, 0xDEADBEEF);
+        assert_eq!(m.stage_window, None, "auto window rides as the 0 sentinel");
         let back = PlanMsg::decode(&m.encode()).unwrap();
         assert_eq!(back, m);
         assert!(PlanMsg::decode(&m.encode()[..10]).is_err(), "truncated plan rejected");
+        // an explicit staging bound survives the wire
+        let bounded =
+            TrainConfig { stage_window: Some(12), ..cfg };
+        let m2 = PlanMsg::from_config(&bounded, false, 1);
+        assert_eq!(PlanMsg::decode(&m2.encode()).unwrap().stage_window, Some(12));
     }
 
     #[test]
@@ -458,6 +476,7 @@ mod tests {
             nodes: 2,
             gpus_per_node: 2,
             subparts: 3,
+            stage_window: Some(5),
             dim: 16,
             seed: 99,
             threads: 3,
@@ -468,6 +487,7 @@ mod tests {
         let mut worker_cfg = TrainConfig { executor: false, ..TrainConfig::default() };
         m.apply(&mut worker_cfg);
         assert_eq!(worker_cfg.subparts, 3);
+        assert_eq!(worker_cfg.stage_window, Some(5), "staging bound adopted");
         assert_eq!(worker_cfg.dim, 16);
         assert_eq!(worker_cfg.seed, 99);
         assert_eq!(worker_cfg.threads, 3);

@@ -1,0 +1,187 @@
+//! The windowed host feeder: stages chain-head sub-parts out of the host
+//! store lazily, bounded by `stage_window` in-flight buffers, instead of
+//! checking out every chain head up front (which held one extra full
+//! vertex-matrix copy at episode start — the PyTorch-BigGraph-style
+//! bucket-buffer shape, staging sized O(window) instead of O(model)).
+//! This bounds the *staging* side only: chain-end buffers still pool in
+//! the workers' finals until the episode's check-in pass — streaming
+//! those out mid-episode is the checkpoint-streaming ROADMAP item.
+//!
+//! ## Protocol
+//!
+//! Heads are staged in **need order** — sorted by `(first step that
+//! consumes the head, gpu)` — and each `checkout_vertex` (the H2D memcpy)
+//! is sent straight into the consuming worker's inbox. A worker acks the
+//! feeder the moment a staged head becomes its front buffer, releasing one
+//! window credit; the feeder blocks when `window` heads are staged but
+//! unconsumed.
+//!
+//! ## Deadlock-freedom (any `window >= 1`)
+//!
+//! Consider the blocked worker holding the globally smallest unfinished
+//! `(step, gpu)`. Its missing sub-part either travels the rotation ring —
+//! then its producer step is strictly earlier, hence finished, hence the
+//! hand-off was sent — or it is an unstaged chain head. In the latter case
+//! every head staged before it precedes it in need order, i.e. is consumed
+//! at a strictly smaller `(step, gpu)`, which by minimality has completed
+//! and therefore acked. So all window credits return and the feeder
+//! stages the missing head: contradiction. The config layer still clamps
+//! the window to at least the GPU count (`TrainConfig::
+//! effective_stage_window`) so one credit can be in flight per worker.
+//!
+//! ## Abort safety
+//!
+//! The feeder never blocks on anything a dead worker holds open: a
+//! poisoned episode drops every worker's inbox receiver and ack sender,
+//! so the feeder's `send` or `recv` fails and it exits with the stats it
+//! has. It is itself wrapped in the same poison-on-panic guard as the
+//! workers (see `run_episode_ranked`).
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::embed::EmbeddingStore;
+use crate::partition::HierarchyPlan;
+
+use super::trace::{Phase, PhaseClock};
+use super::RingMsg;
+
+/// One chain head the feeder must stage: consumed at `first_step` by
+/// `gpu`, carrying sub-part `subpart`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Head {
+    pub first_step: usize,
+    pub gpu: usize,
+    pub subpart: usize,
+}
+
+/// What the feeder measured: the H2D staging clock and the bounded-window
+/// gauge.
+#[derive(Debug, Default, Clone)]
+pub(crate) struct FeederStats {
+    /// Seconds inside `checkout_vertex` (the H2D staging phase).
+    pub h2d_secs: f64,
+    /// Heads actually staged (this rank's share of the chains).
+    pub staged: usize,
+    /// Peak staged-but-unconsumed buffers — never exceeds the window by
+    /// construction.
+    pub peak_staged: usize,
+}
+
+/// Stage every locally-owned chain head, at most `window` in flight.
+/// `heads` must be in need order; `inboxes[g]` is `None` for GPUs owned
+/// by other ranks (their heads are staged by that rank's own feeder from
+/// its replicated store).
+pub(crate) fn run(
+    store: &EmbeddingStore,
+    plan: &HierarchyPlan,
+    heads: &[Head],
+    inboxes: &[Option<Sender<RingMsg>>],
+    window: usize,
+    acks: &Receiver<()>,
+) -> FeederStats {
+    let window = window.max(1);
+    let mut stats = FeederStats::default();
+    let mut clock = PhaseClock::new();
+    let mut in_flight = 0usize;
+    for h in heads {
+        let Some(tx) = &inboxes[h.gpu] else { continue };
+        // opportunistic drain so the gauge reflects truly-outstanding
+        // buffers, not just the moments the window forced a wait
+        while acks.try_recv().is_ok() {
+            in_flight = in_flight.saturating_sub(1);
+        }
+        while in_flight >= window {
+            match acks.recv() {
+                Ok(()) => in_flight -= 1,
+                // every worker exited (panic/poison path): stop staging
+                Err(_) => {
+                    stats.h2d_secs = clock.secs(Phase::H2dStage);
+                    return stats;
+                }
+            }
+        }
+        let buf =
+            clock.time(Phase::H2dStage, || store.checkout_vertex(plan.subpart_range(h.subpart)));
+        stats.h2d_secs = clock.secs(Phase::H2dStage);
+        if tx.send((h.subpart, buf)).is_err() {
+            // the consuming worker is gone (abort mid-episode)
+            return stats;
+        }
+        in_flight += 1;
+        stats.staged += 1;
+        stats.peak_staged = stats.peak_staged.max(in_flight);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::mpsc::channel;
+
+    /// A consumer thread plays the worker side (recv a head, ack it): the
+    /// feeder must stage every head, never hold more than `window` staged
+    /// at once, and deliver exact store bytes.
+    #[test]
+    fn window_bounds_in_flight_heads() {
+        let plan = HierarchyPlan::new(1, 1, 4, 64);
+        let store = EmbeddingStore::init(64, 4, &mut Rng::new(1));
+        let heads: Vec<Head> = (0..plan.total_subparts())
+            .map(|sp| Head { first_step: sp, gpu: 0, subpart: sp })
+            .collect();
+        let (tx, rx) = channel();
+        let (ack_tx, ack_rx) = channel();
+        let n = heads.len();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::with_capacity(n);
+            for _ in 0..n {
+                let msg = rx.recv().expect("head staged");
+                got.push(msg);
+                ack_tx.send(()).expect("feeder side alive");
+            }
+            got
+        });
+        let stats = run(&store, &plan, &heads, &[Some(tx)], 2, &ack_rx);
+        assert_eq!(stats.staged, n);
+        assert!(
+            stats.peak_staged >= 1 && stats.peak_staged <= 2,
+            "gauge {} outside the window",
+            stats.peak_staged
+        );
+        assert!(stats.h2d_secs > 0.0);
+        // every head landed with the exact store bytes
+        let got = consumer.join().expect("consumer thread");
+        assert_eq!(got.len(), n);
+        for (sp, buf) in got {
+            assert_eq!(buf, store.checkout_vertex(plan.subpart_range(sp)));
+        }
+    }
+
+    #[test]
+    fn feeder_exits_when_workers_die() {
+        let plan = HierarchyPlan::new(1, 1, 4, 32);
+        let store = EmbeddingStore::init(32, 4, &mut Rng::new(2));
+        let heads: Vec<Head> =
+            (0..4).map(|sp| Head { first_step: sp, gpu: 0, subpart: sp }).collect();
+        let (tx, rx) = channel();
+        drop(rx); // worker gone before staging starts
+        let (_ack_tx, ack_rx) = channel::<()>();
+        let stats = run(&store, &plan, &heads, &[Some(tx)], 8, &ack_rx);
+        assert_eq!(stats.staged, 0, "no send can land after the worker died");
+    }
+
+    #[test]
+    fn feeder_exits_when_acks_disconnect_at_a_full_window() {
+        let plan = HierarchyPlan::new(1, 1, 4, 32);
+        let store = EmbeddingStore::init(32, 4, &mut Rng::new(3));
+        let heads: Vec<Head> =
+            (0..4).map(|sp| Head { first_step: sp, gpu: 0, subpart: sp }).collect();
+        let (tx, _rx) = channel();
+        let (ack_tx, ack_rx) = channel::<()>();
+        drop(ack_tx); // no worker will ever ack
+        let stats = run(&store, &plan, &heads, &[Some(tx)], 1, &ack_rx);
+        assert_eq!(stats.staged, 1, "one head fits the window, then the feeder must bail");
+        assert_eq!(stats.peak_staged, 1);
+    }
+}

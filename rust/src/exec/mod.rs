@@ -1,74 +1,72 @@
 //! Multi-threaded data-parallel episode executor — the §III schedule
-//! *actually running* instead of being priced by the discrete-event model.
+//! *actually running* rather than priced by the discrete-event model.
 //!
-//! One worker thread per simulated GPU owns that GPU's pinned context
-//! shard and compute backend (model parallelism). Vertex sub-parts rotate
-//! between workers along the hierarchical schedule's ownership chain:
-//! after GPU `g` trains sub-part `s` at step `t`, the trained buffer is
-//! sent directly to the GPU scheduled to train `s` next (the §III-B P2P
-//! rotation), or back to the host store after the chain's last step. Each
-//! worker keeps a reorder stage (`pending`) of sub-parts that arrived
-//! early — the double-buffered ping-pong: while the front sub-part trains,
-//! the next one lands in the back buffer.
+//! The executor is layered (this module only orchestrates): [`feeder`] is
+//! a windowed host feeder staging chain-head sub-parts lazily, at most
+//! `stage_window` buffers in flight — episode-*start* staging is O(window)
+//! instead of one up-front full vertex-matrix copy (chain-end buffers
+//! still pool until the episode's check-in pass; see `feeder`'s docs);
+//! [`worker`] is the per-GPU worker loop — one thread per simulated GPU
+//! owning its pinned context shard and compute backend, with a reorder
+//! stage for early arrivals (the double-buffered ping-pong); [`trace`] is
+//! the [`PhaseClock`] timing every leg of a step separately, validating
+//! the simulator per phase (see its docs for the Fig. 3 mapping).
 //!
-//! Every hand-off goes through a **hop endpoint** ([`Outbox`]): an
-//! intra-node hop is an in-process channel send (exactly the pre-transport
-//! behavior, so single-process runs stay bit-identical), while an
-//! inter-node hop — a destination GPU owned by another rank — is a framed
-//! message over `comm::transport`. [`run_episode`] is the single-process
-//! entry; [`run_episode_ranked`] runs one rank's workers of a multi-process
-//! cluster, with chain-end sub-parts broadcast to every rank (keeping the
-//! replicated host stores identical) and each rank's measured traces folded
-//! back to the rank-0 driver over the same transport.
+//! Vertex sub-parts rotate between workers along the hierarchical
+//! schedule's ownership chain: after GPU `g` trains sub-part `s`, the
+//! buffer goes straight to the GPU scheduled to train `s` next (the
+//! §III-B P2P rotation), or back to the host store after the chain's last
+//! step — through a hop endpoint (`worker::Outbox`): intra-node hops are
+//! channel sends, inter-node hops are framed messages over
+//! `comm::transport`. [`run_episode`] is the single-process entry;
+//! [`run_episode_ranked`] runs one rank's workers, with chain-end
+//! sub-parts broadcast so the replicated host stores stay identical.
 //!
 //! There is **no global barrier**: workers drift freely and synchronize
 //! only through the data dependencies the schedule implies. Correctness
-//! rests on the plan's orthogonality invariant (no two GPUs ever hold the
-//! same sub-part at one step) plus the chain hand-off: a sub-part is
-//! reachable by exactly one worker at any moment. Deadlock-freedom:
-//! consider the blocked worker waiting on the smallest step index — its
-//! dependency is an earlier step, so that step's worker is either
-//! computing (progress) or blocked on a still-smaller step, contradiction.
-//! The argument is rank-agnostic: a socket hop is just a slower channel.
-//!
-//! Because each worker draws its per-step negatives in its own schedule
-//! order and every buffer hand-off carries exact values, the executor is
-//! **bit-identical** to the serial reference schedule (the
-//! `executor = false` path in the coordinator) — the parity test in
-//! `tests/executor_parity.rs` holds to strict tolerance, and
-//! `tests/internode_smoke.rs` holds the same parity across two OS
-//! processes.
-//!
-//! Measured wall-clock phase timings (compute vs. stall vs. inter-node
-//! hop per step) are reported through [`ExecMeasure`] and folded into the
-//! existing `pipeline::PhaseBytes`/`simulate_step` report path by the
-//! coordinator, so the simulator is validated against a run that genuinely
-//! overlaps compute and transfer — including real network hops.
+//! rests on the plan's orthogonality invariant plus the chain hand-off (a
+//! sub-part is reachable by exactly one worker at any moment);
+//! deadlock-freedom is the smallest-blocked-step argument (see `feeder`
+//! for the staging window's half), rank-agnostic — a socket hop is just a
+//! slower channel. Because each worker draws its per-step negatives in
+//! its own schedule order and every hand-off carries exact values, the
+//! executor is **bit-identical** to the serial reference schedule for
+//! *any* staging window — `tests/executor_parity.rs` and
+//! `tests/feeder_window.rs` pin this, and `tests/internode_smoke.rs`
+//! holds the same parity across two OS processes.
+
+pub(crate) mod feeder;
+pub mod trace;
+pub(crate) mod worker;
+
+#[cfg(test)]
+mod tests;
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::cluster::ClusterSpec;
 use crate::comm::transport::{
-    self, DemuxHub, PayloadReader, PayloadWriter, Transport, WireMsg, KIND_FINAL, KIND_MEASURE,
-    KIND_POISON, KIND_SUBPART, POISON_SUBPART,
+    self, DemuxHub, Transport, WireMsg, KIND_FINAL, KIND_MEASURE, POISON_SUBPART,
 };
 use crate::embed::sgns::StepBackend;
 use crate::embed::EmbeddingStore;
 use crate::metrics::Timer;
 use crate::partition::HierarchyPlan;
-use crate::pipeline::{PhaseBytes, PhaseDurations};
-use crate::sample::{assemble_block, EpisodePool, NegativeSampler};
+use crate::sample::{EpisodePool, NegativeSampler};
 use crate::util::Rng;
 
-/// A sub-part moving along the rotation ring: `(subpart id, rows)`.
-type RingMsg = (usize, Vec<f32>);
+pub use trace::{ExecMeasure, ExecRun, Phase, PhaseClock, StepTrace};
 
-/// Sentinel sub-part id broadcast to every worker when one panics (or a
-/// peer rank dies), so peers blocked in `recv` abort instead of
-/// deadlocking (no real sub-part id can reach `usize::MAX`).
-const POISON: usize = POISON_SUBPART;
+use trace::{decode_measure, encode_measure, RankMeasure};
+use worker::{Dest, Hop, Outbox, Seat, WorkerOut};
+
+/// A sub-part moving along the rotation ring: `(subpart id, rows)`.
+pub(crate) type RingMsg = (usize, Vec<f32>);
+
+/// Sentinel sub-part id broadcast when a worker panics (or a peer rank
+/// dies), so peers blocked in `recv` abort instead of deadlocking.
+pub(crate) const POISON: usize = POISON_SUBPART;
 
 /// Immutable inputs of one episode run.
 pub struct ExecCtx<'a> {
@@ -81,11 +79,13 @@ pub struct ExecCtx<'a> {
     /// Whether sub-part rotation crosses node boundaries (prices the
     /// inter-node phase in the simulator).
     pub crosses_node: bool,
+    /// Max chain-head buffers the host feeder holds staged-but-unconsumed
+    /// (see `TrainConfig::effective_stage_window`; clamped to >= 1).
+    pub stage_window: usize,
 }
 
 /// One rank's view of the multi-process cluster: one rank per simulated
-/// node, rank 0 the driver. `None` cluster = single process, all GPUs
-/// local.
+/// node, rank 0 the driver.
 pub struct ClusterView<'a> {
     pub rank: usize,
     pub world: usize,
@@ -106,149 +106,25 @@ impl ClusterView<'_> {
     }
 }
 
-/// One worker's outcome for one scheduled step: the training result plus
-/// the measured wall-clock split between stall, compute, and hand-off.
-#[derive(Debug, Clone)]
-pub struct StepTrace {
-    /// Global step index in the rotation schedule.
-    pub step: usize,
-    /// Global GPU (worker) index.
-    pub gpu: usize,
-    /// Sub-part trained at this step.
-    pub subpart: usize,
-    pub loss: f64,
-    pub samples: u64,
-    /// Byte counters for the discrete-event pipeline model.
-    pub bytes: PhaseBytes,
-    /// Seconds this worker spent blocked waiting for the sub-part to
-    /// arrive — the *exposed* (un-overlapped) transfer latency.
-    pub stall_secs: f64,
-    /// Seconds inside the backend's `step_block` (the compute phase).
-    pub compute_secs: f64,
-    /// Seconds spent pushing the trained sub-part across a rank boundary
-    /// (framing + socket write). Zero for intra-node channel hops.
-    pub hop_secs: f64,
-}
-
-/// Aggregate measurement of one episode across all workers.
-#[derive(Debug, Default, Clone)]
-pub struct ExecMeasure {
-    /// Wall time of the whole episode (staging + all workers; across
-    /// ranks this is the max of the per-rank walls).
-    pub wall_secs: f64,
-    /// Summed per-worker compute seconds.
-    pub compute_secs: f64,
-    /// Summed per-worker stall seconds.
-    pub stall_secs: f64,
-    /// Summed per-worker seconds inside genuine inter-node hops (framed
-    /// socket sends). Zero in single-process runs.
-    pub inter_node_secs: f64,
-    pub workers: usize,
-    pub steps: usize,
-}
-
-impl ExecMeasure {
-    /// Fraction of worker-active time spent computing rather than stalled
-    /// on sub-part arrival — the measured counterpart of the §III-C
-    /// overlap-efficiency number (1.0 = transfers fully hidden).
-    pub fn overlap_efficiency(&self) -> f64 {
-        let denom = self.compute_secs + self.stall_secs;
-        if denom <= 0.0 {
-            0.0
-        } else {
-            self.compute_secs / denom
-        }
-    }
-
-    /// Worker-occupancy: summed compute over (workers × wall). Below 1/workers
-    /// means the run was serial in practice; near 1.0 means linear scaling.
-    pub fn utilization(&self) -> f64 {
-        if self.wall_secs <= 0.0 || self.workers == 0 {
-            return 0.0;
-        }
-        self.compute_secs / (self.wall_secs * self.workers as f64)
-    }
-}
-
-/// Result of one executed episode: per-step traces sorted by
-/// `(step, gpu)` — the same fold order as the serial reference — plus the
-/// aggregate measurement. On the multi-process driver the traces cover
-/// every rank's workers (folded back over the transport); on a non-driver
-/// rank they cover only the local workers.
-#[derive(Debug)]
-pub struct ExecRun {
-    pub traces: Vec<StepTrace>,
-    pub measure: ExecMeasure,
-}
-
-impl ExecRun {
-    /// Fold the measured run into the discrete-event model's inputs: the
-    /// mean measured compute per step becomes the `train` phase, the
-    /// measured inter-node hop seconds (when any hop actually crossed a
-    /// socket) become the `inter_node` phase, and the remaining transfer
-    /// phases are priced from the aggregated byte counters through
-    /// `spec`'s fabric — `PhaseBytes::durations` on real counts. Feeding
-    /// this to `pipeline::simulate_step` validates the simulator against
-    /// a run that genuinely overlapped compute and transfer.
-    pub fn measured_durations(
-        &self,
-        spec: &ClusterSpec,
-        batch: usize,
-        negatives: usize,
-        dim: usize,
-    ) -> PhaseDurations {
-        let n = self.traces.len().max(1) as u64;
-        let mut agg = PhaseBytes::default();
-        for t in &self.traces {
-            agg.sample_bytes += t.bytes.sample_bytes;
-            agg.subpart_bytes += t.bytes.subpart_bytes;
-            agg.train_samples += t.bytes.train_samples;
-            agg.crosses_node |= t.bytes.crosses_node;
-        }
-        let mean = PhaseBytes {
-            sample_bytes: agg.sample_bytes / n,
-            subpart_bytes: agg.subpart_bytes / n,
-            train_samples: agg.train_samples / n,
-            crosses_node: agg.crosses_node,
-        };
-        let mut d = mean.durations(spec, batch, negatives, dim);
-        d.train = self.measure.compute_secs / n as f64;
-        if self.measure.inter_node_secs > 0.0 {
-            // real network hops were measured: report them instead of the
-            // fabric estimate (single-process runs keep the estimate)
-            d.inter_node = self.measure.inter_node_secs / n as f64;
-        }
-        d
-    }
-}
-
-/// Where a trained sub-part goes after a step.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Dest {
-    /// Hand off to the worker that trains it next (P2P rotation).
-    Gpu(usize),
-    /// Chain finished: return to the host store (D2H write-back).
-    Host,
-}
-
 /// Per-episode routing derived from the hierarchical schedule.
-struct Routing {
+pub(crate) struct Routing {
     /// `sched[g]` = this worker's `(step index, subpart)` sequence.
-    sched: Vec<Vec<(usize, usize)>>,
-    /// `dest[g][step]` = where worker `g` sends the sub-part it trained
-    /// at that step.
-    dest: Vec<Vec<Dest>>,
-    /// `(subpart, first owner)` pairs — the initial H2D staging.
-    heads: Vec<(usize, usize)>,
+    pub sched: Vec<Vec<(usize, usize)>>,
+    /// `dest[g][step]` = where worker `g` sends that step's sub-part.
+    pub dest: Vec<Vec<Dest>>,
+    /// `head_flags[g][step]` = that step consumes a feeder-staged head.
+    pub head_flags: Vec<Vec<bool>>,
+    /// Every chain head in **need order** (`(first step, gpu)`) — the
+    /// feeder's staging queue; the bounded window relies on this ordering.
+    pub heads: Vec<feeder::Head>,
 }
 
-fn build_routing(plan: &HierarchyPlan) -> Routing {
+pub(crate) fn build_routing(plan: &HierarchyPlan) -> Routing {
     let gpus = plan.total_gpus();
     let steps = plan.steps();
     // ownership chain of every sub-part, in step order
     let mut chains: Vec<Vec<(usize, usize)>> = vec![Vec::new(); plan.total_subparts()];
-    let mut sched: Vec<Vec<(usize, usize)>> =
-        vec![Vec::with_capacity(steps.len()); gpus];
+    let mut sched: Vec<Vec<(usize, usize)>> = vec![Vec::with_capacity(steps.len()); gpus];
     for (si, st) in steps.iter().enumerate() {
         for (g, &sp) in st.assignment.iter().enumerate() {
             chains[sp].push((si, g));
@@ -256,10 +132,12 @@ fn build_routing(plan: &HierarchyPlan) -> Routing {
         }
     }
     let mut dest: Vec<Vec<Dest>> = vec![vec![Dest::Host; steps.len()]; gpus];
+    let mut head_flags: Vec<Vec<bool>> = vec![vec![false; steps.len()]; gpus];
     let mut heads = Vec::with_capacity(chains.len());
     for (sp, chain) in chains.iter().enumerate() {
-        if let Some(&(_, g0)) = chain.first() {
-            heads.push((sp, g0));
+        if let Some(&(si, g0)) = chain.first() {
+            heads.push(feeder::Head { first_step: si, gpu: g0, subpart: sp });
+            head_flags[g0][si] = true;
         }
         for w in chain.windows(2) {
             let (si, g) = w[0];
@@ -267,78 +145,13 @@ fn build_routing(plan: &HierarchyPlan) -> Routing {
             dest[g][si] = Dest::Gpu(g_next);
         }
     }
-    Routing { sched, dest, heads }
-}
-
-/// Per-worker seat: inbox plus routing slices.
-struct Seat {
-    inbox: Receiver<RingMsg>,
-    sched: Vec<(usize, usize)>,
-    dest: Vec<Dest>,
-}
-
-/// One outbound hop endpoint per global GPU: the in-process channel of a
-/// local worker, or the framed transport to the rank owning a remote one.
-enum Hop {
-    Local(Sender<RingMsg>),
-    Remote(Arc<dyn Transport>),
-}
-
-/// The executor's hand-off path: every worker sends trained sub-parts
-/// through here, local or not.
-struct Outbox {
-    hops: Vec<Hop>,
-    /// One transport per remote rank, for abort broadcasts.
-    remotes: Vec<Arc<dyn Transport>>,
-}
-
-impl Outbox {
-    /// Deliver sub-part `sp` to global GPU `to`. Returns the seconds the
-    /// hop took when it crossed a rank boundary (framing + socket write),
-    /// 0.0 for local channel hand-offs.
-    fn send(&self, to: usize, sp: usize, buf: Vec<f32>) -> f64 {
-        match &self.hops[to] {
-            Hop::Local(tx) => {
-                tx.send((sp, buf)).expect("sub-part hand-off");
-                0.0
-            }
-            Hop::Remote(t) => {
-                let timer = Timer::start();
-                let msg = WireMsg {
-                    kind: KIND_SUBPART,
-                    dest: to as u32,
-                    tag: sp as u64,
-                    payload: transport::encode_f32s(&buf),
-                };
-                t.send(&msg).expect("inter-node sub-part hand-off");
-                timer.secs()
-            }
-        }
-    }
-
-    /// Unblock every local worker and every remote rank before a panic
-    /// propagates (sends to already-finished workers just fail).
-    fn poison(&self) {
-        for hop in &self.hops {
-            if let Hop::Local(tx) = hop {
-                let _ = tx.send((POISON, Vec::new()));
-            }
-        }
-        for t in &self.remotes {
-            let _ = t.send(&WireMsg::signal(KIND_POISON, 0, 0));
-        }
-    }
-}
-
-struct WorkerOut {
-    traces: Vec<StepTrace>,
-    finals: Vec<(usize, Vec<f32>)>,
+    heads.sort_by_key(|h| (h.first_step, h.gpu));
+    Routing { sched, dest, head_flags, heads }
 }
 
 /// Run one episode of the rotation schedule with one worker thread per
-/// GPU, all in this process. `contexts`, `backends`, `samplers`, and
-/// `rngs` are indexed by global GPU id (the coordinator's per-GPU state);
-/// the store provides the initial sub-part checkouts and receives the
+/// GPU, all in this process. Per-GPU state is indexed by global GPU id;
+/// the store provides the windowed sub-part checkouts and receives the
 /// final check-ins.
 pub fn run_episode(
     ctx: &ExecCtx<'_>,
@@ -351,13 +164,11 @@ pub fn run_episode(
     run_episode_ranked(ctx, store, contexts, backends, samplers, rngs, None)
 }
 
-/// Run one rank's share of an episode. With `cluster = None` this is the
-/// single-process executor, bit-identical to the pre-transport behavior.
-/// With a cluster view, this rank spawns workers only for its own node's
-/// GPUs; cross-rank hand-offs travel as framed sub-part messages, chain
-/// ends are broadcast so every rank's host store stays identical, and the
-/// measured traces fold back to the rank-0 driver (whose returned
-/// [`ExecRun`] then covers the whole cluster).
+/// Run one rank's share of an episode. `cluster = None` is the
+/// single-process executor; with a cluster view this rank spawns workers
+/// only for its own node's GPUs, cross-rank hand-offs cross the
+/// transport, and the rank-0 driver's returned [`ExecRun`] covers the
+/// whole cluster (traces folded back over KIND_MEASURE).
 #[allow(clippy::too_many_arguments)]
 pub fn run_episode_ranked(
     ctx: &ExecCtx<'_>,
@@ -381,10 +192,11 @@ pub fn run_episode_ranked(
     }
     let mut routing = build_routing(plan);
     let total_steps = routing.sched.first().map(|s| s.len()).unwrap_or(0);
+    let window = ctx.stage_window.max(1);
 
     let wall = Timer::start();
-    // per-local-GPU inboxes; the demux hub feeds the same senders with
-    // sub-parts arriving from remote ranks
+    // per-local-GPU inboxes, fed by the feeder (heads), the peer workers
+    // (ring hops), and the demux hub (remote-origin sub-parts)
     let mut local_tx: Vec<Option<Sender<RingMsg>>> = (0..gpus).map(|_| None).collect();
     let mut seat_of: HashMap<usize, Seat> = HashMap::new();
     for g in 0..gpus {
@@ -405,11 +217,12 @@ pub fn run_episode_ranked(
                 inbox: rx,
                 sched: std::mem::take(&mut routing.sched[g]),
                 dest: std::mem::take(&mut routing.dest[g]),
+                heads: std::mem::take(&mut routing.head_flags[g]),
             },
         );
         local_tx[g] = Some(tx);
     }
-    // episode-scoped collector channels for cross-rank traffic
+    // episode-scoped collectors for cross-rank traffic
     let mut finals_rx: Option<Receiver<RingMsg>> = None;
     let mut measures_rx: Option<Receiver<Vec<u8>>> = None;
     if let Some(c) = cluster {
@@ -444,21 +257,29 @@ pub fn run_episode_ranked(
         Outbox { hops, remotes }
     };
 
-    // Stage every locally-owned chain head: the episode's initial H2D
-    // checkouts (each rank stages from its own replicated store). The
-    // whole vertex matrix is staged up front — same total bytes as the
-    // serial schedule's lazy checkouts, but held concurrently: peak
-    // memory carries one extra vertex-matrix copy at episode start,
-    // draining as chains consume it. Fine at simulation scale; a bounded
-    // staging window is a ROADMAP item for billion-row runs.
-    for &(sp, g0) in &routing.heads {
-        if let Some(tx) = &local_tx[g0] {
-            let buf = store.checkout_vertex(ctx.plan.subpart_range(sp));
-            tx.send((sp, buf)).expect("stage initial sub-part");
-        }
-    }
-
-    let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+    // Feeder + workers under one scope: the feeder stages locally-owned
+    // chain heads lazily (window-bounded H2D checkouts from this rank's
+    // replicated store) while the workers run the rotation; a panic on
+    // either side poisons the other so the scope always joins.
+    let heads = std::mem::take(&mut routing.heads);
+    let total_chains = heads.len();
+    let store_ref: &EmbeddingStore = store;
+    let (outs, feed): (Vec<WorkerOut>, feeder::FeederStats) = std::thread::scope(|scope| {
+        let ob = &outbox;
+        let (ack_tx, ack_rx) = channel::<()>();
+        let (heads_r, local_tx_r) = (&heads, &local_tx);
+        let feeder_handle = scope.spawn(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                feeder::run(store_ref, plan, heads_r, local_tx_r, window, &ack_rx)
+            }));
+            match out {
+                Ok(stats) => stats,
+                Err(payload) => {
+                    ob.poison();
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        });
         let mut handles = Vec::with_capacity(seat_of.len());
         for (g, (shard, (backend, rng))) in contexts
             .iter_mut()
@@ -466,34 +287,46 @@ pub fn run_episode_ranked(
             .enumerate()
         {
             let Some(seat) = seat_of.remove(&g) else { continue };
-            let ob = &outbox;
+            let ack = ack_tx.clone();
             handles.push(scope.spawn(move || {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    worker(g, seat, shard, &mut **backend, rng, ob, ctx, samplers)
+                    worker::worker(g, seat, shard, &mut **backend, rng, ob, ctx, samplers, &ack)
                 }));
                 match out {
                     Ok(v) => v,
                     Err(payload) => {
-                        // unblock local peers stuck in recv and abort the
-                        // remote ranks before propagating
+                        // unblock peers stuck in recv before propagating
                         ob.poison();
                         std::panic::resume_unwind(payload);
                     }
                 }
             }));
         }
-        handles
+        // only worker clones keep the ack channel alive: if every worker
+        // dies the feeder's recv disconnects instead of wedging the scope
+        drop(ack_tx);
+        let outs = handles
             .into_iter()
             .map(|h| h.join().expect("exec worker panicked"))
-            .collect()
+            .collect();
+        let feed = feeder_handle.join().expect("exec feeder panicked");
+        (outs, feed)
     });
-    let mut wall_secs = wall.secs();
+    let mut rank = RankMeasure {
+        wall_secs: wall.secs(),
+        h2d_secs: feed.h2d_secs,
+        peak_staged: feed.peak_staged,
+        ..RankMeasure::default()
+    };
 
     let mut traces = Vec::with_capacity(total_steps * gpus);
     let mut finalized = 0usize;
+    let mut io_clock = PhaseClock::new();
     for out in outs {
         for (sp, buf) in out.finals {
-            store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
+            io_clock.time(Phase::D2hWriteback, || {
+                store.checkin_vertex(ctx.plan.subpart_range(sp), &buf)
+            });
             if cluster.is_some() {
                 let msg = WireMsg {
                     kind: KIND_FINAL,
@@ -509,13 +342,16 @@ pub fn run_episode_ranked(
         }
         traces.extend(out.traces);
     }
+    rank.d2h_secs = io_clock.secs(Phase::D2hWriteback);
 
     if let Some(c) = cluster {
         // the finals exchange doubles as the episode barrier: every rank
-        // blocks here until all chains — local and remote — checked in,
-        // so the replicated stores leave the episode identical
+        // blocks until all chains — local and remote — checked in. These
+        // are store *replication*, not the paper's D2H phase (each chain's
+        // one real write-back was timed by its owning rank above), so they
+        // stay off the d2h clock: the driver's fold sums to exactly one
+        // timed copy per chain cluster-wide.
         let frx = finals_rx.as_ref().expect("finals channel installed");
-        let total_chains = routing.heads.len();
         while finalized < total_chains {
             let (sp, buf) = frx.recv().expect("peer rank closed before episode completed");
             assert_ne!(sp, POISON, "peer rank aborted the episode");
@@ -526,13 +362,16 @@ pub fn run_episode_ranked(
             let mrx = measures_rx.as_ref().expect("measures channel installed");
             for _ in 1..c.world {
                 let payload = mrx.recv().expect("worker rank measures");
-                let (peer_traces, peer_wall) =
+                let (peer_traces, peer) =
                     decode_measure(&payload).expect("decode peer rank measures");
-                wall_secs = wall_secs.max(peer_wall);
+                rank.wall_secs = rank.wall_secs.max(peer.wall_secs);
+                rank.h2d_secs += peer.h2d_secs;
+                rank.d2h_secs += peer.d2h_secs;
+                rank.peak_staged = rank.peak_staged.max(peer.peak_staged);
                 traces.extend(peer_traces);
             }
         } else {
-            let payload = encode_measure(&traces, wall_secs);
+            let payload = encode_measure(&traces, &rank);
             c.peer(0)
                 .send(&WireMsg { kind: KIND_MEASURE, dest: 0, tag: 0, payload })
                 .expect("report measures to driver");
@@ -541,503 +380,22 @@ pub fn run_episode_ranked(
     }
 
     traces.sort_by_key(|t| (t.step, t.gpu));
-    let mut compute_secs = 0.0;
-    let mut stall_secs = 0.0;
-    let mut inter_node_secs = 0.0;
+    let mut measure = ExecMeasure {
+        wall_secs: rank.wall_secs,
+        h2d_secs: rank.h2d_secs,
+        d2h_secs: rank.d2h_secs,
+        peak_staged: rank.peak_staged,
+        stage_window: window,
+        workers: gpus,
+        steps: total_steps,
+        ..ExecMeasure::default()
+    };
     for t in &traces {
-        compute_secs += t.compute_secs;
-        stall_secs += t.stall_secs;
-        inter_node_secs += t.hop_secs;
+        measure.compute_secs += t.compute_secs;
+        measure.stall_secs += t.stall_secs;
+        measure.sample_secs += t.sample_secs;
+        measure.intra_secs += t.intra_secs;
+        measure.inter_node_secs += t.hop_secs;
     }
-    ExecRun {
-        traces,
-        measure: ExecMeasure {
-            wall_secs,
-            compute_secs,
-            stall_secs,
-            inter_node_secs,
-            workers: gpus,
-            steps: total_steps,
-        },
-    }
-}
-
-/// One worker: receive each scheduled sub-part (buffering early arrivals
-/// — the ping-pong back buffer), train it against the pinned context
-/// shard, and pass it to the next scheduled owner through the outbox.
-#[allow(clippy::too_many_arguments)]
-fn worker(
-    g: usize,
-    seat: Seat,
-    shard: &mut Vec<f32>,
-    backend: &mut dyn StepBackend,
-    rng: &mut Rng,
-    outbox: &Outbox,
-    ctx: &ExecCtx<'_>,
-    samplers: &[NegativeSampler],
-) -> WorkerOut {
-    let mut pending: HashMap<usize, Vec<f32>> = HashMap::new();
-    let mut traces = Vec::with_capacity(seat.sched.len());
-    let mut finals = Vec::new();
-    let crange = ctx.plan.context_range(g);
-    for &(step_idx, sp) in &seat.sched {
-        // front-buffer fill: block only if the sub-part has not arrived
-        let wait = Timer::start();
-        let mut vbuf = loop {
-            if let Some(b) = pending.remove(&sp) {
-                break b;
-            }
-            let (got, b) = seat.inbox.recv().expect("sub-part ring closed early");
-            assert_ne!(got, POISON, "exec peer worker panicked; aborting episode");
-            if got == sp {
-                break b;
-            }
-            pending.insert(got, b);
-        };
-        let stall_secs = wait.secs();
-
-        let vrange = ctx.plan.subpart_range(sp);
-        let block = ctx.pool.block(sp, g);
-        // minibatches + per-group shared negatives, drawn in this
-        // worker's schedule order — the exact helper the serial reference
-        // uses, so the two paths cannot drift apart
-        let (mbs, vns) = assemble_block(
-            block,
-            ctx.batch,
-            vrange.start,
-            crange.start,
-            ctx.negatives,
-            &samplers[g],
-            rng,
-        );
-        let t = Timer::start();
-        let loss = backend.step_block(
-            &mut vbuf,
-            shard,
-            ctx.dim,
-            &mbs,
-            &vns,
-            ctx.negatives,
-            ctx.lr,
-        ) as f64;
-        let compute_secs = t.secs();
-
-        let bytes = PhaseBytes {
-            sample_bytes: block.len() as u64 * 8,
-            subpart_bytes: (vrange.len() * ctx.dim * 4) as u64,
-            train_samples: block.len() as u64,
-            crosses_node: ctx.crosses_node,
-        };
-        let hop_secs = match seat.dest[step_idx] {
-            Dest::Gpu(to) => outbox.send(to, sp, vbuf),
-            Dest::Host => {
-                finals.push((sp, vbuf));
-                0.0
-            }
-        };
-        traces.push(StepTrace {
-            step: step_idx,
-            gpu: g,
-            subpart: sp,
-            loss,
-            samples: block.len() as u64,
-            bytes,
-            stall_secs,
-            compute_secs,
-            hop_secs,
-        });
-    }
-    WorkerOut { traces, finals }
-}
-
-/// Serialize one rank's traces + episode wall for the KIND_MEASURE fold.
-fn encode_measure(traces: &[StepTrace], wall_secs: f64) -> Vec<u8> {
-    let mut w = PayloadWriter::new();
-    w.put_f64(wall_secs);
-    w.put_u64(traces.len() as u64);
-    for t in traces {
-        w.put_u64(t.step as u64);
-        w.put_u64(t.gpu as u64);
-        w.put_u64(t.subpart as u64);
-        w.put_f64(t.loss);
-        w.put_u64(t.samples);
-        w.put_u64(t.bytes.sample_bytes);
-        w.put_u64(t.bytes.subpart_bytes);
-        w.put_u64(t.bytes.train_samples);
-        w.put_u8(t.bytes.crosses_node as u8);
-        w.put_f64(t.stall_secs);
-        w.put_f64(t.compute_secs);
-        w.put_f64(t.hop_secs);
-    }
-    w.finish()
-}
-
-fn decode_measure(payload: &[u8]) -> crate::Result<(Vec<StepTrace>, f64)> {
-    crate::ensure!(!payload.is_empty(), "peer rank aborted before reporting measures");
-    let mut r = PayloadReader::new(payload);
-    let wall_secs = r.f64()?;
-    let n = r.u64()? as usize;
-    // 89 bytes per encoded trace; clamp before allocating so a corrupt
-    // count errors on read instead of aborting on a giant reservation
-    crate::ensure!(
-        n <= payload.len() / 89,
-        "measure payload claims {n} traces but only carries {} bytes",
-        payload.len()
-    );
-    let mut traces = Vec::with_capacity(n);
-    for _ in 0..n {
-        let step = r.u64()? as usize;
-        let gpu = r.u64()? as usize;
-        let subpart = r.u64()? as usize;
-        let loss = r.f64()?;
-        let samples = r.u64()?;
-        let bytes = PhaseBytes {
-            sample_bytes: r.u64()?,
-            subpart_bytes: r.u64()?,
-            train_samples: r.u64()?,
-            crosses_node: r.u8()? != 0,
-        };
-        let stall_secs = r.f64()?;
-        let compute_secs = r.f64()?;
-        let hop_secs = r.f64()?;
-        traces.push(StepTrace {
-            step,
-            gpu,
-            subpart,
-            loss,
-            samples,
-            bytes,
-            stall_secs,
-            compute_secs,
-            hop_secs,
-        });
-    }
-    Ok((traces, wall_secs))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::embed::sgns::NativeBackend;
-    use crate::gen;
-
-    fn fixture(
-        nodes: usize,
-        gpus_per_node: usize,
-        k: usize,
-        n: usize,
-        m: usize,
-        seed: u64,
-    ) -> (HierarchyPlan, EmbeddingStore, Vec<u32>, Vec<crate::graph::Edge>) {
-        let mut rng = Rng::new(seed);
-        let graph = gen::to_graph(n, gen::erdos_renyi(n, m, &mut rng));
-        let plan = HierarchyPlan::new(nodes, gpus_per_node, k, n);
-        let store = EmbeddingStore::init(n, 8, &mut Rng::new(seed ^ 0xE));
-        (plan, store, graph.degrees(), graph.edges().collect())
-    }
-
-    #[allow(clippy::type_complexity)]
-    fn gpu_state(
-        plan: &HierarchyPlan,
-        store: &EmbeddingStore,
-        degrees: &[u32],
-        seed: u64,
-    ) -> (Vec<Vec<f32>>, Vec<Box<dyn StepBackend>>, Vec<NegativeSampler>, Vec<Rng>) {
-        let gpus = plan.total_gpus();
-        let contexts: Vec<Vec<f32>> =
-            (0..gpus).map(|g| store.checkout_context(plan.context_range(g))).collect();
-        let backends: Vec<Box<dyn StepBackend>> = (0..gpus)
-            .map(|_| Box::new(NativeBackend::new()) as Box<dyn StepBackend>)
-            .collect();
-        let samplers: Vec<NegativeSampler> =
-            (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
-        let mut root = Rng::new(seed);
-        let rngs: Vec<Rng> = (0..gpus).map(|g| root.fork(g as u64)).collect();
-        (contexts, backends, samplers, rngs)
-    }
-
-    fn run(
-        plan: &HierarchyPlan,
-        store: &mut EmbeddingStore,
-        degrees: &[u32],
-        samples: &[crate::graph::Edge],
-        seed: u64,
-    ) -> (ExecRun, Vec<Vec<f32>>) {
-        let pool = EpisodePool::build(plan, samples);
-        let (mut contexts, mut backends, samplers, mut rngs) =
-            gpu_state(plan, store, degrees, seed);
-        let ctx = ExecCtx {
-            plan,
-            pool: &pool,
-            batch: 64,
-            negatives: 3,
-            dim: 8,
-            lr: 0.05,
-            crosses_node: plan.nodes > 1,
-        };
-        let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
-        (run, contexts)
-    }
-
-    #[test]
-    fn routing_chains_deliver_every_subpart_once_per_gpu() {
-        let plan = HierarchyPlan::new(2, 2, 2, 64);
-        let r = build_routing(&plan);
-        let gpus = plan.total_gpus();
-        let steps = plan.steps();
-        assert_eq!(r.heads.len(), plan.total_subparts());
-        // every worker trains every step exactly once, in step order
-        for (g, sched) in r.sched.iter().enumerate() {
-            assert_eq!(sched.len(), steps.len());
-            for (i, &(si, sp)) in sched.iter().enumerate() {
-                assert_eq!(si, i);
-                assert_eq!(steps[si].assignment[g], sp);
-            }
-        }
-        // replay the hand-offs: ownership must always match the schedule
-        let mut owner: Vec<usize> = vec![usize::MAX; plan.total_subparts()];
-        for &(sp, g0) in &r.heads {
-            owner[sp] = g0;
-        }
-        for (si, st) in steps.iter().enumerate() {
-            for (g, &sp) in st.assignment.iter().enumerate() {
-                assert_eq!(owner[sp], g, "step {si}: sub-part {sp} not at gpu {g}");
-                match r.dest[g][si] {
-                    Dest::Gpu(next) => owner[sp] = next,
-                    Dest::Host => owner[sp] = usize::MAX,
-                }
-            }
-        }
-        // all chains ended at the host
-        assert!(owner.iter().all(|&o| o == usize::MAX));
-        assert_eq!(gpus, 4);
-    }
-
-    #[test]
-    fn episode_trains_and_measures_overlap() {
-        let (plan, mut store, degrees, samples) = fixture(2, 2, 2, 120, 1500, 1);
-        let before = store.clone();
-        let (run, _) = run(&plan, &mut store, &degrees, &samples, 7);
-        assert_eq!(run.traces.len(), plan.steps_per_epoch() * plan.total_gpus());
-        let total: u64 = run.traces.iter().map(|t| t.samples).sum();
-        assert_eq!(total, samples.len() as u64);
-        assert!(run.traces.iter().map(|t| t.loss).sum::<f64>() > 0.0);
-        // measured overlap efficiency and utilization are positive and sane
-        let eff = run.measure.overlap_efficiency();
-        assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff}");
-        let util = run.measure.utilization();
-        assert!(util > 0.0 && util <= 1.0, "utilization {util}");
-        assert!(run.measure.wall_secs > 0.0);
-        // no socket hops in a single-process run
-        assert_eq!(run.measure.inter_node_secs, 0.0);
-        // the model actually moved
-        let delta: f32 = before
-            .vertex
-            .iter()
-            .zip(&store.vertex)
-            .map(|(a, b)| (a - b).abs())
-            .sum();
-        assert!(delta > 0.0, "vertex unchanged");
-    }
-
-    #[test]
-    fn executor_is_deterministic() {
-        let (plan, store0, degrees, samples) = fixture(1, 4, 2, 100, 1200, 2);
-        let mut s1 = store0.clone();
-        let mut s2 = store0.clone();
-        let (r1, c1) = run(&plan, &mut s1, &degrees, &samples, 9);
-        let (r2, c2) = run(&plan, &mut s2, &degrees, &samples, 9);
-        assert_eq!(s1.vertex, s2.vertex);
-        assert_eq!(c1, c2);
-        let l1: Vec<f64> = r1.traces.iter().map(|t| t.loss).collect();
-        let l2: Vec<f64> = r2.traces.iter().map(|t| t.loss).collect();
-        assert_eq!(l1, l2);
-    }
-
-    /// Backend that blows up on its first step — stands in for a runtime
-    /// failure (e.g. a PJRT execute error) inside one worker.
-    struct PanickyBackend;
-
-    impl StepBackend for PanickyBackend {
-        #[allow(clippy::too_many_arguments)]
-        fn step(
-            &mut self,
-            _vertex: &mut [f32],
-            _context: &mut [f32],
-            _dim: usize,
-            _u: &[i32],
-            _vp: &[i32],
-            _vn: &[i32],
-            _negs: usize,
-            _real: usize,
-            _lr: f32,
-        ) -> f32 {
-            panic!("injected backend failure");
-        }
-
-        fn name(&self) -> &'static str {
-            "panicky"
-        }
-    }
-
-    #[test]
-    #[should_panic(expected = "exec worker panicked")]
-    fn worker_panic_propagates_instead_of_deadlocking() {
-        let (plan, mut store, degrees, samples) = fixture(1, 4, 1, 100, 1200, 6);
-        let pool = EpisodePool::build(&plan, &samples);
-        let (mut contexts, mut backends, samplers, mut rngs) =
-            gpu_state(&plan, &store, &degrees, 6);
-        backends[1] = Box::new(PanickyBackend);
-        let ctx = ExecCtx {
-            plan: &plan,
-            pool: &pool,
-            batch: 64,
-            negatives: 3,
-            dim: 8,
-            lr: 0.05,
-            crosses_node: false,
-        };
-        // must panic (poison broadcast unblocks the other workers), not hang
-        run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
-    }
-
-    #[test]
-    fn measured_durations_feed_the_simulator() {
-        let (plan, mut store, degrees, samples) = fixture(2, 2, 1, 80, 900, 3);
-        let (run, _) = run(&plan, &mut store, &degrees, &samples, 4);
-        let spec = crate::cluster::ClusterSpec::set_a(2, 2);
-        let d = run.measured_durations(&spec, 64, 3, 8);
-        assert!(d.train > 0.0, "measured train phase {d:?}");
-        assert!(d.prefetch_h2d > 0.0);
-        let step = crate::pipeline::simulate_step(&d, crate::pipeline::OverlapConfig::paper());
-        assert!(step > 0.0 && step.is_finite());
-    }
-
-    #[test]
-    fn measure_codec_round_trips() {
-        let traces = vec![StepTrace {
-            step: 3,
-            gpu: 1,
-            subpart: 7,
-            loss: 0.625,
-            samples: 41,
-            bytes: PhaseBytes {
-                sample_bytes: 328,
-                subpart_bytes: 4096,
-                train_samples: 41,
-                crosses_node: true,
-            },
-            stall_secs: 1e-4,
-            compute_secs: 2e-3,
-            hop_secs: 5e-5,
-        }];
-        let payload = encode_measure(&traces, 0.125);
-        let (back, wall) = decode_measure(&payload).unwrap();
-        assert_eq!(wall, 0.125);
-        assert_eq!(back.len(), 1);
-        assert_eq!(back[0].subpart, 7);
-        assert_eq!(back[0].loss, 0.625);
-        assert_eq!(back[0].hop_secs, 5e-5);
-        assert!(back[0].bytes.crosses_node);
-        assert!(decode_measure(&[]).is_err(), "empty payload is the abort sentinel");
-    }
-
-    /// The tentpole invariant: a two-rank episode over the loopback
-    /// transport reproduces the single-process executor exactly — same
-    /// losses, same final store — and measures real inter-node hops.
-    #[test]
-    fn ranked_episode_over_loopback_matches_single_process() {
-        let (plan, store0, degrees, samples) = fixture(2, 2, 2, 96, 1000, 8);
-        // reference: single-process run
-        let mut sref = store0.clone();
-        let (ref_run, _) = run(&plan, &mut sref, &degrees, &samples, 21);
-
-        // two ranks wired by a loopback pair, each with an identical
-        // replica of the initial state
-        let (t01, t10) = transport::loopback_pair(0, 1);
-        let t01: Arc<dyn Transport> = Arc::new(t01);
-        let t10: Arc<dyn Transport> = Arc::new(t10);
-        let hub0 = DemuxHub::new();
-        let hub1 = DemuxHub::new();
-        hub0.spawn_reader(t01.clone());
-        hub1.spawn_reader(t10.clone());
-        let peers0: Vec<Option<Arc<dyn Transport>>> = vec![None, Some(t01)];
-        let peers1: Vec<Option<Arc<dyn Transport>>> = vec![Some(t10), None];
-
-        let pool = EpisodePool::build(&plan, &samples);
-        let mut stores = [store0.clone(), store0.clone()];
-        let (lo, hi) = stores.split_at_mut(1);
-        let s0 = &mut lo[0];
-        let s1 = &mut hi[0];
-        let run0 = std::thread::scope(|scope| {
-            let (plan_r, pool_r, degrees_r) = (&plan, &pool, &degrees);
-            let (peers1_r, hub1_r) = (&peers1, &hub1);
-            let h1 = scope.spawn(move || {
-                let (mut contexts, mut backends, samplers, mut rngs) =
-                    gpu_state(plan_r, s1, degrees_r, 21);
-                let ctx = ExecCtx {
-                    plan: plan_r,
-                    pool: pool_r,
-                    batch: 64,
-                    negatives: 3,
-                    dim: 8,
-                    lr: 0.05,
-                    crosses_node: true,
-                };
-                let view =
-                    ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
-                run_episode_ranked(
-                    &ctx,
-                    s1,
-                    &mut contexts,
-                    &mut backends,
-                    &samplers,
-                    &mut rngs,
-                    Some(&view),
-                )
-            });
-            let (mut contexts, mut backends, samplers, mut rngs) =
-                gpu_state(&plan, s0, &degrees, 21);
-            let ctx = ExecCtx {
-                plan: &plan,
-                pool: &pool,
-                batch: 64,
-                negatives: 3,
-                dim: 8,
-                lr: 0.05,
-                crosses_node: true,
-            };
-            let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
-            let run0 = run_episode_ranked(
-                &ctx,
-                s0,
-                &mut contexts,
-                &mut backends,
-                &samplers,
-                &mut rngs,
-                Some(&view),
-            );
-            h1.join().expect("rank 1 episode");
-            run0
-        });
-        // release the reader threads (they block in recv otherwise)
-        for p in peers0.iter().chain(peers1.iter()).flatten() {
-            let _ = p.send(&WireMsg::signal(transport::KIND_SHUTDOWN, 0, 0));
-        }
-
-        // driver's merged traces are the full cluster, loss-for-loss
-        assert_eq!(run0.traces.len(), ref_run.traces.len());
-        for (a, b) in run0.traces.iter().zip(&ref_run.traces) {
-            assert_eq!((a.step, a.gpu, a.subpart), (b.step, b.gpu, b.subpart));
-            assert_eq!(a.loss, b.loss, "loss drifted at step {} gpu {}", a.step, a.gpu);
-        }
-        // the finals barrier left both replicated stores identical to the
-        // single-process result
-        assert_eq!(stores[0].vertex, sref.vertex);
-        assert_eq!(stores[1].vertex, sref.vertex);
-        // cross-rank hops were measured for real
-        assert!(run0.measure.inter_node_secs > 0.0, "no inter-node hops measured");
-        let d = run0.measured_durations(&crate::cluster::ClusterSpec::set_a(2, 2), 64, 3, 8);
-        assert!(d.inter_node > 0.0, "measured hops missing from the phase split");
-    }
+    ExecRun { traces, measure }
 }

@@ -1,0 +1,397 @@
+//! Phase instrumentation for the executor: the [`PhaseClock`] that times
+//! each leg of a step separately, the per-step [`StepTrace`], the episode
+//! aggregate [`ExecMeasure`], and the [`ExecRun`] fold that feeds the
+//! measured per-phase seconds into `pipeline::simulate_step`'s inputs.
+//!
+//! The paper's step-cost claim (§III-C, Fig. 3) is
+//! `stall(1) + stall(4) + max(train, d2h, prefetch, inter-node)`; to
+//! validate it phase-by-phase instead of against one blended stall number,
+//! every leg the executor actually runs gets its own clock:
+//!
+//! * **sample load** — assembling the minibatches + shared negatives for a
+//!   sub-part's 2D block (paper phase 1);
+//! * **H2D staging** — the feeder's `checkout_vertex` memcpy staging a
+//!   chain head from the host store (paper phase 5's first iteration);
+//! * **compute** — the backend's `step_block` (phase 3);
+//! * **D2H write-back** — `checkin_vertex` of chain-end sub-parts (phase 2);
+//! * **intra-node hop** — the in-process channel hand-off to the next
+//!   scheduled GPU (phase 4, the §III-B P2P rotation);
+//! * **inter-node hop** — framing + socket write of a cross-rank hand-off
+//!   (phase 6).
+//!
+//! Only phase 7 (disk → host sample prefetch) has no executor-side
+//! counterpart; `measured_durations` keeps the fabric estimate for it.
+
+use crate::cluster::ClusterSpec;
+use crate::comm::transport::{PayloadReader, PayloadWriter};
+use crate::metrics::Timer;
+use crate::pipeline::{PhaseBytes, PhaseDurations};
+
+/// One measurable leg of an executed step (see module docs for the paper
+/// Fig. 3 phase each maps to).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    SampleLoad,
+    H2dStage,
+    Compute,
+    D2hWriteback,
+    IntraHop,
+    InterHop,
+}
+
+impl Phase {
+    pub const COUNT: usize = 6;
+}
+
+/// Accumulating per-phase stopwatch: wraps a closure in a wall-clock timer
+/// and books the elapsed seconds against one [`Phase`].
+#[derive(Debug, Default, Clone)]
+pub struct PhaseClock {
+    secs: [f64; Phase::COUNT],
+}
+
+impl PhaseClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, booking its wall time against `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.secs[phase as usize] += t.secs();
+        out
+    }
+
+    pub fn secs(&self, phase: Phase) -> f64 {
+        self.secs[phase as usize]
+    }
+}
+
+/// One worker's outcome for one scheduled step: the training result plus
+/// the measured wall-clock split across the step's legs.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Global step index in the rotation schedule.
+    pub step: usize,
+    /// Global GPU (worker) index.
+    pub gpu: usize,
+    /// Sub-part trained at this step.
+    pub subpart: usize,
+    pub loss: f64,
+    pub samples: u64,
+    /// Byte counters for the discrete-event pipeline model.
+    pub bytes: PhaseBytes,
+    /// Seconds this worker spent blocked waiting for the sub-part to
+    /// arrive — the *exposed* (un-overlapped) transfer latency.
+    pub stall_secs: f64,
+    /// Seconds assembling this step's minibatches + negatives (the
+    /// sample-load phase).
+    pub sample_secs: f64,
+    /// Seconds inside the backend's `step_block` (the compute phase).
+    pub compute_secs: f64,
+    /// Seconds handing the trained sub-part to the next local worker over
+    /// the in-process channel (the intra-node P2P hop).
+    pub intra_secs: f64,
+    /// Seconds spent pushing the trained sub-part across a rank boundary
+    /// (framing + socket write). Zero for intra-node channel hops.
+    pub hop_secs: f64,
+}
+
+/// Aggregate measurement of one episode across all workers.
+#[derive(Debug, Default, Clone)]
+pub struct ExecMeasure {
+    /// Wall time of the whole episode (staging + all workers; across
+    /// ranks this is the max of the per-rank walls).
+    pub wall_secs: f64,
+    /// Summed per-worker compute seconds.
+    pub compute_secs: f64,
+    /// Summed per-worker stall seconds.
+    pub stall_secs: f64,
+    /// Summed per-worker sample-load seconds.
+    pub sample_secs: f64,
+    /// Summed feeder seconds staging chain heads out of the host store
+    /// (H2D). Across ranks: summed over every rank's feeder.
+    pub h2d_secs: f64,
+    /// Summed seconds writing chain-end sub-parts back to the host store
+    /// (D2H). Each chain is timed once, by the rank whose worker finished
+    /// it — the finals-barrier check-ins replicating remote chains into
+    /// this rank's store are excluded, so the driver's cross-rank fold
+    /// counts exactly one write-back per chain.
+    pub d2h_secs: f64,
+    /// Summed per-worker intra-node channel hand-off seconds.
+    pub intra_secs: f64,
+    /// Summed per-worker seconds inside genuine inter-node hops (framed
+    /// socket sends). Zero in single-process runs.
+    pub inter_node_secs: f64,
+    /// Peak sub-part buffers the feeder held staged-but-unconsumed at any
+    /// moment (the bounded-window gauge; max across ranks).
+    pub peak_staged: usize,
+    /// Effective staging window the feeder ran with.
+    pub stage_window: usize,
+    pub workers: usize,
+    pub steps: usize,
+}
+
+impl ExecMeasure {
+    /// Fraction of worker-active time spent computing rather than stalled
+    /// on sub-part arrival — the measured counterpart of the §III-C
+    /// overlap-efficiency number (1.0 = transfers fully hidden).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let denom = self.compute_secs + self.stall_secs;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.compute_secs / denom
+        }
+    }
+
+    /// Worker-occupancy: summed compute over (workers × wall). Below 1/workers
+    /// means the run was serial in practice; near 1.0 means linear scaling.
+    pub fn utilization(&self) -> f64 {
+        if self.wall_secs <= 0.0 || self.workers == 0 {
+            return 0.0;
+        }
+        self.compute_secs / (self.wall_secs * self.workers as f64)
+    }
+}
+
+/// Result of one executed episode: per-step traces sorted by
+/// `(step, gpu)` — the same fold order as the serial reference — plus the
+/// aggregate measurement. On the multi-process driver the traces cover
+/// every rank's workers (folded back over the transport); on a non-driver
+/// rank they cover only the local workers.
+#[derive(Debug)]
+pub struct ExecRun {
+    pub traces: Vec<StepTrace>,
+    pub measure: ExecMeasure,
+}
+
+impl ExecRun {
+    /// Mean per-step byte counters over the run's traces.
+    fn mean_bytes(&self) -> PhaseBytes {
+        let n = self.traces.len().max(1) as u64;
+        let mut agg = PhaseBytes::default();
+        for t in &self.traces {
+            agg.sample_bytes += t.bytes.sample_bytes;
+            agg.subpart_bytes += t.bytes.subpart_bytes;
+            agg.train_samples += t.bytes.train_samples;
+            agg.crosses_node |= t.bytes.crosses_node;
+        }
+        PhaseBytes {
+            sample_bytes: agg.sample_bytes / n,
+            subpart_bytes: agg.subpart_bytes / n,
+            train_samples: agg.train_samples / n,
+            crosses_node: agg.crosses_node,
+        }
+    }
+
+    /// The discrete-event model's own pricing of this run: the mean
+    /// per-step byte counters pushed through `spec`'s fabric
+    /// (`PhaseBytes::durations`). This is the *simulated* side of the
+    /// per-phase validation table.
+    pub fn simulated_durations(
+        &self,
+        spec: &ClusterSpec,
+        batch: usize,
+        negatives: usize,
+        dim: usize,
+    ) -> PhaseDurations {
+        self.mean_bytes().durations(spec, batch, negatives, dim)
+    }
+
+    /// The *measured* per-phase durations of a mean step: every phase the
+    /// executor actually runs is filled from its own wall-clock (sample
+    /// load, H2D staging, compute, D2H write-back, intra-node hop), the
+    /// inter-node phase from measured socket seconds when any hop crossed
+    /// one (single-process runs keep the fabric estimate), and only the
+    /// disk-prefetch phase — which has no executor-side counterpart — stays
+    /// fabric-priced. Feeding this to `pipeline::simulate_step` next to
+    /// [`Self::simulated_durations`] validates the simulator phase by
+    /// phase instead of against one blended number.
+    pub fn measured_durations(
+        &self,
+        spec: &ClusterSpec,
+        batch: usize,
+        negatives: usize,
+        dim: usize,
+    ) -> PhaseDurations {
+        self.measured_from(self.simulated_durations(spec, batch, negatives, dim))
+    }
+
+    /// [`Self::measured_durations`] over an already-computed simulated
+    /// baseline — callers needing both sides (the validation table) avoid
+    /// aggregating the traces twice.
+    pub fn measured_from(&self, mut d: PhaseDurations) -> PhaseDurations {
+        let n = self.traces.len().max(1) as f64;
+        let m = &self.measure;
+        d.load_samples = m.sample_secs / n;
+        d.prefetch_h2d = m.h2d_secs / n;
+        d.train = m.compute_secs / n;
+        d.d2h_writeback = m.d2h_secs / n;
+        d.p2p = m.intra_secs / n;
+        if m.inter_node_secs > 0.0 {
+            // real network hops were measured: report them instead of the
+            // fabric estimate (single-process runs keep the estimate)
+            d.inter_node = m.inter_node_secs / n;
+        }
+        d
+    }
+}
+
+/// Bytes of one encoded trace in the KIND_MEASURE payload.
+const TRACE_WIRE_BYTES: usize = 13 * 8 + 1;
+
+/// Per-rank episode measurements that ride with the traces in the
+/// KIND_MEASURE fold (the phases measured outside worker loops).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub(crate) struct RankMeasure {
+    pub wall_secs: f64,
+    pub h2d_secs: f64,
+    pub d2h_secs: f64,
+    pub peak_staged: usize,
+}
+
+/// Serialize one rank's traces + episode-level phase seconds for the
+/// KIND_MEASURE fold.
+pub(crate) fn encode_measure(traces: &[StepTrace], rank: &RankMeasure) -> Vec<u8> {
+    let mut w = PayloadWriter::new();
+    w.put_f64(rank.wall_secs);
+    w.put_f64(rank.h2d_secs);
+    w.put_f64(rank.d2h_secs);
+    w.put_u64(rank.peak_staged as u64);
+    w.put_u64(traces.len() as u64);
+    for t in traces {
+        w.put_u64(t.step as u64);
+        w.put_u64(t.gpu as u64);
+        w.put_u64(t.subpart as u64);
+        w.put_f64(t.loss);
+        w.put_u64(t.samples);
+        w.put_u64(t.bytes.sample_bytes);
+        w.put_u64(t.bytes.subpart_bytes);
+        w.put_u64(t.bytes.train_samples);
+        w.put_u8(t.bytes.crosses_node as u8);
+        w.put_f64(t.stall_secs);
+        w.put_f64(t.sample_secs);
+        w.put_f64(t.compute_secs);
+        w.put_f64(t.intra_secs);
+        w.put_f64(t.hop_secs);
+    }
+    w.finish()
+}
+
+pub(crate) fn decode_measure(payload: &[u8]) -> crate::Result<(Vec<StepTrace>, RankMeasure)> {
+    crate::ensure!(!payload.is_empty(), "peer rank aborted before reporting measures");
+    let mut r = PayloadReader::new(payload);
+    let rank = RankMeasure {
+        wall_secs: r.f64()?,
+        h2d_secs: r.f64()?,
+        d2h_secs: r.f64()?,
+        peak_staged: r.u64()? as usize,
+    };
+    let n = r.u64()? as usize;
+    // clamp before allocating so a corrupt count errors on read instead of
+    // aborting on a giant reservation
+    crate::ensure!(
+        n <= payload.len() / TRACE_WIRE_BYTES,
+        "measure payload claims {n} traces but only carries {} bytes",
+        payload.len()
+    );
+    let mut traces = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = r.u64()? as usize;
+        let gpu = r.u64()? as usize;
+        let subpart = r.u64()? as usize;
+        let loss = r.f64()?;
+        let samples = r.u64()?;
+        let bytes = PhaseBytes {
+            sample_bytes: r.u64()?,
+            subpart_bytes: r.u64()?,
+            train_samples: r.u64()?,
+            crosses_node: r.u8()? != 0,
+        };
+        let stall_secs = r.f64()?;
+        let sample_secs = r.f64()?;
+        let compute_secs = r.f64()?;
+        let intra_secs = r.f64()?;
+        let hop_secs = r.f64()?;
+        traces.push(StepTrace {
+            step,
+            gpu,
+            subpart,
+            loss,
+            samples,
+            bytes,
+            stall_secs,
+            sample_secs,
+            compute_secs,
+            intra_secs,
+            hop_secs,
+        });
+    }
+    Ok((traces, rank))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_clock_books_against_the_right_leg() {
+        let mut c = PhaseClock::new();
+        let out = c.time(Phase::Compute, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            41 + 1
+        });
+        assert_eq!(out, 42);
+        assert!(c.secs(Phase::Compute) >= 0.001);
+        assert_eq!(c.secs(Phase::IntraHop), 0.0, "other legs untouched");
+        // repeated laps accumulate on the same leg
+        c.time(Phase::Compute, || {});
+        assert!(c.secs(Phase::Compute) >= 0.001);
+    }
+
+    #[test]
+    fn measure_codec_round_trips() {
+        let traces = vec![StepTrace {
+            step: 3,
+            gpu: 1,
+            subpart: 7,
+            loss: 0.625,
+            samples: 41,
+            bytes: PhaseBytes {
+                sample_bytes: 328,
+                subpart_bytes: 4096,
+                train_samples: 41,
+                crosses_node: true,
+            },
+            stall_secs: 1e-4,
+            sample_secs: 3e-5,
+            compute_secs: 2e-3,
+            intra_secs: 7e-6,
+            hop_secs: 5e-5,
+        }];
+        let rank = RankMeasure { wall_secs: 0.125, h2d_secs: 0.5, d2h_secs: 0.25, peak_staged: 6 };
+        let payload = encode_measure(&traces, &rank);
+        let (back, brank) = decode_measure(&payload).unwrap();
+        assert_eq!(brank, rank);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].subpart, 7);
+        assert_eq!(back[0].loss, 0.625);
+        assert_eq!(back[0].sample_secs, 3e-5);
+        assert_eq!(back[0].intra_secs, 7e-6);
+        assert_eq!(back[0].hop_secs, 5e-5);
+        assert!(back[0].bytes.crosses_node);
+        assert!(decode_measure(&[]).is_err(), "empty payload is the abort sentinel");
+    }
+
+    #[test]
+    fn corrupt_trace_counts_are_rejected_before_allocating() {
+        let rank = RankMeasure::default();
+        let mut payload = encode_measure(&[], &rank);
+        // claim a huge trace count with no bytes behind it
+        let n_off = 4 * 8;
+        payload[n_off..n_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_measure(&payload).is_err());
+    }
+}

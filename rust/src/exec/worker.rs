@@ -1,0 +1,201 @@
+//! The per-GPU worker layer: one thread per simulated GPU receiving each
+//! scheduled sub-part (buffering early arrivals — the ping-pong back
+//! buffer), training it against the pinned context shard, and passing it
+//! to the next scheduled owner through the [`Outbox`] hop endpoints.
+//!
+//! Every leg of a step is timed separately on a [`PhaseClock`]: sample
+//! load (minibatch + negatives assembly), compute (the backend's
+//! `step_block`), the intra-node channel hand-off, and the inter-node
+//! framed socket send. The blocked wait for the sub-part's arrival is the
+//! exposed stall, reported alongside.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::comm::transport::{self, Transport, WireMsg, KIND_POISON, KIND_SUBPART};
+use crate::embed::sgns::StepBackend;
+use crate::metrics::Timer;
+use crate::pipeline::PhaseBytes;
+use crate::sample::{assemble_block, NegativeSampler};
+use crate::util::Rng;
+
+use super::trace::{Phase, PhaseClock, StepTrace};
+use super::{ExecCtx, RingMsg, POISON};
+
+/// Where a trained sub-part goes after a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Dest {
+    /// Hand off to the worker that trains it next (P2P rotation).
+    Gpu(usize),
+    /// Chain finished: return to the host store (D2H write-back).
+    Host,
+}
+
+/// Per-worker seat: inbox plus routing slices.
+pub(crate) struct Seat {
+    pub inbox: Receiver<RingMsg>,
+    /// This worker's `(step index, subpart)` sequence.
+    pub sched: Vec<(usize, usize)>,
+    /// Where this worker sends the sub-part it trained at each step.
+    pub dest: Vec<Dest>,
+    /// `heads[i]` — the sub-part of `sched[i]` arrives from the host
+    /// feeder (a chain head), so consuming it releases one window credit.
+    pub heads: Vec<bool>,
+}
+
+/// One outbound hop endpoint per global GPU: the in-process channel of a
+/// local worker, or the framed transport to the rank owning a remote one.
+pub(crate) enum Hop {
+    Local(Sender<RingMsg>),
+    Remote(Arc<dyn Transport>),
+}
+
+/// The executor's hand-off path: every worker sends trained sub-parts
+/// through here, local or not.
+pub(crate) struct Outbox {
+    pub hops: Vec<Hop>,
+    /// One transport per remote rank, for abort broadcasts.
+    pub remotes: Vec<Arc<dyn Transport>>,
+}
+
+impl Outbox {
+    /// Deliver sub-part `sp` to global GPU `to`, booking the hand-off on
+    /// `clock`: an intra-node hop is the channel send, an inter-node hop
+    /// is framing + socket write.
+    pub(crate) fn send(&self, to: usize, sp: usize, buf: Vec<f32>, clock: &mut PhaseClock) {
+        match &self.hops[to] {
+            Hop::Local(tx) => clock.time(Phase::IntraHop, || {
+                tx.send((sp, buf)).expect("sub-part hand-off");
+            }),
+            Hop::Remote(t) => clock.time(Phase::InterHop, || {
+                let msg = WireMsg {
+                    kind: KIND_SUBPART,
+                    dest: to as u32,
+                    tag: sp as u64,
+                    payload: transport::encode_f32s(&buf),
+                };
+                t.send(&msg).expect("inter-node sub-part hand-off");
+            }),
+        }
+    }
+
+    /// Unblock every local worker and every remote rank before a panic
+    /// propagates (sends to already-finished workers just fail). The
+    /// feeder needs no poison: it unblocks when the worker inboxes and
+    /// ack senders drop.
+    pub(crate) fn poison(&self) {
+        for hop in &self.hops {
+            if let Hop::Local(tx) = hop {
+                let _ = tx.send((POISON, Vec::new()));
+            }
+        }
+        for t in &self.remotes {
+            let _ = t.send(&WireMsg::signal(KIND_POISON, 0, 0));
+        }
+    }
+}
+
+pub(crate) struct WorkerOut {
+    pub traces: Vec<StepTrace>,
+    pub finals: Vec<(usize, Vec<f32>)>,
+}
+
+/// One worker: receive each scheduled sub-part (buffering early arrivals
+/// — the ping-pong back buffer), train it against the pinned context
+/// shard, and pass it to the next scheduled owner through the outbox.
+/// Taking a chain head as the front buffer acks the feeder (`ack_tx`),
+/// releasing one staging-window credit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn worker(
+    g: usize,
+    seat: Seat,
+    shard: &mut Vec<f32>,
+    backend: &mut dyn StepBackend,
+    rng: &mut Rng,
+    outbox: &Outbox,
+    ctx: &ExecCtx<'_>,
+    samplers: &[NegativeSampler],
+    ack_tx: &Sender<()>,
+) -> WorkerOut {
+    let mut pending: HashMap<usize, Vec<f32>> = HashMap::new();
+    let mut traces = Vec::with_capacity(seat.sched.len());
+    let mut finals = Vec::new();
+    let crange = ctx.plan.context_range(g);
+    for (i, &(step_idx, sp)) in seat.sched.iter().enumerate() {
+        // front-buffer fill: block only if the sub-part has not arrived
+        let wait = Timer::start();
+        let mut vbuf = loop {
+            if let Some(b) = pending.remove(&sp) {
+                break b;
+            }
+            let (got, b) = seat.inbox.recv().expect("sub-part ring closed early");
+            assert_ne!(got, POISON, "exec peer worker panicked; aborting episode");
+            if got == sp {
+                break b;
+            }
+            pending.insert(got, b);
+        };
+        let stall_secs = wait.secs();
+        if seat.heads[i] {
+            // the staged head is now this worker's front buffer: release
+            // its feeder window credit (the feeder may already be gone on
+            // the panic path — ignore)
+            let _ = ack_tx.send(());
+        }
+
+        let mut clock = PhaseClock::new();
+        let vrange = ctx.plan.subpart_range(sp);
+        let block = ctx.pool.block(sp, g);
+        // minibatches + per-group shared negatives, drawn in this
+        // worker's schedule order — the exact helper the serial reference
+        // uses, so the two paths cannot drift apart
+        let (mbs, vns) = clock.time(Phase::SampleLoad, || {
+            assemble_block(
+                block,
+                ctx.batch,
+                vrange.start,
+                crange.start,
+                ctx.negatives,
+                &samplers[g],
+                rng,
+            )
+        });
+        let loss = clock.time(Phase::Compute, || {
+            backend.step_block(
+                &mut vbuf,
+                shard,
+                ctx.dim,
+                &mbs,
+                &vns,
+                ctx.negatives,
+                ctx.lr,
+            ) as f64
+        });
+
+        let bytes = PhaseBytes {
+            sample_bytes: block.len() as u64 * 8,
+            subpart_bytes: (vrange.len() * ctx.dim * 4) as u64,
+            train_samples: block.len() as u64,
+            crosses_node: ctx.crosses_node,
+        };
+        match seat.dest[step_idx] {
+            Dest::Gpu(to) => outbox.send(to, sp, vbuf, &mut clock),
+            Dest::Host => finals.push((sp, vbuf)),
+        }
+        traces.push(StepTrace {
+            step: step_idx,
+            gpu: g,
+            subpart: sp,
+            loss,
+            samples: block.len() as u64,
+            bytes,
+            stall_secs,
+            sample_secs: clock.secs(Phase::SampleLoad),
+            compute_secs: clock.secs(Phase::Compute),
+            intra_secs: clock.secs(Phase::IntraHop),
+            hop_secs: clock.secs(Phase::InterHop),
+        });
+    }
+    WorkerOut { traces, finals }
+}

@@ -198,6 +198,19 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         }
         hop_secs_seen += hop;
         hop_sends_seen += sends;
+        // the per-phase validation table: each measured executor phase
+        // (sample-load, H2D, compute, D2H, intra-hop, inter-hop) next to
+        // the discrete-event model's fabric-priced counterpart
+        if let Some(table) = driver.trainer.phase_table() {
+            // the staged gauge is a run-wide high-water mark (add_max),
+            // not a per-episode reading
+            let peak = r.metrics.count("exec_peak_staged");
+            let window = r.metrics.count("exec_stage_window");
+            println!(
+                "  phase breakdown (last episode; run-peak staged {peak}/{window} buffers):"
+            );
+            print!("{table}");
+        }
     }
     let plan = driver.trainer.plan.clone();
     let mut store = driver.finish();

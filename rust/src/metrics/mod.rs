@@ -39,6 +39,14 @@ impl Metrics {
         *self.seconds.entry(key).or_insert(0.0) += s;
     }
 
+    /// Gauge-style counter: keep the largest value ever reported (peaks —
+    /// e.g. the executor's staged-buffer high-water mark — must not sum
+    /// across episodes the way [`Self::add`] does).
+    pub fn add_max(&mut self, key: &'static str, n: u64) {
+        let e = self.counters.entry(key).or_insert(0);
+        *e = (*e).max(n);
+    }
+
     pub fn count(&self, key: &str) -> u64 {
         self.counters.get(key).copied().unwrap_or(0)
     }
@@ -113,6 +121,15 @@ mod tests {
         m.add("samples", 5);
         assert_eq!(m.count("samples"), 15);
         assert_eq!(m.count("missing"), 0);
+    }
+
+    #[test]
+    fn add_max_keeps_the_peak() {
+        let mut m = Metrics::new();
+        m.add_max("peak", 4);
+        m.add_max("peak", 9);
+        m.add_max("peak", 2);
+        assert_eq!(m.count("peak"), 9);
     }
 
     #[test]

@@ -41,6 +41,65 @@ impl PhaseDurations {
             + self.inter_node
             + self.disk_prefetch
     }
+
+    /// Report labels of the seven phases, in the order [`Self::values`]
+    /// returns them (executor-facing names; paper numbering in parens).
+    pub const NAMES: [&'static str; 7] = [
+        "sample-load",   // 1: edge samples host -> GPU
+        "d2h-writeback", // 2: trained sub-part back to CPU
+        "compute",       // 3: train the sub-part
+        "intra-hop",     // 4: inter-GPU P2P to the next trainer
+        "h2d-stage",     // 5: prefetch next sub-part into the back buffer
+        "inter-hop",     // 6: async inter-node sub-part shipping
+        "disk-prefetch", // 7: disk -> host sample prefetch
+    ];
+
+    /// Per-phase seconds in [`Self::NAMES`] order.
+    pub fn values(&self) -> [f64; 7] {
+        [
+            self.load_samples,
+            self.d2h_writeback,
+            self.train,
+            self.p2p,
+            self.prefetch_h2d,
+            self.inter_node,
+            self.disk_prefetch,
+        ]
+    }
+}
+
+/// Render the per-phase validation table: the executor's measured
+/// wall-clock phase seconds next to the discrete-event model's
+/// fabric-priced counterparts, plus the step cost each side implies under
+/// `overlap` — the phase-by-phase check of the §III-C step-cost claim.
+/// Rows whose measured cell actually carries the model estimate are
+/// marked `~`: disk-prefetch always (no executor-side clock), and
+/// inter-hop when no hop crossed a socket — the fallback copies the
+/// simulated f64 verbatim, so bit-equality identifies it.
+pub fn phase_table(
+    measured: &PhaseDurations,
+    simulated: &PhaseDurations,
+    overlap: OverlapConfig,
+) -> String {
+    use crate::util::human_secs;
+    let mut out = format!("  {:<16} {:>12} {:>12}\n", "phase", "measured", "simulated");
+    let (mv, sv) = (measured.values(), simulated.values());
+    for (i, name) in PhaseDurations::NAMES.iter().enumerate() {
+        let model_only = *name == "disk-prefetch"
+            || (*name == "inter-hop" && mv[i].to_bits() == sv[i].to_bits());
+        let mut cell = human_secs(mv[i]);
+        if model_only {
+            cell.insert(0, '~');
+        }
+        out.push_str(&format!("  {:<16} {:>12} {:>12}\n", name, cell, human_secs(sv[i])));
+    }
+    out.push_str(&format!(
+        "  {:<16} {:>12} {:>12}\n",
+        "step (piped)",
+        human_secs(simulate_step(measured, overlap)),
+        human_secs(simulate_step(simulated, overlap)),
+    ));
+    out
 }
 
 /// Which overlaps the executor exploits — the ablation axes.
@@ -252,6 +311,31 @@ mod tests {
         let one = simulate_epoch(&d, 1, OverlapConfig::paper());
         let ten = simulate_epoch(&d, 10, OverlapConfig::paper());
         assert!((ten - 10.0 * one).abs() < 1e-9);
+    }
+
+    #[test]
+    fn names_and_values_stay_aligned() {
+        let d = sample_durations();
+        let v = d.values();
+        assert_eq!(v.len(), PhaseDurations::NAMES.len());
+        assert_eq!(v.iter().sum::<f64>(), d.sum());
+        assert_eq!(v[2], d.train, "NAMES[2] is the compute phase");
+        assert_eq!(v[5], d.inter_node, "NAMES[5] is the inter-node hop");
+    }
+
+    #[test]
+    fn phase_table_lists_every_phase_measured_and_simulated() {
+        let m = sample_durations();
+        let mut s = sample_durations();
+        s.train = 0.2;
+        let t = phase_table(&m, &s, OverlapConfig::paper());
+        for name in PhaseDurations::NAMES {
+            assert!(t.contains(name), "phase {name} missing from table:\n{t}");
+        }
+        assert!(t.contains("measured") && t.contains("simulated"));
+        assert!(t.contains("step (piped)"), "step totals missing:\n{t}");
+        // exactly header + 7 phases + the step row
+        assert_eq!(t.lines().count(), 9, "table:\n{t}");
     }
 
     #[test]

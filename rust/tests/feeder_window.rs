@@ -1,0 +1,103 @@
+//! Feeder-window parity: the executor's bounded host feeder changes only
+//! *when* chain-head sub-parts leave the host store, never *what* an
+//! episode computes. For any `stage_window` — the 1-buffer floor, tiny
+//! windows, exactly one per GPU, or effectively unbounded — the executor
+//! must stay bit-identical to the serial reference schedule on random
+//! small graphs, and the peak-staged gauge must never exceed the
+//! (clamped) window.
+
+use tembed::config::TrainConfig;
+use tembed::coordinator::Trainer;
+use tembed::gen;
+use tembed::util::quickcheck::forall;
+use tembed::util::Rng;
+
+#[test]
+fn any_stage_window_matches_the_serial_schedule_on_random_graphs() {
+    forall(5, 0xFEED, |g| {
+        let nodes = g.usize_in(1, 2);
+        let gpus_per_node = g.usize_in(1, 3);
+        let subparts = g.usize_in(1, 2);
+        let gpus = nodes * gpus_per_node;
+        let n = g.usize_in(gpus * subparts * 8, 260);
+        let m = g.usize_in(2 * n, 6 * n);
+        let graph_seed = g.u64();
+        let graph = gen::to_graph(n, gen::erdos_renyi(n, m, &mut Rng::new(graph_seed)));
+        let samples: Vec<_> = graph.edges().collect();
+        let degrees = graph.degrees();
+        let mk = |executor: bool, window: Option<usize>| TrainConfig {
+            nodes,
+            gpus_per_node,
+            subparts,
+            stage_window: window,
+            dim: 8,
+            negatives: 3,
+            batch: 64,
+            episode_size: 1_500,
+            executor,
+            seed: 7,
+            ..TrainConfig::default()
+        };
+
+        // the serial reference schedule (executor off)
+        let mut serial = Trainer::new(n, &degrees, mk(false, None), None).unwrap();
+        let ref_report = serial.train_epoch(&mut samples.clone(), 0);
+        let ref_store = serial.finish();
+
+        // 1-buffer floor, a tiny window, one per GPU, and "unbounded"
+        for window in [1usize, 2, gpus, usize::MAX] {
+            let mut t = Trainer::new(n, &degrees, mk(true, Some(window)), None).unwrap();
+            let r = t.train_epoch(&mut samples.clone(), 0);
+            assert_eq!(r.samples, ref_report.samples, "window {window}: sample count");
+            let rel = (r.loss_sum - ref_report.loss_sum).abs()
+                / ref_report.loss_sum.abs().max(1e-9);
+            assert!(
+                rel < 1e-9,
+                "window {window}: loss drifted ({} vs serial {})",
+                r.loss_sum,
+                ref_report.loss_sum
+            );
+            // the gauge never exceeds the effective (clamped) window
+            let peak = r.metrics.count("exec_peak_staged");
+            let effective = r.metrics.count("exec_stage_window");
+            assert_eq!(effective, window.max(gpus) as u64, "window {window}: clamp");
+            assert!(
+                peak >= 1 && peak <= effective,
+                "window {window}: peak {peak} outside [1, {effective}]"
+            );
+            // bit-identical model: same vertex matrix, same context shards
+            let store = t.finish();
+            assert_eq!(store.vertex, ref_store.vertex, "window {window}: vertex drifted");
+            assert_eq!(store.context, ref_store.context, "window {window}: context drifted");
+        }
+    });
+}
+
+/// The run-time clamp mirrors `TrainConfig::effective_stage_window`: a
+/// 1-buffer window on a 4-GPU single-process run clamps to 4 (and the
+/// auto default is two buffers per worker this process runs — per rank,
+/// that is one node's GPUs, not the whole cluster's).
+#[test]
+fn configured_windows_below_the_gpu_count_are_clamped_up() {
+    let cfg = TrainConfig {
+        nodes: 2,
+        gpus_per_node: 2,
+        stage_window: Some(1),
+        ..TrainConfig::default()
+    };
+    assert_eq!(cfg.effective_stage_window(), 4);
+    let auto = TrainConfig { nodes: 2, gpus_per_node: 2, ..TrainConfig::default() };
+    assert_eq!(auto.effective_stage_window(), 8);
+    // multi-rank: the feeder serves only this rank's node, so the window
+    // is sized from local GPUs
+    let ranked = TrainConfig {
+        nodes: 4,
+        gpus_per_node: 4,
+        peers: "uds:/tmp/r0.sock,uds:/tmp/r1.sock,uds:/tmp/r2.sock,uds:/tmp/r3.sock".into(),
+        ..TrainConfig::default()
+    };
+    assert_eq!(ranked.effective_stage_window(), 8, "2 x local GPUs, not 2 x 16");
+    let ranked_tight =
+        TrainConfig { stage_window: Some(2), ..ranked };
+    assert_eq!(ranked_tight.effective_stage_window(), 4, "clamped to local GPUs");
+}

@@ -7,8 +7,9 @@
 use std::io::Read;
 
 use tembed::comm::transport::{
-    decode_f32s, encode_f32s, loopback_pair, read_frame, write_frame, DemuxHub, Transport,
-    WireMsg, KIND_FINAL, KIND_POISON, KIND_SUBPART, MAX_FRAME_PAYLOAD, POISON_SUBPART,
+    connect_mesh, decode_f32s, encode_f32s, loopback_pair, read_frame, write_frame, Addr,
+    DemuxHub, Transport, WireMsg, KIND_FINAL, KIND_POISON, KIND_SUBPART, MAX_FRAME_PAYLOAD,
+    POISON_SUBPART,
 };
 use tembed::util::quickcheck::{forall, Gen};
 
@@ -132,6 +133,76 @@ fn poison_propagates_across_the_transport() {
     assert_eq!((sp, rows), (9, vec![1.0, 2.0]), "real frame delivered first");
     assert_eq!(rx.recv().unwrap().0, POISON_SUBPART, "poison follows in order");
     assert!(hub.is_poisoned());
+}
+
+/// The `cluster.peers = host:port` path for real: a two-rank mesh over a
+/// TCP socket pair (the UDS flavor is covered by `internode_smoke` and the
+/// unit tests in `comm::transport`), round-tripping sub-part frames both
+/// ways — including a payload large enough to span many socket reads.
+#[test]
+fn tcp_socket_pair_round_trips_subpart_frames() {
+    // probe free ports by binding ephemeral listeners, then hand the
+    // addresses to connect_mesh; the probe->bind window is racy against
+    // other processes, so allow a couple of attempts
+    fn free_tcp_addr() -> Addr {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe port");
+        let port = l.local_addr().expect("probe addr").port();
+        drop(l);
+        Addr::parse(&format!("tcp:127.0.0.1:{port}")).expect("tcp addr")
+    }
+    let timeout = std::time::Duration::from_secs(20);
+    let mut last_err = String::new();
+    for _attempt in 0..3 {
+        let addrs = vec![free_tcp_addr(), free_tcp_addr()];
+        let addrs1 = addrs.clone();
+        let rank1 = std::thread::spawn(move || -> Result<(), String> {
+            let peers = connect_mesh(1, &addrs1, timeout).map_err(|e| e.to_string())?;
+            let t0 = peers[0].as_ref().expect("rank 0 transport");
+            assert_eq!(t0.peer_rank(), 0);
+            // echo every sub-part back with the tag bumped
+            for _ in 0..2 {
+                let got = t0.recv().map_err(|e| e.to_string())?;
+                assert_eq!(got.kind, KIND_SUBPART);
+                let rows = decode_f32s(&got.payload).expect("f32 payload");
+                t0.send(&WireMsg {
+                    kind: KIND_SUBPART,
+                    dest: got.dest,
+                    tag: got.tag + 1,
+                    payload: encode_f32s(&rows),
+                })
+                .map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
+        let rank0 = match connect_mesh(0, &addrs, timeout) {
+            Ok(peers) => peers,
+            Err(e) => {
+                last_err = e.to_string();
+                let _ = rank1.join();
+                continue; // port race: retry with fresh ports
+            }
+        };
+        let t1 = rank0[1].as_ref().expect("rank 1 transport");
+        assert_eq!(t1.peer_rank(), 1);
+        // a small frame and one spanning many kernel socket reads
+        let small: Vec<f32> = vec![1.5, -2.25, 0.0];
+        let large: Vec<f32> = (0..100_000).map(|i| (i as f32).sin()).collect();
+        for (tag, rows) in [(7u64, &small), (40u64, &large)] {
+            t1.send(&WireMsg {
+                kind: KIND_SUBPART,
+                dest: 3,
+                tag,
+                payload: encode_f32s(rows),
+            })
+            .expect("send over tcp");
+            let echo = t1.recv().expect("echo over tcp");
+            assert_eq!(echo.tag, tag + 1, "echo tags the round trip");
+            assert_eq!(&decode_f32s(&echo.payload).unwrap(), rows, "payload bit-exact");
+        }
+        rank1.join().expect("rank 1 thread").expect("rank 1 mesh");
+        return;
+    }
+    panic!("could not bring up a TCP mesh in 3 attempts (last error: {last_err})");
 }
 
 #[test]
