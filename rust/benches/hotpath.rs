@@ -136,6 +136,66 @@ fn main() {
             r.metrics.count("exec_peak_staged"),
         );
     }
+
+    // --- checkpoint write throughput: the streaming writer's cost per
+    // committed generation (segments + state + manifest, fsynced). The
+    // episode tee must keep up with this or the bounded channel drops —
+    // the MB/s here is the budget the drop-and-count gauge protects.
+    println!("\n# checkpoint write throughput (segmented format, fsync per file)\n");
+    for (n, dim, subparts) in [(50_000usize, 32usize, 8usize), (200_000, 32, 8)] {
+        use tembed::ckpt::{CkptWriter, CkptWriterConfig, EpisodeMeta};
+        use tembed::partition::range_bounds;
+        let dir = std::env::temp_dir()
+            .join(format!("tembed_hotpath_ckpt_{}_{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sb = range_bounds(n, subparts);
+        let cb = range_bounds(n, 2);
+        let episodes = 4u64;
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: cb.clone(),
+            graph_digest: 1,
+            config_digest: 0,
+            channel_cap: episodes as usize * (subparts + 1) + 4,
+        })
+        .expect("ckpt writer");
+        let rows: Vec<Vec<f32>> = (0..subparts)
+            .map(|sp| vec![sp as f32; (sb[sp + 1] - sb[sp]) * dim])
+            .collect();
+        let contexts: Vec<Vec<f32>> =
+            (0..2).map(|g| vec![0.5; (cb[g + 1] - cb[g]) * dim]).collect();
+        let t = Instant::now();
+        for ep in 0..episodes {
+            w.sink().begin_episode(ep, true);
+            for (sp, r) in rows.iter().enumerate() {
+                w.sink().offer_vertex(sp, r.clone());
+            }
+            w.sink()
+                .commit_episode(EpisodeMeta {
+                    watermark: ep,
+                    epoch: 0,
+                    episode_in_epoch: ep,
+                    episodes_in_epoch: episodes,
+                    contexts: contexts.clone(),
+                    rng_states: vec![[1, 2, 3, 4]; 2],
+                })
+                .expect("commit");
+        }
+        let stats = w.finish().expect("writer stats");
+        let secs = t.elapsed().as_secs_f64();
+        let row = format!("ckpt write {n} nodes d={dim} ({} gens)", stats.committed);
+        println!(
+            "{:<44} {:>12.1} MB/s  ({} segments, {} dropped)",
+            row,
+            stats.bytes as f64 / 1e6 / secs,
+            stats.segments,
+            episodes as usize * subparts - stats.segments as usize,
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,581 @@
+//! The segmented checkpoint format: CRC-checked segment/state files plus
+//! the atomically-renamed manifest that stitches one complete generation
+//! together. All integers little-endian; all f32 payloads start at
+//! 4-byte-aligned file offsets so the mmap reader can serve them as
+//! `&[f32]` without copying (see `reader`).
+//!
+//! ```text
+//! segment  sp-<s>.seg : [TSEG][ver u32][watermark u64][subpart u32]
+//!                       [row_start u64][row_count u64][dim u32][crc u32]
+//!                       [row_count*dim f32 LE]            (header 44 B)
+//! state    state.seg  : [TSTA][ver u32][watermark u64][gpus u32][dim u32]
+//!                       [crc u32] [gpus * 4 u64 rng states]
+//!                       [per gpu: start u64, count u64, count*dim f32 LE]
+//!                                                         (header 28 B)
+//! MANIFEST            : [TMAN][payload, see Manifest::encode][crc u32]
+//! ```
+//!
+//! Segment/state CRCs cover the payload after the header; the manifest CRC
+//! covers everything before it, so a torn manifest write is detected even
+//! though the atomic rename makes one essentially impossible.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::comm::transport::{PayloadReader, PayloadWriter};
+use crate::util::error::Context as _;
+
+/// On-disk format version (v1 is the whole-model `TEMB` file in
+/// `embed::checkpoint`; v2 is this segmented layout).
+pub const FORMAT_VERSION: u32 = 2;
+
+pub const MANIFEST_NAME: &str = "MANIFEST";
+pub const MANIFEST_TMP: &str = "MANIFEST.tmp";
+/// State segment file name inside a generation directory.
+pub const STATE_NAME: &str = "state.seg";
+
+const SEG_MAGIC: &[u8; 4] = b"TSEG";
+const STATE_MAGIC: &[u8; 4] = b"TSTA";
+const MAN_MAGIC: &[u8; 4] = b"TMAN";
+
+/// Segment header bytes before the f32 payload (a multiple of 4, keeping
+/// the payload 4-byte aligned for the mmap reader).
+pub const SEG_HEADER_LEN: usize = 44;
+/// State-segment header bytes before the rng/shard body.
+pub const STATE_HEADER_LEN: usize = 28;
+
+/// Generation directory for one committed watermark.
+pub fn gen_dir_name(watermark: u64) -> String {
+    format!("gen-{watermark}")
+}
+
+/// Segment file name for one vertex sub-part.
+pub fn segment_name(subpart: usize) -> String {
+    format!("sp-{subpart:05}.seg")
+}
+
+// ---------------------------------------------------------------- crc32
+
+/// IEEE CRC-32 table (poly 0xEDB88320), built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Streaming CRC-32 update (`crc` starts at 0 for a fresh checksum).
+pub fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = crc ^ 0xFFFF_FFFF;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One-shot CRC-32 (IEEE).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0, bytes)
+}
+
+// ------------------------------------------------------------- encoding
+
+/// Write `xs` as little-endian f32 bytes through a chunked staging buffer
+/// — the safe replacement for the raw-parts transmute the v1 writer used.
+/// Also serves `embed::checkpoint::save`.
+pub fn write_f32s_le<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    let mut crc = 0u32;
+    write_f32s_le_crc(w, xs, &mut crc)
+}
+
+/// [`write_f32s_le`] that additionally folds the written bytes into a
+/// streaming CRC.
+pub fn write_f32s_le_crc<W: Write>(
+    w: &mut W,
+    xs: &[f32],
+    crc: &mut u32,
+) -> std::io::Result<()> {
+    // 16 KiB staging chunks: small enough to stay cache-resident, large
+    // enough that write_all syscall overhead disappears
+    let mut buf = Vec::with_capacity(4096 * 4);
+    for chunk in xs.chunks(4096) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        *crc = crc32_update(*crc, &buf);
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- segments
+
+/// Parsed segment header (the first [`SEG_HEADER_LEN`] bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentHeader {
+    pub watermark: u64,
+    pub subpart: u32,
+    pub row_start: u64,
+    pub row_count: u64,
+    pub dim: u32,
+    pub crc: u32,
+}
+
+impl SegmentHeader {
+    /// Payload bytes the header promises.
+    pub fn payload_len(&self) -> usize {
+        self.row_count as usize * self.dim as usize * 4
+    }
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(x)
+}
+
+/// Write one vertex sub-part segment; returns `(payload crc, file bytes)`.
+/// The file is fsynced before returning so a later manifest rename cannot
+/// commit a segment the disk has not seen.
+pub fn write_segment(
+    path: &Path,
+    watermark: u64,
+    subpart: u32,
+    row_start: u64,
+    dim: u32,
+    rows: &[f32],
+) -> crate::Result<(u32, u64)> {
+    crate::ensure!(dim > 0, "segment dim must be positive");
+    crate::ensure!(
+        rows.len() % dim as usize == 0,
+        "segment rows {} not a multiple of dim {dim}",
+        rows.len()
+    );
+    let row_count = (rows.len() / dim as usize) as u64;
+    let mut body_crc = 0u32;
+    let mut payload = std::io::Cursor::new(Vec::with_capacity(rows.len() * 4));
+    write_f32s_le_crc(&mut payload, rows, &mut body_crc)?;
+    let payload = payload.into_inner();
+
+    let mut header = [0u8; SEG_HEADER_LEN];
+    header[0..4].copy_from_slice(SEG_MAGIC);
+    header[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    header[8..16].copy_from_slice(&watermark.to_le_bytes());
+    header[16..20].copy_from_slice(&subpart.to_le_bytes());
+    header[20..28].copy_from_slice(&row_start.to_le_bytes());
+    header[28..36].copy_from_slice(&row_count.to_le_bytes());
+    header[36..40].copy_from_slice(&dim.to_le_bytes());
+    header[40..44].copy_from_slice(&body_crc.to_le_bytes());
+
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&header)?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    w.get_ref().sync_all().with_context(|| format!("fsync {}", path.display()))?;
+    Ok((body_crc, (SEG_HEADER_LEN + payload.len()) as u64))
+}
+
+/// Parse and sanity-check a segment header from the file's leading bytes.
+pub fn read_segment_header(bytes: &[u8]) -> crate::Result<SegmentHeader> {
+    crate::ensure!(bytes.len() >= SEG_HEADER_LEN, "segment truncated inside its header");
+    crate::ensure!(&bytes[0..4] == SEG_MAGIC, "not a tembed checkpoint segment");
+    let version = u32_at(bytes, 4);
+    crate::ensure!(version == FORMAT_VERSION, "unsupported segment version {version}");
+    Ok(SegmentHeader {
+        watermark: u64_at(bytes, 8),
+        subpart: u32_at(bytes, 16),
+        row_start: u64_at(bytes, 20),
+        row_count: u64_at(bytes, 28),
+        dim: u32_at(bytes, 36),
+        crc: u32_at(bytes, 40),
+    })
+}
+
+// ---------------------------------------------------------------- state
+
+/// Parsed state-segment header (the first [`STATE_HEADER_LEN`] bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateHeader {
+    pub watermark: u64,
+    pub gpus: u32,
+    pub dim: u32,
+    pub crc: u32,
+}
+
+/// Write the per-episode trainer state: one xoshiro RNG state and one
+/// pinned context shard per GPU. Returns `(body crc, file bytes)`.
+pub fn write_state(
+    path: &Path,
+    watermark: u64,
+    dim: u32,
+    rngs: &[[u64; 4]],
+    shards: &[(u64, &[f32])],
+) -> crate::Result<(u32, u64)> {
+    crate::ensure!(
+        rngs.len() == shards.len(),
+        "state needs one rng per context shard ({} vs {})",
+        rngs.len(),
+        shards.len()
+    );
+    let mut body = Vec::new();
+    for s in rngs {
+        for w in s {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    let mut crc = crc32(&body);
+    let mut out = Vec::with_capacity(body.len());
+    out.append(&mut body);
+    for (start, rows) in shards {
+        crate::ensure!(
+            rows.len() % dim as usize == 0,
+            "context shard length {} not a multiple of dim {dim}",
+            rows.len()
+        );
+        let mut head = [0u8; 16];
+        head[0..8].copy_from_slice(&start.to_le_bytes());
+        head[8..16].copy_from_slice(&((rows.len() / dim as usize) as u64).to_le_bytes());
+        crc = crc32_update(crc, &head);
+        out.extend_from_slice(&head);
+        let before = out.len();
+        write_f32s_le_crc(&mut out, rows, &mut crc)?;
+        debug_assert_eq!(out.len() - before, rows.len() * 4);
+    }
+
+    let mut header = [0u8; STATE_HEADER_LEN];
+    header[0..4].copy_from_slice(STATE_MAGIC);
+    header[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    header[8..16].copy_from_slice(&watermark.to_le_bytes());
+    header[16..20].copy_from_slice(&(rngs.len() as u32).to_le_bytes());
+    header[20..24].copy_from_slice(&dim.to_le_bytes());
+    header[24..28].copy_from_slice(&crc.to_le_bytes());
+
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&header)?;
+    w.write_all(&out)?;
+    w.flush()?;
+    w.get_ref().sync_all().with_context(|| format!("fsync {}", path.display()))?;
+    Ok((crc, (STATE_HEADER_LEN + out.len()) as u64))
+}
+
+/// Parse and sanity-check a state header from the file's leading bytes.
+pub fn read_state_header(bytes: &[u8]) -> crate::Result<StateHeader> {
+    crate::ensure!(bytes.len() >= STATE_HEADER_LEN, "state segment truncated inside its header");
+    crate::ensure!(&bytes[0..4] == STATE_MAGIC, "not a tembed checkpoint state segment");
+    let version = u32_at(bytes, 4);
+    crate::ensure!(version == FORMAT_VERSION, "unsupported state version {version}");
+    Ok(StateHeader {
+        watermark: u64_at(bytes, 8),
+        gpus: u32_at(bytes, 16),
+        dim: u32_at(bytes, 20),
+        crc: u32_at(bytes, 24),
+    })
+}
+
+// ------------------------------------------------------------- manifest
+
+/// One vertex segment referenced by the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentEntry {
+    pub subpart: u32,
+    pub row_start: u64,
+    pub row_count: u64,
+    pub crc: u32,
+    /// Path relative to the checkpoint directory.
+    pub path: String,
+}
+
+/// The committed-generation index: everything a reader (or a resuming
+/// trainer) needs to reconstruct the model state after episode
+/// `watermark`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: u32,
+    /// Global episode counter of the committed episode — the serving
+    /// path's freshness signal.
+    pub watermark: u64,
+    pub epoch: u64,
+    pub episode_in_epoch: u64,
+    pub episodes_in_epoch: u64,
+    pub num_nodes: u64,
+    pub dim: u32,
+    /// FNV degree-sequence digest of the trained graph (the PR 2 plan
+    /// handshake digest) — `--resume` refuses a mismatching graph.
+    pub graph_digest: u64,
+    /// `TrainConfig::resume_digest()` of the writing run — `--resume`
+    /// refuses a config whose episode split / sample stream / update math
+    /// would diverge from the checkpointed run.
+    pub config_digest: u64,
+    pub gpus: u32,
+    pub segments: Vec<SegmentEntry>,
+    pub state_path: String,
+    pub state_crc: u32,
+}
+
+impl Manifest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::from(*MAN_MAGIC);
+        let mut w = PayloadWriter::new();
+        w.put_u32(self.version);
+        w.put_u64(self.watermark);
+        w.put_u64(self.epoch);
+        w.put_u64(self.episode_in_epoch);
+        w.put_u64(self.episodes_in_epoch);
+        w.put_u64(self.num_nodes);
+        w.put_u32(self.dim);
+        w.put_u64(self.graph_digest);
+        w.put_u64(self.config_digest);
+        w.put_u32(self.gpus);
+        w.put_u32(self.segments.len() as u32);
+        for s in &self.segments {
+            w.put_u32(s.subpart);
+            w.put_u64(s.row_start);
+            w.put_u64(s.row_count);
+            w.put_u32(s.crc);
+            w.put_bytes(s.path.as_bytes());
+        }
+        w.put_u32(self.state_crc);
+        w.put_bytes(self.state_path.as_bytes());
+        out.extend_from_slice(&w.finish());
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> crate::Result<Manifest> {
+        crate::ensure!(bytes.len() >= 8, "manifest truncated");
+        crate::ensure!(&bytes[0..4] == MAN_MAGIC, "not a tembed checkpoint manifest");
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32_at(bytes, bytes.len() - 4);
+        let actual = crc32(body);
+        crate::ensure!(
+            stored == actual,
+            "manifest checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+        );
+        let mut r = PayloadReader::new(&body[4..]);
+        let version = r.u32()?;
+        crate::ensure!(version == FORMAT_VERSION, "unsupported manifest version {version}");
+        let watermark = r.u64()?;
+        let epoch = r.u64()?;
+        let episode_in_epoch = r.u64()?;
+        let episodes_in_epoch = r.u64()?;
+        let num_nodes = r.u64()?;
+        let dim = r.u32()?;
+        let graph_digest = r.u64()?;
+        let config_digest = r.u64()?;
+        let gpus = r.u32()?;
+        let nsegs = r.u32()? as usize;
+        // a corrupt count must error on read, not abort on allocation
+        crate::ensure!(nsegs <= bytes.len() / 24, "manifest claims {nsegs} segments");
+        let mut segments = Vec::with_capacity(nsegs);
+        for _ in 0..nsegs {
+            let subpart = r.u32()?;
+            let row_start = r.u64()?;
+            let row_count = r.u64()?;
+            let crc = r.u32()?;
+            let path = String::from_utf8(r.bytes()?.to_vec())
+                .map_err(|_| crate::anyhow!("manifest segment path is not utf-8"))?;
+            segments.push(SegmentEntry { subpart, row_start, row_count, crc, path });
+        }
+        let state_crc = r.u32()?;
+        let state_path = String::from_utf8(r.bytes()?.to_vec())
+            .map_err(|_| crate::anyhow!("manifest state path is not utf-8"))?;
+        Ok(Manifest {
+            version,
+            watermark,
+            epoch,
+            episode_in_epoch,
+            episodes_in_epoch,
+            num_nodes,
+            dim,
+            graph_digest,
+            config_digest,
+            gpus,
+            segments,
+            state_path,
+            state_crc,
+        })
+    }
+}
+
+/// Read and verify the committed manifest of a checkpoint directory.
+pub fn read_manifest(dir: &Path) -> crate::Result<Manifest> {
+    let path = dir.join(MANIFEST_NAME);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("read checkpoint manifest {}", path.display()))?;
+    Manifest::decode(&bytes).with_context(|| format!("decode {}", path.display()))
+}
+
+/// Cheap freshness probe: the watermark sits at a fixed offset, so the
+/// serving path can poll for new generations without decoding the whole
+/// manifest.
+pub fn peek_watermark(dir: &Path) -> crate::Result<u64> {
+    use std::io::Read;
+    let path = dir.join(MANIFEST_NAME);
+    let mut f =
+        File::open(&path).with_context(|| format!("open {}", path.display()))?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head).with_context(|| format!("read {}", path.display()))?;
+    crate::ensure!(&head[0..4] == MAN_MAGIC, "not a tembed checkpoint manifest");
+    Ok(u64_at(&head, 8))
+}
+
+/// Commit a manifest: write `MANIFEST.tmp`, fsync it, atomically rename
+/// over `MANIFEST`, and best-effort fsync the directory so the rename
+/// itself is durable.
+pub fn commit_manifest(dir: &Path, m: &Manifest) -> crate::Result<()> {
+    let tmp = dir.join(MANIFEST_TMP);
+    let dst = dir.join(MANIFEST_NAME);
+    let bytes = m.encode();
+    {
+        let mut f =
+            File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, &dst)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), dst.display()))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tembed_ckpt_format").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // streaming == one-shot
+        let mut c = crc32_update(0, b"1234");
+        c = crc32_update(c, b"56789");
+        assert_eq!(c, 0xCBF4_3926);
+    }
+
+    #[test]
+    fn f32_writer_matches_manual_encoding() {
+        let xs = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let mut out = Vec::new();
+        write_f32s_le(&mut out, &xs).unwrap();
+        let manual: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(out, manual);
+    }
+
+    #[test]
+    fn segment_round_trips_with_crc() {
+        let dir = tmp_dir("seg");
+        let path = dir.join(segment_name(3));
+        let rows: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        let (crc, bytes) = write_segment(&path, 7, 3, 16, 4, &rows).unwrap();
+        assert_eq!(bytes as usize, SEG_HEADER_LEN + rows.len() * 4);
+        let file = std::fs::read(&path).unwrap();
+        let h = read_segment_header(&file).unwrap();
+        assert_eq!(h.watermark, 7);
+        assert_eq!(h.subpart, 3);
+        assert_eq!(h.row_start, 16);
+        assert_eq!(h.row_count, 6);
+        assert_eq!(h.dim, 4);
+        assert_eq!(h.crc, crc);
+        assert_eq!(crc32(&file[SEG_HEADER_LEN..]), crc);
+        // payload alignment for the mmap reader
+        assert_eq!(SEG_HEADER_LEN % 4, 0);
+        assert_eq!(STATE_HEADER_LEN % 4, 0);
+    }
+
+    #[test]
+    fn state_round_trips_header() {
+        let dir = tmp_dir("state");
+        let path = dir.join(STATE_NAME);
+        let rngs = [[1u64, 2, 3, 4], [5, 6, 7, 8]];
+        let a: Vec<f32> = vec![0.5; 8];
+        let b: Vec<f32> = vec![-1.0; 8];
+        let shards: Vec<(u64, &[f32])> = vec![(0, &a), (4, &b)];
+        let (crc, _) = write_state(&path, 11, 2, &rngs, &shards).unwrap();
+        let file = std::fs::read(&path).unwrap();
+        let h = read_state_header(&file).unwrap();
+        assert_eq!(h.watermark, 11);
+        assert_eq!(h.gpus, 2);
+        assert_eq!(h.dim, 2);
+        assert_eq!(h.crc, crc);
+        assert_eq!(crc32(&file[STATE_HEADER_LEN..]), crc);
+    }
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            version: FORMAT_VERSION,
+            watermark: 9,
+            epoch: 1,
+            episode_in_epoch: 2,
+            episodes_in_epoch: 3,
+            num_nodes: 100,
+            dim: 8,
+            graph_digest: 0xDEAD_BEEF,
+            config_digest: 0xC0FF_EE,
+            gpus: 2,
+            segments: vec![SegmentEntry {
+                subpart: 0,
+                row_start: 0,
+                row_count: 50,
+                crc: 0x1234,
+                path: "gen-9/sp-00000.seg".into(),
+            }],
+            state_path: "gen-9/state.seg".into(),
+            state_crc: 0x5678,
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_corruption() {
+        let m = sample_manifest();
+        let bytes = m.encode();
+        assert_eq!(Manifest::decode(&bytes).unwrap(), m);
+        // flip one payload byte: checksum catches it
+        let mut bad = bytes.clone();
+        bad[20] ^= 0xFF;
+        assert!(Manifest::decode(&bad).is_err());
+        // truncation caught too
+        assert!(Manifest::decode(&bytes[..bytes.len() - 3]).is_err());
+        assert!(Manifest::decode(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn commit_and_peek_watermark() {
+        let dir = tmp_dir("commit");
+        let m = sample_manifest();
+        commit_manifest(&dir, &m).unwrap();
+        assert_eq!(peek_watermark(&dir).unwrap(), 9);
+        assert_eq!(read_manifest(&dir).unwrap(), m);
+        assert!(!dir.join(MANIFEST_TMP).exists(), "tmp renamed away");
+        // a newer commit replaces it atomically
+        let mut m2 = m;
+        m2.watermark = 10;
+        commit_manifest(&dir, &m2).unwrap();
+        assert_eq!(peek_watermark(&dir).unwrap(), 10);
+    }
+}

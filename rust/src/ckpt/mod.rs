@@ -1,0 +1,51 @@
+//! Streaming checkpoint subsystem: segmented on-disk checkpoints written
+//! *while training runs*, an mmap-backed reader, and a query-serving path
+//! — the consumer side the paper's system exists to feed (WeChat-scale
+//! downstream pipelines ingest embeddings long before training ends).
+//!
+//! Three layers:
+//!
+//! * [`writer`] — a dedicated checkpoint-writer thread fed by a **bounded**
+//!   channel. The executor's store-writer drain tees every chain-end
+//!   sub-part into the sink ([`CkptSink::offer_vertex`], a `try_send` that
+//!   drops-and-counts when the channel is full — a slow disk can never
+//!   block a worker), and the coordinator commits each episode with the
+//!   context shards + RNG states that make the checkpoint resumable.
+//! * [`format`] — the segmented, versioned on-disk format: one segment
+//!   file per vertex sub-part plus a state segment (contexts, RNG streams,
+//!   progress), each CRC-checked, referenced by a manifest that is written
+//!   to a temp file and atomically renamed. A crash leaves at most one
+//!   episode unrecoverable: the previous manifest still references a
+//!   complete generation.
+//! * [`reader`] / [`serve`] — [`CkptReader`] opens the newest complete
+//!   manifest without copying the matrices (`cfg(unix)` mmap of the
+//!   segment payloads, with a portable read-and-decode fallback), and
+//!   [`serve`] answers edge-score / top-k / stat queries over the
+//!   `comm::transport` framing (KIND_QUERY/KIND_REPLY) from a checkpoint
+//!   directory that a concurrent `tembed train --ckpt-dir` is still
+//!   appending to, re-opening the manifest whenever the watermark moves.
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <dir>/MANIFEST            committed manifest (atomic rename target)
+//! <dir>/MANIFEST.tmp        transient; ignored by readers
+//! <dir>/gen-<w>/sp-<s>.seg  vertex sub-part segments of watermark w
+//! <dir>/gen-<w>/state.seg   context shards + RNG states + progress
+//! ```
+//!
+//! Only the generation the manifest references (and, transiently, the one
+//! being written) exists on disk; older generations are garbage-collected
+//! one commit late so a reader that just loaded the manifest never races a
+//! deletion. On unix even that race is benign: an mmap of an unlinked
+//! segment stays valid until unmapped.
+
+pub mod format;
+pub mod reader;
+pub mod serve;
+pub mod writer;
+
+pub use format::Manifest;
+pub use reader::CkptReader;
+pub use serve::QueryClient;
+pub use writer::{CkptSink, CkptWriter, CkptWriterConfig, EpisodeMeta, Offer, WriterStats};

@@ -1,0 +1,672 @@
+//! Read side of the streaming checkpoint: open the newest complete
+//! manifest and serve vertex/context rows **without copying the
+//! matrices** — on little-endian unix the segment payloads are mmapped
+//! and served as `&[f32]` straight out of the page cache; everywhere
+//! else (or with `TEMBED_CKPT_NO_MMAP=1`) a portable read-and-decode
+//! fallback copies each segment once at open.
+//!
+//! Safe-concurrency notes: the writer never modifies a committed segment
+//! (each generation is write-once, manifests switch by atomic rename), so
+//! a mapping can never observe a partial write; and on unix an unlinked
+//! segment file stays readable through an existing map, so the writer's
+//! delayed GC cannot invalidate a reader that won the open race. A reader
+//! that *loses* the race (segment removed between manifest read and file
+//! open) just retries against the newer manifest — see [`CkptReader::open`].
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::embed::EmbeddingStore;
+use crate::util::error::Context as _;
+
+use super::format::{
+    self, Manifest, SegmentEntry, SEG_HEADER_LEN, STATE_HEADER_LEN,
+};
+
+/// Minimal mmap FFI. The offline crate set has no `libc`, but every Rust
+/// binary on unix already links the platform C library, so declaring the
+/// two calls we need is enough.
+#[cfg(all(unix, target_endian = "little"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: isize,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// A read-only private mapping of a whole file.
+    pub struct Map {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is read-only for its entire lifetime and the
+    // pointer is owned exclusively by this struct.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    impl Map {
+        pub fn of_file(f: &std::fs::File, len: usize) -> Option<Map> {
+            if len == 0 {
+                return None;
+            }
+            // SAFETY: read-only private mapping over an open fd; length
+            // matches the file size the caller just stat'ed.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, f.as_raw_fd(), 0)
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                None
+            } else {
+                Some(Map { ptr, len })
+            }
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: ptr/len describe a live read-only mapping.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            // SAFETY: ptr/len came from a successful mmap.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// A run of f32s, either borrowed from an mmapped file or owned (the
+/// portable fallback's one-time copy).
+enum F32Source {
+    #[cfg(all(unix, target_endian = "little"))]
+    Mapped {
+        map: Arc<sys::Map>,
+        /// Byte offset of the first f32 (always 4-aligned: every header
+        /// in the format is a multiple of 4 bytes).
+        offset: usize,
+        /// Length in f32s.
+        len: usize,
+    },
+    Owned(Vec<f32>),
+}
+
+impl F32Source {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            #[cfg(all(unix, target_endian = "little"))]
+            F32Source::Mapped { map, offset, len } => {
+                let bytes = map.bytes();
+                debug_assert!(offset + len * 4 <= bytes.len());
+                debug_assert_eq!(offset % 4, 0);
+                // SAFETY: range-checked at construction, 4-aligned (page
+                // base + multiple-of-4 offset), and the target is
+                // little-endian so the on-disk LE f32s are native.
+                unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr().add(*offset) as *const f32, *len)
+                }
+            }
+            F32Source::Owned(v) => v,
+        }
+    }
+}
+
+/// Whether this build + environment serves segments via mmap. The env
+/// var is read exactly once per process (tests never mutate the
+/// environment — `setenv` racing `getenv` on other threads is UB; the
+/// fallback path is covered through [`CkptReader::open_owned`] instead).
+fn use_mmap() -> bool {
+    static NO_MMAP: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    cfg!(all(unix, target_endian = "little"))
+        && !*NO_MMAP.get_or_init(|| std::env::var_os("TEMBED_CKPT_NO_MMAP").is_some())
+}
+
+/// One opened, verified file: its bytes (mapped or owned raw) ready for
+/// slicing into [`F32Source`]s.
+enum FileBytes {
+    #[cfg(all(unix, target_endian = "little"))]
+    Mapped(Arc<sys::Map>),
+    Owned(Vec<u8>),
+}
+
+impl FileBytes {
+    fn open(path: &Path, mmap: bool) -> crate::Result<FileBytes> {
+        if mmap {
+            #[cfg(all(unix, target_endian = "little"))]
+            {
+                let f = std::fs::File::open(path)
+                    .with_context(|| format!("open {}", path.display()))?;
+                let len = f
+                    .metadata()
+                    .with_context(|| format!("stat {}", path.display()))?
+                    .len() as usize;
+                if let Some(map) = sys::Map::of_file(&f, len) {
+                    return Ok(FileBytes::Mapped(Arc::new(map)));
+                }
+                // mmap refused (0-length file, exotic fs): fall through
+            }
+        }
+        Ok(FileBytes::Owned(
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?,
+        ))
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(all(unix, target_endian = "little"))]
+            FileBytes::Mapped(m) => m.bytes(),
+            FileBytes::Owned(v) => v,
+        }
+    }
+
+    /// Slice `len` f32s starting at byte `offset` (must be 4-aligned and
+    /// in range — verified by the caller against the parsed header).
+    fn f32s(&self, offset: usize, len: usize) -> F32Source {
+        match self {
+            #[cfg(all(unix, target_endian = "little"))]
+            FileBytes::Mapped(m) => {
+                F32Source::Mapped { map: Arc::clone(m), offset, len }
+            }
+            FileBytes::Owned(v) => F32Source::Owned(
+                v[offset..offset + len * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        }
+    }
+}
+
+struct VertexSeg {
+    row_start: usize,
+    rows: F32Source,
+}
+
+struct CtxShard {
+    row_start: usize,
+    rows: F32Source,
+}
+
+/// Zero-copy view over the newest committed checkpoint generation.
+pub struct CkptReader {
+    dir: PathBuf,
+    manifest: Manifest,
+    segs: Vec<VertexSeg>,
+    /// `vertex_bounds[i]` = first row of segment `i` (+ trailing
+    /// num_nodes), for the row → segment lookup.
+    vertex_bounds: Vec<usize>,
+    shards: Vec<CtxShard>,
+    ctx_bounds: Vec<usize>,
+    rng_states: Vec<[u64; 4]>,
+}
+
+impl CkptReader {
+    /// Open the newest complete manifest. Retries a few times so a reader
+    /// racing the writer's generation GC lands on the next manifest
+    /// instead of erroring out.
+    pub fn open(dir: &Path) -> crate::Result<CkptReader> {
+        Self::open_opts(dir, use_mmap())
+    }
+
+    /// Forced-fallback open: read-and-decode every file instead of
+    /// mmapping, regardless of platform. What `TEMBED_CKPT_NO_MMAP=1`
+    /// selects process-wide; exposed so tests can pin byte-equality of
+    /// the two paths without mutating the environment.
+    pub fn open_owned(dir: &Path) -> crate::Result<CkptReader> {
+        Self::open_opts(dir, false)
+    }
+
+    fn open_opts(dir: &Path, mmap: bool) -> crate::Result<CkptReader> {
+        let mut last_err = None;
+        for attempt in 0..3 {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+            }
+            match Self::open_once(dir, mmap) {
+                Ok(r) => return Ok(r),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one open attempt ran"))
+    }
+
+    fn open_once(dir: &Path, mmap: bool) -> crate::Result<CkptReader> {
+        let manifest = format::read_manifest(dir)?;
+        crate::ensure!(
+            manifest.dim >= 1 && !manifest.segments.is_empty(),
+            "manifest is degenerate (dim {} / {} segments)",
+            manifest.dim,
+            manifest.segments.len()
+        );
+        let dim = manifest.dim as usize;
+        let mut segs = Vec::with_capacity(manifest.segments.len());
+        for entry in &manifest.segments {
+            segs.push(open_segment(dir, entry, &manifest, mmap)?);
+        }
+        segs.sort_by_key(|s| s.row_start);
+        let mut vertex_bounds = Vec::with_capacity(segs.len() + 1);
+        let mut expect = 0usize;
+        for s in &segs {
+            crate::ensure!(
+                s.row_start == expect,
+                "segments leave a vertex-row gap at {expect}"
+            );
+            vertex_bounds.push(s.row_start);
+            expect += s.rows.as_slice().len() / dim;
+        }
+        crate::ensure!(
+            expect as u64 == manifest.num_nodes,
+            "segments cover {expect} rows, manifest says {}",
+            manifest.num_nodes
+        );
+        vertex_bounds.push(expect);
+
+        let (shards, rng_states) = open_state(dir, &manifest, mmap)?;
+        let mut ctx_bounds = Vec::with_capacity(shards.len() + 1);
+        let mut expect = 0usize;
+        for s in &shards {
+            crate::ensure!(
+                s.row_start == expect,
+                "context shards leave a row gap at {expect}"
+            );
+            ctx_bounds.push(s.row_start);
+            expect += s.rows.as_slice().len() / dim;
+        }
+        crate::ensure!(
+            expect as u64 == manifest.num_nodes,
+            "context shards cover {expect} rows, manifest says {}",
+            manifest.num_nodes
+        );
+        ctx_bounds.push(expect);
+
+        Ok(CkptReader {
+            dir: dir.to_path_buf(),
+            manifest,
+            segs,
+            vertex_bounds,
+            shards,
+            ctx_bounds,
+            rng_states,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn watermark(&self) -> u64 {
+        self.manifest.watermark
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.manifest.num_nodes as usize
+    }
+
+    pub fn dim(&self) -> usize {
+        self.manifest.dim as usize
+    }
+
+    /// Per-GPU xoshiro states captured at the committed episode boundary.
+    pub fn rng_states(&self) -> &[[u64; 4]] {
+        &self.rng_states
+    }
+
+    /// One GPU's pinned context shard (GPU order).
+    pub fn context_shard(&self, gpu: usize) -> &[f32] {
+        self.shards[gpu].rows.as_slice()
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Re-open if the on-disk watermark moved past this view. Returns
+    /// whether a newer generation was loaded.
+    pub fn refresh(&mut self) -> crate::Result<bool> {
+        match format::peek_watermark(&self.dir) {
+            Ok(w) if w == self.manifest.watermark => Ok(false),
+            // a mid-rename peek can transiently fail; keep serving the
+            // generation we have
+            Err(_) => Ok(false),
+            Ok(_) => {
+                *self = Self::open(&self.dir)?;
+                Ok(true)
+            }
+        }
+    }
+
+    fn block_of(bounds: &[usize], v: usize) -> usize {
+        // partition_point handles empty blocks (duplicate bounds) where a
+        // plain binary_search could land on a zero-width neighbor
+        bounds.partition_point(|&b| b <= v).saturating_sub(1)
+    }
+
+    /// Vertex embedding of node `v`, straight off the mapped segment.
+    pub fn vertex_row(&self, v: usize) -> &[f32] {
+        assert!(v < self.num_nodes(), "node {v} out of range");
+        let dim = self.dim();
+        let seg = &self.segs[Self::block_of(&self.vertex_bounds, v)];
+        let local = v - seg.row_start;
+        &seg.rows.as_slice()[local * dim..(local + 1) * dim]
+    }
+
+    /// Context embedding of node `v` (from the state segment's shards).
+    pub fn context_row(&self, v: usize) -> &[f32] {
+        assert!(v < self.num_nodes(), "node {v} out of range");
+        let dim = self.dim();
+        let shard = &self.shards[Self::block_of(&self.ctx_bounds, v)];
+        let local = v - shard.row_start;
+        &shard.rows.as_slice()[local * dim..(local + 1) * dim]
+    }
+
+    /// Edge score `vertex[u] · context[v]` — identical semantics to
+    /// `EmbeddingStore::score`, so a served score matches what the
+    /// trainer would compute from the same generation.
+    pub fn score(&self, u: u32, v: u32) -> f32 {
+        let a = self.vertex_row(u as usize);
+        let b = self.context_row(v as usize);
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// Top-k neighbor candidates of `u` by edge score over every node
+    /// (brute-force scan; the simulated scales this repo runs at keep
+    /// this well inside a query budget).
+    pub fn topk(&self, u: u32, k: usize) -> Vec<(u32, f32)> {
+        let mut scored: Vec<(u32, f32)> = (0..self.num_nodes() as u32)
+            .filter(|&v| v != u)
+            .map(|v| (v, self.score(u, v)))
+            .collect();
+        let k = k.min(scored.len());
+        if k < scored.len() {
+            scored.select_nth_unstable_by(k, |a, b| {
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            scored.truncate(k);
+        }
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored
+    }
+
+    /// Copy the checkpoint out into a full in-memory model — the v2 path
+    /// behind `embed::checkpoint::load`, and the resume restore source.
+    pub fn materialize(&self) -> EmbeddingStore {
+        let dim = self.dim();
+        let n = self.num_nodes();
+        let mut vertex = vec![0.0f32; n * dim];
+        for s in &self.segs {
+            let rows = s.rows.as_slice();
+            vertex[s.row_start * dim..s.row_start * dim + rows.len()].copy_from_slice(rows);
+        }
+        let mut context = vec![0.0f32; n * dim];
+        for s in &self.shards {
+            let rows = s.rows.as_slice();
+            context[s.row_start * dim..s.row_start * dim + rows.len()].copy_from_slice(rows);
+        }
+        EmbeddingStore { dim, num_nodes: n, vertex, context }
+    }
+}
+
+fn open_segment(
+    dir: &Path,
+    entry: &SegmentEntry,
+    manifest: &Manifest,
+    mmap: bool,
+) -> crate::Result<VertexSeg> {
+    let path = dir.join(&entry.path);
+    let file = FileBytes::open(&path, mmap)?;
+    let bytes = file.bytes();
+    let h = format::read_segment_header(bytes)
+        .with_context(|| format!("segment {}", path.display()))?;
+    crate::ensure!(
+        h.subpart == entry.subpart
+            && h.row_start == entry.row_start
+            && h.row_count == entry.row_count
+            && h.dim == manifest.dim
+            && h.watermark == manifest.watermark,
+        "segment {} does not match its manifest entry",
+        path.display()
+    );
+    let payload_len = h.payload_len();
+    crate::ensure!(
+        bytes.len() == SEG_HEADER_LEN + payload_len,
+        "segment {} truncated: {} of {} bytes",
+        path.display(),
+        bytes.len(),
+        SEG_HEADER_LEN + payload_len
+    );
+    let crc = format::crc32(&bytes[SEG_HEADER_LEN..]);
+    crate::ensure!(
+        crc == entry.crc && crc == h.crc,
+        "segment {} payload checksum mismatch",
+        path.display()
+    );
+    Ok(VertexSeg {
+        row_start: entry.row_start as usize,
+        rows: file.f32s(SEG_HEADER_LEN, payload_len / 4),
+    })
+}
+
+#[allow(clippy::type_complexity)]
+fn open_state(
+    dir: &Path,
+    manifest: &Manifest,
+    mmap: bool,
+) -> crate::Result<(Vec<CtxShard>, Vec<[u64; 4]>)> {
+    let path = dir.join(&manifest.state_path);
+    let file = FileBytes::open(&path, mmap)?;
+    let bytes = file.bytes();
+    let h = format::read_state_header(bytes)
+        .with_context(|| format!("state segment {}", path.display()))?;
+    crate::ensure!(
+        h.dim == manifest.dim && h.gpus == manifest.gpus && h.watermark == manifest.watermark,
+        "state segment {} does not match its manifest",
+        path.display()
+    );
+    let crc = format::crc32(&bytes[STATE_HEADER_LEN..]);
+    crate::ensure!(
+        crc == h.crc && crc == manifest.state_crc,
+        "state segment {} checksum mismatch",
+        path.display()
+    );
+    let gpus = h.gpus as usize;
+    let dim = h.dim as usize;
+    let mut off = STATE_HEADER_LEN;
+    let take = |off: &mut usize, n: usize| -> crate::Result<usize> {
+        let at = *off;
+        crate::ensure!(at + n <= bytes.len(), "state segment {} truncated", path.display());
+        *off = at + n;
+        Ok(at)
+    };
+    let mut rng_states = Vec::with_capacity(gpus);
+    for _ in 0..gpus {
+        let at = take(&mut off, 32)?;
+        let mut s = [0u64; 4];
+        for (i, word) in s.iter_mut().enumerate() {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[at + i * 8..at + i * 8 + 8]);
+            *word = u64::from_le_bytes(b);
+        }
+        rng_states.push(s);
+    }
+    let mut shards = Vec::with_capacity(gpus);
+    for _ in 0..gpus {
+        let at = take(&mut off, 16)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[at..at + 8]);
+        let start = u64::from_le_bytes(b) as usize;
+        b.copy_from_slice(&bytes[at + 8..at + 16]);
+        let count = u64::from_le_bytes(b) as usize;
+        let data_at = take(&mut off, count * dim * 4)?;
+        shards.push(CtxShard { row_start: start, rows: file.f32s(data_at, count * dim) });
+    }
+    crate::ensure!(off == bytes.len(), "state segment {} has trailing bytes", path.display());
+    Ok((shards, rng_states))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::writer::{CkptWriter, CkptWriterConfig, EpisodeMeta};
+    use crate::partition::range_bounds;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tembed_ckpt_reader").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Write one committed generation from a reference store; returns the
+    /// store for bit-exact comparison.
+    fn write_reference(
+        dir: &Path,
+        n: usize,
+        dim: usize,
+        subparts: usize,
+        gpus: usize,
+    ) -> EmbeddingStore {
+        let mut rng = Rng::new(7);
+        let mut store = EmbeddingStore::init(n, dim, &mut rng);
+        for (i, c) in store.context.iter_mut().enumerate() {
+            *c = (i as f32).sin();
+        }
+        let sb = range_bounds(n, subparts);
+        let cb = range_bounds(n, gpus);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.to_path_buf(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: cb.clone(),
+            graph_digest: 0xABCD,
+            config_digest: 0,
+            channel_cap: 64,
+        })
+        .unwrap();
+        let sink = w.sink();
+        sink.begin_episode(5, true);
+        for sp in 0..subparts {
+            sink.offer_vertex(sp, store.checkout_vertex(sb[sp]..sb[sp + 1]));
+        }
+        sink.commit_episode(EpisodeMeta {
+            watermark: 5,
+            epoch: 1,
+            episode_in_epoch: 2,
+            episodes_in_epoch: 4,
+            contexts: (0..gpus).map(|g| store.checkout_context(cb[g]..cb[g + 1])).collect(),
+            rng_states: (0..gpus as u64).map(|g| [g + 1, g + 2, g + 3, g + 4]).collect(),
+        })
+        .unwrap();
+        w.finish().unwrap();
+        store
+    }
+
+    #[test]
+    fn reader_serves_bit_exact_rows_and_scores() {
+        let dir = tmp("exact");
+        let store = write_reference(&dir, 50, 8, 3, 2);
+        let r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.watermark(), 5);
+        assert_eq!(r.num_nodes(), 50);
+        assert_eq!(r.dim(), 8);
+        assert_eq!(r.gpus(), 2);
+        for v in 0..50 {
+            assert_eq!(r.vertex_row(v), store.vertex_row(v), "vertex row {v}");
+            assert_eq!(r.context_row(v), store.context_row(v), "context row {v}");
+        }
+        assert_eq!(r.score(3, 17), store.score(3, 17));
+        assert_eq!(r.rng_states()[1], [2, 3, 4, 5]);
+        // materialize round-trips the whole model
+        let back = r.materialize();
+        assert_eq!(back.vertex, store.vertex);
+        assert_eq!(back.context, store.context);
+        // top-k agrees with a brute-force argmax
+        let top = r.topk(3, 5);
+        assert_eq!(top.len(), 5);
+        let best = (0..50u32)
+            .filter(|&v| v != 3)
+            .max_by(|&a, &b| store.score(3, a).partial_cmp(&store.score(3, b)).unwrap())
+            .unwrap();
+        assert_eq!(top[0].0, best);
+        assert!(top.windows(2).all(|w| w[0].1 >= w[1].1), "descending scores");
+    }
+
+    #[test]
+    fn fallback_path_matches_mmap_path() {
+        let dir = tmp("fallback");
+        let store = write_reference(&dir, 33, 4, 2, 2);
+        let mapped = CkptReader::open(&dir).unwrap();
+        let owned = CkptReader::open_owned(&dir).unwrap();
+        for v in 0..33 {
+            assert_eq!(mapped.vertex_row(v), owned.vertex_row(v));
+            assert_eq!(owned.vertex_row(v), store.vertex_row(v));
+        }
+        assert_eq!(mapped.context_shard(1), owned.context_shard(1));
+    }
+
+    #[test]
+    fn corrupt_segment_is_refused() {
+        let dir = tmp("corrupt");
+        write_reference(&dir, 40, 4, 2, 1);
+        let m = format::read_manifest(&dir).unwrap();
+        let seg = dir.join(&m.segments[0].path);
+        let mut bytes = std::fs::read(&seg).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&seg, &bytes).unwrap();
+        assert!(CkptReader::open(&dir).is_err(), "flipped payload bit must fail CRC");
+    }
+
+    #[test]
+    fn refresh_follows_the_watermark() {
+        let dir = tmp("refresh");
+        write_reference(&dir, 24, 4, 2, 1);
+        let mut r = CkptReader::open(&dir).unwrap();
+        assert!(!r.refresh().unwrap(), "no new generation yet");
+        // a second generation lands (different content)
+        let sb = range_bounds(24, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: 24,
+            dim: 4,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(24, 1),
+            graph_digest: 0xABCD,
+            config_digest: 0,
+            channel_cap: 64,
+        })
+        .unwrap();
+        w.sink().begin_episode(6, true);
+        for sp in 0..2 {
+            w.sink().offer_vertex(sp, vec![2.5; (sb[sp + 1] - sb[sp]) * 4]);
+        }
+        w.sink()
+            .commit_episode(EpisodeMeta {
+                watermark: 6,
+                epoch: 1,
+                episode_in_epoch: 3,
+                episodes_in_epoch: 4,
+                contexts: vec![vec![0.0; 24 * 4]],
+                rng_states: vec![[9, 9, 9, 9]],
+            })
+            .unwrap();
+        w.finish().unwrap();
+        assert!(r.refresh().unwrap(), "new watermark picked up");
+        assert_eq!(r.watermark(), 6);
+        assert_eq!(r.vertex_row(0), &[2.5; 4]);
+    }
+}

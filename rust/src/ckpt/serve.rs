@@ -1,0 +1,358 @@
+//! Query serving over the transport framing: a `tembed serve` process
+//! answers edge-score / top-k / stat queries from a checkpoint directory
+//! that a concurrent `tembed train --ckpt-dir` is still appending to.
+//!
+//! Protocol (KIND_QUERY → KIND_REPLY, `tag` echoed, op in `dest`):
+//!
+//! | op | query payload                | reply payload                     |
+//! |----|------------------------------|-----------------------------------|
+//! | 1  | `u32 n`, n × `(u32 u,u32 v)` | `u32 n`, n × `f32 score`          |
+//! | 2  | `u32 node`, `u32 k`          | `u32 m`, m × `(u32 node,f32)`     |
+//! | 3  | —                            | watermark/epoch/episode/nodes/dim |
+//! | 0  | —                            | error reply: utf-8 message        |
+//!
+//! Every query first refreshes the reader if the manifest watermark moved
+//! — a long-lived connection transparently follows the training run, and
+//! the stat op makes the freshness visible to clients (the concurrent
+//! writer/reader test polls it to watch generations land).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::transport::{
+    self, Addr, PayloadReader, PayloadWriter, Transport, TransportListener, WireMsg,
+    KIND_QUERY, KIND_REPLY, KIND_SHUTDOWN,
+};
+
+use super::format;
+use super::reader::CkptReader;
+
+/// Error reply (payload = utf-8 message).
+pub const OP_ERROR: u32 = 0;
+/// Batch edge scoring.
+pub const OP_SCORES: u32 = 1;
+/// Top-k neighbor candidates by edge score.
+pub const OP_TOPK: u32 = 2;
+/// Checkpoint freshness / shape probe.
+pub const OP_STAT: u32 = 3;
+
+/// Per-connection accounting (returned when the client disconnects).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    pub queries: u64,
+    /// Times the reader re-opened a newer generation mid-connection.
+    pub reopens: u64,
+}
+
+/// The stat-op reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStat {
+    pub watermark: u64,
+    pub epoch: u64,
+    pub episode_in_epoch: u64,
+    pub episodes_in_epoch: u64,
+    pub num_nodes: u64,
+    pub dim: u32,
+}
+
+/// Serve one client connection until it closes (EOF) or sends SHUTDOWN.
+/// Re-opens the checkpoint whenever the on-disk watermark moves.
+pub fn serve_connection(t: &dyn Transport, dir: &Path) -> crate::Result<ServeStats> {
+    let mut reader = CkptReader::open(dir)?;
+    let mut stats = ServeStats::default();
+    loop {
+        let msg = match t.recv() {
+            Ok(m) => m,
+            // client hung up: a normal end of connection
+            Err(_) => return Ok(stats),
+        };
+        match msg.kind {
+            KIND_SHUTDOWN => return Ok(stats),
+            KIND_QUERY => {
+                stats.queries += 1;
+                if reader.refresh()? {
+                    stats.reopens += 1;
+                }
+                let reply = answer(&reader, &msg);
+                if t.send(&reply).is_err() {
+                    return Ok(stats);
+                }
+            }
+            _ => {} // unknown kinds: ignore (forward compat)
+        }
+    }
+}
+
+fn error_reply(tag: u64, e: &crate::Error) -> WireMsg {
+    WireMsg { kind: KIND_REPLY, dest: OP_ERROR, tag, payload: format!("{e:#}").into_bytes() }
+}
+
+fn answer(reader: &CkptReader, msg: &WireMsg) -> WireMsg {
+    match answer_inner(reader, msg) {
+        Ok(reply) => reply,
+        Err(e) => error_reply(msg.tag, &e),
+    }
+}
+
+fn answer_inner(reader: &CkptReader, msg: &WireMsg) -> crate::Result<WireMsg> {
+    let n_nodes = reader.num_nodes() as u32;
+    let mut r = PayloadReader::new(&msg.payload);
+    let mut w = PayloadWriter::new();
+    match msg.dest {
+        OP_SCORES => {
+            let n = r.u32()? as usize;
+            crate::ensure!(n <= msg.payload.len() / 8, "score query claims {n} pairs");
+            w.put_u32(n as u32);
+            for _ in 0..n {
+                let u = r.u32()?;
+                let v = r.u32()?;
+                crate::ensure!(
+                    u < n_nodes && v < n_nodes,
+                    "edge ({u},{v}) out of range (checkpoint has {n_nodes} nodes)"
+                );
+                w.put_f32(reader.score(u, v));
+            }
+        }
+        OP_TOPK => {
+            let node = r.u32()?;
+            let k = r.u32()? as usize;
+            crate::ensure!(
+                node < n_nodes,
+                "node {node} out of range (checkpoint has {n_nodes} nodes)"
+            );
+            crate::ensure!(k <= 10_000, "top-k of {k} exceeds the serving cap");
+            let top = reader.topk(node, k);
+            w.put_u32(top.len() as u32);
+            for (v, s) in top {
+                w.put_u32(v);
+                w.put_f32(s);
+            }
+        }
+        OP_STAT => {
+            let m = reader.manifest();
+            w.put_u64(m.watermark);
+            w.put_u64(m.epoch);
+            w.put_u64(m.episode_in_epoch);
+            w.put_u64(m.episodes_in_epoch);
+            w.put_u64(m.num_nodes);
+            w.put_u32(m.dim);
+        }
+        op => crate::bail!("unknown query op {op}"),
+    }
+    Ok(WireMsg { kind: KIND_REPLY, dest: msg.dest, tag: msg.tag, payload: w.finish() })
+}
+
+/// The `tembed serve` accept loop: bind, wait for the first manifest to
+/// land (a concurrent `tembed train --ckpt-dir` may not have committed an
+/// episode yet), then serve each connection on its own thread. Runs until
+/// the process is killed.
+pub fn serve(dir: &Path, addr: &Addr) -> crate::Result<()> {
+    let listener = TransportListener::bind(addr)?;
+    eprintln!("[serve] listening on {addr}, checkpoint dir {}", dir.display());
+    wait_for_manifest(dir, Duration::from_secs(600))?;
+    let m = format::read_manifest(dir)?;
+    eprintln!(
+        "[serve] manifest watermark {} (epoch {}, episode {}/{}): {} nodes, dim {}",
+        m.watermark, m.epoch, m.episode_in_epoch, m.episodes_in_epoch, m.num_nodes, m.dim
+    );
+    loop {
+        let t = listener.accept()?;
+        let dir: PathBuf = dir.to_path_buf();
+        std::thread::spawn(move || {
+            if let Err(e) = serve_connection(t.as_ref(), &dir) {
+                eprintln!("[serve] connection error: {e:#}");
+            }
+        });
+    }
+}
+
+/// Poll until a readable manifest exists (the serve-against-live-training
+/// bring-up window).
+pub fn wait_for_manifest(dir: &Path, timeout: Duration) -> crate::Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if format::peek_watermark(dir).is_ok() {
+            return Ok(());
+        }
+        crate::ensure!(
+            Instant::now() < deadline,
+            "no checkpoint manifest appeared under {} within {timeout:?}",
+            dir.display()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Client side of the query protocol (used by tests and downstream
+/// consumers; each client owns one connection).
+pub struct QueryClient {
+    t: Arc<dyn Transport>,
+    next_tag: u64,
+}
+
+impl QueryClient {
+    /// Dial a serving endpoint.
+    pub fn connect(addr: &Addr, timeout: Duration) -> crate::Result<QueryClient> {
+        Ok(QueryClient::over(transport::dial_transport(addr, timeout)?))
+    }
+
+    /// Wrap an existing transport (loopback tests).
+    pub fn over(t: Arc<dyn Transport>) -> QueryClient {
+        QueryClient { t, next_tag: 1 }
+    }
+
+    fn roundtrip(&mut self, op: u32, payload: Vec<u8>) -> crate::Result<WireMsg> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.t.send(&WireMsg { kind: KIND_QUERY, dest: op, tag, payload })?;
+        loop {
+            let reply = self.t.recv()?;
+            if reply.kind != KIND_REPLY || reply.tag != tag {
+                continue; // stale frame from an abandoned request
+            }
+            if reply.dest == OP_ERROR {
+                crate::bail!("server refused query: {}", String::from_utf8_lossy(&reply.payload));
+            }
+            crate::ensure!(reply.dest == op, "reply op {} for query op {op}", reply.dest);
+            return Ok(reply);
+        }
+    }
+
+    /// Batch edge scores (`vertex[u] · context[v]` per pair).
+    pub fn edge_scores(&mut self, pairs: &[(u32, u32)]) -> crate::Result<Vec<f32>> {
+        let mut w = PayloadWriter::new();
+        w.put_u32(pairs.len() as u32);
+        for &(u, v) in pairs {
+            w.put_u32(u);
+            w.put_u32(v);
+        }
+        let reply = self.roundtrip(OP_SCORES, w.finish())?;
+        let mut r = PayloadReader::new(&reply.payload);
+        let n = r.u32()? as usize;
+        crate::ensure!(n == pairs.len(), "score reply carries {n} of {} scores", pairs.len());
+        (0..n).map(|_| r.f32()).collect()
+    }
+
+    /// Top-k neighbor candidates of `node`, best first.
+    pub fn topk(&mut self, node: u32, k: usize) -> crate::Result<Vec<(u32, f32)>> {
+        let mut w = PayloadWriter::new();
+        w.put_u32(node);
+        w.put_u32(k as u32);
+        let reply = self.roundtrip(OP_TOPK, w.finish())?;
+        let mut r = PayloadReader::new(&reply.payload);
+        let m = r.u32()? as usize;
+        let mut out = Vec::with_capacity(m);
+        for _ in 0..m {
+            let v = r.u32()?;
+            let s = r.f32()?;
+            out.push((v, s));
+        }
+        Ok(out)
+    }
+
+    /// Checkpoint freshness probe.
+    pub fn stat(&mut self) -> crate::Result<ServeStat> {
+        let reply = self.roundtrip(OP_STAT, Vec::new())?;
+        let mut r = PayloadReader::new(&reply.payload);
+        Ok(ServeStat {
+            watermark: r.u64()?,
+            epoch: r.u64()?,
+            episode_in_epoch: r.u64()?,
+            episodes_in_epoch: r.u64()?,
+            num_nodes: r.u64()?,
+            dim: r.u32()?,
+        })
+    }
+
+    /// Ask the server to close this connection.
+    pub fn shutdown(&self) {
+        let _ = self.t.send(&WireMsg::signal(KIND_SHUTDOWN, 0, 0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::writer::{CkptWriter, CkptWriterConfig, EpisodeMeta};
+    use crate::comm::transport::loopback_pair;
+    use crate::embed::EmbeddingStore;
+    use crate::partition::range_bounds;
+    use crate::util::Rng;
+
+    fn fixture(name: &str, n: usize, dim: usize) -> (PathBuf, EmbeddingStore) {
+        let dir = std::env::temp_dir().join("tembed_ckpt_serve").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(3);
+        let mut store = EmbeddingStore::init(n, dim, &mut rng);
+        for (i, c) in store.context.iter_mut().enumerate() {
+            *c = ((i * 7) % 13) as f32 * 0.25 - 1.0;
+        }
+        let sb = range_bounds(n, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(n, 1),
+            graph_digest: 1,
+            config_digest: 0,
+            channel_cap: 16,
+        })
+        .unwrap();
+        w.sink().begin_episode(0, true);
+        for sp in 0..2 {
+            w.sink().offer_vertex(sp, store.checkout_vertex(sb[sp]..sb[sp + 1]));
+        }
+        w.sink()
+            .commit_episode(EpisodeMeta {
+                watermark: 0,
+                epoch: 0,
+                episode_in_epoch: 0,
+                episodes_in_epoch: 1,
+                contexts: vec![store.context.clone()],
+                rng_states: vec![[1, 2, 3, 4]],
+            })
+            .unwrap();
+        w.finish().unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn loopback_queries_round_trip() {
+        let (dir, store) = fixture("roundtrip", 30, 4);
+        let (server_t, client_t) = loopback_pair(0, 1);
+        let server = std::thread::spawn({
+            let dir = dir.clone();
+            move || serve_connection(&server_t, &dir).unwrap()
+        });
+        let mut client = QueryClient::over(Arc::new(client_t));
+        let stat = client.stat().unwrap();
+        assert_eq!(stat.watermark, 0);
+        assert_eq!(stat.num_nodes, 30);
+        assert_eq!(stat.dim, 4);
+        let pairs = [(0u32, 1u32), (5, 9), (29, 0)];
+        let scores = client.edge_scores(&pairs).unwrap();
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            assert_eq!(scores[i], store.score(u, v), "pair ({u},{v})");
+        }
+        let top = client.topk(3, 4).unwrap();
+        assert_eq!(top.len(), 4);
+        assert_eq!(top[0].1, top.iter().map(|x| x.1).fold(f32::MIN, f32::max));
+        // out-of-range queries come back as server errors, not hangs
+        let err = client.edge_scores(&[(0, 999)]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        client.shutdown();
+        let stats = server.join().unwrap();
+        assert_eq!(stats.queries, 4);
+        assert_eq!(stats.reopens, 0);
+    }
+
+    #[test]
+    fn wait_for_manifest_times_out_cleanly() {
+        let dir = std::env::temp_dir().join("tembed_ckpt_serve").join("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = wait_for_manifest(&dir, Duration::from_millis(80)).unwrap_err();
+        assert!(format!("{err:#}").contains("no checkpoint manifest"));
+    }
+}

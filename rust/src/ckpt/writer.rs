@@ -1,0 +1,509 @@
+//! The dedicated checkpoint-writer thread and its bounded sink.
+//!
+//! Training-side contract: the executor's store-writer drain calls
+//! [`CkptSink::offer_vertex`] for every chain-end sub-part it checks in —
+//! a `try_send` into a bounded channel, so a slow disk **drops segments
+//! instead of blocking a worker** (the drop count rides the episode's
+//! `ExecMeasure` gauge). After the episode the coordinator calls
+//! [`CkptSink::commit_episode`] with the context shards, RNG states, and
+//! progress counters; the writer commits the manifest only when it holds
+//! a complete sub-part set for that watermark, so every committed
+//! generation is a consistent full-model snapshot and a dropped frame
+//! costs exactly one episode of checkpoint freshness, never consistency.
+//!
+//! Crash behavior: segments and the state file are fsynced before the
+//! manifest is renamed over the previous one, so at any kill point the
+//! `MANIFEST` on disk references a complete, CRC-valid generation — a
+//! crash loses at most the episode in flight. On spawn the writer sweeps
+//! orphaned generation directories (and a stale `MANIFEST.tmp`) left by a
+//! previous crash, keeping only the generation the manifest references.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+
+use crate::util::error::Context as _;
+
+use super::format::{
+    self, commit_manifest, gen_dir_name, segment_name, Manifest, SegmentEntry, FORMAT_VERSION,
+    MANIFEST_TMP, STATE_NAME,
+};
+
+/// Static description of the checkpointed model, fixed at writer spawn.
+#[derive(Debug, Clone)]
+pub struct CkptWriterConfig {
+    pub dir: PathBuf,
+    pub num_nodes: usize,
+    pub dim: usize,
+    /// Vertex sub-part row bounds (`HierarchyPlan::vertex_bounds`,
+    /// length = subparts + 1).
+    pub subpart_bounds: Vec<usize>,
+    /// Context shard row bounds per GPU (`HierarchyPlan::context_bounds`).
+    pub context_bounds: Vec<usize>,
+    /// The trained graph's FNV degree digest (refused on `--resume`
+    /// mismatch).
+    pub graph_digest: u64,
+    /// `TrainConfig::resume_digest()` of the writing run (refused on
+    /// `--resume` with a schedule-changing config).
+    pub config_digest: u64,
+    /// Bounded channel capacity in messages. 0 = auto (two episodes'
+    /// worth of sub-parts).
+    pub channel_cap: usize,
+}
+
+impl CkptWriterConfig {
+    fn subparts(&self) -> usize {
+        self.subpart_bounds.len().saturating_sub(1)
+    }
+
+    fn effective_cap(&self) -> usize {
+        if self.channel_cap > 0 {
+            self.channel_cap
+        } else {
+            (2 * self.subparts()).max(4) + 2
+        }
+    }
+}
+
+/// Post-episode trainer state that rides with the commit message.
+#[derive(Debug)]
+pub struct EpisodeMeta {
+    pub watermark: u64,
+    pub epoch: u64,
+    pub episode_in_epoch: u64,
+    pub episodes_in_epoch: u64,
+    /// Per-GPU pinned context shards, GPU order.
+    pub contexts: Vec<Vec<f32>>,
+    /// Per-GPU xoshiro states, GPU order.
+    pub rng_states: Vec<[u64; 4]>,
+}
+
+enum WriterMsg {
+    Vertex { watermark: u64, subpart: usize, rows: Vec<f32> },
+    Commit(Box<EpisodeMeta>),
+}
+
+/// What one `offer_vertex` did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offer {
+    /// Enqueued for the writer thread.
+    Teed,
+    /// Channel full (or writer gone): dropped, counted, episode skipped.
+    Dropped,
+    /// Checkpointing inactive this episode (interval gating).
+    Inactive,
+}
+
+/// The bounded, non-blocking front door the executor tees into.
+pub struct CkptSink {
+    tx: SyncSender<WriterMsg>,
+    active: AtomicBool,
+    watermark: AtomicU64,
+    teed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl CkptSink {
+    /// Arm (or disarm) the sink for the episode about to run. `watermark`
+    /// is the global episode counter the segments will be filed under.
+    pub fn begin_episode(&self, watermark: u64, active: bool) {
+        self.watermark.store(watermark, Ordering::Relaxed);
+        self.active.store(active, Ordering::Relaxed);
+    }
+
+    /// Tee one trained chain-end sub-part. Never blocks: a full channel
+    /// drops the frame and the writer skips this episode's commit.
+    pub fn offer_vertex(&self, subpart: usize, rows: Vec<f32>) -> Offer {
+        if !self.active.load(Ordering::Relaxed) {
+            return Offer::Inactive;
+        }
+        let watermark = self.watermark.load(Ordering::Relaxed);
+        match self.tx.try_send(WriterMsg::Vertex { watermark, subpart, rows }) {
+            Ok(()) => {
+                self.teed.fetch_add(1, Ordering::Relaxed);
+                Offer::Teed
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                Offer::Dropped
+            }
+        }
+    }
+
+    /// Blocking tee — the end-of-training snapshot path, where losing a
+    /// frame is not acceptable and no worker is waiting. Never call from
+    /// inside an episode.
+    pub fn send_vertex(&self, subpart: usize, rows: Vec<f32>) -> crate::Result<()> {
+        let watermark = self.watermark.load(Ordering::Relaxed);
+        self.tx
+            .send(WriterMsg::Vertex { watermark, subpart, rows })
+            .map_err(|_| crate::anyhow!("checkpoint writer thread is gone"))
+    }
+
+    /// Close the episode out: ship the trainer-side state and ask the
+    /// writer to commit. Blocking is fine here — this runs between
+    /// episodes on the coordinator, not inside a worker.
+    pub fn commit_episode(&self, meta: EpisodeMeta) -> crate::Result<()> {
+        self.active.store(false, Ordering::Relaxed);
+        self.tx
+            .send(WriterMsg::Commit(Box::new(meta)))
+            .map_err(|_| crate::anyhow!("checkpoint writer thread is gone"))
+    }
+
+    /// Run-total frames teed / dropped (monotonic gauges).
+    pub fn teed_total(&self) -> u64 {
+        self.teed.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// End-of-run accounting from the writer thread.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct WriterStats {
+    /// Manifests committed (complete generations on disk).
+    pub committed: u64,
+    /// Episodes skipped because their sub-part set arrived incomplete.
+    pub skipped: u64,
+    /// Segment files written.
+    pub segments: u64,
+    /// Bytes written across segments, state files, and manifests.
+    pub bytes: u64,
+}
+
+/// Handle owning the writer thread; drop-free shutdown via [`finish`].
+///
+/// [`finish`]: CkptWriter::finish
+pub struct CkptWriter {
+    sink: CkptSink,
+    handle: std::thread::JoinHandle<crate::Result<WriterStats>>,
+}
+
+impl CkptWriter {
+    /// Create the checkpoint directory (sweeping crash leftovers) and
+    /// start the writer thread.
+    pub fn spawn(cfg: CkptWriterConfig) -> crate::Result<CkptWriter> {
+        crate::ensure!(cfg.subparts() >= 1, "checkpoint writer needs at least one sub-part");
+        crate::ensure!(cfg.dim >= 1, "checkpoint writer needs a positive dim");
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("create checkpoint dir {}", cfg.dir.display()))?;
+        let committed = sweep_crash_leftovers(&cfg.dir)?;
+        let (tx, rx) = sync_channel(cfg.effective_cap());
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || writer_loop(cfg, rx, committed))
+            .context("spawn checkpoint writer thread")?;
+        Ok(CkptWriter {
+            sink: CkptSink {
+                tx,
+                active: AtomicBool::new(false),
+                watermark: AtomicU64::new(0),
+                teed: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            },
+            handle,
+        })
+    }
+
+    /// The executor-facing sink (borrowed into `ExecCtx` per episode).
+    pub fn sink(&self) -> &CkptSink {
+        &self.sink
+    }
+
+    /// Disconnect the sink and join the writer; returns its accounting.
+    pub fn finish(self) -> crate::Result<WriterStats> {
+        drop(self.sink);
+        self.handle.join().map_err(|_| crate::anyhow!("checkpoint writer panicked"))?
+    }
+}
+
+/// Remove a stale `MANIFEST.tmp` and any generation directory the
+/// committed manifest does not reference; returns the committed watermark
+/// (if a valid manifest exists).
+fn sweep_crash_leftovers(dir: &Path) -> crate::Result<Option<u64>> {
+    let _ = std::fs::remove_file(dir.join(MANIFEST_TMP));
+    let committed = format::read_manifest(dir).ok().map(|m| m.watermark);
+    let keep = committed.map(gen_dir_name);
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("list checkpoint dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("gen-") && Some(name.as_ref()) != keep.as_deref() {
+            let _ = std::fs::remove_dir_all(entry.path());
+        }
+    }
+    Ok(committed)
+}
+
+struct Staged {
+    crc: u32,
+    row_start: u64,
+    row_count: u64,
+    path: String,
+}
+
+fn writer_loop(
+    cfg: CkptWriterConfig,
+    rx: Receiver<WriterMsg>,
+    committed_at_spawn: Option<u64>,
+) -> crate::Result<WriterStats> {
+    let mut stats = WriterStats::default();
+    let subparts = cfg.subparts();
+    let mut staged: HashMap<usize, Staged> = HashMap::new();
+    let mut staged_watermark: Option<u64> = None;
+    // GC runs one commit late so a reader holding the just-replaced
+    // manifest can still open its segments
+    let mut committed_gen: Option<u64> = committed_at_spawn;
+    let mut prev_gen: Option<u64> = None;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WriterMsg::Vertex { watermark, subpart, rows } => {
+                if staged_watermark != Some(watermark) {
+                    // a new episode started before the old one committed
+                    // (dropped commit, or first frame): discard the partial
+                    if let Some(w) = staged_watermark {
+                        let _ = std::fs::remove_dir_all(cfg.dir.join(gen_dir_name(w)));
+                        stats.skipped += 1;
+                    }
+                    staged.clear();
+                    staged_watermark = Some(watermark);
+                    std::fs::create_dir_all(cfg.dir.join(gen_dir_name(watermark)))?;
+                }
+                if subpart >= subparts || rows.len() % cfg.dim != 0 {
+                    // malformed frame: poison this episode's set
+                    continue;
+                }
+                let rel = format!("{}/{}", gen_dir_name(watermark), segment_name(subpart));
+                let row_start = cfg.subpart_bounds[subpart] as u64;
+                let (crc, bytes) = format::write_segment(
+                    &cfg.dir.join(&rel),
+                    watermark,
+                    subpart as u32,
+                    row_start,
+                    cfg.dim as u32,
+                    &rows,
+                )?;
+                stats.segments += 1;
+                stats.bytes += bytes;
+                staged.insert(
+                    subpart,
+                    Staged {
+                        crc,
+                        row_start,
+                        row_count: (rows.len() / cfg.dim) as u64,
+                        path: rel,
+                    },
+                );
+            }
+            WriterMsg::Commit(meta) => {
+                let complete =
+                    staged_watermark == Some(meta.watermark) && staged.len() == subparts;
+                if !complete {
+                    if let Some(w) = staged_watermark.take() {
+                        let _ = std::fs::remove_dir_all(cfg.dir.join(gen_dir_name(w)));
+                    }
+                    staged.clear();
+                    stats.skipped += 1;
+                    continue;
+                }
+                let gen = gen_dir_name(meta.watermark);
+                let state_rel = format!("{gen}/{STATE_NAME}");
+                let shards: Vec<(u64, &[f32])> = meta
+                    .contexts
+                    .iter()
+                    .enumerate()
+                    .map(|(g, c)| (cfg.context_bounds[g] as u64, c.as_slice()))
+                    .collect();
+                let (state_crc, state_bytes) = format::write_state(
+                    &cfg.dir.join(&state_rel),
+                    meta.watermark,
+                    cfg.dim as u32,
+                    &meta.rng_states,
+                    &shards,
+                )?;
+                stats.bytes += state_bytes;
+                let mut segments: Vec<SegmentEntry> = staged
+                    .drain()
+                    .map(|(sp, s)| SegmentEntry {
+                        subpart: sp as u32,
+                        row_start: s.row_start,
+                        row_count: s.row_count,
+                        crc: s.crc,
+                        path: s.path,
+                    })
+                    .collect();
+                segments.sort_by_key(|s| s.subpart);
+                let manifest = Manifest {
+                    version: FORMAT_VERSION,
+                    watermark: meta.watermark,
+                    epoch: meta.epoch,
+                    episode_in_epoch: meta.episode_in_epoch,
+                    episodes_in_epoch: meta.episodes_in_epoch,
+                    num_nodes: cfg.num_nodes as u64,
+                    dim: cfg.dim as u32,
+                    graph_digest: cfg.graph_digest,
+                    config_digest: cfg.config_digest,
+                    gpus: meta.contexts.len() as u32,
+                    segments,
+                    state_path: state_rel,
+                    state_crc,
+                };
+                stats.bytes += manifest.encode().len() as u64;
+                commit_manifest(&cfg.dir, &manifest)?;
+                stats.committed += 1;
+                if let Some(g) = prev_gen {
+                    let _ = std::fs::remove_dir_all(cfg.dir.join(gen_dir_name(g)));
+                }
+                prev_gen = committed_gen;
+                committed_gen = Some(meta.watermark);
+                staged_watermark = None;
+            }
+        }
+    }
+    // sink dropped: clean up a trailing partial generation
+    if let Some(w) = staged_watermark {
+        let _ = std::fs::remove_dir_all(cfg.dir.join(gen_dir_name(w)));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::range_bounds;
+
+    fn cfg(
+        dir: &Path,
+        num_nodes: usize,
+        dim: usize,
+        subparts: usize,
+        gpus: usize,
+    ) -> CkptWriterConfig {
+        CkptWriterConfig {
+            dir: dir.to_path_buf(),
+            num_nodes,
+            dim,
+            subpart_bounds: range_bounds(num_nodes, subparts),
+            context_bounds: range_bounds(num_nodes, gpus),
+            graph_digest: 0xFEED,
+            config_digest: 0xC0DE,
+            // roomy: these tests assert exact tee counts, so the channel
+            // must never be the bottleneck
+            channel_cap: 64,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tembed_ckpt_writer").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn feed_episode(
+        sink: &CkptSink,
+        bounds: &[usize],
+        dim: usize,
+        watermark: u64,
+        fill: f32,
+        gpus: usize,
+        episodes_in_epoch: u64,
+    ) {
+        sink.begin_episode(watermark, true);
+        for sp in 0..bounds.len() - 1 {
+            let rows = vec![fill + sp as f32; (bounds[sp + 1] - bounds[sp]) * dim];
+            assert_eq!(sink.offer_vertex(sp, rows), Offer::Teed);
+        }
+        let gb = range_bounds(*bounds.last().unwrap(), gpus);
+        let contexts: Vec<Vec<f32>> =
+            (0..gpus).map(|g| vec![-fill; (gb[g + 1] - gb[g]) * dim]).collect();
+        let rng_states = vec![[watermark, 2, 3, 4]; gpus];
+        sink.commit_episode(EpisodeMeta {
+            watermark,
+            epoch: 0,
+            episode_in_epoch: watermark,
+            episodes_in_epoch,
+            contexts,
+            rng_states,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn episodes_commit_and_old_generations_are_collected() {
+        let dir = tmp("commit");
+        let c = cfg(&dir, 40, 4, 3, 2);
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c).unwrap();
+        for ep in 0..3u64 {
+            feed_episode(w.sink(), &bounds, 4, ep, ep as f32, 2, 3);
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, 3);
+        assert_eq!(stats.skipped, 0);
+        assert_eq!(stats.segments, 9);
+        let m = format::read_manifest(&dir).unwrap();
+        assert_eq!(m.watermark, 2);
+        assert_eq!(m.segments.len(), 3);
+        // GC keeps the committed generation and at most its predecessor
+        assert!(dir.join(gen_dir_name(2)).exists());
+        assert!(!dir.join(gen_dir_name(0)).exists(), "gen-0 should be collected");
+    }
+
+    #[test]
+    fn incomplete_episode_is_skipped_not_torn() {
+        let dir = tmp("skip");
+        let c = cfg(&dir, 40, 4, 2, 1);
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c).unwrap();
+        feed_episode(w.sink(), &bounds, 4, 0, 1.0, 1, 2);
+        // episode 1 loses sub-part 1 (simulating a drop under pressure)
+        let sink = w.sink();
+        sink.begin_episode(1, true);
+        sink.offer_vertex(0, vec![9.0; (bounds[1] - bounds[0]) * 4]);
+        sink.commit_episode(EpisodeMeta {
+            watermark: 1,
+            epoch: 0,
+            episode_in_epoch: 1,
+            episodes_in_epoch: 2,
+            contexts: vec![vec![0.0; 40 * 4]],
+            rng_states: vec![[1, 2, 3, 4]],
+        })
+        .unwrap();
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, 1);
+        assert_eq!(stats.skipped, 1);
+        // manifest still points at the last complete episode
+        assert_eq!(format::read_manifest(&dir).unwrap().watermark, 0);
+        assert!(!dir.join(gen_dir_name(1)).exists(), "partial generation removed");
+    }
+
+    #[test]
+    fn inactive_sink_tees_nothing() {
+        let dir = tmp("inactive");
+        let c = cfg(&dir, 20, 2, 2, 1);
+        let w = CkptWriter::spawn(c).unwrap();
+        w.sink().begin_episode(0, false);
+        assert_eq!(w.sink().offer_vertex(0, vec![0.0; 20]), Offer::Inactive);
+        assert_eq!(w.sink().teed_total(), 0);
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.segments, 0);
+    }
+
+    #[test]
+    fn spawn_sweeps_crash_leftovers() {
+        let dir = tmp("sweep");
+        std::fs::create_dir_all(dir.join("gen-99")).unwrap();
+        std::fs::write(dir.join("gen-99/sp-00000.seg"), b"partial").unwrap();
+        std::fs::write(dir.join(MANIFEST_TMP), b"torn").unwrap();
+        let c = cfg(&dir, 20, 2, 2, 1);
+        let w = CkptWriter::spawn(c).unwrap();
+        w.finish().unwrap();
+        assert!(!dir.join("gen-99").exists(), "orphan generation swept");
+        assert!(!dir.join(MANIFEST_TMP).exists(), "stale tmp swept");
+    }
+}

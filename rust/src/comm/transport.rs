@@ -67,6 +67,12 @@ pub const KIND_FINAL: u8 = 6;
 pub const KIND_MEASURE: u8 = 7;
 pub const KIND_CONTEXT: u8 = 8;
 pub const KIND_SHUTDOWN: u8 = 9;
+/// Serving-path request (`ckpt::serve`): `dest` = query op, `tag` =
+/// caller-chosen request id echoed in the reply.
+pub const KIND_QUERY: u8 = 10;
+/// Serving-path response; `dest` mirrors the op (0 = error, payload is a
+/// utf-8 message).
+pub const KIND_REPLY: u8 = 11;
 
 /// Hard ceiling on a frame payload (1 GiB) — a corrupt length prefix must
 /// fail fast instead of attempting a huge allocation.
@@ -513,6 +519,46 @@ impl Transport for LoopbackTransport {
             .recv()
             .map_err(|_| crate::anyhow!("loopback peer {} closed", self.peer))
     }
+}
+
+/// A single-endpoint listener for client/server wiring outside the rank
+/// mesh (the `tembed serve` path): every accepted connection becomes its
+/// own [`Transport`]. Unlike [`connect_mesh`] there is no HELLO exchange —
+/// peers are anonymous query clients, identified only by their stream.
+pub struct TransportListener {
+    inner: Listener,
+    addr: Addr,
+}
+
+impl TransportListener {
+    pub fn bind(addr: &Addr) -> crate::Result<TransportListener> {
+        Ok(TransportListener { inner: Listener::bind(addr)?, addr: addr.clone() })
+    }
+
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// Block until a client connects. The accepted transport has its read
+    /// timeout lifted: query connections legitimately idle between
+    /// requests, and a dead client surfaces as EOF.
+    pub fn accept(&self) -> crate::Result<Arc<dyn Transport>> {
+        let stream = self
+            .inner
+            .accept()
+            .with_context(|| format!("accept on {}", self.addr))?;
+        let t = SocketTransport::from_stream(stream, usize::MAX)?;
+        t.set_read_timeout(None);
+        Ok(Arc::new(t))
+    }
+}
+
+/// Dial a [`TransportListener`] endpoint (retrying until `timeout`), for
+/// query clients that are not part of a rank mesh.
+pub fn dial_transport(addr: &Addr, timeout: Duration) -> crate::Result<Arc<dyn Transport>> {
+    let stream = dial(addr, Instant::now() + timeout)?;
+    let t = SocketTransport::from_stream(stream, usize::MAX)?;
+    Ok(Arc::new(t))
 }
 
 /// Bring up the full rank mesh: rank `r` listens on `addrs[r]`, dials every

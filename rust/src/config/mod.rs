@@ -73,6 +73,13 @@ pub struct TrainConfig {
     /// double-buffered sub-part rotation over channels. Off = the serial
     /// reference schedule (same math, one step at a time).
     pub executor: bool,
+    // checkpointing
+    /// Directory for streaming checkpoints (`ckpt` subsystem). Empty =
+    /// checkpointing off. Only rank 0 writes.
+    pub ckpt_dir: String,
+    /// Commit a checkpoint generation every N episodes (1 = every
+    /// episode, the at-most-one-episode-lost guarantee).
+    pub ckpt_interval: usize,
     // walk engine
     pub walk_length: usize,
     pub walks_per_node: usize,
@@ -106,6 +113,8 @@ impl Default for TrainConfig {
             pipeline: true,
             socket_aware: true,
             executor: true,
+            ckpt_dir: String::new(),
+            ckpt_interval: 1,
             walk_length: 6,
             walks_per_node: 2,
             window: 3,
@@ -149,6 +158,41 @@ impl TrainConfig {
             None => 2 * local_gpus,
             Some(w) => w.max(local_gpus),
         }
+    }
+
+    /// FNV-1a digest of every config field that shapes the episode split,
+    /// the sample stream, or the update math — stamped into checkpoint
+    /// manifests so `--resume` under a changed schedule is refused at
+    /// startup instead of silently training the wrong episode subset.
+    /// Deliberately excludes `epochs` (extending a run is legitimate) and
+    /// the ckpt/cluster-address fields (they do not touch the math).
+    pub fn resume_digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(self.nodes as u64);
+        eat(self.gpus_per_node as u64);
+        eat(self.subparts as u64);
+        eat(self.dim as u64);
+        eat(self.negatives as u64);
+        eat(self.batch as u64);
+        eat(self.learning_rate.to_bits() as u64);
+        eat(self.lr_decay as u64);
+        eat(self.episode_size as u64);
+        eat(self.walk_length as u64);
+        eat(self.walks_per_node as u64);
+        eat(self.window as u64);
+        eat(self.walk_epochs as u64);
+        // walker chunk boundaries shape the walk order (see PlanMsg)
+        eat(self.threads as u64);
+        eat(self.seed);
+        h
     }
 
     /// The `cluster.peers` address list, split and trimmed (empty when
@@ -238,6 +282,18 @@ impl TrainConfig {
                 Bool(b) => self.executor = *b,
                 _ => crate::bail!("{path}: expected bool"),
             },
+            "ckpt.dir" => match value {
+                Str(s) => self.ckpt_dir = s.clone(),
+                _ => crate::bail!("{path}: expected string"),
+            },
+            "ckpt.interval" => {
+                let n = as_usize()?;
+                crate::ensure!(
+                    n >= 1,
+                    "{path}: must be at least 1 (a checkpoint every n-th episode)"
+                );
+                self.ckpt_interval = n;
+            }
             "walk.walk_length" => self.walk_length = as_usize()?,
             "walk.walks_per_node" => self.walks_per_node = as_usize()?,
             "walk.window" => self.window = as_usize()?,
@@ -278,12 +334,14 @@ impl TrainConfig {
             "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\nrank = {}\npeers = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
              [schedule]\nsubparts = {}\n{}episode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
+             [ckpt]\ndir = \"{}\"\ninterval = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
             self.nodes, self.gpus_per_node, self.hardware, self.rank, self.peers,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
             self.subparts, stage_window, self.episode_size, self.epochs, self.pipeline,
             self.socket_aware, self.executor,
+            self.ckpt_dir, self.ckpt_interval,
             self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
             self.seed, self.threads,
             match self.backend { Backend::Native => "native", Backend::Gathered => "gathered", Backend::Pjrt => "pjrt" },
@@ -405,6 +463,45 @@ mod tests {
         assert_eq!(back.dim, 64);
         assert!(!back.pipeline);
         assert_eq!(back.learning_rate, c.learning_rate);
+    }
+
+    #[test]
+    fn ckpt_keys_parse_validate_and_round_trip() {
+        let mut c = TrainConfig::default();
+        assert!(c.ckpt_dir.is_empty(), "checkpointing defaults off");
+        assert_eq!(c.ckpt_interval, 1);
+        c.apply_cli(r#"ckpt.dir="/tmp/ck""#).unwrap();
+        c.apply_cli("ckpt.interval=3").unwrap();
+        assert_eq!(c.ckpt_dir, "/tmp/ck");
+        assert_eq!(c.ckpt_interval, 3);
+        let err = c.apply_cli("ckpt.interval=0").unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        assert_eq!(c.ckpt_interval, 3, "rejected value must not stick");
+        // render → parse round trip keeps both
+        let dir = std::env::temp_dir().join("tembed_cfg_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, c.render()).unwrap();
+        let back = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(back.ckpt_dir, "/tmp/ck");
+        assert_eq!(back.ckpt_interval, 3);
+    }
+
+    #[test]
+    fn resume_digest_tracks_schedule_fields_only() {
+        let a = TrainConfig::default();
+        let mut b = TrainConfig::default();
+        assert_eq!(a.resume_digest(), b.resume_digest());
+        // extending a run and ckpt plumbing are resume-compatible
+        b.epochs = 99;
+        b.ckpt_dir = "/tmp/elsewhere".into();
+        b.ckpt_interval = 7;
+        assert_eq!(a.resume_digest(), b.resume_digest());
+        // anything that reshapes episodes or the math is not
+        b.episode_size += 1;
+        assert_ne!(a.resume_digest(), b.resume_digest());
+        let c = TrainConfig { seed: a.seed ^ 1, ..TrainConfig::default() };
+        assert_ne!(a.resume_digest(), c.resume_digest());
     }
 
     #[test]

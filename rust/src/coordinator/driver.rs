@@ -108,13 +108,39 @@ impl<'g> Driver<'g> {
         }
     }
 
+    /// Restore the trainer from a committed checkpoint and return the
+    /// `(epoch, episode)` training should resume at (the episode *after*
+    /// the manifest watermark — a crash loses at most one episode). The
+    /// graph digest is verified inside the trainer restore, so resuming
+    /// against the wrong graph fails here rather than diverging silently.
+    pub fn resume_from(
+        &mut self,
+        reader: &crate::ckpt::CkptReader,
+    ) -> crate::Result<(usize, usize)> {
+        self.trainer.restore_from_checkpoint(reader)?;
+        let m = reader.manifest();
+        let next = m.episode_in_epoch + 1;
+        if next >= m.episodes_in_epoch {
+            Ok((m.epoch as usize + 1, 0))
+        } else {
+            Ok((m.epoch as usize, next as usize))
+        }
+    }
+
     /// Train one epoch end-to-end. The walk engine's time is overlapped:
     /// the simulated epoch cost is `max(train, walk)` when walks for the
     /// next epoch are generated concurrently (paper §IV-A tunes the walk
     /// engine to run shorter than training).
     pub fn run_epoch(&mut self, epoch: usize) -> EpochReport {
+        self.run_epoch_from(epoch, 0)
+    }
+
+    /// [`Self::run_epoch`] starting at `start_episode` (the resume path —
+    /// pass the episode returned by [`Self::resume_from`] for the first
+    /// epoch, 0 afterwards).
+    pub fn run_epoch_from(&mut self, epoch: usize, start_episode: usize) -> EpochReport {
         let mut samples = self.samples_for_epoch(epoch);
-        let mut report = self.trainer.train_epoch(&mut samples, epoch);
+        let mut report = self.trainer.train_epoch_from(&mut samples, epoch, start_episode);
         // decoupled-engine overlap on the simulated timeline
         if self.walk_sim_secs > report.sim_secs {
             report.metrics.add_secs("walk_stall", self.walk_sim_secs - report.sim_secs);
@@ -274,6 +300,71 @@ mod tests {
             .with_fixed_samples(samples.clone());
         let r = d.run_epoch(0);
         assert_eq!(r.samples, samples.len() as u64);
+    }
+
+    /// The resume invariant at the driver level: stop a checkpointing run
+    /// after epoch 0, rebuild everything from the manifest, and the
+    /// remaining epochs — losses and final model — are bit-identical to
+    /// an uninterrupted run. (The crash-path variant, killing a real
+    /// process mid-episode, lives in `tests/ckpt_resume.rs`.)
+    #[test]
+    fn resume_from_checkpoint_matches_uninterrupted_run() {
+        let g = tiny_graph(7);
+        let dir = std::env::temp_dir().join(format!("tembed_resume_drv_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = tiny_cfg();
+
+        // reference: three uninterrupted epochs
+        let mut a = Driver::new(&g, cfg.clone(), None).unwrap();
+        let ref_losses: Vec<f64> = (0..3).map(|e| a.run_epoch(e).mean_loss()).collect();
+        let ref_store = a.finish();
+
+        // leg 1: same run with checkpointing on, stopped after epoch 0
+        let mut cfg_b = cfg.clone();
+        cfg_b.ckpt_dir = dir.to_string_lossy().into_owned();
+        let mut b1 = Driver::new(&g, cfg_b.clone(), None).unwrap();
+        let r0 = b1.run_epoch(0);
+        let rel0 = (r0.mean_loss() - ref_losses[0]).abs() / ref_losses[0].abs().max(1e-9);
+        assert!(rel0 < 1e-12, "the tee must not perturb training");
+        assert!(r0.metrics.count("ckpt_teed_subparts") > 0, "chain ends teed");
+        assert_eq!(r0.metrics.count("ckpt_dropped_subparts"), 0);
+        drop(b1.finish()); // joins the writer: newest manifest durable
+
+        // leg 2: a fresh process-equivalent resumes from the directory
+        let reader = crate::ckpt::CkptReader::open(&dir).unwrap();
+        let mut b2 = Driver::new(&g, cfg_b, None).unwrap();
+        let (e0, i0) = b2.resume_from(&reader).unwrap();
+        assert_eq!((e0, i0), (1, 0), "epoch 0 fully committed -> resume at epoch 1");
+        let mut losses = vec![r0.mean_loss()];
+        for e in e0..3 {
+            let start = if e == e0 { i0 } else { 0 };
+            losses.push(b2.run_epoch_from(e, start).mean_loss());
+        }
+        for (e, (x, y)) in losses.iter().zip(&ref_losses).enumerate() {
+            let rel = (x - y).abs() / y.abs().max(1e-9);
+            assert!(rel < 1e-12, "epoch {e} loss diverged after resume: {x} vs {y}");
+        }
+        let store = b2.finish();
+        assert_eq!(store.vertex, ref_store.vertex, "resumed vertex matrix diverged");
+        assert_eq!(store.context, ref_store.context, "resumed context matrix diverged");
+
+        // a schedule-changing config is refused by the config digest
+        // (silently training a different episode split would diverge)
+        let mut cfg_d = cfg.clone();
+        cfg_d.episode_size *= 2;
+        let mut reshaped = Driver::new(&g, cfg_d, None).unwrap();
+        let err = reshaped.resume_from(&reader).unwrap_err();
+        assert!(format!("{err:#}").contains("different schedule"), "{err:#}");
+
+        // a checkpoint of a *different* graph is refused by digest
+        let other = tiny_graph(8);
+        let mut cfg_c = cfg;
+        cfg_c.ckpt_dir = String::new();
+        let mut wrong = Driver::new(&other, cfg_c, None).unwrap();
+        let err = wrong.resume_from(&reader).unwrap_err();
+        assert!(format!("{err:#}").contains("different graph"), "{err:#}");
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod multirank;
 
 use std::sync::Arc;
 
+use crate::ckpt::{CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta};
 use crate::cluster::ClusterSpec;
 use crate::comm::topology::Route;
 use crate::config::{Backend, TrainConfig};
@@ -61,6 +62,20 @@ pub struct Trainer {
     /// node's workers and episodes hop across the transport (`exec`
     /// ranked path). None = the whole simulated cluster in this process.
     cluster_handle: Option<Arc<multirank::ClusterHandle>>,
+    /// Streaming checkpoint writer (`cfg.ckpt_dir` set, rank 0 only):
+    /// episodes tee chain-end sub-parts into its sink and commit a
+    /// manifest every `cfg.ckpt_interval` episodes.
+    ckpt: Option<CkptWriter>,
+    /// `(epoch, episode_in_epoch, episodes_in_epoch)` of the last trained
+    /// episode — the end-of-training snapshot stamps its manifest with
+    /// this position so resume lands exactly after it.
+    last_episode_pos: Option<(u64, u64, u64)>,
+    /// Global episode counter — the checkpoint watermark. Monotonic
+    /// across epochs; restored to `watermark + 1` on resume.
+    global_episode: u64,
+    /// FNV degree digest of the trained graph (stamped into manifests,
+    /// checked on resume).
+    graph_digest: u64,
 }
 
 /// Per-GPU outcome of one scheduled step.
@@ -119,6 +134,21 @@ impl Trainer {
                 }
             });
         }
+        let graph_digest = multirank::degrees_digest(num_nodes, degrees);
+        let ckpt = if !cfg.ckpt_dir.is_empty() && cfg.rank == 0 {
+            Some(CkptWriter::spawn(CkptWriterConfig {
+                dir: std::path::PathBuf::from(&cfg.ckpt_dir),
+                num_nodes,
+                dim: cfg.dim,
+                subpart_bounds: plan.vertex_bounds.clone(),
+                context_bounds: plan.context_bounds.clone(),
+                graph_digest,
+                config_digest: cfg.resume_digest(),
+                channel_cap: 0, // auto: two episodes' worth of sub-parts
+            })?)
+        } else {
+            None
+        };
         Ok(Trainer {
             cfg,
             plan,
@@ -133,7 +163,73 @@ impl Trainer {
             last_sim: None,
             last_overlap: None,
             cluster_handle: None,
+            ckpt,
+            last_episode_pos: None,
+            global_episode: 0,
+            graph_digest,
         })
+    }
+
+    /// The graph digest manifests are stamped with (and resume checks).
+    pub fn graph_digest(&self) -> u64 {
+        self.graph_digest
+    }
+
+    /// Restore the full training state from a committed checkpoint: the
+    /// vertex matrix, every pinned context shard, and every worker RNG
+    /// stream — after this, training the next episode is bit-identical to
+    /// an uninterrupted run. Refuses checkpoints of a different graph,
+    /// plan shape, or dim.
+    pub fn restore_from_checkpoint(&mut self, reader: &CkptReader) -> crate::Result<()> {
+        let m = reader.manifest();
+        crate::ensure!(
+            m.graph_digest == self.graph_digest,
+            "checkpoint was trained on a different graph (digest {:#018x} vs {:#018x}) — \
+             point --resume at the run's own checkpoint dir, or load the same --graph/--dataset",
+            m.graph_digest,
+            self.graph_digest
+        );
+        crate::ensure!(
+            reader.num_nodes() == self.store.num_nodes && reader.dim() == self.cfg.dim,
+            "checkpoint shape {}x{} does not match the configured model {}x{}",
+            reader.num_nodes(),
+            reader.dim(),
+            self.store.num_nodes,
+            self.cfg.dim
+        );
+        crate::ensure!(
+            reader.gpus() == self.plan.total_gpus(),
+            "checkpoint has {} context shards but the plan runs {} GPUs \
+             (resume needs the same cluster.nodes/gpus_per_node)",
+            reader.gpus(),
+            self.plan.total_gpus()
+        );
+        crate::ensure!(
+            m.config_digest == self.cfg.resume_digest(),
+            "checkpoint was written under a different schedule/sampling config \
+             (config digest {:#018x} vs {:#018x}) — resume with the run's original \
+             episode_size, seed, batch, walk, and model settings (epochs may grow)",
+            m.config_digest,
+            self.cfg.resume_digest()
+        );
+        let snap = reader.materialize();
+        self.store.vertex = snap.vertex;
+        for g in 0..self.plan.total_gpus() {
+            let shard = reader.context_shard(g);
+            crate::ensure!(
+                shard.len() == self.contexts[g].len(),
+                "context shard {g} has {} values, plan expects {} \
+                 (resume needs the same schedule.subparts)",
+                shard.len(),
+                self.contexts[g].len()
+            );
+            self.contexts[g].copy_from_slice(shard);
+        }
+        for (g, s) in reader.rng_states().iter().enumerate() {
+            self.rngs[g] = Rng::from_state(*s);
+        }
+        self.global_episode = reader.watermark() + 1;
+        Ok(())
     }
 
     /// Join a multi-process cluster (see `coordinator::multirank`): every
@@ -198,21 +294,57 @@ impl Trainer {
     /// Train one epoch over `samples` (augmented positive edges).
     /// Consumes the samples order (shuffles into episodes).
     pub fn train_epoch(&mut self, samples: &mut Vec<Edge>, epoch: usize) -> EpochReport {
+        self.train_epoch_from(samples, epoch, 0)
+    }
+
+    /// [`Self::train_epoch`] starting at episode `start_episode` — the
+    /// resume path. The episode split is deterministic per epoch (seeded
+    /// shuffle), so skipping the first `start_episode` episodes trains
+    /// exactly the episodes an uninterrupted run would still have run.
+    pub fn train_epoch_from(
+        &mut self,
+        samples: &mut Vec<Edge>,
+        epoch: usize,
+        start_episode: usize,
+    ) -> EpochReport {
         let wall = Timer::start();
         let lr = self.effective_lr(epoch);
         let mut rng = Rng::new(self.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C));
         let episodes = crate::sample::split_episodes(samples, self.cfg.episode_size, &mut rng);
+        // backstop behind the resume config-digest check: a start episode
+        // past the split means the caller's schedule cannot be the one
+        // that wrote the checkpoint — fail loudly, never train 0 episodes
+        assert!(
+            start_episode <= episodes.len(),
+            "resume start episode {start_episode} exceeds the epoch's {} episodes \
+             (schedule/sampling config diverged from the checkpointed run)",
+            episodes.len()
+        );
         let mut sim_secs = 0.0;
         let mut loss_sum = 0.0;
         let mut total_samples = 0u64;
-        for ep in &episodes {
+        let mut trained = 0u64;
+        for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
+            let interval = self.cfg.ckpt_interval.max(1) as u64;
+            let active =
+                self.ckpt.is_some() && self.global_episode % interval == interval - 1;
+            if let Some(w) = &self.ckpt {
+                w.sink().begin_episode(self.global_episode, active);
+            }
             let pool = EpisodePool::build(&self.plan, ep);
             let (ep_sim, ep_loss, ep_samples) = self.train_episode(&pool, lr);
             sim_secs += ep_sim;
             loss_sum += ep_loss;
             total_samples += ep_samples;
+            trained += 1;
+            if active {
+                self.commit_checkpoint(epoch, i, episodes.len());
+            }
+            self.last_episode_pos =
+                Some((epoch as u64, i as u64, episodes.len() as u64));
+            self.global_episode += 1;
         }
-        self.metrics.add("episodes", episodes.len() as u64);
+        self.metrics.add("episodes", trained);
         self.metrics.add("samples", total_samples);
         self.metrics.add_secs("sim_epoch", sim_secs);
         EpochReport {
@@ -223,6 +355,35 @@ impl Trainer {
             loss_sum,
             metrics: self.metrics.clone(),
         }
+    }
+
+    /// Book one checkpoint-tee outcome onto the metrics bag — the
+    /// serial path's counterpart of `exec`'s `DrainStats::book_offer`
+    /// (the executor path lands the same keys from `ExecMeasure`).
+    fn book_ckpt_offer(&mut self, offer: crate::ckpt::Offer) {
+        match offer {
+            crate::ckpt::Offer::Teed => self.metrics.add("ckpt_teed_subparts", 1),
+            crate::ckpt::Offer::Dropped => self.metrics.add("ckpt_dropped_subparts", 1),
+            crate::ckpt::Offer::Inactive => {}
+        }
+    }
+
+    /// Ship the trainer-side episode state (context shards + RNG streams
+    /// + progress) and ask the checkpoint writer to commit the manifest.
+    fn commit_checkpoint(&mut self, epoch: usize, episode_in_epoch: usize, episodes: usize) {
+        let Some(w) = &self.ckpt else { return };
+        let meta = EpisodeMeta {
+            watermark: self.global_episode,
+            epoch: epoch as u64,
+            episode_in_epoch: episode_in_epoch as u64,
+            episodes_in_epoch: episodes as u64,
+            contexts: self.contexts.clone(),
+            rng_states: self.rngs.iter().map(|r| r.state()).collect(),
+        };
+        if let Err(e) = w.sink().commit_episode(meta) {
+            eprintln!("warning: checkpoint commit failed: {e:#}");
+        }
+        self.metrics.add("ckpt_commits_requested", 1);
     }
 
     /// One episode = one full rotation of the hierarchical schedule.
@@ -266,7 +427,17 @@ impl Trainer {
         let mut sim = 0.0;
         let mut loss = 0.0;
         let mut samples = 0u64;
-        for step in &steps {
+        // chain-end detection for the checkpoint tee: only a sub-part's
+        // *last* check-in of the episode may reach the sink (teeing an
+        // earlier one could commit a mid-episode version of that sub-part
+        // if the final frame got dropped — a torn snapshot)
+        let mut last_step = vec![0usize; self.plan.total_subparts()];
+        for (si, st) in steps.iter().enumerate() {
+            for &sp in &st.assignment {
+                last_step[sp] = si;
+            }
+        }
+        for (si, step) in steps.iter().enumerate() {
             let outcomes = self.run_step(pool, &step.assignment, lr);
             // sequential: write trained sub-parts back (D2H is priced by
             // the pipeline model; the memcpy here is the real data motion)
@@ -278,6 +449,13 @@ impl Trainer {
                 samples += o.samples;
                 let t = self.substep_sim(&o.bytes, step.sub == 0);
                 step_sim = step_sim.max(t); // GPUs run concurrently
+                // serial counterpart of the executor drain's tee
+                if last_step[o.subpart] == si {
+                    if let Some(w) = &self.ckpt {
+                        let offer = w.sink().offer_vertex(o.subpart, o.trained);
+                        self.book_ckpt_offer(offer);
+                    }
+                }
             }
             sim += step_sim;
         }
@@ -298,6 +476,7 @@ impl Trainer {
             lr,
             crosses_node: self.plan.nodes > 1,
             stage_window: self.cfg.effective_stage_window(),
+            ckpt: self.ckpt.as_ref().map(|w| w.sink()),
         };
         let view = self.cluster_handle.as_deref().map(|h| h.view());
         let run = crate::exec::run_episode_ranked(
@@ -339,6 +518,14 @@ impl Trainer {
         // the bounded-feeder gauge: high-water staged buffers vs window
         self.metrics.add_max("exec_peak_staged", run.measure.peak_staged as u64);
         self.metrics.add_max("exec_stage_window", run.measure.stage_window as u64);
+        // checkpoint tee accounting (drop-and-count: drops mean the
+        // writer skipped this episode's commit, never a blocked worker)
+        if run.measure.ckpt_teed > 0 {
+            self.metrics.add("ckpt_teed_subparts", run.measure.ckpt_teed as u64);
+        }
+        if run.measure.ckpt_dropped > 0 {
+            self.metrics.add("ckpt_dropped_subparts", run.measure.ckpt_dropped as u64);
+        }
         if run.measure.inter_node_secs > 0.0 {
             // genuine network hops (multi-process runs only)
             self.metrics.add_secs("exec_inter_node", run.measure.inter_node_secs);
@@ -430,7 +617,59 @@ impl Trainer {
 
     /// Flush the pinned context shards back to the store and return it
     /// (end of training; the store then holds the full trained model).
+    /// Joins the checkpoint writer, so the newest manifest is durable
+    /// before the caller exits.
     pub fn finish(mut self) -> EmbeddingStore {
+        if let Some(w) = self.ckpt.take() {
+            // End-of-training snapshot: a *blocking* full-model commit, so
+            // the newest manifest equals the finished model even if an
+            // episode tee was dropped under disk pressure late in the run
+            // (mid-run drops only cost freshness; this closes the run with
+            // an exact generation). Single-process only: in a multi-rank
+            // run this driver's `contexts` for remote GPUs are stale until
+            // `collect_remote_state` — which runs *after* finish — so a
+            // snapshot here would stamp a wrong-context generation over
+            // the honest last per-episode commit (see the README's
+            // multi-process note and the ROADMAP context-streaming item).
+            if let (Some((ep, i, m)), None) =
+                (self.last_episode_pos, self.cluster_handle.as_ref())
+            {
+                let sink = w.sink();
+                sink.begin_episode(self.global_episode, true);
+                let mut ok = true;
+                for sp in 0..self.plan.total_subparts() {
+                    let rows = self.store.checkout_vertex(self.plan.subpart_range(sp));
+                    if sink.send_vertex(sp, rows).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    let meta = EpisodeMeta {
+                        watermark: self.global_episode,
+                        epoch: ep,
+                        episode_in_epoch: i,
+                        episodes_in_epoch: m,
+                        contexts: self.contexts.clone(),
+                        rng_states: self.rngs.iter().map(|r| r.state()).collect(),
+                    };
+                    if let Err(e) = sink.commit_episode(meta) {
+                        eprintln!("warning: final checkpoint commit failed: {e:#}");
+                    }
+                }
+            }
+            match w.finish() {
+                Ok(stats) => eprintln!(
+                    "checkpoint writer: {} generation(s) committed, {} skipped, \
+                     {} segment(s), {}",
+                    stats.committed,
+                    stats.skipped,
+                    stats.segments,
+                    crate::util::human_bytes(stats.bytes),
+                ),
+                Err(e) => eprintln!("warning: checkpoint writer failed: {e:#}"),
+            }
+        }
         for g in 0..self.plan.total_gpus() {
             let range = self.plan.context_range(g);
             let ctx = std::mem::take(&mut self.contexts[g]);

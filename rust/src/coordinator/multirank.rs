@@ -288,8 +288,17 @@ impl PlanMsg {
 }
 
 /// FNV-1a digest of a graph's shape and degree sequence — cheap, stable,
-/// and sensitive to any node/edge drift between ranks.
+/// and sensitive to any node/edge drift between ranks. Also stamped into
+/// checkpoint manifests so `tembed train --resume` can refuse a
+/// checkpoint trained on a different graph.
 pub fn graph_digest(graph: &CsrGraph) -> u64 {
+    degrees_digest(graph.num_nodes(), &graph.degrees())
+}
+
+/// [`graph_digest`] from the degree array alone (for a CSR graph the edge
+/// count is exactly the degree sum) — the Trainer stamps manifests
+/// without holding a graph handle, and the two forms must always agree.
+pub fn degrees_digest(num_nodes: usize, degrees: &[u32]) -> u64 {
     const OFFSET: u64 = 0xcbf29ce484222325;
     const PRIME: u64 = 0x100000001b3;
     let mut h = OFFSET;
@@ -299,9 +308,9 @@ pub fn graph_digest(graph: &CsrGraph) -> u64 {
             h = h.wrapping_mul(PRIME);
         }
     };
-    eat(graph.num_nodes() as u64);
-    eat(graph.num_edges() as u64);
-    for d in graph.degrees() {
+    eat(num_nodes as u64);
+    eat(degrees.iter().map(|&d| d as u64).sum());
+    for &d in degrees {
         eat(d as u64);
     }
     h
@@ -505,6 +514,8 @@ mod tests {
         let mut rng3 = Rng::new(5);
         let g3 = gen::to_graph(50, gen::erdos_renyi(50, 200, &mut rng3));
         assert_ne!(graph_digest(&g1), graph_digest(&g3), "different graph, different digest");
+        // the degrees-only form (manifest stamping) matches exactly
+        assert_eq!(graph_digest(&g1), degrees_digest(g1.num_nodes(), &g1.degrees()));
     }
 
     #[test]

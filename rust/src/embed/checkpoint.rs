@@ -2,8 +2,11 @@
 //! text export for downstream pipelines (the paper's feature-engineering
 //! consumers ingest plain id→vector tables).
 //!
-//! Binary layout: magic `TEMB`, u32 version, u64 num_nodes, u32 dim,
-//! vertex f32s, context f32s — all little-endian.
+//! v1 binary layout: magic `TEMB`, u32 version, u64 num_nodes, u32 dim,
+//! vertex f32s, context f32s — all little-endian. [`load`] also ingests a
+//! v2 *segmented* checkpoint (the `ckpt` subsystem's streaming format):
+//! point it at a checkpoint directory — or its `MANIFEST` — and the
+//! newest complete generation is materialized into an `EmbeddingStore`.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -17,7 +20,9 @@ use super::EmbeddingStore;
 const MAGIC: &[u8; 4] = b"TEMB";
 const VERSION: u32 = 1;
 
-/// Save the full model.
+/// Save the full model (v1 whole-model file). The matrices go through
+/// `ckpt::format`'s chunked little-endian encoder — explicit on both
+/// ends, no byte-reinterpretation of the f32 buffers.
 pub fn save(store: &EmbeddingStore, path: &Path) -> crate::Result<()> {
     let f = File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
@@ -27,22 +32,31 @@ pub fn save(store: &EmbeddingStore, path: &Path) -> crate::Result<()> {
     w.write_all(&(store.num_nodes as u64).to_le_bytes())?;
     w.write_all(&(store.dim as u32).to_le_bytes())?;
     for mat in [&store.vertex, &store.context] {
-        let bytes = unsafe {
-            std::slice::from_raw_parts(mat.as_ptr() as *const u8, mat.len() * 4)
-        };
-        w.write_all(bytes)?;
+        crate::ckpt::format::write_f32s_le(&mut w, mat)?;
     }
     w.flush()?;
     Ok(())
 }
 
-/// Load a model saved by `save`.
+/// Load a model: a v1 file saved by [`save`], or a v2 segmented
+/// checkpoint directory (also accepted by `MANIFEST` path), materialized
+/// through `ckpt::CkptReader`.
 pub fn load(path: &Path) -> crate::Result<EmbeddingStore> {
+    if path.is_dir() {
+        return Ok(crate::ckpt::CkptReader::open(path)?.materialize());
+    }
     let f = File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
+    if &magic == b"TMAN" {
+        // a v2 manifest file: open its directory
+        let dir = path.parent().ok_or_else(|| {
+            crate::anyhow!("{}: manifest has no parent directory", path.display())
+        })?;
+        return Ok(crate::ckpt::CkptReader::open(dir)?.materialize());
+    }
     if &magic != MAGIC {
         bail!("{}: not a tembed checkpoint", path.display());
     }
@@ -73,7 +87,8 @@ pub fn load(path: &Path) -> crate::Result<EmbeddingStore> {
 /// Export vertex embeddings as `node_id v0 v1 ...` text lines (word2vec
 /// text format minus the header, which downstream tools rarely agree on).
 pub fn export_text(store: &EmbeddingStore, path: &Path) -> crate::Result<()> {
-    let f = File::create(path)?;
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
     for v in 0..store.num_nodes {
         write!(w, "{v}")?;
@@ -116,6 +131,52 @@ mod tests {
         let p = tmp("bad.temb");
         std::fs::write(&p, b"NOPE123456789012").unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn load_ingests_a_v2_segmented_checkpoint() {
+        use crate::ckpt::{CkptWriter, CkptWriterConfig, EpisodeMeta};
+        use crate::partition::range_bounds;
+
+        let dir = std::env::temp_dir().join("tembed_ckpt_tests_v2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(9);
+        let store = EmbeddingStore::init(30, 4, &mut rng);
+        let sb = range_bounds(30, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: 30,
+            dim: 4,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(30, 1),
+            graph_digest: 3,
+            config_digest: 0,
+            channel_cap: 16,
+        })
+        .unwrap();
+        w.sink().begin_episode(0, true);
+        for sp in 0..2 {
+            w.sink().offer_vertex(sp, store.checkout_vertex(sb[sp]..sb[sp + 1]));
+        }
+        w.sink()
+            .commit_episode(EpisodeMeta {
+                watermark: 0,
+                epoch: 0,
+                episode_in_epoch: 0,
+                episodes_in_epoch: 1,
+                contexts: vec![store.context.clone()],
+                rng_states: vec![[1, 2, 3, 4]],
+            })
+            .unwrap();
+        w.finish().unwrap();
+        // by directory
+        let by_dir = load(&dir).unwrap();
+        assert_eq!(by_dir.vertex, store.vertex);
+        assert_eq!(by_dir.context, store.context);
+        // by MANIFEST path
+        let by_manifest = load(&dir.join("MANIFEST")).unwrap();
+        assert_eq!(by_manifest.vertex, store.vertex);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -3,16 +3,17 @@
 //! checking out every chain head up front (which held one extra full
 //! vertex-matrix copy at episode start — the PyTorch-BigGraph-style
 //! bucket-buffer shape, staging sized O(window) instead of O(model)).
-//! This bounds the *staging* side only: chain-end buffers still pool in
-//! the workers' finals until the episode's check-in pass — streaming
-//! those out mid-episode is the checkpoint-streaming ROADMAP item.
+//! Chain-*end* buffers no longer pool either: workers drain them
+//! mid-episode through the store writer (`exec::storewriter`), which also
+//! tees them into the checkpoint sink.
 //!
 //! ## Protocol
 //!
 //! Heads are staged in **need order** — sorted by `(first step that
-//! consumes the head, gpu)` — and each `checkout_vertex` (the H2D memcpy)
-//! is sent straight into the consuming worker's inbox. A worker acks the
-//! feeder the moment a staged head becomes its front buffer, releasing one
+//! consumes the head, gpu)` — and each checkout (the H2D memcpy, served
+//! by the store writer so the feeder holds no store borrow) is sent
+//! straight into the consuming worker's inbox. A worker acks the feeder
+//! the moment a staged head becomes its front buffer, releasing one
 //! window credit; the feeder blocks when `window` heads are staged but
 //! unconsumed.
 //!
@@ -25,24 +26,23 @@
 //! every head staged before it precedes it in need order, i.e. is consumed
 //! at a strictly smaller `(step, gpu)`, which by minimality has completed
 //! and therefore acked. So all window credits return and the feeder
-//! stages the missing head: contradiction. The config layer still clamps
-//! the window to at least the GPU count (`TrainConfig::
-//! effective_stage_window`) so one credit can be in flight per worker.
+//! stages the missing head: contradiction. (The store writer serves every
+//! checkout it receives in FIFO order without blocking on anything a
+//! worker holds, so routing checkouts through it changes no step of this
+//! argument.) The config layer still clamps the window to at least the
+//! GPU count (`TrainConfig::effective_stage_window`) so one credit can be
+//! in flight per worker.
 //!
 //! ## Abort safety
 //!
 //! The feeder never blocks on anything a dead worker holds open: a
 //! poisoned episode drops every worker's inbox receiver and ack sender,
-//! so the feeder's `send` or `recv` fails and it exits with the stats it
-//! has. It is itself wrapped in the same poison-on-panic guard as the
-//! workers (see `run_episode_ranked`).
+//! so the feeder's checkout, `send`, or `recv` fails and it exits with
+//! the stats it has. It is itself wrapped in the same poison-on-panic
+//! guard as the workers (see `run_episode_ranked`).
 
 use std::sync::mpsc::{Receiver, Sender};
 
-use crate::embed::EmbeddingStore;
-use crate::partition::HierarchyPlan;
-
-use super::trace::{Phase, PhaseClock};
 use super::RingMsg;
 
 /// One chain head the feeder must stage: consumed at `first_step` by
@@ -54,12 +54,10 @@ pub(crate) struct Head {
     pub subpart: usize,
 }
 
-/// What the feeder measured: the H2D staging clock and the bounded-window
-/// gauge.
+/// What the feeder measured: the bounded-window gauge. (The H2D staging
+/// clock lives with the store writer, which performs the actual copy.)
 #[derive(Debug, Default, Clone)]
 pub(crate) struct FeederStats {
-    /// Seconds inside `checkout_vertex` (the H2D staging phase).
-    pub h2d_secs: f64,
     /// Heads actually staged (this rank's share of the chains).
     pub staged: usize,
     /// Peak staged-but-unconsumed buffers — never exceeds the window by
@@ -70,10 +68,11 @@ pub(crate) struct FeederStats {
 /// Stage every locally-owned chain head, at most `window` in flight.
 /// `heads` must be in need order; `inboxes[g]` is `None` for GPUs owned
 /// by other ranks (their heads are staged by that rank's own feeder from
-/// its replicated store).
+/// its replicated store). `checkout` copies one sub-part out of the host
+/// store (the store-writer round trip in production; a plain closure in
+/// tests) and returns `None` when the store side is gone (abort).
 pub(crate) fn run(
-    store: &EmbeddingStore,
-    plan: &HierarchyPlan,
+    mut checkout: impl FnMut(usize) -> Option<Vec<f32>>,
     heads: &[Head],
     inboxes: &[Option<Sender<RingMsg>>],
     window: usize,
@@ -81,7 +80,6 @@ pub(crate) fn run(
 ) -> FeederStats {
     let window = window.max(1);
     let mut stats = FeederStats::default();
-    let mut clock = PhaseClock::new();
     let mut in_flight = 0usize;
     for h in heads {
         let Some(tx) = &inboxes[h.gpu] else { continue };
@@ -94,15 +92,13 @@ pub(crate) fn run(
             match acks.recv() {
                 Ok(()) => in_flight -= 1,
                 // every worker exited (panic/poison path): stop staging
-                Err(_) => {
-                    stats.h2d_secs = clock.secs(Phase::H2dStage);
-                    return stats;
-                }
+                Err(_) => return stats,
             }
         }
-        let buf =
-            clock.time(Phase::H2dStage, || store.checkout_vertex(plan.subpart_range(h.subpart)));
-        stats.h2d_secs = clock.secs(Phase::H2dStage);
+        let Some(buf) = checkout(h.subpart) else {
+            // the store writer is gone (abort mid-episode)
+            return stats;
+        };
         if tx.send((h.subpart, buf)).is_err() {
             // the consuming worker is gone (abort mid-episode)
             return stats;
@@ -117,6 +113,8 @@ pub(crate) fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embed::EmbeddingStore;
+    use crate::partition::HierarchyPlan;
     use crate::util::Rng;
     use std::sync::mpsc::channel;
 
@@ -142,14 +140,19 @@ mod tests {
             }
             got
         });
-        let stats = run(&store, &plan, &heads, &[Some(tx)], 2, &ack_rx);
+        let stats = run(
+            |sp| Some(store.checkout_vertex(plan.subpart_range(sp))),
+            &heads,
+            &[Some(tx)],
+            2,
+            &ack_rx,
+        );
         assert_eq!(stats.staged, n);
         assert!(
             stats.peak_staged >= 1 && stats.peak_staged <= 2,
             "gauge {} outside the window",
             stats.peak_staged
         );
-        assert!(stats.h2d_secs > 0.0);
         // every head landed with the exact store bytes
         let got = consumer.join().expect("consumer thread");
         assert_eq!(got.len(), n);
@@ -167,7 +170,13 @@ mod tests {
         let (tx, rx) = channel();
         drop(rx); // worker gone before staging starts
         let (_ack_tx, ack_rx) = channel::<()>();
-        let stats = run(&store, &plan, &heads, &[Some(tx)], 8, &ack_rx);
+        let stats = run(
+            |sp| Some(store.checkout_vertex(plan.subpart_range(sp))),
+            &heads,
+            &[Some(tx)],
+            8,
+            &ack_rx,
+        );
         assert_eq!(stats.staged, 0, "no send can land after the worker died");
     }
 
@@ -180,8 +189,38 @@ mod tests {
         let (tx, _rx) = channel();
         let (ack_tx, ack_rx) = channel::<()>();
         drop(ack_tx); // no worker will ever ack
-        let stats = run(&store, &plan, &heads, &[Some(tx)], 1, &ack_rx);
+        let stats = run(
+            |sp| Some(store.checkout_vertex(plan.subpart_range(sp))),
+            &heads,
+            &[Some(tx)],
+            1,
+            &ack_rx,
+        );
         assert_eq!(stats.staged, 1, "one head fits the window, then the feeder must bail");
         assert_eq!(stats.peak_staged, 1);
+    }
+
+    #[test]
+    fn feeder_exits_when_the_store_writer_dies() {
+        let heads: Vec<Head> =
+            (0..4).map(|sp| Head { first_step: sp, gpu: 0, subpart: sp }).collect();
+        let (tx, _rx) = channel();
+        let (_ack_tx, ack_rx) = channel::<()>();
+        let mut served = 0;
+        let stats = run(
+            |_sp| {
+                if served == 0 {
+                    served += 1;
+                    Some(vec![0.0; 8])
+                } else {
+                    None // store writer gone after the first checkout
+                }
+            },
+            &heads,
+            &[Some(tx)],
+            8,
+            &ack_rx,
+        );
+        assert_eq!(stats.staged, 1);
     }
 }

@@ -4,13 +4,17 @@
 //! The executor is layered (this module only orchestrates): [`feeder`] is
 //! a windowed host feeder staging chain-head sub-parts lazily, at most
 //! `stage_window` buffers in flight — episode-*start* staging is O(window)
-//! instead of one up-front full vertex-matrix copy (chain-end buffers
-//! still pool until the episode's check-in pass; see `feeder`'s docs);
-//! [`worker`] is the per-GPU worker loop — one thread per simulated GPU
-//! owning its pinned context shard and compute backend, with a reorder
-//! stage for early arrivals (the double-buffered ping-pong); [`trace`] is
-//! the [`PhaseClock`] timing every leg of a step separately, validating
-//! the simulator per phase (see its docs for the Fig. 3 mapping).
+//! instead of one up-front full vertex-matrix copy; [`storewriter`] is
+//! the single owner of the host store for the episode's duration, serving
+//! the feeder's checkouts and draining chain-*end* sub-parts the moment a
+//! worker finishes them (write-back, peer broadcast, and checkpoint tee
+//! all happen mid-episode, so finals no longer pool to a model copy by
+//! episode end); [`worker`] is the per-GPU worker loop — one thread per
+//! simulated GPU owning its pinned context shard and compute backend,
+//! with a reorder stage for early arrivals (the double-buffered
+//! ping-pong); [`trace`] is the [`PhaseClock`] timing every leg of a step
+//! separately, validating the simulator per phase (see its docs for the
+//! Fig. 3 mapping).
 //!
 //! Vertex sub-parts rotate between workers along the hierarchical
 //! schedule's ownership chain: after GPU `g` trains sub-part `s`, the
@@ -36,6 +40,7 @@
 //! holds the same parity across two OS processes.
 
 pub(crate) mod feeder;
+pub(crate) mod storewriter;
 pub mod trace;
 pub(crate) mod worker;
 
@@ -46,9 +51,7 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::comm::transport::{
-    self, DemuxHub, Transport, WireMsg, KIND_FINAL, KIND_MEASURE, POISON_SUBPART,
-};
+use crate::comm::transport::{DemuxHub, Transport, WireMsg, KIND_MEASURE, POISON_SUBPART};
 use crate::embed::sgns::StepBackend;
 use crate::embed::EmbeddingStore;
 use crate::metrics::Timer;
@@ -82,6 +85,10 @@ pub struct ExecCtx<'a> {
     /// Max chain-head buffers the host feeder holds staged-but-unconsumed
     /// (see `TrainConfig::effective_stage_window`; clamped to >= 1).
     pub stage_window: usize,
+    /// Checkpoint tee: every chain-end sub-part that reaches this rank's
+    /// store (local drain, and on the driver the peer-rank finals too) is
+    /// offered here. `None` = checkpointing off / non-driver rank.
+    pub ckpt: Option<&'a crate::ckpt::CkptSink>,
 }
 
 /// One rank's view of the multi-process cluster: one rank per simulated
@@ -257,92 +264,110 @@ pub fn run_episode_ranked(
         Outbox { hops, remotes }
     };
 
-    // Feeder + workers under one scope: the feeder stages locally-owned
-    // chain heads lazily (window-bounded H2D checkouts from this rank's
-    // replicated store) while the workers run the rotation; a panic on
-    // either side poisons the other so the scope always joins.
+    // Store writer + feeder + workers under one scope: the store writer
+    // owns the `&mut` store borrow, serving the feeder's window-bounded
+    // H2D checkouts and draining chain-end check-ins mid-episode
+    // (write-back + peer broadcast + checkpoint tee) while the workers
+    // run the rotation; a panic on any side poisons the others so the
+    // scope always joins.
     let heads = std::mem::take(&mut routing.heads);
     let total_chains = heads.len();
-    let store_ref: &EmbeddingStore = store;
-    let (outs, feed): (Vec<WorkerOut>, feeder::FeederStats) = std::thread::scope(|scope| {
-        let ob = &outbox;
-        let (ack_tx, ack_rx) = channel::<()>();
-        let (heads_r, local_tx_r) = (&heads, &local_tx);
-        let feeder_handle = scope.spawn(move || {
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                feeder::run(store_ref, plan, heads_r, local_tx_r, window, &ack_rx)
-            }));
-            match out {
-                Ok(stats) => stats,
-                Err(payload) => {
-                    ob.poison();
-                    std::panic::resume_unwind(payload);
-                }
-            }
-        });
-        let mut handles = Vec::with_capacity(seat_of.len());
-        for (g, (shard, (backend, rng))) in contexts
-            .iter_mut()
-            .zip(backends.iter_mut().zip(rngs.iter_mut()))
-            .enumerate()
-        {
-            let Some(seat) = seat_of.remove(&g) else { continue };
-            let ack = ack_tx.clone();
-            handles.push(scope.spawn(move || {
+    let store_ref: &mut EmbeddingStore = &mut *store;
+    let ckpt = ctx.ckpt;
+    let (outs, feed, mut drained): (Vec<WorkerOut>, feeder::FeederStats, storewriter::DrainStats) =
+        std::thread::scope(|scope| {
+            let ob = &outbox;
+            let (ack_tx, ack_rx) = channel::<()>();
+            let (op_tx, op_rx) = channel::<storewriter::StoreOp>();
+            let (heads_r, local_tx_r) = (&heads, &local_tx);
+            let drain_handle = scope.spawn(move || {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    worker::worker(g, seat, shard, &mut **backend, rng, ob, ctx, samplers, &ack)
+                    storewriter::run(store_ref, plan, &op_rx, ob, ckpt)
                 }));
                 match out {
-                    Ok(v) => v,
+                    Ok(stats) => stats,
                     Err(payload) => {
-                        // unblock peers stuck in recv before propagating
                         ob.poison();
                         std::panic::resume_unwind(payload);
                     }
                 }
-            }));
-        }
-        // only worker clones keep the ack channel alive: if every worker
-        // dies the feeder's recv disconnects instead of wedging the scope
-        drop(ack_tx);
-        let outs = handles
-            .into_iter()
-            .map(|h| h.join().expect("exec worker panicked"))
-            .collect();
-        let feed = feeder_handle.join().expect("exec feeder panicked");
-        (outs, feed)
-    });
+            });
+            let feeder_ops = op_tx.clone();
+            let feeder_handle = scope.spawn(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let (reply_tx, reply_rx) = channel::<Vec<f32>>();
+                    let checkout = move |sp: usize| {
+                        feeder_ops
+                            .send(storewriter::StoreOp::Checkout {
+                                subpart: sp,
+                                reply: reply_tx.clone(),
+                            })
+                            .ok()?;
+                        reply_rx.recv().ok()
+                    };
+                    feeder::run(checkout, heads_r, local_tx_r, window, &ack_rx)
+                }));
+                match out {
+                    Ok(stats) => stats,
+                    Err(payload) => {
+                        ob.poison();
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            });
+            let mut handles = Vec::with_capacity(seat_of.len());
+            for (g, (shard, (backend, rng))) in contexts
+                .iter_mut()
+                .zip(backends.iter_mut().zip(rngs.iter_mut()))
+                .enumerate()
+            {
+                let Some(seat) = seat_of.remove(&g) else { continue };
+                let ack = ack_tx.clone();
+                let finals_tx = op_tx.clone();
+                handles.push(scope.spawn(move || {
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker::worker(
+                            g, seat, shard, &mut **backend, rng, ob, ctx, samplers, &ack,
+                            &finals_tx,
+                        )
+                    }));
+                    match out {
+                        Ok(v) => v,
+                        Err(payload) => {
+                            // unblock peers stuck in recv before propagating
+                            ob.poison();
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }));
+            }
+            // only worker clones keep the ack channel alive, and only
+            // worker/feeder clones keep the op channel alive: when every
+            // producer dies, the feeder's recv and the store writer's
+            // recv disconnect instead of wedging the scope
+            drop(ack_tx);
+            drop(op_tx);
+            let outs: Vec<WorkerOut> = handles
+                .into_iter()
+                .map(|h| h.join().expect("exec worker panicked"))
+                .collect();
+            let feed = feeder_handle.join().expect("exec feeder panicked");
+            let drained = drain_handle.join().expect("exec store writer panicked");
+            (outs, feed, drained)
+        });
     let mut rank = RankMeasure {
         wall_secs: wall.secs(),
-        h2d_secs: feed.h2d_secs,
+        h2d_secs: drained.h2d_secs,
+        d2h_secs: drained.d2h_secs,
         peak_staged: feed.peak_staged,
         ..RankMeasure::default()
     };
 
     let mut traces = Vec::with_capacity(total_steps * gpus);
-    let mut finalized = 0usize;
-    let mut io_clock = PhaseClock::new();
     for out in outs {
-        for (sp, buf) in out.finals {
-            io_clock.time(Phase::D2hWriteback, || {
-                store.checkin_vertex(ctx.plan.subpart_range(sp), &buf)
-            });
-            if cluster.is_some() {
-                let msg = WireMsg {
-                    kind: KIND_FINAL,
-                    dest: 0,
-                    tag: sp as u64,
-                    payload: transport::encode_f32s(&buf),
-                };
-                for t in &outbox.remotes {
-                    t.send(&msg).expect("broadcast chain-end sub-part");
-                }
-            }
-            finalized += 1;
-        }
         traces.extend(out.traces);
     }
-    rank.d2h_secs = io_clock.secs(Phase::D2hWriteback);
+    let mut finalized = drained.finals;
 
     if let Some(c) = cluster {
         // the finals exchange doubles as the episode barrier: every rank
@@ -356,6 +381,12 @@ pub fn run_episode_ranked(
             let (sp, buf) = frx.recv().expect("peer rank closed before episode completed");
             assert_ne!(sp, POISON, "peer rank aborted the episode");
             store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
+            // the driver's sink sees every trained sub-part: local chains
+            // from the drain, remote chains from this KIND_FINAL fold
+            // (booked onto the same drain counters)
+            if let Some(sink) = ctx.ckpt {
+                drained.book_offer(sink.offer_vertex(sp, buf));
+            }
             finalized += 1;
         }
         if c.rank == 0 {
@@ -388,6 +419,8 @@ pub fn run_episode_ranked(
         stage_window: window,
         workers: gpus,
         steps: total_steps,
+        ckpt_teed: drained.ckpt_teed,
+        ckpt_dropped: drained.ckpt_dropped,
         ..ExecMeasure::default()
     };
     for t in &traces {

@@ -1,0 +1,175 @@
+//! The episode's store writer: one thread owning the `&mut
+//! EmbeddingStore` borrow, serving the feeder's chain-head checkouts and
+//! draining the workers' chain-end check-ins **mid-episode**.
+//!
+//! Before this existed, chain-end sub-parts pooled in each worker's
+//! finals vector until the post-episode check-in pass — up to one full
+//! model copy by episode end (the memory gap PR 3 documented). The store
+//! writer closes it: a worker finishing a chain sends the buffer here
+//! immediately, the writer checks it into the host store (timing the D2H
+//! write-back), broadcasts it to peer ranks (KIND_FINAL, the episode
+//! barrier traffic), and tees it into the checkpoint sink — all while the
+//! episode is still running, so no buffer outlives its chain.
+//!
+//! Decoupling rationale: the feeder needs read access to the vertex
+//! matrix (head checkouts) at the same time as the drain needs write
+//! access (chain-end check-ins). Rust's aliasing rules cannot see that
+//! the two only ever touch a given sub-part's rows in checkout-then-
+//! checkin order, so both go through this single owner over a channel —
+//! every op is a short memcpy, in arrival order, and for any one sub-part
+//! the checkout (first scheduled step) always precedes the check-in (last
+//! scheduled step), keeping episode bytes identical to the serial
+//! reference. The op channel is unbounded: its population is bounded by
+//! the feeder window (checkouts, one in flight) plus finished chains
+//! (check-ins), both already bounded by the schedule.
+//!
+//! Abort safety mirrors the worker/feeder contract: the writer exits when
+//! every op sender drops (normal end or poisoned episode); a panic inside
+//! the writer poisons the outbox, so no worker blocks on a hand-off that
+//! will never come.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::ckpt::{CkptSink, Offer};
+use crate::comm::transport::{self, WireMsg, KIND_FINAL};
+use crate::embed::EmbeddingStore;
+use crate::partition::HierarchyPlan;
+
+use super::trace::{Phase, PhaseClock};
+use super::worker::Outbox;
+
+/// One request against the episode's host store.
+pub(crate) enum StoreOp {
+    /// Feeder: copy a chain-head sub-part out (the H2D staging memcpy).
+    Checkout { subpart: usize, reply: Sender<Vec<f32>> },
+    /// Worker: a chain ended — write the trained rows back (D2H),
+    /// broadcast to peer ranks, tee to the checkpoint sink.
+    Checkin { subpart: usize, rows: Vec<f32> },
+}
+
+/// What the store writer measured and counted.
+#[derive(Debug, Default)]
+pub(crate) struct DrainStats {
+    /// Seconds inside `checkout_vertex` (the H2D staging phase — the
+    /// feeder's round-trip wait is queueing, not the copy, so the phase
+    /// clock lives here).
+    pub h2d_secs: f64,
+    /// Seconds inside `checkin_vertex` (the D2H write-back phase).
+    pub d2h_secs: f64,
+    /// Chain-end sub-parts checked in by this rank's workers.
+    pub finals: usize,
+    /// Check-ins teed into the checkpoint sink.
+    pub ckpt_teed: usize,
+    /// Check-ins the bounded checkpoint channel refused (drop-and-count:
+    /// the writer never blocks the episode).
+    pub ckpt_dropped: usize,
+}
+
+impl DrainStats {
+    pub(crate) fn book_offer(&mut self, offer: Offer) {
+        match offer {
+            Offer::Teed => self.ckpt_teed += 1,
+            Offer::Dropped => self.ckpt_dropped += 1,
+            Offer::Inactive => {}
+        }
+    }
+}
+
+/// Serve store ops until every sender hangs up.
+pub(crate) fn run(
+    store: &mut EmbeddingStore,
+    plan: &HierarchyPlan,
+    ops: &Receiver<StoreOp>,
+    outbox: &Outbox,
+    ckpt: Option<&CkptSink>,
+) -> DrainStats {
+    let mut clock = PhaseClock::new();
+    let mut stats = DrainStats::default();
+    while let Ok(op) = ops.recv() {
+        match op {
+            StoreOp::Checkout { subpart, reply } => {
+                let buf = clock
+                    .time(Phase::H2dStage, || store.checkout_vertex(plan.subpart_range(subpart)));
+                // the feeder may already be gone on the abort path
+                let _ = reply.send(buf);
+            }
+            StoreOp::Checkin { subpart, rows } => {
+                clock.time(Phase::D2hWriteback, || {
+                    store.checkin_vertex(plan.subpart_range(subpart), &rows)
+                });
+                if !outbox.remotes.is_empty() {
+                    let msg = WireMsg {
+                        kind: KIND_FINAL,
+                        dest: 0,
+                        tag: subpart as u64,
+                        payload: transport::encode_f32s(&rows),
+                    };
+                    for t in &outbox.remotes {
+                        t.send(&msg).expect("broadcast chain-end sub-part");
+                    }
+                }
+                if let Some(sink) = ckpt {
+                    stats.book_offer(sink.offer_vertex(subpart, rows));
+                }
+                stats.finals += 1;
+            }
+        }
+    }
+    stats.h2d_secs = clock.secs(Phase::H2dStage);
+    stats.d2h_secs = clock.secs(Phase::D2hWriteback);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::mpsc::channel;
+
+    fn empty_outbox() -> Outbox {
+        Outbox { hops: Vec::new(), remotes: Vec::new() }
+    }
+
+    #[test]
+    fn serves_checkouts_and_checkins_in_order() {
+        let plan = HierarchyPlan::new(1, 1, 2, 20);
+        let mut store = EmbeddingStore::init(20, 4, &mut Rng::new(1));
+        let before = store.clone();
+        let (op_tx, op_rx) = channel();
+        let (reply_tx, reply_rx) = channel();
+        op_tx.send(StoreOp::Checkout { subpart: 0, reply: reply_tx.clone() }).unwrap();
+        // trained rows for sub-part 0 come back changed
+        let range = plan.subpart_range(0);
+        let trained = vec![9.5f32; range.len() * 4];
+        op_tx.send(StoreOp::Checkin { subpart: 0, rows: trained.clone() }).unwrap();
+        op_tx.send(StoreOp::Checkout { subpart: 1, reply: reply_tx }).unwrap();
+        drop(op_tx);
+        let ob = empty_outbox();
+        let stats = run(&mut store, &plan, &op_rx, &ob, None);
+        assert_eq!(stats.finals, 1);
+        assert_eq!(stats.ckpt_teed, 0);
+        assert!(stats.d2h_secs > 0.0 && stats.h2d_secs > 0.0);
+        // checkout 0 saw the pre-checkin bytes, checkout 1 is untouched
+        let got0 = reply_rx.recv().unwrap();
+        assert_eq!(got0, before.checkout_vertex(plan.subpart_range(0)));
+        let got1 = reply_rx.recv().unwrap();
+        assert_eq!(got1, before.checkout_vertex(plan.subpart_range(1)));
+        // the checkin landed in the store
+        assert_eq!(store.checkout_vertex(plan.subpart_range(0)), trained);
+    }
+
+    #[test]
+    fn exits_when_feeder_reply_is_gone() {
+        let plan = HierarchyPlan::new(1, 1, 1, 8);
+        let mut store = EmbeddingStore::init(8, 2, &mut Rng::new(2));
+        let (op_tx, op_rx) = channel();
+        let (reply_tx, reply_rx) = channel::<Vec<f32>>();
+        drop(reply_rx); // feeder died mid-abort
+        op_tx.send(StoreOp::Checkout { subpart: 0, reply: reply_tx }).unwrap();
+        drop(op_tx);
+        let ob = empty_outbox();
+        // must not panic or wedge
+        let stats = run(&mut store, &plan, &op_rx, &ob, None);
+        assert_eq!(stats.finals, 0);
+    }
+}

@@ -64,6 +64,7 @@ fn run_windowed(
         lr: 0.05,
         crosses_node: plan.nodes > 1,
         stage_window: window,
+        ckpt: None,
     };
     let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
     (run, contexts)
@@ -246,6 +247,7 @@ fn worker_panic_propagates_instead_of_deadlocking() {
         lr: 0.05,
         crosses_node: false,
         stage_window: 8,
+        ckpt: None,
     };
     // must panic (poison broadcast unblocks the other workers and the
     // feeder's credits disconnect), not hang
@@ -272,6 +274,7 @@ fn worker_panic_with_tight_window_still_propagates() {
         lr: 0.05,
         crosses_node: false,
         stage_window: 1,
+        ckpt: None,
     };
     run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
 }
@@ -339,6 +342,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
                 lr: 0.05,
                 crosses_node: true,
                 stage_window: window,
+                ckpt: None,
             };
             let view = ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
             run_episode_ranked(
@@ -362,6 +366,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
             lr: 0.05,
             crosses_node: true,
             stage_window: window,
+            ckpt: None,
         };
         let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
         let run0 = run_episode_ranked(
@@ -399,4 +404,67 @@ fn ranked_episode_over_loopback_matches_single_process() {
     assert!(run0.measure.peak_staged <= window);
     let d = run0.measured_durations(&crate::cluster::ClusterSpec::set_a(2, 2), 64, 3, 8);
     assert!(d.inter_node > 0.0, "measured hops missing from the phase split");
+}
+
+/// The checkpoint tee: an episode run with a sink attached streams every
+/// chain-end sub-part to the writer, and the committed generation is the
+/// post-episode vertex matrix bit-for-bit.
+#[test]
+fn episode_tees_chain_ends_into_the_checkpoint_sink() {
+    use crate::ckpt::{CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta};
+
+    let (plan, mut store, degrees, samples) = fixture(1, 2, 2, 80, 900, 9);
+    let dir = std::env::temp_dir().join(format!("tembed_exec_tee_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let writer = CkptWriter::spawn(CkptWriterConfig {
+        dir: dir.clone(),
+        num_nodes: 80,
+        dim: 8,
+        subpart_bounds: plan.vertex_bounds.clone(),
+        context_bounds: plan.context_bounds.clone(),
+        graph_digest: 0x51,
+        config_digest: 0,
+        channel_cap: 64,
+    })
+    .unwrap();
+    writer.sink().begin_episode(0, true);
+
+    let pool = EpisodePool::build(&plan, &samples);
+    let (mut contexts, mut backends, samplers, mut rngs) = gpu_state(&plan, &store, &degrees, 9);
+    let ctx = ExecCtx {
+        plan: &plan,
+        pool: &pool,
+        batch: 64,
+        negatives: 3,
+        dim: 8,
+        lr: 0.05,
+        crosses_node: false,
+        stage_window: 8,
+        ckpt: Some(writer.sink()),
+    };
+    let run = run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
+    assert_eq!(run.measure.ckpt_teed, plan.total_subparts(), "every chain end teed");
+    assert_eq!(run.measure.ckpt_dropped, 0, "roomy channel drops nothing");
+
+    writer
+        .sink()
+        .commit_episode(EpisodeMeta {
+            watermark: 0,
+            epoch: 0,
+            episode_in_epoch: 0,
+            episodes_in_epoch: 1,
+            contexts: contexts.clone(),
+            rng_states: vec![[0; 4]; plan.total_gpus()],
+        })
+        .unwrap();
+    let stats = writer.finish().unwrap();
+    assert_eq!(stats.committed, 1);
+
+    let reader = CkptReader::open(&dir).unwrap();
+    let snap = reader.materialize();
+    assert_eq!(snap.vertex, store.vertex, "checkpoint equals the post-episode vertex matrix");
+    for (g, shard) in contexts.iter().enumerate() {
+        assert_eq!(reader.context_shard(g), shard.as_slice(), "context shard {g}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

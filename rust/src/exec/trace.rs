@@ -131,6 +131,14 @@ pub struct ExecMeasure {
     pub stage_window: usize,
     pub workers: usize,
     pub steps: usize,
+    /// Chain-end sub-parts teed into the checkpoint sink this episode
+    /// (local drain + the driver's peer-finals fold). Zero when
+    /// checkpointing is off or inactive.
+    pub ckpt_teed: usize,
+    /// Sub-parts the bounded checkpoint channel refused this episode —
+    /// the never-block-a-worker gauge. Nonzero means the writer skipped
+    /// this episode's manifest commit (freshness lost, consistency kept).
+    pub ckpt_dropped: usize,
 }
 
 impl ExecMeasure {

@@ -2,6 +2,9 @@
 //! scheduled sub-part (buffering early arrivals — the ping-pong back
 //! buffer), training it against the pinned context shard, and passing it
 //! to the next scheduled owner through the [`Outbox`] hop endpoints.
+//! Chain-end sub-parts leave the worker immediately through the store
+//! writer's op channel (`exec::storewriter`) instead of pooling locally
+//! until episode check-in.
 //!
 //! Every leg of a step is timed separately on a [`PhaseClock`]: sample
 //! load (minibatch + negatives assembly), compute (the backend's
@@ -20,6 +23,7 @@ use crate::pipeline::PhaseBytes;
 use crate::sample::{assemble_block, NegativeSampler};
 use crate::util::Rng;
 
+use super::storewriter::StoreOp;
 use super::trace::{Phase, PhaseClock, StepTrace};
 use super::{ExecCtx, RingMsg, POISON};
 
@@ -98,14 +102,14 @@ impl Outbox {
 
 pub(crate) struct WorkerOut {
     pub traces: Vec<StepTrace>,
-    pub finals: Vec<(usize, Vec<f32>)>,
 }
 
 /// One worker: receive each scheduled sub-part (buffering early arrivals
 /// — the ping-pong back buffer), train it against the pinned context
 /// shard, and pass it to the next scheduled owner through the outbox.
 /// Taking a chain head as the front buffer acks the feeder (`ack_tx`),
-/// releasing one staging-window credit.
+/// releasing one staging-window credit; a chain-end sub-part is sent to
+/// the store writer (`store_tx`) the moment it is trained.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn worker(
     g: usize,
@@ -117,10 +121,10 @@ pub(crate) fn worker(
     ctx: &ExecCtx<'_>,
     samplers: &[NegativeSampler],
     ack_tx: &Sender<()>,
+    store_tx: &Sender<StoreOp>,
 ) -> WorkerOut {
     let mut pending: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut traces = Vec::with_capacity(seat.sched.len());
-    let mut finals = Vec::new();
     let crange = ctx.plan.context_range(g);
     for (i, &(step_idx, sp)) in seat.sched.iter().enumerate() {
         // front-buffer fill: block only if the sub-part has not arrived
@@ -181,7 +185,13 @@ pub(crate) fn worker(
         };
         match seat.dest[step_idx] {
             Dest::Gpu(to) => outbox.send(to, sp, vbuf, &mut clock),
-            Dest::Host => finals.push((sp, vbuf)),
+            // chain end: drain to the store writer now (mid-episode). If
+            // the writer died the episode is already aborting — the join
+            // on its handle surfaces the panic, so a failed send here is
+            // deliberately ignored rather than double-panicking.
+            Dest::Host => {
+                let _ = store_tx.send(StoreOp::Checkin { subpart: sp, rows: vbuf });
+            }
         }
         traces.push(StepTrace {
             step: step_idx,
@@ -197,5 +207,5 @@ pub(crate) fn worker(
             hop_secs: clock.secs(Phase::InterHop),
         });
     }
-    WorkerOut { traces, finals }
+    WorkerOut { traces }
 }

@@ -25,6 +25,7 @@
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod baseline;
+pub mod ckpt;
 pub mod cluster;
 pub mod comm;
 pub mod config;

@@ -5,13 +5,22 @@
 //! ```text
 //! tembed train   --dataset <name> [--epochs N] [--config f.toml] [--set k=v]...
 //!                [--peers a0,a1,...] [--samples edges|walks]   # rank-0 driver
+//!                [--ckpt-dir <dir>] [--ckpt-interval N] [--resume <dir>]
 //! tembed worker  --rank R --peers a0,a1,... [--listen ADDR] [--dataset|--graph ...]
+//! tembed serve   --ckpt <dir> --listen ADDR      # query server over a ckpt dir
 //! tembed walk    --dataset <name> --out <dir> [--set k=v]...
 //! tembed eval    --dataset <name> [--epochs N] [--set k=v]...   # link-pred AUC
 //! tembed memory                                            # paper Table I
 //! tembed extrapolate                                       # Table III paper rows
 //! tembed info                                              # datasets & clusters
 //! ```
+//!
+//! `--ckpt-dir` streams a segmented checkpoint out of the running
+//! executor (manifest committed every `--ckpt-interval` episodes); a
+//! killed run restarts with `--resume <dir>` losing at most one episode,
+//! and `tembed serve` answers edge-score / top-k queries from the same
+//! directory while training appends to it. See README §"Checkpointing and
+//! serving while training".
 //!
 //! The `--peers` list (or `cluster.peers`) turns `train` into the rank-0
 //! driver of a real multi-process cluster: each address is one rank's
@@ -97,12 +106,15 @@ fn run(args: &[String]) -> tembed::Result<()> {
     let (cmd, rest) = args
         .split_first()
         .ok_or_else(|| {
-            tembed::anyhow!("usage: tembed <train|worker|walk|eval|memory|extrapolate|info> ...")
+            tembed::anyhow!(
+                "usage: tembed <train|worker|serve|walk|eval|memory|extrapolate|info> ..."
+            )
         })?;
     let flags = Flags::parse(rest)?;
     match cmd.as_str() {
         "train" => cmd_train(&flags),
         "worker" => cmd_worker(&flags),
+        "serve" => cmd_serve(&flags),
         "walk" => cmd_walk(&flags),
         "eval" => cmd_eval(&flags),
         "memory" => cmd_memory(),
@@ -140,6 +152,13 @@ fn apply_cluster_flags(cfg: &mut TrainConfig, flags: &Flags) -> tembed::Result<(
 fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     let mut cfg = build_config(flags)?;
     apply_cluster_flags(&mut cfg, flags)?;
+    // dedicated checkpoint flags compose with --set ckpt.* and config files
+    if let Some(dir) = flags.get("ckpt-dir") {
+        cfg.ckpt_dir = dir.to_string();
+    }
+    if let Some(n) = flags.get("ckpt-interval") {
+        cfg.apply_cli(&format!("ckpt.interval={n}"))?;
+    }
     let graph = load_dataset(flags, cfg.seed)?;
     println!("# effective config\n{}", cfg.render());
     println!(
@@ -173,11 +192,41 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     if let Some(handle) = &cluster {
         driver.trainer.attach_cluster(handle.clone())?;
     }
+    if !cfg.ckpt_dir.is_empty() {
+        println!(
+            "checkpointing to {} every {} episode(s) (a crash loses at most {})",
+            cfg.ckpt_dir, cfg.ckpt_interval, cfg.ckpt_interval
+        );
+    }
+    let (start_epoch, mut start_episode) = match flags.get("resume") {
+        Some(dir) => {
+            tembed::ensure!(
+                cluster.is_none(),
+                "--resume is single-process for now: worker ranks hold no checkpoint \
+                 state to restore (drop --peers)"
+            );
+            let reader = tembed::ckpt::CkptReader::open(std::path::Path::new(dir))?;
+            let at = driver.resume_from(&reader)?;
+            println!(
+                "resumed from {dir} (watermark {}, committed epoch {} episode {}/{}) \
+                 -> continuing at epoch {} episode {}",
+                reader.watermark(),
+                reader.manifest().epoch,
+                reader.manifest().episode_in_epoch,
+                reader.manifest().episodes_in_epoch,
+                at.0,
+                at.1,
+            );
+            at
+        }
+        None => (0, 0),
+    };
     // EpochReport.metrics accumulates across epochs; report hop deltas
     let mut hop_secs_seen = 0.0;
     let mut hop_sends_seen = 0u64;
-    for epoch in 0..cfg.epochs {
-        let r = driver.run_epoch(epoch);
+    for epoch in start_epoch..cfg.epochs {
+        let r = driver.run_epoch_from(epoch, start_episode);
+        start_episode = 0; // only the resumed epoch starts mid-way
         println!(
             "epoch {:>3}  sim {:>10}  wall {:>10}  samples {:>10}  mean-loss {:.4}  sim-throughput {:.2e}/s",
             r.epoch,
@@ -249,6 +298,21 @@ fn cmd_worker(flags: &Flags) -> tembed::Result<()> {
             cfg.seed,
         )
     })
+}
+
+/// Query server over a (possibly live) checkpoint directory: answers
+/// edge-score, top-k, and stat queries over the transport framing,
+/// re-opening the manifest whenever a concurrent trainer commits a newer
+/// generation. Runs until killed.
+fn cmd_serve(flags: &Flags) -> tembed::Result<()> {
+    let dir = flags
+        .get("ckpt")
+        .ok_or_else(|| tembed::anyhow!("serve needs --ckpt <checkpoint dir>"))?;
+    let listen = flags.get("listen").ok_or_else(|| {
+        tembed::anyhow!("serve needs --listen ADDR (uds:/path.sock or tcp:host:port)")
+    })?;
+    let addr = tembed::comm::transport::Addr::parse(listen)?;
+    tembed::ckpt::serve::serve(std::path::Path::new(dir), &addr)
 }
 
 fn cmd_walk(flags: &Flags) -> tembed::Result<()> {

@@ -1,0 +1,284 @@
+//! Streaming-checkpoint integration: crash recovery (a truncated
+//! in-flight generation never corrupts the committed one) and the
+//! serve-while-training path (queries answered from a directory a
+//! concurrent writer is appending to, following the watermark).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tembed::ckpt::serve::serve_connection;
+use tembed::ckpt::{CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta, QueryClient};
+use tembed::comm::transport::loopback_pair;
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::Driver;
+use tembed::partition::range_bounds;
+use tembed::util::quickcheck::forall;
+use tembed::util::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tembed_ckpt_stream_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic segment content: episode × sub-part × index.
+fn rows_for(ep: u64, sp: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| (ep as f32) * 1000.0 + (sp as f32) * 17.0 + i as f32 * 0.25).collect()
+}
+
+fn write_episodes(
+    dir: &PathBuf,
+    n: usize,
+    dim: usize,
+    subparts: usize,
+    episodes: u64,
+) -> tembed::Result<()> {
+    let sb = range_bounds(n, subparts);
+    let w = CkptWriter::spawn(CkptWriterConfig {
+        dir: dir.clone(),
+        num_nodes: n,
+        dim,
+        subpart_bounds: sb.clone(),
+        context_bounds: range_bounds(n, 1),
+        graph_digest: 42,
+        config_digest: 0,
+        // every frame of every episode fits: the property asserts exact
+        // commit counts, so the bounded channel must never drop here
+        channel_cap: episodes as usize * (subparts + 1) + 8,
+    })?;
+    for ep in 0..episodes {
+        w.sink().begin_episode(ep, true);
+        for sp in 0..subparts {
+            let len = (sb[sp + 1] - sb[sp]) * dim;
+            w.sink().offer_vertex(sp, rows_for(ep, sp, len));
+        }
+        w.sink().commit_episode(EpisodeMeta {
+            watermark: ep,
+            epoch: 0,
+            episode_in_epoch: ep,
+            episodes_in_epoch: episodes,
+            contexts: vec![vec![ep as f32; n * dim]],
+            rng_states: vec![[ep + 1, 2, 3, 4]],
+        })?;
+    }
+    let stats = w.finish()?;
+    assert_eq!(stats.committed, episodes);
+    Ok(())
+}
+
+/// Crash-recovery property: after N committed episodes, a crash that
+/// leaves a truncated segment (and a torn MANIFEST.tmp) for episode N
+/// must not cost more than that one episode — the reader recovers
+/// watermark N-1 bit-exactly.
+#[test]
+fn truncated_inflight_generation_recovers_previous_watermark_bit_exactly() {
+    forall(6, 0xC4A5, |g| {
+        let n = g.usize_in(8, 120);
+        let dim = *g.pick(&[2usize, 4, 8]);
+        let subparts = g.usize_in(1, 5).min(n);
+        let episodes = g.usize_in(1, 5) as u64;
+        let dir = tmp(&format!("recover_{n}_{dim}_{subparts}_{episodes}"));
+        write_episodes(&dir, n, dim, subparts, episodes).unwrap();
+
+        // simulate the crash: a partial generation for episode N — one
+        // segment truncated mid-payload — plus a torn MANIFEST.tmp
+        let sb = range_bounds(n, subparts);
+        let gen = dir.join(format!("gen-{episodes}"));
+        std::fs::create_dir_all(&gen).unwrap();
+        let seg = gen.join("sp-00000.seg");
+        let full_len = (sb[1] - sb[0]) * dim;
+        tembed::ckpt::format::write_segment(
+            &seg,
+            episodes,
+            0,
+            0,
+            dim as u32,
+            &rows_for(episodes, 0, full_len),
+        )
+        .unwrap();
+        let bytes = std::fs::read(&seg).unwrap();
+        let cut = g.usize_in(1, bytes.len() - 1);
+        std::fs::write(&seg, &bytes[..cut]).unwrap(); // truncated mid-write
+        std::fs::write(dir.join("MANIFEST.tmp"), b"torn-half-written").unwrap();
+
+        // the reader lands on the last *committed* watermark, bit-exactly
+        let r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.watermark(), episodes - 1, "previous watermark recovered");
+        let last = episodes - 1;
+        for sp in 0..subparts {
+            let expect = rows_for(last, sp, (sb[sp + 1] - sb[sp]) * dim);
+            let got: Vec<f32> = (sb[sp]..sb[sp + 1])
+                .flat_map(|v| r.vertex_row(v).to_vec())
+                .collect();
+            assert_eq!(got, expect, "sub-part {sp} drifted after recovery");
+        }
+        assert_eq!(r.rng_states()[0], [last + 1, 2, 3, 4]);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// Concurrent writer/reader: a server answers queries over loopback while
+/// generations land, re-opening the manifest as the watermark moves.
+#[test]
+fn serve_answers_queries_while_generations_land() {
+    let dir = tmp("concurrent");
+    let n = 60;
+    let dim = 4;
+    let subparts = 3;
+    let episodes = 6u64;
+    let sb = range_bounds(n, subparts);
+
+    // writer thread owns the whole feeding loop; it signals once the
+    // first generation is committed so the server can open the dir
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let writer = {
+        let dir = dir.clone();
+        let sb = sb.clone();
+        std::thread::spawn(move || {
+            let w = CkptWriter::spawn(CkptWriterConfig {
+                dir,
+                num_nodes: n,
+                dim,
+                subpart_bounds: sb.clone(),
+                context_bounds: range_bounds(n, 1),
+                graph_digest: 7,
+                config_digest: 0,
+                channel_cap: 64,
+            })
+            .unwrap();
+            let commit = |ep: u64| {
+                w.sink().begin_episode(ep, true);
+                for sp in 0..subparts {
+                    let len = (sb[sp + 1] - sb[sp]) * dim;
+                    w.sink().offer_vertex(sp, rows_for(ep, sp, len));
+                }
+                w.sink()
+                    .commit_episode(EpisodeMeta {
+                        watermark: ep,
+                        epoch: 0,
+                        episode_in_epoch: ep,
+                        episodes_in_epoch: episodes,
+                        contexts: vec![vec![0.5; n * dim]],
+                        rng_states: vec![[ep + 1, 1, 1, 1]],
+                    })
+                    .unwrap();
+            };
+            commit(0);
+            ready_tx.send(()).unwrap();
+            for ep in 1..episodes {
+                std::thread::sleep(Duration::from_millis(15));
+                commit(ep);
+            }
+            w.finish().unwrap()
+        })
+    };
+    ready_rx.recv().unwrap();
+
+    let (server_t, client_t) = loopback_pair(0, 1);
+    let server = {
+        let dir = dir.clone();
+        std::thread::spawn(move || serve_connection(&server_t, &dir).unwrap())
+    };
+
+    // the client polls stat until the final watermark is visible, issuing
+    // score queries against whatever generation is current along the way
+    let mut client = QueryClient::over(Arc::new(client_t));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut seen = Vec::new();
+    loop {
+        let stat = client.stat().unwrap();
+        if seen.last() != Some(&stat.watermark) {
+            seen.push(stat.watermark);
+        }
+        let scores = client.edge_scores(&[(0, 1), (10, 20)]).unwrap();
+        assert!(scores.iter().all(|s| s.is_finite()));
+        if stat.watermark == episodes - 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "server never saw the final watermark");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let wstats = writer.join().unwrap();
+    assert_eq!(wstats.committed, episodes);
+    // the last answer must come from the final generation, bit-exactly
+    let final_scores = client.edge_scores(&[(2, 3)]).unwrap();
+    let r = CkptReader::open(&dir).unwrap();
+    assert_eq!(final_scores[0], r.score(2, 3));
+    client.shutdown();
+    let sstats = server.join().unwrap();
+    assert!(sstats.reopens >= 1, "the server never followed the watermark");
+    assert!(sstats.queries as usize >= seen.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End to end: a real `Driver` trains with `--ckpt-dir` semantics while a
+/// server answers queries from the same directory; after training the
+/// served scores equal the finished model's.
+#[test]
+fn training_run_serves_queries_concurrently() {
+    let dir = tmp("live_train");
+    let mut rng = Rng::new(55);
+    let graph = tembed::gen::to_graph(150, tembed::gen::erdos_renyi(150, 2000, &mut rng));
+    let samples: Vec<_> = graph.edges().collect();
+    let cfg = TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        subparts: 2,
+        dim: 8,
+        negatives: 3,
+        batch: 64,
+        episode_size: 400, // several episodes per epoch => several commits
+        epochs: 3,
+        ckpt_dir: dir.to_string_lossy().into_owned(),
+        ckpt_interval: 1,
+        ..TrainConfig::default()
+    };
+    let trained = std::thread::scope(|scope| {
+        let trainer = scope.spawn(|| {
+            let mut d = Driver::new(&graph, cfg.clone(), None)
+                .unwrap()
+                .with_fixed_samples(samples.clone());
+            for e in 0..cfg.epochs {
+                d.run_epoch(e);
+            }
+            d.finish()
+        });
+        // serve against the live directory as soon as the first manifest lands
+        tembed::ckpt::serve::wait_for_manifest(&dir, Duration::from_secs(60)).unwrap();
+        let (server_t, client_t) = loopback_pair(0, 1);
+        let sdir = dir.clone();
+        let server = scope.spawn(move || serve_connection(&server_t, &sdir).unwrap());
+        let mut client = QueryClient::over(Arc::new(client_t));
+        let mut polls = 0u64;
+        loop {
+            let stat = client.stat().unwrap();
+            assert_eq!(stat.num_nodes, 150);
+            let scores = client.edge_scores(&[(1, 2), (100, 7)]).unwrap();
+            assert!(scores.iter().all(|s| s.is_finite()));
+            polls += 1;
+            if trainer.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let store = trainer.join().unwrap();
+        // after the writer joined (inside finish), the manifest is the
+        // post-training state: served scores equal the trained model's
+        let pairs = [(0u32, 5u32), (20, 40), (149, 0)];
+        let served = client.edge_scores(&pairs).unwrap();
+        for (i, &(u, v)) in pairs.iter().enumerate() {
+            assert_eq!(served[i], store.score(u, v), "served score ({u},{v}) diverged");
+        }
+        client.shutdown();
+        server.join().unwrap();
+        assert!(polls >= 1);
+        store
+    });
+    // and the checkpoint can be loaded as a whole model (v2 load-compat)
+    let loaded = tembed::embed::checkpoint::load(&dir).unwrap();
+    assert_eq!(loaded.vertex, trained.vertex, "v2 load sees the final vertex matrix");
+    let _ = std::fs::remove_dir_all(&dir);
+}
