@@ -18,6 +18,12 @@
 //! Segment/state CRCs cover the payload after the header; the manifest CRC
 //! covers everything before it, so a torn manifest write is detected even
 //! though the atomic rename makes one essentially impossible.
+//!
+//! The normative byte-level specification (field tables, worked hex
+//! example, wire-frame layouts) is `docs/CKPT_FORMAT.md`; the example
+//! bytes there are pinned against these codecs by
+//! `tests/ckpt_format_kat.rs`, so changing anything here without bumping
+//! [`FORMAT_VERSION`] and updating the doc fails CI.
 
 use std::fs::File;
 use std::io::Write;

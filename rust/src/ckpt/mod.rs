@@ -39,6 +39,22 @@
 //! one commit late so a reader that just loaded the manifest never races a
 //! deletion. On unix even that race is benign: an mmap of an unlinked
 //! segment stays valid until unmapped.
+//!
+//! ## Multi-rank checkpoints
+//!
+//! In a multi-process run vertex sub-parts reach the driver through the
+//! KIND_FINAL broadcast, and every worker rank streams its context
+//! shards + RNG states on the same cadence (KIND_CONTEXT, tagged with
+//! the watermark) so each committed generation carries every rank's
+//! fresh state — `--resume` then restores all ranks bit-exact from the
+//! shared directory (`coordinator::multirank`).
+//!
+//! ## Specification
+//!
+//! The normative byte-level spec of the segment/state/manifest layouts
+//! and every wire frame lives in `docs/CKPT_FORMAT.md`; its worked hex
+//! example is pinned by the known-answer test
+//! `tests/ckpt_format_kat.rs`, so spec and code cannot drift apart.
 
 pub mod format;
 pub mod reader;

@@ -17,6 +17,12 @@
 //! crash loses at most the episode in flight. On spawn the writer sweeps
 //! orphaned generation directories (and a stale `MANIFEST.tmp`) left by a
 //! previous crash, keeping only the generation the manifest references.
+//!
+//! Multi-rank runs: only rank 0 owns a writer. The [`EpisodeMeta`] it
+//! commits carries *every* rank's context shards and RNG states — the
+//! coordinator folds the worker ranks' KIND_CONTEXT frames (streamed on
+//! the same cadence) before calling [`CkptSink::commit_episode`], so a
+//! committed generation is resumable on all ranks, not just the driver.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -8,6 +8,12 @@
 //! *simulated clock* advanced by these models is what the benches report;
 //! the relative link speeds — NVLink ≫ PCIe ≫ network — are what give the
 //! pipeline design its headroom, so the shape of every result transfers.
+//!
+//! The `transport` wire format (frame header and the per-kind payload
+//! layouts, KIND_CONTEXT included) is specified byte-by-byte in
+//! `docs/CKPT_FORMAT.md` §"Wire frames" and pinned by the known-answer
+//! test `tests/ckpt_format_kat.rs`; `docs/ARCHITECTURE.md` walks the
+//! rank topology and demux routing.
 
 pub mod fabric;
 pub mod ring;

@@ -13,11 +13,14 @@
 //!
 //! Every frame is `[kind u8][dest u32 LE][tag u64 LE][len u32 LE][payload]`.
 //! `dest` addresses a global GPU id (SUBPART/CONTEXT frames) or carries the
-//! sender's rank (HELLO); `tag` carries a sub-part id (SUBPART/FINAL) or a
-//! digest (PLAN_ACK). Payloads are raw little-endian bytes built with
-//! [`PayloadWriter`]; embedding rows travel as packed `f32` LE. There is
-//! deliberately no serde/bincode — the offline crate set has none, and the
-//! manual framing keeps the format inspectable and versionable.
+//! sender's rank (HELLO); `tag` carries a sub-part id (SUBPART/FINAL), a
+//! checkpoint watermark (CONTEXT — [`CONTEXT_FINAL`] for the end-of-training
+//! collection), or a digest (PLAN_ACK). Payloads are raw little-endian
+//! bytes built with [`PayloadWriter`]; embedding rows travel as packed
+//! `f32` LE. There is deliberately no serde/bincode — the offline crate set
+//! has none, and the manual framing keeps the format inspectable and
+//! versionable. The byte-level layout of every frame kind is specified in
+//! `docs/CKPT_FORMAT.md` §"Wire frames" and pinned by a known-answer test.
 //!
 //! ## Topology
 //!
@@ -30,8 +33,9 @@
 //!
 //! One [`DemuxHub`] per process routes inbound frames to the executor's
 //! per-worker inboxes (SUBPART), the episode finals collector (FINAL), the
-//! driver's measurement fold (MEASURE), and the end-of-training context
-//! gather (CONTEXT). Frames that arrive before their episode installs a
+//! driver's measurement fold (MEASURE), and the context-shard collector
+//! (CONTEXT — fed both on the checkpoint cadence and by the end-of-training
+//! gather). Frames that arrive before their episode installs a
 //! route are parked in a pending queue and flushed on install, so a rank
 //! that finishes an episode barrier early cannot lose messages racing the
 //! next episode's setup. A POISON frame (or a dead peer socket) aborts
@@ -53,6 +57,12 @@ use crate::util::error::Context as _;
 /// Same shape the executor's in-process channels carry.
 pub type SubpartMsg = (usize, Vec<f32>);
 
+/// A context-shard frame routed to the driver's collector: `(global GPU
+/// id, watermark tag, raw payload)`. The payload stays undecoded through
+/// the demux (see [`decode_context_payload`]); `gpu == POISON_SUBPART`
+/// is the abort sentinel.
+pub type ContextMsg = (usize, u64, Vec<u8>);
+
 /// Sentinel sub-part id meaning "a peer aborted — stop waiting". No real
 /// sub-part id can reach `usize::MAX`.
 pub const POISON_SUBPART: usize = usize::MAX;
@@ -66,6 +76,10 @@ pub const KIND_PLAN_ACK: u8 = 5;
 pub const KIND_FINAL: u8 = 6;
 pub const KIND_MEASURE: u8 = 7;
 pub const KIND_CONTEXT: u8 = 8;
+/// `tag` value of a KIND_CONTEXT frame sent at the end of training (the
+/// shutdown collection) rather than on the checkpoint cadence. No real
+/// checkpoint watermark can reach `u64::MAX`.
+pub const CONTEXT_FINAL: u64 = u64::MAX;
 pub const KIND_SHUTDOWN: u8 = 9;
 /// Serving-path request (`ckpt::serve`): `dest` = query op, `tag` =
 /// caller-chosen request id echoed in the reply.
@@ -150,6 +164,39 @@ pub fn decode_f32s(bytes: &[u8]) -> crate::Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+/// Build a KIND_CONTEXT frame: one GPU's pinned context shard plus its
+/// worker RNG state, tagged with the checkpoint watermark it belongs to
+/// (or [`CONTEXT_FINAL`] for the end-of-training collection). Payload:
+/// `[4 × u64 LE xoshiro state][count·dim × f32 LE rows]` — see
+/// `docs/CKPT_FORMAT.md` §"KIND_CONTEXT".
+pub fn context_frame(gpu: u32, watermark: u64, rng: [u64; 4], shard: &[f32]) -> WireMsg {
+    // single allocation: the rng words up front, then the same packed-f32
+    // encoding every embedding payload in this module uses (encode_f32s)
+    let mut payload = Vec::with_capacity(32 + shard.len() * 4);
+    for w in rng {
+        payload.extend_from_slice(&w.to_le_bytes());
+    }
+    for x in shard {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+    WireMsg { kind: KIND_CONTEXT, dest: gpu, tag: watermark, payload }
+}
+
+/// Inverse of [`context_frame`]'s payload encoding.
+pub fn decode_context_payload(payload: &[u8]) -> crate::Result<([u64; 4], Vec<f32>)> {
+    crate::ensure!(
+        payload.len() >= 32,
+        "context payload of {} bytes is too short for an RNG state",
+        payload.len()
+    );
+    let mut r = PayloadReader::new(&payload[..32]);
+    let mut rng = [0u64; 4];
+    for w in rng.iter_mut() {
+        *w = r.u64()?;
+    }
+    Ok((rng, decode_f32s(&payload[32..])?))
 }
 
 /// Append-only little-endian payload builder (the repo has no serde).
@@ -620,7 +667,7 @@ struct Routes {
     subpart: HashMap<u32, Sender<SubpartMsg>>,
     finals: Option<Sender<SubpartMsg>>,
     measures: Option<Sender<Vec<u8>>>,
-    contexts: Option<Sender<SubpartMsg>>,
+    contexts: Option<Sender<ContextMsg>>,
     /// Frames that arrived before their route was installed (episode
     /// setup races); flushed on every install.
     pending: Vec<WireMsg>,
@@ -713,12 +760,14 @@ impl DemuxHub {
                 }
                 None => r.pending.push(msg),
             },
-            KIND_CONTEXT => match (&r.contexts, decode_f32s(&msg.payload)) {
-                (Some(tx), Ok(rows)) => {
-                    let _ = tx.send((msg.dest as usize, rows));
+            KIND_CONTEXT => match &r.contexts {
+                // forwarded raw: the consumer owns the payload layout
+                // (decode_context_payload), so the demux cannot reject a
+                // frame a newer codec revision would accept
+                Some(tx) => {
+                    let _ = tx.send((msg.dest as usize, msg.tag, msg.payload));
                 }
-                (None, _) => r.pending.push(msg),
-                (_, Err(_)) => Self::poison_locked(r),
+                None => r.pending.push(msg),
             },
             _ => {} // unknown kind: drop
         }
@@ -737,7 +786,7 @@ impl DemuxHub {
             let _ = tx.send(Vec::new());
         }
         if let Some(tx) = &r.contexts {
-            let _ = tx.send((POISON_SUBPART, Vec::new()));
+            let _ = tx.send((POISON_SUBPART, 0, Vec::new()));
         }
     }
 
@@ -777,10 +826,10 @@ impl DemuxHub {
         Self::drain_pending(&mut r);
     }
 
-    pub fn install_contexts(&self, tx: Sender<SubpartMsg>) {
+    pub fn install_contexts(&self, tx: Sender<ContextMsg>) {
         let mut r = self.routes.lock().expect("demux routes lock");
         if r.poisoned {
-            let _ = tx.send((POISON_SUBPART, Vec::new()));
+            let _ = tx.send((POISON_SUBPART, 0, Vec::new()));
         }
         r.contexts = Some(tx);
         Self::drain_pending(&mut r);
@@ -871,6 +920,38 @@ mod tests {
         assert_eq!(r.bytes().unwrap(), b"hello");
         assert!(r.is_empty());
         assert!(r.u8().is_err(), "reads past the end error");
+    }
+
+    #[test]
+    fn context_frame_round_trips() {
+        let rng = [0x1111_2222_3333_4444u64, 5, 6, u64::MAX - 1];
+        let shard = vec![1.0f32, -0.5, 3.25];
+        let f = context_frame(9, 41, rng, &shard);
+        assert_eq!(f.kind, KIND_CONTEXT);
+        assert_eq!(f.dest, 9);
+        assert_eq!(f.tag, 41);
+        assert_eq!(f.payload.len(), 32 + shard.len() * 4);
+        let (brng, bshard) = decode_context_payload(&f.payload).unwrap();
+        assert_eq!(brng, rng);
+        assert_eq!(bshard, shard);
+        // too short for an RNG state, or a torn f32 tail, is rejected
+        assert!(decode_context_payload(&f.payload[..31]).is_err());
+        assert!(decode_context_payload(&f.payload[..35]).is_err());
+    }
+
+    #[test]
+    fn context_frames_route_raw_and_park_before_install() {
+        let hub = DemuxHub::new();
+        let f = context_frame(3, 7, [1, 2, 3, 4], &[0.5, 0.5]);
+        hub.dispatch(f.clone());
+        let (tx, rx) = channel();
+        hub.install_contexts(tx);
+        let (gpu, tag, payload) = rx.recv().unwrap();
+        assert_eq!((gpu, tag), (3, 7));
+        assert_eq!(payload, f.payload, "payload forwarded undecoded");
+        // poison reaches the context consumer as the sentinel gpu
+        hub.dispatch(WireMsg::signal(KIND_POISON, 0, 0));
+        assert_eq!(rx.recv().unwrap().0, POISON_SUBPART);
     }
 
     #[test]

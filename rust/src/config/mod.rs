@@ -206,8 +206,9 @@ impl TrainConfig {
             .collect()
     }
 
-    /// Load from a TOML-subset file (sections: [cluster] [model] [schedule]
-    /// [walk] [misc]; unknown keys are an error to catch typos).
+    /// Load from a TOML-subset file (sections: `[cluster]` `[model]`
+    /// `[schedule]` `[ckpt]` `[walk]` `[misc]`; unknown keys are an error
+    /// to catch typos).
     pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let doc = toml::parse(&text)?;

@@ -113,6 +113,10 @@ impl<'g> Driver<'g> {
     /// the manifest watermark — a crash loses at most one episode). The
     /// graph digest is verified inside the trainer restore, so resuming
     /// against the wrong graph fails here rather than diverging silently.
+    /// Multi-rank runs call this on *every* rank (driver and `tembed
+    /// worker` alike) against the shared checkpoint directory — mid-run
+    /// manifests carry every rank's context shards + RNG streams via the
+    /// KIND_CONTEXT cadence, so each rank's restore is bit-exact.
     pub fn resume_from(
         &mut self,
         reader: &crate::ckpt::CkptReader,

@@ -27,6 +27,7 @@ use std::sync::Arc;
 use crate::ckpt::{CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta};
 use crate::cluster::ClusterSpec;
 use crate::comm::topology::Route;
+use crate::comm::transport::CONTEXT_FINAL;
 use crate::config::{Backend, TrainConfig};
 use crate::embed::sgns::{GatheredBackend, NativeBackend, StepBackend};
 use crate::embed::EmbeddingStore;
@@ -326,13 +327,17 @@ impl Trainer {
         let mut trained = 0u64;
         for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
             let interval = self.cfg.ckpt_interval.max(1) as u64;
-            let active =
-                self.ckpt.is_some() && self.global_episode % interval == interval - 1;
+            // every rank computes the same cadence from the adopted
+            // config: the driver from its own writer, worker ranks from
+            // the plan-adopted ckpt.dir (they hold no writer but must
+            // stream their context shards on exactly the commit episodes)
+            let active = self.checkpointing_enabled()
+                && self.global_episode % interval == interval - 1;
             if let Some(w) = &self.ckpt {
                 w.sink().begin_episode(self.global_episode, active);
             }
             let pool = EpisodePool::build(&self.plan, ep);
-            let (ep_sim, ep_loss, ep_samples) = self.train_episode(&pool, lr);
+            let (ep_sim, ep_loss, ep_samples) = self.train_episode(&pool, lr, active);
             sim_secs += ep_sim;
             loss_sum += ep_loss;
             total_samples += ep_samples;
@@ -357,6 +362,15 @@ impl Trainer {
         }
     }
 
+    /// Whether this run's episodes follow a checkpoint cadence: rank 0
+    /// owns the writer; a worker rank of a checkpointing cluster holds no
+    /// writer but streams context shards on the same cadence (`ckpt.dir`
+    /// is adopted from the PlanMsg handshake, so every rank agrees).
+    fn checkpointing_enabled(&self) -> bool {
+        self.ckpt.is_some()
+            || (self.cluster_handle.is_some() && !self.cfg.ckpt_dir.is_empty())
+    }
+
     /// Book one checkpoint-tee outcome onto the metrics bag — the
     /// serial path's counterpart of `exec`'s `DrainStats::book_offer`
     /// (the executor path lands the same keys from `ExecMeasure`).
@@ -368,9 +382,46 @@ impl Trainer {
         }
     }
 
+    /// Driver of a multi-rank run: drain one KIND_CONTEXT frame per
+    /// remote GPU for `tag` (the worker ranks sent them right behind the
+    /// episode's finals barrier) and fold the shards + RNG states into
+    /// this trainer's view, so the manifest about to be committed — or
+    /// the end-of-training snapshot — carries every rank's fresh state
+    /// instead of the driver's spawn-time copies. No-op single-process
+    /// and on worker ranks.
+    fn fold_remote_contexts(&mut self, tag: u64) -> crate::Result<()> {
+        let Some(h) = self.cluster_handle.clone() else { return Ok(()) };
+        if !h.is_driver() {
+            return Ok(());
+        }
+        for (gpu, rng, shard) in h.recv_remote_contexts(&self.plan, tag)? {
+            crate::ensure!(
+                shard.len() == self.contexts[gpu].len(),
+                "streamed context shard {gpu} has {} values, plan expects {}",
+                shard.len(),
+                self.contexts[gpu].len()
+            );
+            self.contexts[gpu].copy_from_slice(&shard);
+            self.rngs[gpu] = Rng::from_state(rng);
+            self.metrics.add("ckpt_ctx_folded", 1);
+        }
+        Ok(())
+    }
+
     /// Ship the trainer-side episode state (context shards + RNG streams
     /// + progress) and ask the checkpoint writer to commit the manifest.
     fn commit_checkpoint(&mut self, epoch: usize, episode_in_epoch: usize, episodes: usize) {
+        // multi-rank: fresh remote state first, else skip the commit
+        // (the writer discards the staged generation on the next episode
+        // — a missing fold costs freshness, never consistency)
+        if let Err(e) = self.fold_remote_contexts(self.global_episode) {
+            eprintln!(
+                "warning: remote context shards missing for watermark {}: {e:#} \
+                 (skipping this checkpoint commit)",
+                self.global_episode
+            );
+            return;
+        }
         let Some(w) = &self.ckpt else { return };
         let meta = EpisodeMeta {
             watermark: self.global_episode,
@@ -391,11 +442,20 @@ impl Trainer {
     /// GPU, channel-based sub-part rotation — see `exec`) or the serial
     /// reference schedule. Both apply identical updates in identical
     /// order, so they produce the same model and the same simulated time;
-    /// the executor additionally measures real overlap.
-    fn train_episode(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
+    /// the executor additionally measures real overlap. `ckpt_active`
+    /// marks a checkpoint-cadence episode (worker ranks then stream their
+    /// context shards to the driver after the finals barrier).
+    fn train_episode(
+        &mut self,
+        pool: &EpisodePool,
+        lr: f32,
+        ckpt_active: bool,
+    ) -> (f64, f64, u64) {
         if self.cfg.executor {
-            self.train_episode_exec(pool, lr)
+            self.train_episode_exec(pool, lr, ckpt_active)
         } else {
+            // the serial path cannot be multi-rank (attach_cluster
+            // requires the executor), so there is nothing to stream
             self.train_episode_serial(pool, lr)
         }
     }
@@ -466,7 +526,12 @@ impl Trainer {
     /// `exec::run_episode`, then fold its per-step traces through the same
     /// discrete-event pricing as the serial path and record the measured
     /// phase timings for the report path.
-    fn train_episode_exec(&mut self, pool: &EpisodePool, lr: f32) -> (f64, f64, u64) {
+    fn train_episode_exec(
+        &mut self,
+        pool: &EpisodePool,
+        lr: f32,
+        ckpt_active: bool,
+    ) -> (f64, f64, u64) {
         let ctx = crate::exec::ExecCtx {
             plan: &self.plan,
             pool,
@@ -477,6 +542,10 @@ impl Trainer {
             crosses_node: self.plan.nodes > 1,
             stage_window: self.cfg.effective_stage_window(),
             ckpt: self.ckpt.as_ref().map(|w| w.sink()),
+            ctx_stream: match &self.cluster_handle {
+                Some(h) if ckpt_active && !h.is_driver() => Some(self.global_episode),
+                _ => None,
+            },
         };
         let view = self.cluster_handle.as_deref().map(|h| h.view());
         let run = crate::exec::run_episode_ranked(
@@ -525,6 +594,10 @@ impl Trainer {
         }
         if run.measure.ckpt_dropped > 0 {
             self.metrics.add("ckpt_dropped_subparts", run.measure.ckpt_dropped as u64);
+        }
+        if run.measure.ctx_streamed > 0 {
+            // worker rank: context shards shipped to the driver this episode
+            self.metrics.add("ckpt_ctx_streamed", run.measure.ctx_streamed as u64);
         }
         if run.measure.inter_node_secs > 0.0 {
             // genuine network hops (multi-process runs only)
@@ -617,23 +690,39 @@ impl Trainer {
 
     /// Flush the pinned context shards back to the store and return it
     /// (end of training; the store then holds the full trained model).
+    /// On the multi-rank driver this first folds every worker rank's
+    /// final context shards + RNG states (the CONTEXT_FINAL collection)
+    /// and releases the workers, so the returned store — and the
+    /// end-of-training snapshot — carry the authoritative remote state.
     /// Joins the checkpoint writer, so the newest manifest is durable
     /// before the caller exits.
     pub fn finish(mut self) -> EmbeddingStore {
+        if let Some(h) = self.cluster_handle.clone() {
+            if h.is_driver() {
+                // every worker ships its shards right after its last
+                // epoch (the episode barrier means they are at most one
+                // socket flush behind us); fold them before any snapshot
+                // or flush so nothing below sees a stale remote shard.
+                // A failed collection must fail the run loudly (the old
+                // collect_remote_state propagated this error): returning
+                // a store with stale remote shards — and exit code 0 —
+                // would let `--save` publish a wrong model. The last
+                // committed manifest on disk stays valid either way.
+                if let Err(e) = self.fold_remote_contexts(CONTEXT_FINAL) {
+                    panic!("end-of-training context collection failed: {e:#}");
+                }
+                h.release_workers();
+            }
+        }
         if let Some(w) = self.ckpt.take() {
             // End-of-training snapshot: a *blocking* full-model commit, so
             // the newest manifest equals the finished model even if an
             // episode tee was dropped under disk pressure late in the run
             // (mid-run drops only cost freshness; this closes the run with
-            // an exact generation). Single-process only: in a multi-rank
-            // run this driver's `contexts` for remote GPUs are stale until
-            // `collect_remote_state` — which runs *after* finish — so a
-            // snapshot here would stamp a wrong-context generation over
-            // the honest last per-episode commit (see the README's
-            // multi-process note and the ROADMAP context-streaming item).
-            if let (Some((ep, i, m)), None) =
-                (self.last_episode_pos, self.cluster_handle.as_ref())
-            {
+            // an exact generation). Multi-rank runs included: vertex rows
+            // are replicated by the finals broadcast and the remote
+            // context shards + RNG streams were just folded above.
+            if let Some((ep, i, m)) = self.last_episode_pos {
                 let sink = w.sink();
                 sink.begin_episode(self.global_episode, true);
                 let mut ok = true;
@@ -681,6 +770,12 @@ impl Trainer {
     /// Read-only access to a GPU's pinned context shard (tests).
     pub fn context_shard(&self, gpu: usize) -> &[f32] {
         &self.contexts[gpu]
+    }
+
+    /// A GPU worker's current xoshiro state (context-shard streaming and
+    /// the end-of-training collection ship it alongside the shard).
+    pub fn rng_state(&self, gpu: usize) -> [u64; 4] {
+        self.rngs[gpu].state()
     }
 }
 

@@ -13,24 +13,31 @@
 //!    handshake time instead of as silent divergence.
 //! 3. Every rank runs the same `Driver` epoch loop; episodes synchronize
 //!    through the executor's finals barrier (`exec::run_episode_ranked`),
-//!    so no extra epoch-level control messages are needed.
-//! 4. After the last epoch each worker ships its pinned context shards to
-//!    the driver ([`ClusterHandle::send_context_shards`]), which folds them
-//!    into its store ([`ClusterHandle::collect_remote_state`]) so `--save`
-//!    and `--export` see the full trained model; vertex rows are already
-//!    replicated by the per-episode finals broadcast.
+//!    so no extra epoch-level control messages are needed. On checkpoint
+//!    episodes (every `ckpt.interval`, adopted from the plan) each worker
+//!    rank additionally streams its local context shards + RNG states to
+//!    the driver (KIND_CONTEXT tagged with the watermark, sent right
+//!    behind the finals barrier), which folds them before committing the
+//!    manifest — multi-rank generations are context-fresh, and `--resume`
+//!    works across ranks (the resume watermark rides the [`PlanMsg`]).
+//! 4. After the last epoch each worker ships its shards one final time
+//!    ([`ClusterHandle::send_context_shards`] tagged [`CONTEXT_FINAL`]);
+//!    the driver's `Trainer::finish` folds them into its store and
+//!    releases the workers ([`ClusterHandle::release_workers`]), so
+//!    `--save`/`--export` and the end-of-training snapshot see the full
+//!    trained model; vertex rows are already replicated by the
+//!    per-episode finals broadcast.
 
 use std::path::Path;
-use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::comm::transport::{
-    self, Addr, DemuxHub, PayloadReader, PayloadWriter, Transport, WireMsg, KIND_PLAN,
-    KIND_PLAN_ACK, KIND_SHUTDOWN, POISON_SUBPART,
+    self, Addr, ContextMsg, DemuxHub, PayloadReader, PayloadWriter, Transport, WireMsg,
+    CONTEXT_FINAL, KIND_PLAN, KIND_PLAN_ACK, KIND_SHUTDOWN, POISON_SUBPART,
 };
 use crate::config::TrainConfig;
-use crate::embed::EmbeddingStore;
 use crate::exec::ClusterView;
 use crate::graph::CsrGraph;
 use crate::partition::HierarchyPlan;
@@ -49,9 +56,21 @@ pub struct ClusterHandle {
     pub world: usize,
     peers: Vec<Option<Arc<dyn Transport>>>,
     pub hub: DemuxHub,
+    /// The driver's context-shard collector, installed into the hub at
+    /// construction so it outlives episode route teardown. Frames arrive
+    /// per-transport FIFO, so every commit's frames precede the same
+    /// rank's end-of-training frames — one channel serves both drains.
+    ctx_rx: Mutex<Receiver<ContextMsg>>,
 }
 
 impl ClusterHandle {
+    fn new(rank: usize, world: usize, peers: Vec<Option<Arc<dyn Transport>>>) -> Self {
+        let hub = DemuxHub::new();
+        let (tx, rx) = channel();
+        hub.install_contexts(tx);
+        ClusterHandle { rank, world, peers, hub, ctx_rx: Mutex::new(rx) }
+    }
+
     pub fn is_driver(&self) -> bool {
         self.rank == 0
     }
@@ -86,45 +105,75 @@ impl ClusterHandle {
             .context("send plan ack")
     }
 
-    /// Worker → driver: ship the locally trained context shards at the end
-    /// of training.
-    pub fn send_context_shards(&self, plan: &HierarchyPlan, trainer: &Trainer) -> crate::Result<()> {
+    /// Worker → driver: ship the locally trained context shards + RNG
+    /// states, tagged with `tag` — a checkpoint watermark on the commit
+    /// cadence (the executor sends those itself, right behind the finals
+    /// barrier), or [`CONTEXT_FINAL`] for the end-of-training collection.
+    pub fn send_context_shards(
+        &self,
+        plan: &HierarchyPlan,
+        trainer: &Trainer,
+        tag: u64,
+    ) -> crate::Result<()> {
         for g in self.local_gpus(plan) {
             self.peer(0)
-                .send(&WireMsg {
-                    kind: transport::KIND_CONTEXT,
-                    dest: g as u32,
-                    tag: 0,
-                    payload: transport::encode_f32s(trainer.context_shard(g)),
-                })
+                .send(&transport::context_frame(
+                    g as u32,
+                    tag,
+                    trainer.rng_state(g),
+                    trainer.context_shard(g),
+                ))
                 .with_context(|| format!("send context shard of gpu {g}"))?;
         }
         Ok(())
     }
 
-    /// Driver: fold every remote rank's context shards into the trained
-    /// store, then release the workers with a shutdown frame.
-    pub fn collect_remote_state(
+    /// Driver: drain one context frame per remote GPU for `want_tag` (a
+    /// checkpoint watermark, or [`CONTEXT_FINAL`]), returning decoded
+    /// `(gpu, rng state, shard)` triples. The lock-stepped episode
+    /// schedule guarantees every rank sends the same cadence of frames,
+    /// so a tag mismatch means divergence — an error, never a re-queue.
+    #[allow(clippy::type_complexity)]
+    pub fn recv_remote_contexts(
         &self,
         plan: &HierarchyPlan,
-        store: &mut EmbeddingStore,
-    ) -> crate::Result<()> {
-        crate::ensure!(self.is_driver(), "only rank 0 collects remote state");
-        let (tx, rx) = channel();
-        self.hub.install_contexts(tx);
+        want_tag: u64,
+    ) -> crate::Result<Vec<(usize, [u64; 4], Vec<f32>)>> {
+        crate::ensure!(self.is_driver(), "only rank 0 collects remote context shards");
         let expect = (self.world - 1) * plan.gpus_per_node;
+        let rx = self.ctx_rx.lock().expect("context collector lock");
+        let mut out: Vec<(usize, [u64; 4], Vec<f32>)> = Vec::with_capacity(expect);
         for _ in 0..expect {
-            let (gpu, rows) = rx.recv().map_err(|_| {
+            let (gpu, tag, payload) = rx.recv().map_err(|_| {
                 crate::anyhow!("context-shard channel closed before all shards arrived")
             })?;
             crate::ensure!(gpu != POISON_SUBPART, "a worker rank died before shipping its shards");
-            crate::ensure!(gpu < plan.total_gpus(), "context shard for unknown gpu {gpu}");
-            store.checkin_context(plan.context_range(gpu), &rows);
+            crate::ensure!(
+                tag == want_tag,
+                "context shard for gpu {gpu} tagged {tag:#x}, expected {want_tag:#x} \
+                 (ranks disagree on the checkpoint cadence?)"
+            );
+            crate::ensure!(
+                gpu >= plan.gpus_per_node && gpu < plan.total_gpus(),
+                "context shard for gpu {gpu} is not a remote GPU"
+            );
+            crate::ensure!(
+                out.iter().all(|(g, _, _)| *g != gpu),
+                "duplicate context shard for gpu {gpu}"
+            );
+            let (rng, shard) = transport::decode_context_payload(&payload)
+                .with_context(|| format!("decode context shard of gpu {gpu}"))?;
+            out.push((gpu, rng, shard));
         }
+        Ok(out)
+    }
+
+    /// Driver: release every worker rank with a shutdown frame (the end of
+    /// their post-training linger).
+    pub fn release_workers(&self) {
         for r in 1..self.world {
             let _ = self.peer(r).send(&WireMsg::signal(KIND_SHUTDOWN, 0, 0));
         }
-        Ok(())
     }
 }
 
@@ -159,6 +208,17 @@ pub struct PlanMsg {
     pub fixed_edge_samples: bool,
     /// Digest of the driver's graph; workers must match it.
     pub graph_digest: u64,
+    /// The driver's checkpoint cadence, adopted so worker ranks stream
+    /// their context shards on exactly the driver's commit episodes.
+    pub ckpt_interval: usize,
+    /// The driver's checkpoint directory ("" = checkpointing off). Worker
+    /// ranks use it to arm context streaming and — on a shared
+    /// filesystem — to restore their own state on a multi-rank resume.
+    pub ckpt_dir: String,
+    /// Set when the driver is resuming: the committed watermark every
+    /// rank must restore (vertex rows, its own context shards, RNG
+    /// streams) before training episode `watermark + 1`.
+    pub resume_watermark: Option<u64>,
 }
 
 impl PlanMsg {
@@ -183,6 +243,9 @@ impl PlanMsg {
             lr_decay: cfg.lr_decay,
             fixed_edge_samples,
             graph_digest,
+            ckpt_interval: cfg.ckpt_interval,
+            ckpt_dir: cfg.ckpt_dir.clone(),
+            resume_watermark: None,
         }
     }
 
@@ -206,6 +269,10 @@ impl PlanMsg {
         cfg.seed = self.seed;
         cfg.learning_rate = self.learning_rate;
         cfg.lr_decay = self.lr_decay;
+        // checkpoint cadence: a worker never writes, but a non-empty dir
+        // arms its per-interval context streaming to the driver
+        cfg.ckpt_interval = self.ckpt_interval.max(1);
+        cfg.ckpt_dir = self.ckpt_dir.clone();
         cfg.executor = true; // the transport path only exists in the executor
     }
 
@@ -235,6 +302,12 @@ impl PlanMsg {
         w.put_u8(self.lr_decay as u8);
         w.put_u8(self.fixed_edge_samples as u8);
         w.put_u64(self.graph_digest);
+        w.put_u64(self.ckpt_interval as u64);
+        w.put_bytes(self.ckpt_dir.as_bytes());
+        // resume watermark: presence flag + value (0 is a real watermark,
+        // so a sentinel encoding would be ambiguous)
+        w.put_u8(self.resume_watermark.is_some() as u8);
+        w.put_u64(self.resume_watermark.unwrap_or(0));
         w.finish()
     }
 
@@ -263,6 +336,14 @@ impl PlanMsg {
         let lr_decay = r.u8()? != 0;
         let fixed_edge_samples = r.u8()? != 0;
         let graph_digest = r.u64()?;
+        let ckpt_interval = r.u64()? as usize;
+        let ckpt_dir = String::from_utf8(r.bytes()?.to_vec())
+            .map_err(|_| crate::anyhow!("plan ckpt dir is not utf-8"))?;
+        let has_resume = r.u8()? != 0;
+        let resume_watermark = {
+            let w = r.u64()?;
+            has_resume.then_some(w)
+        };
         Ok(PlanMsg {
             nodes,
             gpus_per_node,
@@ -283,6 +364,9 @@ impl PlanMsg {
             lr_decay,
             fixed_edge_samples,
             graph_digest,
+            ckpt_interval,
+            ckpt_dir,
+            resume_watermark,
         })
     }
 }
@@ -360,7 +444,7 @@ pub fn connect_driver(cfg: &TrainConfig, plan_msg: &PlanMsg) -> crate::Result<Cl
             plan_msg.graph_digest
         );
     }
-    let handle = ClusterHandle { rank: 0, world, peers, hub: DemuxHub::new() };
+    let handle = ClusterHandle::new(0, world, peers);
     handle.start_readers();
     Ok(handle)
 }
@@ -386,11 +470,12 @@ pub fn connect_worker(cfg: &TrainConfig) -> crate::Result<(ClusterHandle, PlanMs
         plan_frame.kind
     );
     let plan_msg = PlanMsg::decode(&plan_frame.payload)?;
-    Ok((ClusterHandle { rank: cfg.rank, world, peers, hub: DemuxHub::new() }, plan_msg))
+    Ok((ClusterHandle::new(cfg.rank, world, peers), plan_msg))
 }
 
 /// The whole worker-process lifecycle behind `tembed worker`: join the
-/// mesh, adopt the driver's plan, verify the graph, run the lock-stepped
+/// mesh, adopt the driver's plan, verify the graph, restore from the
+/// shared checkpoint when the driver is resuming, run the lock-stepped
 /// epochs, and ship the trained context shards home.
 pub fn worker_main<F>(mut cfg: TrainConfig, load_graph: F) -> crate::Result<()>
 where
@@ -405,6 +490,34 @@ where
         "worker graph digest {digest:#018x} does not match the driver's {:#018x}",
         plan_msg.graph_digest
     );
+    // when the driver resumes, validate the shared checkpoint *before*
+    // acking the plan: an unreadable / mismatched directory then fails
+    // the driver at handshake time instead of wedging the first episode
+    let resume_reader = match plan_msg.resume_watermark {
+        Some(w) => {
+            crate::ensure!(
+                !cfg.ckpt_dir.is_empty(),
+                "driver resumes at watermark {w} but the plan carries no checkpoint dir"
+            );
+            let reader = crate::ckpt::CkptReader::open(Path::new(&cfg.ckpt_dir))
+                .with_context(|| {
+                    format!(
+                        "rank {}: open checkpoint {} (multi-rank resume needs the \
+                         checkpoint directory on a filesystem every rank can read)",
+                        cfg.rank, cfg.ckpt_dir
+                    )
+                })?;
+            crate::ensure!(
+                reader.watermark() == w,
+                "rank {}: local checkpoint is at watermark {}, the driver resumes at {w} \
+                 — the ranks see different manifests",
+                cfg.rank,
+                reader.watermark()
+            );
+            Some(reader)
+        }
+        None => None,
+    };
     handle.ack_plan(digest)?;
     handle.start_readers();
     let handle = Arc::new(handle);
@@ -417,12 +530,29 @@ where
         driver = driver.with_fixed_samples(graph.edges().collect());
     }
     driver.trainer.attach_cluster(handle.clone())?;
-    for epoch in 0..plan_msg.epochs {
-        let r = driver.run_epoch(epoch);
+    let (start_epoch, mut start_episode) = match resume_reader {
+        Some(reader) => {
+            // restores vertex rows, this rank's own context shards, and
+            // every RNG stream bit-exact; graph/config digests re-checked
+            let at = driver.resume_from(&reader)?;
+            eprintln!(
+                "[worker {}] resumed at watermark {} -> epoch {} episode {}",
+                cfg.rank,
+                reader.watermark(),
+                at.0,
+                at.1,
+            );
+            at
+        }
+        None => (0, 0),
+    };
+    for epoch in start_epoch..plan_msg.epochs {
+        let r = driver.run_epoch_from(epoch, start_episode);
+        start_episode = 0; // only the resumed epoch starts mid-way
         eprintln!("[worker {}] epoch {:>3} local mean-loss {:.4}", cfg.rank, epoch, r.mean_loss());
     }
     let plan = driver.trainer.plan.clone();
-    handle.send_context_shards(&plan, &driver.trainer)?;
+    handle.send_context_shards(&plan, &driver.trainer, CONTEXT_FINAL)?;
     // linger until the driver's SHUTDOWN (or a bounded timeout): exiting
     // now would EOF this socket, and with 3+ ranks that death notice can
     // race ahead of a slower rank's still-in-flight context shards on the
@@ -431,14 +561,18 @@ where
     Ok(())
 }
 
-/// Convenience for `main.rs` and the smoke test: the driver-side
-/// connection from a config + graph (rank 0 of `cfg.peer_list()`).
+/// Convenience for `main.rs` and the smoke tests: the driver-side
+/// connection from a config + graph (rank 0 of `cfg.peer_list()`). Pass
+/// the committed watermark when resuming so every worker rank restores
+/// the same generation before episode `watermark + 1`.
 pub fn driver_cluster(
     cfg: &TrainConfig,
     graph: &CsrGraph,
     fixed_edge_samples: bool,
+    resume_watermark: Option<u64>,
 ) -> crate::Result<Arc<ClusterHandle>> {
-    let plan_msg = PlanMsg::from_config(cfg, fixed_edge_samples, graph_digest(graph));
+    let mut plan_msg = PlanMsg::from_config(cfg, fixed_edge_samples, graph_digest(graph));
+    plan_msg.resume_watermark = resume_watermark;
     Ok(Arc::new(connect_driver(cfg, &plan_msg)?))
 }
 
@@ -469,14 +603,50 @@ mod tests {
         let cfg = TrainConfig { nodes: 2, gpus_per_node: 4, epochs: 7, ..TrainConfig::default() };
         let m = PlanMsg::from_config(&cfg, true, 0xDEADBEEF);
         assert_eq!(m.stage_window, None, "auto window rides as the 0 sentinel");
+        assert_eq!(m.resume_watermark, None, "fresh runs carry no resume watermark");
         let back = PlanMsg::decode(&m.encode()).unwrap();
         assert_eq!(back, m);
         assert!(PlanMsg::decode(&m.encode()[..10]).is_err(), "truncated plan rejected");
         // an explicit staging bound survives the wire
         let bounded =
-            TrainConfig { stage_window: Some(12), ..cfg };
+            TrainConfig { stage_window: Some(12), ..cfg.clone() };
         let m2 = PlanMsg::from_config(&bounded, false, 1);
         assert_eq!(PlanMsg::decode(&m2.encode()).unwrap().stage_window, Some(12));
+        // checkpoint cadence + resume watermark survive the wire — a
+        // watermark of 0 (first episode committed) must stay Some(0)
+        let ckpt = TrainConfig { ckpt_dir: "/tmp/ck".into(), ckpt_interval: 3, ..cfg };
+        let mut m3 = PlanMsg::from_config(&ckpt, false, 2);
+        m3.resume_watermark = Some(0);
+        let back = PlanMsg::decode(&m3.encode()).unwrap();
+        assert_eq!(back.ckpt_dir, "/tmp/ck");
+        assert_eq!(back.ckpt_interval, 3);
+        assert_eq!(back.resume_watermark, Some(0));
+    }
+
+    #[test]
+    fn recv_remote_contexts_validates_tag_range_and_codec() {
+        let plan = HierarchyPlan::new(2, 2, 1, 40);
+        // rank 0 of a 2-rank world; no live peers needed — frames are
+        // dispatched straight into the hub, as a reader thread would
+        let handle = ClusterHandle::new(0, 2, vec![None, None]);
+        let shard2 = vec![1.5f32; plan.context_range(2).len()];
+        let shard3 = vec![-2.5f32; plan.context_range(3).len()];
+        handle.hub.dispatch(transport::context_frame(2, 5, [1, 2, 3, 4], &shard2));
+        handle.hub.dispatch(transport::context_frame(3, 5, [5, 6, 7, 8], &shard3));
+        let got = handle.recv_remote_contexts(&plan, 5).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (2, [1, 2, 3, 4], shard2));
+        assert_eq!(got[1].0, 3);
+        // a frame for a *local* GPU is refused
+        handle.hub.dispatch(transport::context_frame(0, 6, [0; 4], &[0.0]));
+        handle.hub.dispatch(transport::context_frame(3, 6, [0; 4], &[0.0]));
+        let err = handle.recv_remote_contexts(&plan, 6).unwrap_err();
+        assert!(format!("{err:#}").contains("not a remote GPU"), "{err:#}");
+        // a watermark mismatch is divergence, not a re-queue
+        let handle = ClusterHandle::new(0, 2, vec![None, None]);
+        handle.hub.dispatch(transport::context_frame(2, 9, [0; 4], &[0.0]));
+        let err = handle.recv_remote_contexts(&plan, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
     }
 
     #[test]
@@ -490,6 +660,8 @@ mod tests {
             seed: 99,
             threads: 3,
             epochs: 5,
+            ckpt_dir: "/tmp/plan-ck".into(),
+            ckpt_interval: 4,
             ..TrainConfig::default()
         };
         let m = PlanMsg::from_config(&driver_cfg, false, 1);
@@ -501,6 +673,8 @@ mod tests {
         assert_eq!(worker_cfg.seed, 99);
         assert_eq!(worker_cfg.threads, 3);
         assert_eq!(worker_cfg.epochs, 5);
+        assert_eq!(worker_cfg.ckpt_dir, "/tmp/plan-ck", "streaming cadence adopted");
+        assert_eq!(worker_cfg.ckpt_interval, 4);
         assert!(worker_cfg.executor, "transport requires the executor path");
     }
 

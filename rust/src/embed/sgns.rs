@@ -179,11 +179,11 @@ fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// (see EXPERIMENTS.md §Perf for the before/after).
 #[derive(Debug, Default, Clone)]
 pub struct NativeBackend {
-    /// scratch: negative-gradient accumulator [G * negs, d]
+    /// scratch: negative-gradient accumulator `[G * negs, d]`
     gcn: Vec<f32>,
-    /// scratch: per-sample negative logits [negs]
+    /// scratch: per-sample negative logits `[negs]`
     neg_logit: Vec<f32>,
-    /// scratch: the sample's vertex-gradient row [d]
+    /// scratch: the sample's vertex-gradient row `[d]`
     gv_row: Vec<f32>,
 }
 

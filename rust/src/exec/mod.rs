@@ -38,6 +38,12 @@
 //! *any* staging window — `tests/executor_parity.rs` and
 //! `tests/feeder_window.rs` pin this, and `tests/internode_smoke.rs`
 //! holds the same parity across two OS processes.
+//!
+//! `docs/ARCHITECTURE.md` draws the full thread/borrow ownership picture
+//! (walk → feeder → worker → store-writer → ckpt tee → serve);
+//! `docs/CKPT_FORMAT.md` specifies the frames the ranked path puts on
+//! the wire, including the KIND_CONTEXT shards worker ranks stream on
+//! the checkpoint cadence.
 
 pub(crate) mod feeder;
 pub(crate) mod storewriter;
@@ -89,6 +95,14 @@ pub struct ExecCtx<'a> {
     /// store (local drain, and on the driver the peer-rank finals too) is
     /// offered here. `None` = checkpointing off / non-driver rank.
     pub ckpt: Option<&'a crate::ckpt::CkptSink>,
+    /// Mid-run context streaming (the multi-rank checkpoint cadence): on
+    /// a checkpoint-active episode each worker rank ships its local GPUs'
+    /// context shards + RNG states to the rank-0 driver right behind the
+    /// finals barrier (KIND_CONTEXT tagged with this watermark), so the
+    /// driver's commit carries fresh remote contexts instead of its stale
+    /// spawn-time copies. `None` = inactive episode, single-process run,
+    /// or this rank is the driver.
+    pub ctx_stream: Option<u64>,
 }
 
 /// One rank's view of the multi-process cluster: one rank per simulated
@@ -175,7 +189,11 @@ pub fn run_episode(
 /// single-process executor; with a cluster view this rank spawns workers
 /// only for its own node's GPUs, cross-rank hand-offs cross the
 /// transport, and the rank-0 driver's returned [`ExecRun`] covers the
-/// whole cluster (traces folded back over KIND_MEASURE).
+/// whole cluster (traces folded back over KIND_MEASURE). On
+/// checkpoint-active episodes (`ctx.ctx_stream`) worker ranks also ship
+/// their context shards + RNG states to the driver right behind the
+/// finals barrier, keeping multi-rank checkpoint generations
+/// context-fresh.
 #[allow(clippy::too_many_arguments)]
 pub fn run_episode_ranked(
     ctx: &ExecCtx<'_>,
@@ -368,6 +386,7 @@ pub fn run_episode_ranked(
         traces.extend(out.traces);
     }
     let mut finalized = drained.finals;
+    let mut ctx_streamed = 0usize;
 
     if let Some(c) = cluster {
         // the finals exchange doubles as the episode barrier: every rank
@@ -402,6 +421,25 @@ pub fn run_episode_ranked(
                 traces.extend(peer_traces);
             }
         } else {
+            // checkpoint-cadence context streaming: ship each local GPU's
+            // shard + RNG state to the driver right behind the finals
+            // barrier, on the same socket (no new synchronization point —
+            // the driver folds them while draining its commit). Sent
+            // *before* KIND_MEASURE so the per-transport FIFO guarantees
+            // they precede the driver's episode-fold return.
+            if let Some(watermark) = ctx.ctx_stream {
+                for g in c.rank * plan.gpus_per_node..(c.rank + 1) * plan.gpus_per_node {
+                    c.peer(0)
+                        .send(&crate::comm::transport::context_frame(
+                            g as u32,
+                            watermark,
+                            rngs[g].state(),
+                            &contexts[g],
+                        ))
+                        .expect("stream context shard to driver");
+                    ctx_streamed += 1;
+                }
+            }
             let payload = encode_measure(&traces, &rank);
             c.peer(0)
                 .send(&WireMsg { kind: KIND_MEASURE, dest: 0, tag: 0, payload })
@@ -421,6 +459,7 @@ pub fn run_episode_ranked(
         steps: total_steps,
         ckpt_teed: drained.ckpt_teed,
         ckpt_dropped: drained.ckpt_dropped,
+        ctx_streamed,
         ..ExecMeasure::default()
     };
     for t in &traces {

@@ -65,6 +65,7 @@ fn run_windowed(
         crosses_node: plan.nodes > 1,
         stage_window: window,
         ckpt: None,
+        ctx_stream: None,
     };
     let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
     (run, contexts)
@@ -248,6 +249,7 @@ fn worker_panic_propagates_instead_of_deadlocking() {
         crosses_node: false,
         stage_window: 8,
         ckpt: None,
+        ctx_stream: None,
     };
     // must panic (poison broadcast unblocks the other workers and the
     // feeder's credits disconnect), not hang
@@ -275,6 +277,7 @@ fn worker_panic_with_tight_window_still_propagates() {
         crosses_node: false,
         stage_window: 1,
         ckpt: None,
+        ctx_stream: None,
     };
     run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
 }
@@ -301,13 +304,16 @@ fn measured_durations_feed_the_simulator() {
 
 /// The ranked-path invariant: a two-rank episode over the loopback
 /// transport reproduces the single-process executor exactly — same
-/// losses, same final store — and measures real inter-node hops.
+/// losses, same final store — measures real inter-node hops, and (with
+/// `ctx_stream` armed on the worker rank) streams the worker's
+/// post-episode context shards + RNG states to the driver's hub, tagged
+/// with the checkpoint watermark.
 #[test]
 fn ranked_episode_over_loopback_matches_single_process() {
     let (plan, store0, degrees, samples) = fixture(2, 2, 2, 96, 1000, 8);
     // reference: single-process run
     let mut sref = store0.clone();
-    let (ref_run, _) = run(&plan, &mut sref, &degrees, &samples, 21);
+    let (ref_run, ref_ctx) = run(&plan, &mut sref, &degrees, &samples, 21);
 
     // two ranks wired by a loopback pair, each with an identical
     // replica of the initial state
@@ -318,6 +324,9 @@ fn ranked_episode_over_loopback_matches_single_process() {
     let hub1 = DemuxHub::new();
     hub0.spawn_reader(t01.clone());
     hub1.spawn_reader(t10.clone());
+    // the driver's context-shard collector (what ClusterHandle installs)
+    let (ctx_tx, ctx_rx) = std::sync::mpsc::channel();
+    hub0.install_contexts(ctx_tx);
     let peers0: Vec<Option<Arc<dyn Transport>>> = vec![None, Some(t01)];
     let peers1: Vec<Option<Arc<dyn Transport>>> = vec![Some(t10), None];
 
@@ -327,7 +336,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
     let s0 = &mut lo[0];
     let s1 = &mut hi[0];
     let window = 2 * plan.total_gpus();
-    let run0 = std::thread::scope(|scope| {
+    let (run0, run1, rank1_rngs) = std::thread::scope(|scope| {
         let (plan_r, pool_r, degrees_r) = (&plan, &pool, &degrees);
         let (peers1_r, hub1_r) = (&peers1, &hub1);
         let h1 = scope.spawn(move || {
@@ -343,9 +352,11 @@ fn ranked_episode_over_loopback_matches_single_process() {
                 crosses_node: true,
                 stage_window: window,
                 ckpt: None,
+                // checkpoint-active episode: stream shards at watermark 7
+                ctx_stream: Some(7),
             };
             let view = ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
-            run_episode_ranked(
+            let out = run_episode_ranked(
                 &ctx,
                 s1,
                 &mut contexts,
@@ -353,7 +364,9 @@ fn ranked_episode_over_loopback_matches_single_process() {
                 &samplers,
                 &mut rngs,
                 Some(&view),
-            )
+            );
+            let states: Vec<[u64; 4]> = rngs.iter().map(|r| r.state()).collect();
+            (out, states)
         });
         let (mut contexts, mut backends, samplers, mut rngs) =
             gpu_state(&plan, s0, &degrees, 21);
@@ -367,6 +380,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
             crosses_node: true,
             stage_window: window,
             ckpt: None,
+            ctx_stream: None,
         };
         let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
         let run0 = run_episode_ranked(
@@ -378,8 +392,8 @@ fn ranked_episode_over_loopback_matches_single_process() {
             &mut rngs,
             Some(&view),
         );
-        h1.join().expect("rank 1 episode");
-        run0
+        let (run1, rank1_rngs) = h1.join().expect("rank 1 episode");
+        (run0, run1, rank1_rngs)
     });
     // release the reader threads (they block in recv otherwise)
     for p in peers0.iter().chain(peers1.iter()).flatten() {
@@ -404,6 +418,23 @@ fn ranked_episode_over_loopback_matches_single_process() {
     assert!(run0.measure.peak_staged <= window);
     let d = run0.measured_durations(&crate::cluster::ClusterSpec::set_a(2, 2), 64, 3, 8);
     assert!(d.inter_node > 0.0, "measured hops missing from the phase split");
+
+    // the worker rank streamed both local shards behind the finals
+    // barrier; they reached the driver's context collector before the
+    // KIND_MEASURE fold (per-transport FIFO), tagged with the watermark,
+    // and decode to the worker's post-episode context shards + RNG
+    // states — bit-identical to the single-process reference
+    assert_eq!(run1.measure.ctx_streamed, 2, "both rank-1 shards streamed");
+    assert_eq!(run0.measure.ctx_streamed, 0, "the driver streams nothing");
+    for want_gpu in [2usize, 3] {
+        let (gpu, tag, payload) = ctx_rx.try_recv().expect("streamed context frame arrived");
+        assert_eq!(gpu, want_gpu, "frames arrive in gpu order over one socket");
+        assert_eq!(tag, 7, "frame carries the checkpoint watermark");
+        let (rng, shard) = transport::decode_context_payload(&payload).unwrap();
+        assert_eq!(rng, rank1_rngs[gpu], "streamed RNG state drifted");
+        assert_eq!(shard, ref_ctx[gpu], "streamed shard is not the fresh post-episode value");
+    }
+    assert!(ctx_rx.try_recv().is_err(), "exactly one frame per local gpu");
 }
 
 /// The checkpoint tee: an episode run with a sink attached streams every
@@ -441,6 +472,7 @@ fn episode_tees_chain_ends_into_the_checkpoint_sink() {
         crosses_node: false,
         stage_window: 8,
         ckpt: Some(writer.sink()),
+        ctx_stream: None,
     };
     let run = run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
     assert_eq!(run.measure.ckpt_teed, plan.total_subparts(), "every chain end teed");

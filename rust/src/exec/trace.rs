@@ -139,6 +139,10 @@ pub struct ExecMeasure {
     /// the never-block-a-worker gauge. Nonzero means the writer skipped
     /// this episode's manifest commit (freshness lost, consistency kept).
     pub ckpt_dropped: usize,
+    /// Context shards this rank streamed to the driver after the finals
+    /// barrier (worker ranks of a multi-rank run, checkpoint-active
+    /// episodes only — see `ExecCtx::ctx_stream`).
+    pub ctx_streamed: usize,
 }
 
 impl ExecMeasure {

@@ -17,10 +17,12 @@
 //!
 //! `--ckpt-dir` streams a segmented checkpoint out of the running
 //! executor (manifest committed every `--ckpt-interval` episodes); a
-//! killed run restarts with `--resume <dir>` losing at most one episode,
-//! and `tembed serve` answers edge-score / top-k queries from the same
+//! killed run restarts with `--resume <dir>` losing at most one episode —
+//! including multi-rank runs, where the resume watermark rides the plan
+//! handshake and every rank restores from the shared directory — and
+//! `tembed serve` answers edge-score / top-k queries from the same
 //! directory while training appends to it. See README §"Checkpointing and
-//! serving while training".
+//! serving while training" and §"Resuming a multi-rank run".
 //!
 //! The `--peers` list (or `cluster.peers`) turns `train` into the rank-0
 //! driver of a real multi-process cluster: each address is one rank's
@@ -173,8 +175,29 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         "--peers lists a single address; a cluster needs one address per rank \
          (or drop --peers to simulate in-process)"
     );
+    // open the resume checkpoint before the cluster handshake: the
+    // committed watermark rides the PlanMsg so every worker rank restores
+    // the same generation (from the shared checkpoint directory) before
+    // episode watermark+1
+    let resume_reader = match flags.get("resume") {
+        Some(dir) => Some(tembed::ckpt::CkptReader::open(std::path::Path::new(dir))?),
+        None => None,
+    };
+    // fail here, not as a worker-side handshake death: the plan's ckpt
+    // dir is how worker ranks locate the generation they must restore
+    tembed::ensure!(
+        resume_reader.is_none() || cfg.peer_list().len() < 2 || !cfg.ckpt_dir.is_empty(),
+        "multi-rank --resume also needs --ckpt-dir: worker ranks restore from the \
+         shared checkpoint directory carried in the plan handshake (usually the \
+         same path passed to --resume)"
+    );
     let cluster = if cfg.peer_list().len() >= 2 {
-        let handle = tembed::coordinator::multirank::driver_cluster(&cfg, &graph, fixed_edges)?;
+        let handle = tembed::coordinator::multirank::driver_cluster(
+            &cfg,
+            &graph,
+            fixed_edges,
+            resume_reader.as_ref().map(|r| r.watermark()),
+        )?;
         println!(
             "cluster: rank 0 driving {} worker rank(s) over {}",
             handle.world - 1,
@@ -198,15 +221,10 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
             cfg.ckpt_dir, cfg.ckpt_interval, cfg.ckpt_interval
         );
     }
-    let (start_epoch, mut start_episode) = match flags.get("resume") {
-        Some(dir) => {
-            tembed::ensure!(
-                cluster.is_none(),
-                "--resume is single-process for now: worker ranks hold no checkpoint \
-                 state to restore (drop --peers)"
-            );
-            let reader = tembed::ckpt::CkptReader::open(std::path::Path::new(dir))?;
-            let at = driver.resume_from(&reader)?;
+    let (start_epoch, mut start_episode) = match &resume_reader {
+        Some(reader) => {
+            let dir = flags.get("resume").expect("reader implies --resume");
+            let at = driver.resume_from(reader)?;
             println!(
                 "resumed from {dir} (watermark {}, committed epoch {} episode {}/{}) \
                  -> continuing at epoch {} episode {}",
@@ -217,10 +235,19 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
                 at.0,
                 at.1,
             );
+            if cluster.is_some() {
+                println!(
+                    "cluster: every worker rank restores the same watermark from {dir} \
+                     (shared filesystem) before training resumes"
+                );
+            }
             at
         }
         None => (0, 0),
     };
+    // the restored generation's mappings are no longer needed — release
+    // them so the writer's GC does not keep unlinked segments pinned
+    drop(resume_reader);
     // EpochReport.metrics accumulates across epochs; report hop deltas
     let mut hop_secs_seen = 0.0;
     let mut hop_sends_seen = 0u64;
@@ -262,10 +289,15 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         }
     }
     let plan = driver.trainer.plan.clone();
-    let mut store = driver.finish();
-    if let Some(handle) = &cluster {
-        handle.collect_remote_state(&plan, &mut store)?;
-        println!("cluster: collected {} remote context shard(s)", plan.total_gpus() - plan.gpus_per_node);
+    // finish() folds every worker rank's final context shards (and
+    // releases the workers) before flushing, so the returned store is the
+    // full authoritative model in multi-rank runs too
+    let store = driver.finish();
+    if cluster.is_some() {
+        println!(
+            "cluster: folded {} remote context shard(s)",
+            plan.total_gpus() - plan.gpus_per_node
+        );
     }
     println!("model: {} of embeddings trained", human_bytes(store.storage_bytes()));
     if let Some(path) = flags.get("save") {

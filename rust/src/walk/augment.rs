@@ -16,7 +16,7 @@ use super::WalkSet;
 /// Expand walks into (center, context) positive samples.
 ///
 /// For every position i in a path and offset 1..=window, emits both
-/// (path[i], path[i+off]) and (path[i+off], path[i]) — the symmetric
+/// `(path[i], path[i+off])` and `(path[i+off], path[i])` — the symmetric
 /// skip-gram convention. Self-pairs from dead-end padding are dropped.
 pub fn augment_walks(walks: &WalkSet, window: usize, threads: usize) -> Vec<Edge> {
     let n = walks.num_walks();

@@ -1,5 +1,5 @@
 //! Degree-guided partitioning of generated walk samples (paper §IV-A:
-//! "improved on it with the degree-guided strategy [GraphVite] while
+//! "improved on it with the degree-guided strategy \[GraphVite\] while
 //! partitioning the generated random walks").
 //!
 //! Skewed graphs make naive episode splits wildly unbalanced: an episode

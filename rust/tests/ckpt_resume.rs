@@ -2,17 +2,21 @@
 //! SIGKILL it mid-training once a few checkpoint generations have
 //! committed, resume from the directory, and assert the final epoch's
 //! loss (and the final model) match an uninterrupted run bit-for-bit.
-//! The CI `multi-process` job runs this file alongside the inter-node
-//! smoke test.
+//! The two-rank variant kills the *driver* of a real two-process cluster
+//! mid-epoch and resumes both ranks from the shared directory — the
+//! KIND_CONTEXT streaming acceptance test. The CI `multi-process` job
+//! runs this file alongside the inter-node smoke test.
 
 #![cfg(unix)]
 
 use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tembed::ckpt::CkptReader;
 use tembed::config::TrainConfig;
 use tembed::coordinator::driver::Driver;
+use tembed::coordinator::multirank;
 use tembed::graph::io::write_edges_bin;
 use tembed::util::Rng;
 
@@ -36,6 +40,21 @@ fn resume_config(ckpt_dir: &str) -> TrainConfig {
 }
 
 struct KillOnDrop(Option<Child>);
+
+impl KillOnDrop {
+    /// Wait (bounded) for a clean exit — kills on test failure via Drop.
+    fn wait(mut self) -> std::process::ExitStatus {
+        let mut child = self.0.take().expect("child present");
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            if let Some(status) = child.try_wait().expect("poll child") {
+                return status;
+            }
+            assert!(Instant::now() < deadline, "child process did not exit in time");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
 
 impl Drop for KillOnDrop {
     fn drop(&mut self) {
@@ -158,6 +177,187 @@ fn killed_training_resumes_with_final_loss_parity() {
     }
     assert_eq!(store.vertex, ref_store.vertex, "vertex matrix diverged after resume");
     assert_eq!(store.context, ref_store.context, "context matrix diverged after resume");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+const EPOCHS2: usize = 4;
+
+/// The two-rank config of the multi-rank crash test. Identical schedule /
+/// sampling fields to the single-process reference, so the resume config
+/// digest matches and the runs are bit-comparable.
+fn two_rank_config() -> TrainConfig {
+    TrainConfig {
+        nodes: 2,
+        gpus_per_node: 2,
+        subparts: 2,
+        dim: 16,
+        negatives: 3,
+        batch: 64,
+        episode_size: 400,
+        epochs: EPOCHS2,
+        ..TrainConfig::default()
+    }
+}
+
+fn spawn_worker(peers: &str, gpath: &std::path::Path) -> KillOnDrop {
+    KillOnDrop(Some(
+        Command::new(env!("CARGO_BIN_EXE_tembed"))
+            .args(["worker", "--rank", "1", "--peers", peers, "--graph", gpath.to_str().unwrap()])
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn tembed worker"),
+    ))
+}
+
+/// Kill the rank-0 driver of a real two-process cluster mid-epoch, then
+/// resume *both* ranks from the shared checkpoint directory and assert
+/// final-epoch loss and full-model (vertex + context shard) parity with
+/// an uninterrupted run. This only holds if mid-run manifests carry the
+/// worker rank's context shards and RNG streams — the KIND_CONTEXT
+/// streaming path — since rank 1's state never exists in the driver
+/// process otherwise.
+#[test]
+fn two_rank_killed_driver_resumes_both_ranks() {
+    let dir = std::env::temp_dir().join(format!("tembed_ckpt_resume2_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_dir = dir.join("ckpt");
+    let gpath = dir.join("graph.bin");
+    let mut rng = Rng::new(77);
+    let edges = tembed::gen::erdos_renyi(300, 4000, &mut rng);
+    write_edges_bin(&gpath, 300, &edges).unwrap();
+    let graph = tembed::graph::io::load_graph(&gpath, true).unwrap();
+    let peers = format!(
+        "uds:{},uds:{}",
+        dir.join("r0.sock").display(),
+        dir.join("r1.sock").display()
+    );
+
+    // reference: the same 2-node simulated cluster in one process,
+    // uninterrupted and checkpoint-free (bit-identical to the ranked
+    // path — tests/internode_smoke.rs pins that equivalence)
+    let mut ref_driver = Driver::new(&graph, two_rank_config(), None)
+        .unwrap()
+        .with_fixed_samples(graph.edges().collect());
+    let ref_losses: Vec<f64> =
+        (0..EPOCHS2).map(|e| ref_driver.run_epoch(e).mean_loss()).collect();
+    let ref_store = ref_driver.finish();
+
+    // leg 1: a real two-process cluster trains with per-episode
+    // checkpoints; the driver dies by SIGKILL once a few multi-rank
+    // generations are on disk
+    let mut worker1 = spawn_worker(&peers, &gpath);
+    let mut driver1 = KillOnDrop(Some(
+        Command::new(env!("CARGO_BIN_EXE_tembed"))
+            .args([
+                "train",
+                "--graph",
+                gpath.to_str().unwrap(),
+                "--samples",
+                "edges",
+                "--epochs",
+                &EPOCHS2.to_string(),
+                "--peers",
+                &peers,
+                "--ckpt-dir",
+                ckpt_dir.to_str().unwrap(),
+                "--ckpt-interval",
+                "1",
+                "--set",
+                "cluster.nodes=2",
+                "--set",
+                "cluster.gpus_per_node=2",
+                "--set",
+                "schedule.subparts=2",
+                "--set",
+                "model.dim=16",
+                "--set",
+                "model.negatives=3",
+                "--set",
+                "model.batch=64",
+                "--set",
+                "schedule.episode_size=400",
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn tembed train (driver)"),
+    ));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut killed_mid_run = false;
+    loop {
+        if let Some(status) = driver1.0.as_mut().unwrap().try_wait().expect("poll driver") {
+            eprintln!("note: driver finished before the kill landed ({status:?})");
+            break;
+        }
+        if matches!(tembed::ckpt::format::peek_watermark(&ckpt_dir), Ok(w) if w >= 3) {
+            let c = driver1.0.as_mut().unwrap();
+            c.kill().expect("sigkill driver");
+            let _ = c.wait();
+            killed_mid_run = true;
+            break;
+        }
+        assert!(Instant::now() < deadline, "no multi-rank checkpoint watermark appeared");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(driver1);
+    // the orphaned worker dies on the driver's socket EOF (poison); make
+    // sure it is gone before the resume leg reuses the socket paths
+    if let Some(mut c) = worker1.0.take() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    drop(worker1);
+
+    // leg 2: resume BOTH ranks — a fresh worker process restores from the
+    // shared directory (watermark carried by the PlanMsg handshake), the
+    // driver resumes in-process so the final model can be inspected
+    let reader = CkptReader::open(&ckpt_dir).expect("a committed manifest survived the kill");
+    let committed = reader.watermark();
+    let worker2 = spawn_worker(&peers, &gpath);
+    let mut cfg = two_rank_config();
+    cfg.peers = peers;
+    cfg.ckpt_dir = ckpt_dir.to_string_lossy().into_owned();
+    let handle = multirank::driver_cluster(&cfg, &graph, true, Some(committed)).unwrap();
+    let mut driver = Driver::new(&graph, cfg, None)
+        .unwrap()
+        .with_fixed_samples(graph.edges().collect());
+    driver.trainer.attach_cluster(Arc::clone(&handle)).unwrap();
+    let (start_epoch, mut start_episode) = driver.resume_from(&reader).unwrap();
+    if killed_mid_run {
+        assert!(start_epoch < EPOCHS2, "kill landed mid-run, epochs must remain");
+    }
+    let mut losses = Vec::new();
+    for epoch in start_epoch..EPOCHS2 {
+        losses.push(driver.run_epoch_from(epoch, start_episode).mean_loss());
+        start_episode = 0;
+    }
+    // finish() folds rank 1's final context shards and releases it
+    let store = driver.finish();
+    let status = worker2.wait();
+    assert!(status.success(), "resumed worker exited with {status:?}");
+
+    // parity: the final epoch (trained wholly after the resume point on
+    // both ranks) must reproduce the uninterrupted run exactly, and so
+    // must the model — including the context shards that only ever lived
+    // on rank 1 between checkpoints
+    if let Some(last) = losses.last() {
+        let want = ref_losses[EPOCHS2 - 1];
+        let rel = (last - want).abs() / want.abs().max(1e-9);
+        assert!(
+            rel < 1e-9,
+            "final epoch loss diverged after two-rank crash-resume at watermark {committed}: \
+             {last} vs {want}"
+        );
+    }
+    assert_eq!(store.vertex, ref_store.vertex, "vertex matrix diverged after 2-rank resume");
+    assert_eq!(
+        store.context,
+        ref_store.context,
+        "context shards diverged after 2-rank resume (remote shards stale?)"
+    );
 
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -111,7 +111,7 @@ fn two_process_training_matches_single_process() {
 
     let mut cfg = smoke_config();
     cfg.peers = peers;
-    let handle = multirank::driver_cluster(&cfg, &graph, true).unwrap();
+    let handle = multirank::driver_cluster(&cfg, &graph, true, None).unwrap();
     let mut driver = Driver::new(&graph, cfg, None)
         .unwrap()
         .with_fixed_samples(graph.edges().collect());
@@ -134,9 +134,9 @@ fn two_process_training_matches_single_process() {
     let d = driver.trainer.measured_durations().expect("measured durations");
     assert!(d.inter_node > 0.0, "measured hops missing from the simulator input");
 
-    let plan = driver.trainer.plan.clone();
-    let mut store = driver.finish();
-    handle.collect_remote_state(&plan, &mut store).unwrap();
+    // finish() folds the worker rank's final context shards into the
+    // store and releases the workers (the old post-finish collect)
+    let store = driver.finish();
 
     let status = worker.wait();
     assert!(status.success(), "worker exited with {status:?}");
