@@ -15,7 +15,7 @@ use tembed::util::human_secs;
 fn run_epoch(cfg: TrainConfig, graph: &tembed::graph::CsrGraph) -> tembed::Result<f64> {
     let samples: Vec<_> = graph.edges().collect();
     let mut t = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
-    Ok(t.train_epoch(&mut samples.clone(), 0).sim_secs)
+    Ok(t.train_epoch(&mut samples.clone(), 0)?.sim_secs)
 }
 
 fn main() -> tembed::Result<()> {

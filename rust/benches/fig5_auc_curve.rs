@@ -44,7 +44,7 @@ fn main() -> tembed::Result<()> {
         let mut best_ours: f64 = 0.0;
         let mut best_gv: f64 = 0.0;
         for epoch in 0..40 {
-            ours.train_epoch(&mut samples.clone(), epoch);
+            ours.train_epoch(&mut samples.clone(), epoch)?;
             gv.train_epoch(&mut samples.clone(), epoch);
             if epoch % 5 == 4 || epoch == 0 {
                 let store_ours = snapshot(&ours);

@@ -122,7 +122,7 @@ fn main() {
         )
         .expect("trainer");
         let t = Instant::now();
-        let r = trainer.train_epoch(&mut sweep_samples.clone(), 0);
+        let r = trainer.train_epoch(&mut sweep_samples.clone(), 0).expect("epoch");
         let label: String =
             if window == usize::MAX { "inf".into() } else { window.to_string() };
         let effective = r.metrics.count("exec_stage_window");

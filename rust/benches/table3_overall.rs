@@ -68,7 +68,7 @@ fn main() -> tembed::Result<()> {
         &graph.degrees(),
         TrainConfig { subparts: 1, ..cfg },
     );
-    let r_ours = ours.train_epoch(&mut samples.clone(), 0);
+    let r_ours = ours.train_epoch(&mut samples.clone(), 0)?;
     let r_gv = gv.train_epoch(&mut samples.clone(), 0);
     println!(
         "ours {:>10}   graphvite {:>10}   speedup {:.1}x (paper: 14.4x)",

@@ -44,9 +44,9 @@ fn main() -> tembed::Result<()> {
     };
     let mut gpu = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
     for e in 0..epochs {
-        gpu.train_epoch(&mut samples.clone(), e);
+        gpu.train_epoch(&mut samples.clone(), e)?;
     }
-    let gpu_store = gpu.finish();
+    let gpu_store = gpu.finish()?;
 
     println!("# Table V — downstream LR AUC after {epochs} epochs (paper: parity within 0.1%)");
     println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");

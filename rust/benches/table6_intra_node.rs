@@ -40,7 +40,7 @@ fn main() -> tembed::Result<()> {
             let mut t_ours = 0.0;
             let mut t_gv = 0.0;
             for e in 0..3 {
-                t_ours += ours.train_epoch(&mut samples.clone(), e).sim_secs;
+                t_ours += ours.train_epoch(&mut samples.clone(), e)?.sim_secs;
                 t_gv += gv.train_epoch(&mut samples.clone(), e).sim_secs;
             }
             row_ours.push(t_ours / 3.0);

@@ -34,7 +34,7 @@ fn main() -> tembed::Result<()> {
             let mut t = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
             let mut sim = 0.0;
             for e in 0..3 {
-                sim += t.train_epoch(&mut samples.clone(), e).sim_secs;
+                sim += t.train_epoch(&mut samples.clone(), e)?.sim_secs;
             }
             row.push(sim / 3.0);
         }

@@ -59,9 +59,9 @@ fn main() -> tembed::Result<()> {
     };
     let mut gpu = Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)?;
     for e in 0..epochs {
-        gpu.train_epoch(&mut samples.clone(), e);
+        gpu.train_epoch(&mut samples.clone(), e)?;
     }
-    let gpu_store = gpu.finish();
+    let gpu_store = gpu.finish()?;
 
     println!("\nTable V — downstream LR AUC (one-vs-rest on community 0):");
     println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");

@@ -59,7 +59,7 @@ fn main() -> tembed::Result<()> {
     let mut driver = Driver::new(&g_train, cfg.clone(), Some(&rt))?;
     println!("\nepoch |  wall time | mean loss");
     for epoch in 0..cfg.epochs {
-        let r = driver.run_epoch(epoch);
+        let r = driver.run_epoch(epoch)?;
         println!(
             "{:>5} | {:>10} | {:.4}",
             epoch,
@@ -67,7 +67,7 @@ fn main() -> tembed::Result<()> {
             r.mean_loss()
         );
     }
-    let store = driver.finish();
+    let store = driver.finish()?;
     let auc = link_auc(&store, &split);
     println!("\nheld-out link-prediction AUC: {auc:.4}");
     tembed::ensure!(auc > 0.6, "end-to-end AUC too low: {auc}");

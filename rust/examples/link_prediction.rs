@@ -59,7 +59,7 @@ fn main() -> tembed::Result<()> {
 
         println!("epoch |  ours AUC |  graphvite AUC");
         for epoch in 0..epochs {
-            ours.run_epoch(epoch);
+            ours.run_epoch(epoch)?;
             gv.train_epoch(&mut gv_samples.clone(), epoch);
             if epoch % 5 == 4 || epoch == 0 {
                 // snapshot AUC without consuming the trainers

@@ -35,7 +35,7 @@ fn main() -> tembed::Result<()> {
     let mut driver = Driver::new(&graph, cfg.clone(), None)?;
     println!("epoch |   sim time |  wall time |   samples | mean loss | sim samples/s");
     for epoch in 0..cfg.epochs {
-        let r = driver.run_epoch(epoch);
+        let r = driver.run_epoch(epoch)?;
         println!(
             "{:>5} | {:>10} | {:>10} | {:>9} | {:>9.4} | {:>10.3e}",
             r.epoch,
@@ -46,7 +46,7 @@ fn main() -> tembed::Result<()> {
             r.sim_throughput()
         );
     }
-    let store = driver.finish();
+    let store = driver.finish()?;
     println!(
         "\ntrained {} of embeddings ({} nodes x d={} x 2 matrices)",
         human_bytes(store.storage_bytes()),

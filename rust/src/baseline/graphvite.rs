@@ -244,7 +244,7 @@ mod tests {
         let our_cfg = TrainConfig { subparts: 4, ..base.clone() };
         let mut ours = crate::coordinator::Trainer::new(50_000, &deg, our_cfg, None).unwrap();
         let mut gv = GraphViteTrainer::new(50_000, &deg, base);
-        let r_ours = ours.train_epoch(&mut samples.clone(), 0);
+        let r_ours = ours.train_epoch(&mut samples.clone(), 0).unwrap();
         let r_gv = gv.train_epoch(&mut samples.clone(), 0);
         assert!(
             r_ours.sim_secs < r_gv.sim_secs,

@@ -134,17 +134,22 @@ impl<'g> Driver<'g> {
     /// Train one epoch end-to-end. The walk engine's time is overlapped:
     /// the simulated epoch cost is `max(train, walk)` when walks for the
     /// next epoch are generated concurrently (paper §IV-A tunes the walk
-    /// engine to run shorter than training).
-    pub fn run_epoch(&mut self, epoch: usize) -> EpochReport {
+    /// engine to run shorter than training). Fails only on a multi-rank
+    /// driver whose remote context collection broke mid-epoch.
+    pub fn run_epoch(&mut self, epoch: usize) -> crate::Result<EpochReport> {
         self.run_epoch_from(epoch, 0)
     }
 
     /// [`Self::run_epoch`] starting at `start_episode` (the resume path —
     /// pass the episode returned by [`Self::resume_from`] for the first
     /// epoch, 0 afterwards).
-    pub fn run_epoch_from(&mut self, epoch: usize, start_episode: usize) -> EpochReport {
+    pub fn run_epoch_from(
+        &mut self,
+        epoch: usize,
+        start_episode: usize,
+    ) -> crate::Result<EpochReport> {
         let mut samples = self.samples_for_epoch(epoch);
-        let mut report = self.trainer.train_epoch_from(&mut samples, epoch, start_episode);
+        let mut report = self.trainer.train_epoch_from(&mut samples, epoch, start_episode)?;
         // decoupled-engine overlap on the simulated timeline
         if self.walk_sim_secs > report.sim_secs {
             report.metrics.add_secs("walk_stall", self.walk_sim_secs - report.sim_secs);
@@ -171,16 +176,18 @@ impl<'g> Driver<'g> {
         if let Some(eff) = self.trainer.measured_overlap_efficiency() {
             report.metrics.add("exec_overlap_pct", (eff * 100.0).round() as u64);
         }
-        report
+        Ok(report)
     }
 
     /// Train `epochs` epochs; returns per-epoch reports.
-    pub fn run(&mut self, epochs: usize) -> Vec<EpochReport> {
+    pub fn run(&mut self, epochs: usize) -> crate::Result<Vec<EpochReport>> {
         (0..epochs).map(|e| self.run_epoch(e)).collect()
     }
 
-    /// Finish: flush shards, hand back the trained model.
-    pub fn finish(self) -> EmbeddingStore {
+    /// Finish: flush shards, hand back the trained model. Fails when the
+    /// multi-rank end-of-training context collection breaks (see
+    /// [`Trainer::finish`]).
+    pub fn finish(self) -> crate::Result<EmbeddingStore> {
         self.trainer.finish()
     }
 }
@@ -194,8 +201,8 @@ pub fn train_graph(
     runtime: Option<&crate::runtime::Runtime>,
 ) -> crate::Result<(EmbeddingStore, Vec<EpochReport>)> {
     let mut driver = Driver::new(graph, cfg, runtime)?;
-    let reports = driver.run(epochs);
-    Ok((driver.finish(), reports))
+    let reports = driver.run(epochs)?;
+    Ok((driver.finish()?, reports))
 }
 
 /// Deterministic graph + trained model fixture for tests/benches.
@@ -238,7 +245,7 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.walk_epochs = 2;
         let mut d = Driver::new(&g, cfg, None).unwrap();
-        let r = d.run(4);
+        let r = d.run(4).unwrap();
         assert_eq!(r.len(), 4);
         // epochs 0,1 share samples; 2,3 share new ones
         assert_eq!(r[0].samples, r[1].samples);
@@ -264,8 +271,8 @@ mod tests {
         cfg.walks_per_node = 2;
         cfg.window = 3;
         let mut d = Driver::new(&g_train, cfg, None).unwrap();
-        d.run(10);
-        let store = d.finish();
+        d.run(10).unwrap();
+        let store = d.finish().unwrap();
         let auc = crate::eval::link_auc(&store, &split);
         assert!(auc > 0.65, "held-out auc {auc}");
     }
@@ -274,7 +281,7 @@ mod tests {
     fn reports_carry_measured_executor_timings() {
         let g = tiny_graph(5);
         let mut d = Driver::new(&g, tiny_cfg(), None).unwrap();
-        let r = d.run_epoch(0);
+        let r = d.run_epoch(0).unwrap();
         // the executor's measured phase timings, replayed through the
         // discrete-event model, land in the epoch report
         assert!(r.metrics.secs("measured_train_phase") > 0.0);
@@ -302,7 +309,7 @@ mod tests {
         let mut d = Driver::new(&g, tiny_cfg(), None)
             .unwrap()
             .with_fixed_samples(samples.clone());
-        let r = d.run_epoch(0);
+        let r = d.run_epoch(0).unwrap();
         assert_eq!(r.samples, samples.len() as u64);
     }
 
@@ -320,19 +327,19 @@ mod tests {
 
         // reference: three uninterrupted epochs
         let mut a = Driver::new(&g, cfg.clone(), None).unwrap();
-        let ref_losses: Vec<f64> = (0..3).map(|e| a.run_epoch(e).mean_loss()).collect();
-        let ref_store = a.finish();
+        let ref_losses: Vec<f64> = (0..3).map(|e| a.run_epoch(e).unwrap().mean_loss()).collect();
+        let ref_store = a.finish().unwrap();
 
         // leg 1: same run with checkpointing on, stopped after epoch 0
         let mut cfg_b = cfg.clone();
         cfg_b.ckpt_dir = dir.to_string_lossy().into_owned();
         let mut b1 = Driver::new(&g, cfg_b.clone(), None).unwrap();
-        let r0 = b1.run_epoch(0);
+        let r0 = b1.run_epoch(0).unwrap();
         let rel0 = (r0.mean_loss() - ref_losses[0]).abs() / ref_losses[0].abs().max(1e-9);
         assert!(rel0 < 1e-12, "the tee must not perturb training");
         assert!(r0.metrics.count("ckpt_teed_subparts") > 0, "chain ends teed");
         assert_eq!(r0.metrics.count("ckpt_dropped_subparts"), 0);
-        drop(b1.finish()); // joins the writer: newest manifest durable
+        drop(b1.finish().unwrap()); // joins the writer: newest manifest durable
 
         // leg 2: a fresh process-equivalent resumes from the directory
         let reader = crate::ckpt::CkptReader::open(&dir).unwrap();
@@ -342,13 +349,13 @@ mod tests {
         let mut losses = vec![r0.mean_loss()];
         for e in e0..3 {
             let start = if e == e0 { i0 } else { 0 };
-            losses.push(b2.run_epoch_from(e, start).mean_loss());
+            losses.push(b2.run_epoch_from(e, start).unwrap().mean_loss());
         }
         for (e, (x, y)) in losses.iter().zip(&ref_losses).enumerate() {
             let rel = (x - y).abs() / y.abs().max(1e-9);
             assert!(rel < 1e-12, "epoch {e} loss diverged after resume: {x} vs {y}");
         }
-        let store = b2.finish();
+        let store = b2.finish().unwrap();
         assert_eq!(store.vertex, ref_store.vertex, "resumed vertex matrix diverged");
         assert_eq!(store.context, ref_store.context, "resumed context matrix diverged");
 
@@ -378,7 +385,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let mut d = Driver::new(&g, tiny_cfg(), None).unwrap();
         d.spool_dir = Some(dir.clone());
-        d.run_epoch(0);
+        d.run_epoch(0).unwrap();
         let count = std::fs::read_dir(&dir).unwrap().count();
         assert!(count >= 1, "episode files spooled");
     }

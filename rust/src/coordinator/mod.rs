@@ -36,6 +36,7 @@ use crate::metrics::{EpochReport, Metrics, Timer};
 use crate::partition::HierarchyPlan;
 use crate::pipeline::{simulate_substep, PhaseBytes, PhaseDurations};
 use crate::sample::{EpisodePool, NegativeSampler};
+use crate::util::error::Context as _;
 use crate::util::Rng;
 
 /// The distributed embedding trainer.
@@ -293,8 +294,15 @@ impl Trainer {
     }
 
     /// Train one epoch over `samples` (augmented positive edges).
-    /// Consumes the samples order (shuffles into episodes).
-    pub fn train_epoch(&mut self, samples: &mut Vec<Edge>, epoch: usize) -> EpochReport {
+    /// Consumes the samples order (shuffles into episodes). Fails only
+    /// on a multi-rank driver whose remote context collection broke (a
+    /// dead worker or protocol divergence) — single-process runs always
+    /// return `Ok`.
+    pub fn train_epoch(
+        &mut self,
+        samples: &mut Vec<Edge>,
+        epoch: usize,
+    ) -> crate::Result<EpochReport> {
         self.train_epoch_from(samples, epoch, 0)
     }
 
@@ -307,7 +315,7 @@ impl Trainer {
         samples: &mut Vec<Edge>,
         epoch: usize,
         start_episode: usize,
-    ) -> EpochReport {
+    ) -> crate::Result<EpochReport> {
         let wall = Timer::start();
         let lr = self.effective_lr(epoch);
         let mut rng = Rng::new(self.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C));
@@ -343,7 +351,7 @@ impl Trainer {
             total_samples += ep_samples;
             trained += 1;
             if active {
-                self.commit_checkpoint(epoch, i, episodes.len());
+                self.commit_checkpoint(epoch, i, episodes.len())?;
             }
             self.last_episode_pos =
                 Some((epoch as u64, i as u64, episodes.len() as u64));
@@ -352,14 +360,14 @@ impl Trainer {
         self.metrics.add("episodes", trained);
         self.metrics.add("samples", total_samples);
         self.metrics.add_secs("sim_epoch", sim_secs);
-        EpochReport {
+        Ok(EpochReport {
             epoch,
             sim_secs,
             wall_secs: wall.secs(),
             samples: total_samples,
             loss_sum,
             metrics: self.metrics.clone(),
-        }
+        })
     }
 
     /// Whether this run's episodes follow a checkpoint cadence: rank 0
@@ -410,19 +418,25 @@ impl Trainer {
 
     /// Ship the trainer-side episode state (context shards + RNG streams
     /// + progress) and ask the checkpoint writer to commit the manifest.
-    fn commit_checkpoint(&mut self, epoch: usize, episode_in_epoch: usize, episodes: usize) {
-        // multi-rank: fresh remote state first, else skip the commit
-        // (the writer discards the staged generation on the next episode
-        // — a missing fold costs freshness, never consistency)
-        if let Err(e) = self.fold_remote_contexts(self.global_episode) {
-            eprintln!(
-                "warning: remote context shards missing for watermark {}: {e:#} \
-                 (skipping this checkpoint commit)",
+    /// On the multi-rank driver this first drains the worker ranks'
+    /// KIND_CONTEXT frames for this watermark; a failed drain is fatal —
+    /// it means a worker died or the protocol diverged, and the drain may
+    /// have consumed part of the watermark's frames, so no later drain
+    /// could be trusted either. The last committed manifest on disk stays
+    /// valid either way.
+    fn commit_checkpoint(
+        &mut self,
+        epoch: usize,
+        episode_in_epoch: usize,
+        episodes: usize,
+    ) -> crate::Result<()> {
+        self.fold_remote_contexts(self.global_episode).with_context(|| {
+            format!(
+                "collect remote context shards for checkpoint watermark {}",
                 self.global_episode
-            );
-            return;
-        }
-        let Some(w) = &self.ckpt else { return };
+            )
+        })?;
+        let Some(w) = &self.ckpt else { return Ok(()) };
         let meta = EpisodeMeta {
             watermark: self.global_episode,
             epoch: epoch as u64,
@@ -435,6 +449,7 @@ impl Trainer {
             eprintln!("warning: checkpoint commit failed: {e:#}");
         }
         self.metrics.add("ckpt_commits_requested", 1);
+        Ok(())
     }
 
     /// One episode = one full rotation of the hierarchical schedule.
@@ -695,22 +710,20 @@ impl Trainer {
     /// and releases the workers, so the returned store — and the
     /// end-of-training snapshot — carry the authoritative remote state.
     /// Joins the checkpoint writer, so the newest manifest is durable
-    /// before the caller exits.
-    pub fn finish(mut self) -> EmbeddingStore {
+    /// before the caller exits. Fails when that final collection breaks
+    /// (a worker died at the very end of the run): returning a store
+    /// with stale remote shards — and exit code 0 — would let `--save`
+    /// publish a wrong model. The last committed manifest on disk stays
+    /// valid either way.
+    pub fn finish(mut self) -> crate::Result<EmbeddingStore> {
         if let Some(h) = self.cluster_handle.clone() {
             if h.is_driver() {
                 // every worker ships its shards right after its last
                 // epoch (the episode barrier means they are at most one
                 // socket flush behind us); fold them before any snapshot
-                // or flush so nothing below sees a stale remote shard.
-                // A failed collection must fail the run loudly (the old
-                // collect_remote_state propagated this error): returning
-                // a store with stale remote shards — and exit code 0 —
-                // would let `--save` publish a wrong model. The last
-                // committed manifest on disk stays valid either way.
-                if let Err(e) = self.fold_remote_contexts(CONTEXT_FINAL) {
-                    panic!("end-of-training context collection failed: {e:#}");
-                }
+                // or flush so nothing below sees a stale remote shard
+                self.fold_remote_contexts(CONTEXT_FINAL)
+                    .context("end-of-training context collection")?;
                 h.release_workers();
             }
         }
@@ -764,7 +777,7 @@ impl Trainer {
             let ctx = std::mem::take(&mut self.contexts[g]);
             self.store.checkin_context(range, &ctx);
         }
-        self.store
+        Ok(self.store)
     }
 
     /// Read-only access to a GPU's pinned context shard (tests).
@@ -809,7 +822,7 @@ mod tests {
     fn epoch_trains_and_reports() {
         let (degrees, samples) = graph_samples(400, 3000, 1);
         let mut t = Trainer::new(400, &degrees, small_cfg(), None).unwrap();
-        let r = t.train_epoch(&mut samples.clone(), 0);
+        let r = t.train_epoch(&mut samples.clone(), 0).unwrap();
         assert_eq!(r.samples, samples.len() as u64);
         assert!(r.sim_secs > 0.0);
         assert!(r.loss_sum > 0.0);
@@ -820,10 +833,10 @@ mod tests {
     fn loss_decreases_across_epochs() {
         let (degrees, samples) = graph_samples(300, 4000, 2);
         let mut t = Trainer::new(300, &degrees, small_cfg(), None).unwrap();
-        let first = t.train_epoch(&mut samples.clone(), 0);
+        let first = t.train_epoch(&mut samples.clone(), 0).unwrap();
         let mut last = first.clone();
         for e in 1..6 {
-            last = t.train_epoch(&mut samples.clone(), e);
+            last = t.train_epoch(&mut samples.clone(), e).unwrap();
         }
         assert!(
             last.mean_loss() < first.mean_loss(),
@@ -839,8 +852,8 @@ mod tests {
         let cfg = small_cfg();
         let before = EmbeddingStore::init(200, cfg.dim, &mut Rng::new(cfg.seed));
         let mut t = Trainer::new(200, &degrees, cfg, None).unwrap();
-        t.train_epoch(&mut samples.clone(), 0);
-        let after = t.finish();
+        t.train_epoch(&mut samples.clone(), 0).unwrap();
+        let after = t.finish().unwrap();
         let delta: f32 = before
             .vertex
             .iter()
@@ -861,8 +874,8 @@ mod tests {
         off_cfg.pipeline = false;
         let mut t_on = Trainer::new(400, &degrees, on_cfg, None).unwrap();
         let mut t_off = Trainer::new(400, &degrees, off_cfg, None).unwrap();
-        let r_on = t_on.train_epoch(&mut samples.clone(), 0);
-        let r_off = t_off.train_epoch(&mut samples.clone(), 0);
+        let r_on = t_on.train_epoch(&mut samples.clone(), 0).unwrap();
+        let r_off = t_off.train_epoch(&mut samples.clone(), 0).unwrap();
         assert!(r_on.sim_secs < r_off.sim_secs, "{} vs {}", r_on.sim_secs, r_off.sim_secs);
     }
 
@@ -896,8 +909,8 @@ mod tests {
         let mut a = Trainer::new(300, &degrees, on_cfg, None).unwrap();
         let mut b = Trainer::new(300, &degrees, off_cfg, None).unwrap();
         for e in 0..3 {
-            let ra = a.train_epoch(&mut samples.clone(), e);
-            let rb = b.train_epoch(&mut samples.clone(), e);
+            let ra = a.train_epoch(&mut samples.clone(), e).unwrap();
+            let rb = b.train_epoch(&mut samples.clone(), e).unwrap();
             let rel = (ra.loss_sum - rb.loss_sum).abs() / rb.loss_sum.max(1.0);
             assert!(rel < 1e-9, "epoch {e}: exec {} vs serial {}", ra.loss_sum, rb.loss_sum);
             assert_eq!(ra.samples, rb.samples);
@@ -921,8 +934,8 @@ mod tests {
         assert!(peak >= 1 && peak <= window, "peak {peak} vs window {window}");
         assert!(b.measured_overlap_efficiency().is_none());
         assert!(b.phase_table().is_none(), "serial path has no measured table");
-        let sa = a.finish();
-        let sb = b.finish();
+        let sa = a.finish().unwrap();
+        let sb = b.finish().unwrap();
         assert_eq!(sa.vertex, sb.vertex);
         assert_eq!(sa.context, sb.context);
     }
@@ -938,9 +951,9 @@ mod tests {
         cfg.backend = Backend::Gathered;
         let mut a = Trainer::new(150, &degrees, cfg.clone(), None).unwrap();
         let mut b = Trainer::new(150, &degrees, cfg, None).unwrap();
-        let ra = a.train_epoch(&mut samples.clone(), 0);
-        let rb = b.train_epoch(&mut samples.clone(), 0);
+        let ra = a.train_epoch(&mut samples.clone(), 0).unwrap();
+        let rb = b.train_epoch(&mut samples.clone(), 0).unwrap();
         assert_eq!(ra.loss_sum, rb.loss_sum);
-        assert_eq!(a.finish().vertex, b.finish().vertex);
+        assert_eq!(a.finish().unwrap().vertex, b.finish().unwrap().vertex);
     }
 }

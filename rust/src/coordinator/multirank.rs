@@ -57,10 +57,21 @@ pub struct ClusterHandle {
     peers: Vec<Option<Arc<dyn Transport>>>,
     pub hub: DemuxHub,
     /// The driver's context-shard collector, installed into the hub at
-    /// construction so it outlives episode route teardown. Frames arrive
-    /// per-transport FIFO, so every commit's frames precede the same
-    /// rank's end-of-training frames — one channel serves both drains.
-    ctx_rx: Mutex<Receiver<ContextMsg>>,
+    /// construction so it outlives episode route teardown.
+    ctx_rx: Mutex<CtxCollector>,
+}
+
+/// Driver-side collector state behind [`ClusterHandle::ctx_rx`]: every
+/// worker rank's KIND_CONTEXT frames arrive on this one channel.
+/// Per-transport FIFO orders the frames of a *single* rank (its commit
+/// frames precede its end-of-training frames), but ranks interleave
+/// freely on the shared channel — a fast rank's frames for a later tag
+/// can be popped while a slow rank's frames for the current tag are
+/// still in flight. Such early frames are parked here and replayed by
+/// the drain they belong to.
+struct CtxCollector {
+    rx: Receiver<ContextMsg>,
+    parked: Vec<ContextMsg>,
 }
 
 impl ClusterHandle {
@@ -68,7 +79,8 @@ impl ClusterHandle {
         let hub = DemuxHub::new();
         let (tx, rx) = channel();
         hub.install_contexts(tx);
-        ClusterHandle { rank, world, peers, hub, ctx_rx: Mutex::new(rx) }
+        let collector = CtxCollector { rx, parked: Vec::new() };
+        ClusterHandle { rank, world, peers, hub, ctx_rx: Mutex::new(collector) }
     }
 
     pub fn is_driver(&self) -> bool {
@@ -130,9 +142,14 @@ impl ClusterHandle {
 
     /// Driver: drain one context frame per remote GPU for `want_tag` (a
     /// checkpoint watermark, or [`CONTEXT_FINAL`]), returning decoded
-    /// `(gpu, rng state, shard)` triples. The lock-stepped episode
-    /// schedule guarantees every rank sends the same cadence of frames,
-    /// so a tag mismatch means divergence — an error, never a re-queue.
+    /// `(gpu, rng state, shard)` triples. Every rank's frames share one
+    /// collector channel — FIFO holds per rank, but ranks interleave — so
+    /// a frame tagged for a *later* drain (a fast rank's CONTEXT_FINAL
+    /// frames sent right behind the last episode, with a slower rank
+    /// still flushing this watermark) is parked and replayed when that
+    /// drain runs, not an error. A frame for an already-drained tag can
+    /// never legitimately appear (every drain consumes its tag fully
+    /// before the next begins), so that is divergence and fails.
     #[allow(clippy::type_complexity)]
     pub fn recv_remote_contexts(
         &self,
@@ -141,18 +158,41 @@ impl ClusterHandle {
     ) -> crate::Result<Vec<(usize, [u64; 4], Vec<f32>)>> {
         crate::ensure!(self.is_driver(), "only rank 0 collects remote context shards");
         let expect = (self.world - 1) * plan.gpus_per_node;
-        let rx = self.ctx_rx.lock().expect("context collector lock");
-        let mut out: Vec<(usize, [u64; 4], Vec<f32>)> = Vec::with_capacity(expect);
-        for _ in 0..expect {
-            let (gpu, tag, payload) = rx.recv().map_err(|_| {
+        let mut c = self.ctx_rx.lock().expect("context collector lock");
+        // frames an earlier drain parked for this tag replay first
+        let mut frames: Vec<(usize, Vec<u8>)> = Vec::with_capacity(expect);
+        let mut i = 0;
+        while i < c.parked.len() {
+            if c.parked[i].1 == want_tag {
+                let (gpu, _, payload) = c.parked.remove(i);
+                frames.push((gpu, payload));
+            } else {
+                i += 1;
+            }
+        }
+        while frames.len() < expect {
+            let (gpu, tag, payload) = c.rx.recv().map_err(|_| {
                 crate::anyhow!("context-shard channel closed before all shards arrived")
             })?;
             crate::ensure!(gpu != POISON_SUBPART, "a worker rank died before shipping its shards");
-            crate::ensure!(
-                tag == want_tag,
-                "context shard for gpu {gpu} tagged {tag:#x}, expected {want_tag:#x} \
-                 (ranks disagree on the checkpoint cadence?)"
-            );
+            if tag != want_tag {
+                // CONTEXT_FINAL is u64::MAX, so "later drain" is one
+                // comparison: watermarks grow, and the final collection
+                // is the last drain of the run
+                crate::ensure!(
+                    tag > want_tag,
+                    "context shard for gpu {gpu} tagged {tag:#x} arrived during the \
+                     {want_tag:#x} drain, but that tag was already drained \
+                     (ranks disagree on the checkpoint cadence?)"
+                );
+                c.parked.push((gpu, tag, payload));
+                continue;
+            }
+            frames.push((gpu, payload));
+        }
+        drop(c);
+        let mut out: Vec<(usize, [u64; 4], Vec<f32>)> = Vec::with_capacity(expect);
+        for (gpu, payload) in frames {
             crate::ensure!(
                 gpu >= plan.gpus_per_node && gpu < plan.total_gpus(),
                 "context shard for gpu {gpu} is not a remote GPU"
@@ -547,7 +587,7 @@ where
         None => (0, 0),
     };
     for epoch in start_epoch..plan_msg.epochs {
-        let r = driver.run_epoch_from(epoch, start_episode);
+        let r = driver.run_epoch_from(epoch, start_episode)?;
         start_episode = 0; // only the resumed epoch starts mid-way
         eprintln!("[worker {}] epoch {:>3} local mean-loss {:.4}", cfg.rank, epoch, r.mean_loss());
     }
@@ -642,11 +682,47 @@ mod tests {
         handle.hub.dispatch(transport::context_frame(3, 6, [0; 4], &[0.0]));
         let err = handle.recv_remote_contexts(&plan, 6).unwrap_err();
         assert!(format!("{err:#}").contains("not a remote GPU"), "{err:#}");
-        // a watermark mismatch is divergence, not a re-queue
+        // a frame for an *already-drained* tag is divergence, not parked
         let handle = ClusterHandle::new(0, 2, vec![None, None]);
-        handle.hub.dispatch(transport::context_frame(2, 9, [0; 4], &[0.0]));
+        handle.hub.dispatch(transport::context_frame(2, 7, [0; 4], &[0.0]));
         let err = handle.recv_remote_contexts(&plan, 8).unwrap_err();
-        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        assert!(format!("{err:#}").contains("already drained"), "{err:#}");
+    }
+
+    /// The world >= 3 arrival race: the collector channel pops frames in
+    /// arrival order across ranks, so a fast rank's CONTEXT_FINAL frames
+    /// (sent right behind its last episode) can land *before* a slower
+    /// rank's watermark-tagged frames. The watermark drain must park
+    /// them for the final drain instead of failing the commit.
+    #[test]
+    fn recv_remote_contexts_parks_interleaved_future_tags() {
+        let plan = HierarchyPlan::new(3, 2, 1, 60);
+        let handle = ClusterHandle::new(0, 3, vec![None, None, None]);
+        let shard = |g: usize, v: f32| vec![v; plan.context_range(g).len()];
+        // rank 1 (gpus 2,3) is fast: watermark 5 frames, then FINAL
+        handle.hub.dispatch(transport::context_frame(2, 5, [1; 4], &shard(2, 1.0)));
+        handle.hub.dispatch(transport::context_frame(3, 5, [1; 4], &shard(3, 1.0)));
+        handle.hub.dispatch(transport::context_frame(2, CONTEXT_FINAL, [2; 4], &shard(2, 2.0)));
+        handle.hub.dispatch(transport::context_frame(3, CONTEXT_FINAL, [2; 4], &shard(3, 2.0)));
+        // rank 2 (gpus 4,5) is slow: its watermark frames arrive last
+        handle.hub.dispatch(transport::context_frame(4, 5, [1; 4], &shard(4, 1.0)));
+        handle.hub.dispatch(transport::context_frame(5, 5, [1; 4], &shard(5, 1.0)));
+        handle.hub.dispatch(transport::context_frame(4, CONTEXT_FINAL, [2; 4], &shard(4, 2.0)));
+        handle.hub.dispatch(transport::context_frame(5, CONTEXT_FINAL, [2; 4], &shard(5, 2.0)));
+        // the watermark drain skips over rank 1's FINAL frames...
+        let got = handle.recv_remote_contexts(&plan, 5).unwrap();
+        assert_eq!(got.len(), 4);
+        let mut gpus: Vec<usize> = got.iter().map(|(g, _, _)| *g).collect();
+        gpus.sort_unstable();
+        assert_eq!(gpus, vec![2, 3, 4, 5]);
+        assert!(got.iter().all(|(_, rng, s)| *rng == [1; 4] && s.iter().all(|&x| x == 1.0)));
+        // ...and the final drain replays them from the parked buffer
+        let fin = handle.recv_remote_contexts(&plan, CONTEXT_FINAL).unwrap();
+        assert_eq!(fin.len(), 4);
+        let mut gpus: Vec<usize> = fin.iter().map(|(g, _, _)| *g).collect();
+        gpus.sort_unstable();
+        assert_eq!(gpus, vec![2, 3, 4, 5]);
+        assert!(fin.iter().all(|(_, rng, s)| *rng == [2; 4] && s.iter().all(|&x| x == 2.0)));
     }
 
     #[test]

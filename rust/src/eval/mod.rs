@@ -145,9 +145,9 @@ mod tests {
             .collect();
         let mut t = crate::coordinator::Trainer::new(250, &g.degrees(), cfg, None).unwrap();
         for e in 0..20 {
-            t.train_epoch(&mut samples, e);
+            t.train_epoch(&mut samples, e).unwrap();
         }
-        let store = t.finish();
+        let store = t.finish().unwrap();
         let a1 = link_auc(&store, &split);
         assert!(a1 > 0.6, "trained auc {a1}");
         assert!(a1 > a0);

@@ -161,6 +161,29 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     if let Some(n) = flags.get("ckpt-interval") {
         cfg.apply_cli(&format!("ckpt.interval={n}"))?;
     }
+    // multi-rank --resume: worker ranks restore from the plan's ckpt dir,
+    // so it must reference the same checkpoint the driver restores from —
+    // two different directories that happen to share a watermark would
+    // restore divergent state with only the watermark check to catch it
+    if let Some(resume) = flags.get("resume") {
+        if cfg.peer_list().len() >= 2 {
+            if cfg.ckpt_dir.is_empty() {
+                cfg.ckpt_dir = resume.to_string();
+            } else {
+                let canon = |p: &str| {
+                    std::fs::canonicalize(p).unwrap_or_else(|_| PathBuf::from(p))
+                };
+                tembed::ensure!(
+                    canon(&cfg.ckpt_dir) == canon(resume),
+                    "multi-rank --resume restores every rank from the plan's checkpoint \
+                     directory (--ckpt-dir {}), which must be the directory being resumed \
+                     (--resume {resume}) — pass the same path to both, or drop --ckpt-dir \
+                     to default it to the resume directory",
+                    cfg.ckpt_dir
+                );
+            }
+        }
+    }
     let graph = load_dataset(flags, cfg.seed)?;
     println!("# effective config\n{}", cfg.render());
     println!(
@@ -183,14 +206,6 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         Some(dir) => Some(tembed::ckpt::CkptReader::open(std::path::Path::new(dir))?),
         None => None,
     };
-    // fail here, not as a worker-side handshake death: the plan's ckpt
-    // dir is how worker ranks locate the generation they must restore
-    tembed::ensure!(
-        resume_reader.is_none() || cfg.peer_list().len() < 2 || !cfg.ckpt_dir.is_empty(),
-        "multi-rank --resume also needs --ckpt-dir: worker ranks restore from the \
-         shared checkpoint directory carried in the plan handshake (usually the \
-         same path passed to --resume)"
-    );
     let cluster = if cfg.peer_list().len() >= 2 {
         let handle = tembed::coordinator::multirank::driver_cluster(
             &cfg,
@@ -252,7 +267,7 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     let mut hop_secs_seen = 0.0;
     let mut hop_sends_seen = 0u64;
     for epoch in start_epoch..cfg.epochs {
-        let r = driver.run_epoch_from(epoch, start_episode);
+        let r = driver.run_epoch_from(epoch, start_episode)?;
         start_episode = 0; // only the resumed epoch starts mid-way
         println!(
             "epoch {:>3}  sim {:>10}  wall {:>10}  samples {:>10}  mean-loss {:.4}  sim-throughput {:.2e}/s",
@@ -291,8 +306,9 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     let plan = driver.trainer.plan.clone();
     // finish() folds every worker rank's final context shards (and
     // releases the workers) before flushing, so the returned store is the
-    // full authoritative model in multi-rank runs too
-    let store = driver.finish();
+    // full authoritative model in multi-rank runs too; a worker dying at
+    // the very end surfaces as a clean error exit, not a published model
+    let store = driver.finish()?;
     if cluster.is_some() {
         println!(
             "cluster: folded {} remote context shard(s)",
@@ -396,12 +412,12 @@ fn cmd_eval(flags: &Flags) -> tembed::Result<()> {
     let runtime = open_runtime_if_needed(&cfg)?;
     let mut driver = Driver::new(&g_train, cfg.clone(), runtime.as_ref())?;
     for epoch in 0..cfg.epochs {
-        let r = driver.run_epoch(epoch);
+        let r = driver.run_epoch(epoch)?;
         if epoch % 10 == 0 || epoch + 1 == cfg.epochs {
             println!("epoch {:>3}  mean-loss {:.4}", epoch, r.mean_loss());
         }
     }
-    let store = driver.finish();
+    let store = driver.finish()?;
     let auc = tembed::eval::link_auc(&store, &split);
     println!("link-prediction AUC: {auc:.4}");
     Ok(())

@@ -84,8 +84,8 @@ fn killed_training_resumes_with_final_loss_parity() {
         .unwrap()
         .with_fixed_samples(graph.edges().collect());
     let ref_losses: Vec<f64> =
-        (0..EPOCHS).map(|e| ref_driver.run_epoch(e).mean_loss()).collect();
-    let ref_store = ref_driver.finish();
+        (0..EPOCHS).map(|e| ref_driver.run_epoch(e).unwrap().mean_loss()).collect();
+    let ref_store = ref_driver.finish().unwrap();
 
     // leg 1: a real process trains with per-episode checkpoints...
     let mut child = KillOnDrop(Some(
@@ -159,10 +159,10 @@ fn killed_training_resumes_with_final_loss_parity() {
     }
     let mut losses = Vec::new();
     for epoch in start_epoch..EPOCHS {
-        losses.push(driver.run_epoch_from(epoch, start_episode).mean_loss());
+        losses.push(driver.run_epoch_from(epoch, start_episode).unwrap().mean_loss());
         start_episode = 0;
     }
-    let store = driver.finish();
+    let store = driver.finish().unwrap();
 
     // parity: the final epoch (trained wholly after the resume point)
     // must reproduce the uninterrupted run exactly, and so must the model
@@ -242,8 +242,8 @@ fn two_rank_killed_driver_resumes_both_ranks() {
         .unwrap()
         .with_fixed_samples(graph.edges().collect());
     let ref_losses: Vec<f64> =
-        (0..EPOCHS2).map(|e| ref_driver.run_epoch(e).mean_loss()).collect();
-    let ref_store = ref_driver.finish();
+        (0..EPOCHS2).map(|e| ref_driver.run_epoch(e).unwrap().mean_loss()).collect();
+    let ref_store = ref_driver.finish().unwrap();
 
     // leg 1: a real two-process cluster trains with per-episode
     // checkpoints; the driver dies by SIGKILL once a few multi-rank
@@ -331,11 +331,11 @@ fn two_rank_killed_driver_resumes_both_ranks() {
     }
     let mut losses = Vec::new();
     for epoch in start_epoch..EPOCHS2 {
-        losses.push(driver.run_epoch_from(epoch, start_episode).mean_loss());
+        losses.push(driver.run_epoch_from(epoch, start_episode).unwrap().mean_loss());
         start_episode = 0;
     }
     // finish() folds rank 1's final context shards and releases it
-    let store = driver.finish();
+    let store = driver.finish().unwrap();
     let status = worker2.wait();
     assert!(status.success(), "resumed worker exited with {status:?}");
 

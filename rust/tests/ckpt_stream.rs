@@ -242,9 +242,9 @@ fn training_run_serves_queries_concurrently() {
                 .unwrap()
                 .with_fixed_samples(samples.clone());
             for e in 0..cfg.epochs {
-                d.run_epoch(e);
+                d.run_epoch(e).unwrap();
             }
-            d.finish()
+            d.finish().unwrap()
         });
         // serve against the live directory as soon as the first manifest lands
         tembed::ckpt::serve::wait_for_manifest(&dir, Duration::from_secs(60)).unwrap();

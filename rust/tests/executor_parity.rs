@@ -31,8 +31,8 @@ fn multithreaded_executor_matches_single_threaded_reference() {
     let mut exec_losses = Vec::new();
     let mut serial_losses = Vec::new();
     for e in 0..3 {
-        exec_losses.push(exec_t.train_epoch(&mut samples.clone(), e).mean_loss());
-        serial_losses.push(serial_t.train_epoch(&mut samples.clone(), e).mean_loss());
+        exec_losses.push(exec_t.train_epoch(&mut samples.clone(), e).unwrap().mean_loss());
+        serial_losses.push(serial_t.train_epoch(&mut samples.clone(), e).unwrap().mean_loss());
     }
     for (a, b) in exec_losses.iter().zip(&serial_losses) {
         let rel = (a - b).abs() / b.abs().max(1e-9);
@@ -44,8 +44,8 @@ fn multithreaded_executor_matches_single_threaded_reference() {
     let eff = exec_t.measured_overlap_efficiency().expect("executor measured an episode");
     assert!(eff > 0.0 && eff <= 1.0, "measured overlap efficiency {eff}");
     // final models agree to float tolerance
-    let sa = exec_t.finish();
-    let sb = serial_t.finish();
+    let sa = exec_t.finish().unwrap();
+    let sb = serial_t.finish().unwrap();
     for (x, y) in sa.vertex.iter().zip(&sb.vertex) {
         assert!((x - y).abs() < 1e-6, "vertex drifted: {x} vs {y}");
     }
@@ -68,7 +68,7 @@ fn executor_metrics_reach_reports() {
         ..TrainConfig::default()
     };
     let mut d = Driver::new(&graph, cfg, None).unwrap().with_fixed_samples(samples);
-    let r = d.run_epoch(0);
+    let r = d.run_epoch(0).unwrap();
     // measured phase timings flow through PhaseBytes/simulate_step into
     // the existing report path
     assert!(r.metrics.count("exec_episodes") >= 1);

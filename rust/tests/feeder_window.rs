@@ -41,13 +41,13 @@ fn any_stage_window_matches_the_serial_schedule_on_random_graphs() {
 
         // the serial reference schedule (executor off)
         let mut serial = Trainer::new(n, &degrees, mk(false, None), None).unwrap();
-        let ref_report = serial.train_epoch(&mut samples.clone(), 0);
-        let ref_store = serial.finish();
+        let ref_report = serial.train_epoch(&mut samples.clone(), 0).unwrap();
+        let ref_store = serial.finish().unwrap();
 
         // 1-buffer floor, a tiny window, one per GPU, and "unbounded"
         for window in [1usize, 2, gpus, usize::MAX] {
             let mut t = Trainer::new(n, &degrees, mk(true, Some(window)), None).unwrap();
-            let r = t.train_epoch(&mut samples.clone(), 0);
+            let r = t.train_epoch(&mut samples.clone(), 0).unwrap();
             assert_eq!(r.samples, ref_report.samples, "window {window}: sample count");
             let rel = (r.loss_sum - ref_report.loss_sum).abs()
                 / ref_report.loss_sum.abs().max(1e-9);
@@ -66,7 +66,7 @@ fn any_stage_window_matches_the_serial_schedule_on_random_graphs() {
                 "window {window}: peak {peak} outside [1, {effective}]"
             );
             // bit-identical model: same vertex matrix, same context shards
-            let store = t.finish();
+            let store = t.finish().unwrap();
             assert_eq!(store.vertex, ref_store.vertex, "window {window}: vertex drifted");
             assert_eq!(store.context, ref_store.context, "window {window}: context drifted");
         }

@@ -83,7 +83,8 @@ fn two_process_training_matches_single_process() {
     let mut ref_driver = Driver::new(&graph, ref_cfg, None)
         .unwrap()
         .with_fixed_samples(graph.edges().collect());
-    let ref_losses: Vec<f64> = (0..epochs).map(|e| ref_driver.run_epoch(e).mean_loss()).collect();
+    let ref_losses: Vec<f64> =
+        (0..epochs).map(|e| ref_driver.run_epoch(e).unwrap().mean_loss()).collect();
 
     // distributed: this process is rank 0, a spawned `tembed worker` is
     // rank 1, wired by a UDS pair
@@ -120,7 +121,7 @@ fn two_process_training_matches_single_process() {
     let mut dist_losses = Vec::with_capacity(epochs);
     let mut hop_secs_total = 0.0;
     for e in 0..epochs {
-        let r = driver.run_epoch(e);
+        let r = driver.run_epoch(e).unwrap();
         dist_losses.push(r.mean_loss());
         // the acceptance invariant: measured inter-node hop seconds reach
         // the same report path the simulator reads
@@ -136,7 +137,7 @@ fn two_process_training_matches_single_process() {
 
     // finish() folds the worker rank's final context shards into the
     // store and releases the workers (the old post-finish collect)
-    let store = driver.finish();
+    let store = driver.finish().unwrap();
 
     let status = worker.wait();
     assert!(status.success(), "worker exited with {status:?}");
@@ -154,7 +155,7 @@ fn two_process_training_matches_single_process() {
 
     // the collected model matches the single-process reference everywhere,
     // including the context shards trained on the worker rank
-    let ref_store = ref_driver.finish();
+    let ref_store = ref_driver.finish().unwrap();
     assert_eq!(store.vertex, ref_store.vertex, "vertex matrices diverged");
     assert_eq!(store.context, ref_store.context, "context shards diverged");
 

@@ -118,10 +118,10 @@ fn trainer_with_pjrt_backend_trains() {
     let mut samples: Vec<_> = g.edges().collect();
     let mut trainer =
         tembed::coordinator::Trainer::new(300, &g.degrees(), cfg, Some(&rt)).unwrap();
-    let first = trainer.train_epoch(&mut samples, 0);
+    let first = trainer.train_epoch(&mut samples, 0).unwrap();
     let mut last = first.clone();
     for e in 1..4 {
-        last = trainer.train_epoch(&mut samples, e);
+        last = trainer.train_epoch(&mut samples, e).unwrap();
     }
     assert!(first.samples > 0);
     assert!(
@@ -158,7 +158,7 @@ fn pjrt_and_native_converge_to_similar_loss() {
         .unwrap();
         let mut loss = 0.0;
         for e in 0..3 {
-            loss = t.train_epoch(&mut samples, e).mean_loss();
+            loss = t.train_epoch(&mut samples, e).unwrap().mean_loss();
         }
         loss
     };

@@ -40,9 +40,9 @@ fn cluster_shape_invariance_of_quality() {
         };
         let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
         for e in 0..15 {
-            t.train_epoch(&mut samples.clone(), e);
+            t.train_epoch(&mut samples.clone(), e).unwrap();
         }
-        let auc = tembed::eval::link_auc(&t.finish(), &split);
+        let auc = tembed::eval::link_auc(&t.finish().unwrap(), &split);
         aucs.push(auc);
     }
     for &a in &aucs {
@@ -69,7 +69,7 @@ fn sample_conservation_across_shapes() {
             ..TrainConfig::default()
         };
         let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
-        let r = t.train_epoch(&mut samples.clone(), 0);
+        let r = t.train_epoch(&mut samples.clone(), 0).unwrap();
         assert_eq!(r.samples, samples.len() as u64, "shape ({nodes},{gpus},{k})");
     }
 }
@@ -104,7 +104,7 @@ fn offline_walk_files_round_trip_into_training() {
     let mut total = 0u64;
     for f in &files {
         let mut ep = tembed::walk::augment::read_episode_file(f).unwrap();
-        total += t.train_epoch(&mut ep, 0).samples;
+        total += t.train_epoch(&mut ep, 0).unwrap().samples;
     }
     assert_eq!(total, samples.len() as u64);
 }
@@ -126,7 +126,7 @@ fn all_registered_datasets_train() {
         };
         let mut samples: Vec<_> = g.edges().take(20_000).collect();
         let mut t = Trainer::new(g.num_nodes(), &g.degrees(), cfg, None).unwrap();
-        let r = t.train_epoch(&mut samples, 0);
+        let r = t.train_epoch(&mut samples, 0).unwrap();
         assert!(r.loss_sum > 0.0, "{}", spec.name);
     }
 }
@@ -157,10 +157,10 @@ fn baseline_and_ours_learn_comparable_models() {
         TrainConfig { subparts: 1, ..cfg },
     );
     for e in 0..15 {
-        ours.train_epoch(&mut samples.clone(), e);
+        ours.train_epoch(&mut samples.clone(), e).unwrap();
         gv.train_epoch(&mut samples.clone(), e);
     }
-    let a_ours = tembed::eval::link_auc(&ours.finish(), &split);
+    let a_ours = tembed::eval::link_auc(&ours.finish().unwrap(), &split);
     let a_gv = tembed::eval::link_auc(&gv.finish(), &split);
     assert!(a_ours > 0.7, "ours {a_ours}");
     assert!(a_gv > 0.7, "graphvite {a_gv}");
@@ -181,7 +181,7 @@ fn walk_reuse_policy() {
     };
     cfg.walk_epochs = 3;
     let mut d = Driver::new(&g, cfg, None).unwrap();
-    let reports = d.run(7);
+    let reports = d.run(7).unwrap();
     // epochs 0-2 share one walk generation, 3-5 the next, 6 a third
     assert_eq!(reports[0].samples, reports[1].samples);
     assert_eq!(reports[0].samples, reports[2].samples);
