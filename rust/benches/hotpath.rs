@@ -1,31 +1,243 @@
 //! Hot-path microbenchmarks (the §Perf harness): wallclock throughput of
-//! the L3 pieces the profile says matter — the native SGNS step, the
-//! PJRT step (when artifacts exist), minibatch assembly, negative
-//! sampling, walk generation, and episode bucketing.
+//! the L3 pieces the profile says matter — the SIMD kernel layer
+//! (dot/axpy/GEMV, scalar-vs-simd A/B), the native SGNS step, the PJRT
+//! step (when artifacts exist), minibatch assembly, negative sampling,
+//! alias-table builds (serial vs parallel), walk generation, episode
+//! bucketing, the executor stage-window sweep, and checkpoint writes.
+//!
+//! Every measurement goes through one [`Report::add`] call, which both
+//! prints the human table line and records the row for the JSON
+//! snapshot — a single serializer, so the table and the snapshot can
+//! never disagree.
+//!
+//! Environment:
+//!
+//! * `TEMBED_BENCH_JSON=path` — also write the machine-readable snapshot
+//!   (schema `tembed-hotpath-v1`) to `path`. This is how the committed
+//!   `BENCH_BASELINE.json` / `BENCH_SIMD.json` pair is regenerated; see
+//!   docs/PERF.md.
+//! * `TEMBED_BENCH_QUICK=1` — cut iteration counts ~10x for CI schema
+//!   checks. Row names never change with this flag (only values), so a
+//!   quick run still covers every baseline metric key.
+//! * `TEMBED_KERNEL=scalar|simd` — pin the ambient kernel the
+//!   non-bracketed rows run on (the `[scalar]`/`[simd]` rows always
+//!   force their kernel explicitly).
+//! * `TEMBED_BENCH_HOST=...` — free-form host label stamped into the
+//!   JSON snapshot.
 
 use std::time::Instant;
 
+use tembed::embed::kernels::{self, KernelKind};
 use tembed::embed::sgns::{groups_for, NativeBackend, StepBackend};
 use tembed::sample::{make_minibatches, NegativeSampler};
 use tembed::util::Rng;
+use tembed::walk::alias::AliasTable;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+/// One measurement — the single source of truth both output views
+/// render from.
+struct Row {
+    section: &'static str,
+    name: String,
+    value: f64,
+    unit: &'static str,
+}
+
+/// Collects rows, prints the human table progressively, and serializes
+/// the identical data as JSON at the end.
+struct Report {
+    quick: bool,
+    rows: Vec<Row>,
+    cur_section: &'static str,
+}
+
+impl Report {
+    fn new(quick: bool) -> Self {
+        Report { quick, rows: Vec::new(), cur_section: "" }
+    }
+
+    /// Scale an iteration count down for quick (CI) runs.
+    fn iters(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 10).max(1)
+        } else {
+            full
+        }
+    }
+
+    /// Record one measurement: prints the table line and keeps the row
+    /// for the JSON snapshot (same `Row`, two renderings).
+    fn add(&mut self, section: &'static str, name: impl Into<String>, value: f64, unit: &'static str) {
+        if section != self.cur_section {
+            self.cur_section = section;
+            println!("\n# {section}\n");
+        }
+        let row = Row { section, name: name.into(), value, unit };
+        println!("{}", human_line(&row));
+        self.rows.push(row);
+    }
+
+    fn json(&self) -> String {
+        let host = std::env::var("TEMBED_BENCH_HOST").unwrap_or_else(|_| "unknown".into());
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"tembed-hotpath-v1\",\n");
+        s.push_str(&format!("  \"kernel\": \"{}\",\n", json_escape(kernels::active_name())));
+        s.push_str(&format!("  \"arch\": \"{}\",\n", json_escape(std::env::consts::ARCH)));
+        s.push_str(&format!("  \"host\": \"{}\",\n", json_escape(&host)));
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"section\": \"{}\", \"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}{}\n",
+                json_escape(r.section),
+                json_escape(&r.name),
+                json_num(r.value),
+                json_escape(r.unit),
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the snapshot when `TEMBED_BENCH_JSON` asks for one.
+    fn finish(&self) {
+        if let Ok(path) = std::env::var("TEMBED_BENCH_JSON") {
+            if !path.is_empty() {
+                std::fs::write(&path, self.json()).expect("write bench JSON snapshot");
+                println!("\nbench snapshot written to {path}");
+            }
+        }
+    }
+}
+
+fn human_line(r: &Row) -> String {
+    format!("{:<52} {:>14} {}", r.name, fmt_value(r.value), r.unit)
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == 0.0 {
+        "0.000".into()
+    } else if v.abs() >= 1e5 || v.abs() < 1e-2 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6e}")
+    } else {
+        "0".into()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     // warmup
     f();
     let t = Instant::now();
     for _ in 0..iters {
         f();
     }
-    let per = t.elapsed().as_secs_f64() / iters as f64;
-    println!("{name:<44} {:>12.3} us/iter", per * 1e6);
-    per
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+const KINDS: [(KernelKind, &str); 2] =
+    [(KernelKind::Scalar, "scalar"), (KernelKind::Simd, "simd")];
+
+/// Forced scalar-vs-simd A/B rows for the raw kernels and the full
+/// native step. These rows are identical keys in every snapshot; on a
+/// host without AVX2/NEON the `[simd]` rows run the scalar fallback.
+fn kernel_benches(rep: &mut Report) {
+    let mut rng = Rng::new(7);
+    for d in [32usize, 128] {
+        let a: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        for (kind, label) in KINDS {
+            let per = bench(rep.iters(2_000_000), || {
+                std::hint::black_box(kernels::dot_as(
+                    kind,
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                ));
+            });
+            rep.add("kernels", format!("dot d={d} [{label}]"), per * 1e9, "ns/iter");
+        }
+    }
+    let x: Vec<f32> = (0..128).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let mut y: Vec<f32> = (0..128).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    for (kind, label) in KINDS {
+        let per = bench(rep.iters(2_000_000), || {
+            kernels::axpy_as(kind, 1.0e-6, std::hint::black_box(&x), std::hint::black_box(&mut y));
+        });
+        rep.add("kernels", format!("axpy d=128 [{label}]"), per * 1e9, "ns/iter");
+    }
+    let rows: Vec<f32> = (0..5 * 128).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let mut out = vec![0.0f32; 5];
+    for (kind, label) in KINDS {
+        let per = bench(rep.iters(1_000_000), || {
+            kernels::gemv_as(
+                kind,
+                std::hint::black_box(&rows),
+                128,
+                std::hint::black_box(&x),
+                &mut out,
+            );
+        });
+        rep.add("kernels", format!("gemv 5x128 [{label}]"), per * 1e9, "ns/iter");
+    }
+    // the whole native step, kernel forced — the end-to-end effect of
+    // the dispatch on the op mix above
+    let (rows_n, d, b) = (8192usize, 128usize, 1024usize);
+    let vertex: Vec<f32> = (0..rows_n * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
+    let context = vertex.clone();
+    let u: Vec<i32> = (0..b).map(|_| rng.index(rows_n) as i32).collect();
+    let vp: Vec<i32> = (0..b).map(|_| rng.index(rows_n) as i32).collect();
+    let vn: Vec<i32> = (0..groups_for(b) * 5).map(|_| rng.index(rows_n) as i32).collect();
+    for (kind, label) in KINDS {
+        let mut be = NativeBackend::with_kernel(kind);
+        let mut vtx = vertex.clone();
+        let mut ctx = context.clone();
+        let per = bench(rep.iters(50), || {
+            be.step(&mut vtx, &mut ctx, d, &u, &vp, &vn, 5, b, 0.025);
+        });
+        rep.add(
+            "kernels",
+            format!("native sgns step b=1024 d=128 n=5 [{label}]"),
+            per * 1e6,
+            "us/iter",
+        );
+    }
 }
 
 fn main() {
+    let quick = std::env::var("TEMBED_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut rep = Report::new(quick);
     let mut rng = Rng::new(1);
-    println!("# hotpath microbenches (wallclock on this testbed)\n");
+    println!(
+        "# hotpath microbenches (wallclock on this testbed) — kernel: {}{}",
+        kernels::active_name(),
+        if quick { " [quick]" } else { "" }
+    );
 
-    // --- native SGNS step: batch 1024, d in {32, 128}, negs 5
+    // --- forced scalar-vs-simd A/B (kernels + full step)
+    kernel_benches(&mut rep);
+
+    // --- native SGNS step on the *active* kernel: batch 1024, negs 5
     for d in [32usize, 128] {
         let rows = 8192;
         let mut vertex: Vec<f32> = (0..rows * d).map(|_| rng.f32_range(-0.3, 0.3)).collect();
@@ -35,75 +247,92 @@ fn main() {
         let vp: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
         let vn: Vec<i32> = (0..groups_for(b) * 5).map(|_| rng.index(rows) as i32).collect();
         let mut be = NativeBackend::new();
-        let per = bench(&format!("native sgns step b=1024 d={d} n=5"), 50, || {
+        let per = bench(rep.iters(50), || {
             be.step(&mut vertex, &mut context, d, &u, &vp, &vn, 5, b, 0.025);
         });
-        println!(
-            "{:<44} {:>12.2e} samples/s",
-            "  -> throughput", b as f64 / per
+        rep.add("sgns", format!("native sgns step b=1024 d={d} n=5"), per * 1e6, "us/iter");
+        rep.add(
+            "sgns",
+            format!("native sgns step b=1024 d={d} n=5 throughput"),
+            b as f64 / per,
+            "samples/s",
         );
     }
 
     // --- PJRT step at the same shape (three-layer path; pjrt feature)
-    pjrt_benches(&mut rng);
+    pjrt_benches(&mut rep, &mut rng);
 
     // --- minibatch assembly
     let block: Vec<(u32, u32)> = (0..100_000)
         .map(|_| (rng.index(4096) as u32, rng.index(4096) as u32))
         .collect();
-    bench("make_minibatches 100k samples b=1024", 50, || {
+    let per = bench(rep.iters(50), || {
         let mbs = make_minibatches(&block, 1024, 0, 0, 0, 0);
         std::hint::black_box(mbs.len());
     });
+    rep.add("sampling", "make_minibatches 100k samples b=1024", per * 1e6, "us/iter");
 
     // --- negative sampling
     let degrees: Vec<u32> = (0..100_000).map(|_| rng.index(500) as u32 + 1).collect();
     let sampler = NegativeSampler::new(&degrees, 0..100_000);
     let mut srng = Rng::new(2);
-    bench("negative sampler: 160 draws (1 minibatch)", 1000, || {
+    let per = bench(rep.iters(1000), || {
         std::hint::black_box(sampler.sample_local(160, &mut srng));
     });
+    rep.add("sampling", "negative sampler: 160 draws (1 minibatch)", per * 1e6, "us/iter");
+
+    // --- alias-table build: the GraphVite-style parallel stage vs the
+    // spawn-free serial path (bit-identical tables by construction)
+    let alias_degrees: Vec<u32> = (0..1_000_000).map(|_| rng.index(500) as u32).collect();
+    let per = bench(rep.iters(3), || {
+        std::hint::black_box(AliasTable::unigram_with_threads(&alias_degrees, 0.75, 1).len());
+    });
+    rep.add("alias", "alias unigram build 1M [serial]", per * 1e3, "ms/build");
+    let threads = tembed::util::pool::default_threads();
+    let per = bench(rep.iters(3), || {
+        std::hint::black_box(
+            AliasTable::unigram_with_threads(&alias_degrees, 0.75, threads).len(),
+        );
+    });
+    rep.add("alias", "alias unigram build 1M [parallel]", per * 1e3, "ms/build");
 
     // --- walk engine throughput
     let spec = tembed::gen::datasets::spec("youtube").unwrap();
     let graph = spec.generate(1);
-    let engine = tembed::walk::WalkEngine::new(
-        &graph,
-        tembed::walk::WalkConfig::default(),
-    );
+    let engine = tembed::walk::WalkEngine::new(&graph, tembed::walk::WalkConfig::default());
     let t = Instant::now();
     let walks = engine.run_epoch(0);
     let wps = walks.num_walks() as f64 / t.elapsed().as_secs_f64();
-    println!("{:<44} {wps:>12.2e} walks/s", "walk engine (youtube-sim)");
+    rep.add("walks", "walk engine (youtube-sim)", wps, "walks/s");
 
     // --- augmentation
     let t = Instant::now();
     let samples = tembed::walk::augment_walks(&walks, 3, 8);
-    println!(
-        "{:<44} {:>12.2e} samples/s",
+    rep.add(
+        "walks",
         "augmentation (window 3)",
-        samples.len() as f64 / t.elapsed().as_secs_f64()
+        samples.len() as f64 / t.elapsed().as_secs_f64(),
+        "samples/s",
     );
 
     // --- episode bucketing
     let plan = tembed::partition::HierarchyPlan::new(2, 8, 4, graph.num_nodes());
     let t = Instant::now();
     let pool = tembed::sample::EpisodePool::build(&plan, &samples);
-    println!(
-        "{:<44} {:>12.2e} samples/s",
+    rep.add(
+        "walks",
         "episode 2D bucketing",
-        pool.total_samples() as f64 / t.elapsed().as_secs_f64()
+        pool.total_samples() as f64 / t.elapsed().as_secs_f64(),
+        "samples/s",
     );
 
     // --- executor stage-window sweep: the memory/throughput trade of the
     // bounded host feeder. Tighter windows cap episode-start staging (peak
     // buffers) at the cost of workers waiting on H2D credits; "inf" stages
     // every chain head as fast as workers drain them. Windows below the
-    // GPU count are clamped up by the config layer, so the row label
-    // carries the effective window actually run.
-    println!("\n# stage-window sweep (windowed host feeder, 2 GPUs x k=4)\n");
-    let sweep_samples: Vec<tembed::graph::Edge> =
-        samples.iter().copied().take(60_000).collect();
+    // GPU count are clamped up by the config layer.
+    let take = if quick { 20_000 } else { 60_000 };
+    let sweep_samples: Vec<tembed::graph::Edge> = samples.iter().copied().take(take).collect();
     for window in [1usize, 2, 4, usize::MAX] {
         let cfg = tembed::config::TrainConfig {
             nodes: 1,
@@ -114,26 +343,24 @@ fn main() {
             episode_size: 20_000,
             ..tembed::config::TrainConfig::default()
         };
-        let mut trainer = tembed::coordinator::Trainer::new(
-            graph.num_nodes(),
-            &graph.degrees(),
-            cfg,
-            None,
-        )
-        .expect("trainer");
+        let mut trainer =
+            tembed::coordinator::Trainer::new(graph.num_nodes(), &graph.degrees(), cfg, None)
+                .expect("trainer");
         let t = Instant::now();
         let r = trainer.train_epoch(&mut sweep_samples.clone(), 0).expect("epoch");
         let label: String =
             if window == usize::MAX { "inf".into() } else { window.to_string() };
-        let effective = r.metrics.count("exec_stage_window");
-        let eff_label: String =
-            if window == usize::MAX { "inf".into() } else { effective.to_string() };
-        let row = format!("executor epoch, stage_window={label}");
-        println!(
-            "{:<44} {:>12.2e} samples/s  (peak staged {}, effective window {eff_label})",
-            row,
+        rep.add(
+            "executor",
+            format!("executor epoch, stage_window={label}"),
             r.samples as f64 / t.elapsed().as_secs_f64(),
-            r.metrics.count("exec_peak_staged"),
+            "samples/s",
+        );
+        rep.add(
+            "executor",
+            format!("executor epoch, stage_window={label} peak staged"),
+            r.metrics.count("exec_peak_staged") as f64,
+            "buffers",
         );
     }
 
@@ -141,7 +368,6 @@ fn main() {
     // committed generation (segments + state + manifest, fsynced). The
     // episode tee must keep up with this or the bounded channel drops —
     // the MB/s here is the budget the drop-and-count gauge protects.
-    println!("\n# checkpoint write throughput (segmented format, fsync per file)\n");
     for (n, dim, subparts) in [(50_000usize, 32usize, 8usize), (200_000, 32, 8)] {
         use tembed::ckpt::{CkptWriter, CkptWriterConfig, EpisodeMeta};
         use tembed::partition::range_bounds;
@@ -186,25 +412,25 @@ fn main() {
         }
         let stats = w.finish().expect("writer stats");
         let secs = t.elapsed().as_secs_f64();
-        let row = format!("ckpt write {n} nodes d={dim} ({} gens)", stats.committed);
-        println!(
-            "{:<44} {:>12.1} MB/s  ({} segments, {} dropped)",
-            row,
+        rep.add(
+            "ckpt",
+            format!("ckpt write {n} nodes d={dim}"),
             stats.bytes as f64 / 1e6 / secs,
-            stats.segments,
-            episodes as usize * subparts - stats.segments as usize,
+            "MB/s",
         );
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    rep.finish();
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_benches(_rng: &mut Rng) {
+fn pjrt_benches(_rep: &mut Report, _rng: &mut Rng) {
     println!("(pjrt step skipped — built without the `pjrt` feature)");
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_benches(rng: &mut Rng) {
+fn pjrt_benches(rep: &mut Report, rng: &mut Rng) {
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.join("manifest.tsv").exists() {
         let rt = tembed::runtime::Runtime::open(artifacts).expect("runtime");
@@ -219,12 +445,15 @@ fn pjrt_benches(rng: &mut Rng) {
             let vp: Vec<i32> = (0..b).map(|_| rng.index(rows) as i32).collect();
             let vn: Vec<i32> =
                 (0..groups_for(b) * n).map(|_| rng.index(rows) as i32).collect();
-            let per = bench(&format!("pjrt sgns step b={b} d={d} n={n}"), 20, || {
+            let per = bench(rep.iters(20), || {
                 stepper.step(&mut vertex, &mut context, d, &u, &vp, &vn, n, b, 0.025);
             });
-            println!(
-                "{:<44} {:>12.2e} samples/s",
-                "  -> throughput", b as f64 / per
+            rep.add("pjrt", format!("pjrt sgns step b={b} d={d} n={n}"), per * 1e6, "us/iter");
+            rep.add(
+                "pjrt",
+                format!("pjrt sgns step b={b} d={d} n={n} throughput"),
+                b as f64 / per,
+                "samples/s",
             );
         }
         // block execution: device-resident shard chaining across 8
@@ -248,12 +477,14 @@ fn pjrt_benches(rng: &mut Rng) {
                     (0..groups_for(b) * n).map(|_| rng.index(rows) as i32).collect()
                 })
                 .collect();
-            let per = bench(&format!("pjrt step_block 8x b={b} d={d} (chained)"), 10, || {
+            let per = bench(rep.iters(10), || {
                 stepper.step_block(&mut vertex, &mut context, d, &mbs, &vns, n, 0.025);
             });
-            println!(
-                "{:<44} {:>12.2e} samples/s",
-                "  -> throughput", (8 * b) as f64 / per
+            rep.add(
+                "pjrt",
+                format!("pjrt step_block 8x b={b} d={d} (chained)"),
+                per * 1e6,
+                "us/iter",
             );
         }
     } else {

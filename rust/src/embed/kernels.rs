@@ -1,0 +1,779 @@
+//! Runtime-dispatched SIMD kernels for the SGNS hot loop.
+//!
+//! The paper's entire design exists to feed the SGNS inner loop fast
+//! enough to saturate accelerators; this module is that inner loop for
+//! the native backend. Three operations cover it:
+//!
+//! * [`dot`] — row·row score (the positive-sample logit),
+//! * [`axpy`] — `y += alpha * x` gradient accumulation/scatter,
+//! * [`gemv`] — one center row scored against a *block* of gathered
+//!   negative rows in a single pass (the level-3-BLAS-style formulation:
+//!   a group's shared negatives are gathered once per `GROUP_SIZE`
+//!   samples, then every sample's negative logits come from one GEMV).
+//!
+//! # Kernel contract (what is bit-exact, what is ULP-tolerant)
+//!
+//! The full table lives in `docs/PERF.md`; the invariants are:
+//!
+//! * **`dot` and `axpy` are bit-identical across kernels.** The SIMD
+//!   paths use separate multiply and add instructions (never FMA) and
+//!   keep exactly the scalar reference's accumulation shape — eight
+//!   independent per-lane accumulators combined left-to-right — so every
+//!   intermediate rounding matches the scalar path bit for bit.
+//! * **`gemv` is ULP-tolerant.** It is the one op allowed to use FMA
+//!   (fused multiply-add skips the intermediate rounding of `a*b`) and a
+//!   tree-shaped horizontal reduction, both of which reassociate the
+//!   float sum. The permitted divergence from the scalar reference is
+//!   [`gemv_tolerance`], enforced by property tests in this module.
+//!
+//! # Dispatch
+//!
+//! The kernel is picked once per process (first use) and cached:
+//!
+//! | arch       | CPU features        | kernel picked        |
+//! |------------|---------------------|----------------------|
+//! | `x86_64`   | AVX2 **and** FMA    | `simd` ("avx2+fma")  |
+//! | `x86_64`   | anything less       | `scalar`             |
+//! | `aarch64`  | (NEON is baseline)  | `simd` ("neon")      |
+//! | other      | —                   | `scalar`             |
+//!
+//! `TEMBED_KERNEL=scalar` forces the portable reference everywhere;
+//! `TEMBED_KERNEL=simd` asks for the SIMD path and resolves to `scalar`
+//! when the host lacks the features (so an A/B pair of runs on a
+//! non-SIMD host degenerates to two identical scalar runs instead of
+//! crashing). Any other value panics on first kernel use — a silent
+//! fallback would invalidate the A/B comparison the override exists for.
+//! The resolved name is reported by [`active_name`] and printed by
+//! `tembed train`.
+//!
+//! # Safety architecture
+//!
+//! All `unsafe` in this module is confined to the `x86` / `neon`
+//! submodules and is of exactly two kinds, each argued at the block:
+//!
+//! 1. **ISA availability** — `#[target_feature(enable = ...)]` functions
+//!    are only reached through [`simd_available`]-guarded dispatch (a
+//!    cached `is_x86_feature_detected!` probe on x86_64; NEON is part of
+//!    the aarch64 baseline so no probe exists to fail).
+//! 2. **Raw-pointer loads/stores** — every `loadu`/`storeu` stays inside
+//!    the bounds established by the slice lengths checked (debug) and
+//!    truncated (release) at function entry: the vector loop covers only
+//!    the largest multiple of the lane width, the remainder lanes are
+//!    handled by a scalar tail loop over the same pointers. Unaligned
+//!    load/store variants are used throughout, so no alignment
+//!    precondition exists.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation to run. `Simd` resolves to AVX2+FMA on
+/// x86_64, NEON on aarch64, and falls back to the scalar reference (per
+/// call, safely) anywhere the features are missing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable reference implementation (also the parity oracle).
+    Scalar,
+    /// Runtime-detected `std::arch` path.
+    Simd,
+}
+
+static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+
+/// The process-wide kernel, resolved once from the `TEMBED_KERNEL`
+/// environment override (or CPU detection when unset).
+#[inline]
+pub fn active() -> KernelKind {
+    *ACTIVE.get_or_init(|| select(std::env::var("TEMBED_KERNEL").ok().as_deref()))
+}
+
+/// Human-readable name of the active kernel: `"scalar"`, `"avx2+fma"`,
+/// or `"neon"`.
+pub fn active_name() -> &'static str {
+    kind_name(active())
+}
+
+/// Name a kernel kind resolves to on this host.
+pub fn kind_name(kind: KernelKind) -> &'static str {
+    match kind {
+        KernelKind::Scalar => "scalar",
+        KernelKind::Simd => {
+            if !simd_available() {
+                // Simd degrades to the scalar reference per call.
+                return "scalar";
+            }
+            if cfg!(target_arch = "x86_64") {
+                "avx2+fma"
+            } else if cfg!(target_arch = "aarch64") {
+                "neon"
+            } else {
+                "scalar"
+            }
+        }
+    }
+}
+
+/// Resolve an optional `TEMBED_KERNEL` override to a kernel. Pure —
+/// tests exercise it without touching the process environment.
+///
+/// Panics on an unrecognized value: the override exists for A/B
+/// comparisons, and a typo silently auto-detecting would fabricate the
+/// very comparison it was meant to control.
+pub fn select(over: Option<&str>) -> KernelKind {
+    match over {
+        None | Some("") => {
+            if simd_available() {
+                KernelKind::Simd
+            } else {
+                KernelKind::Scalar
+            }
+        }
+        Some("scalar") => KernelKind::Scalar,
+        Some("simd") => {
+            if simd_available() {
+                KernelKind::Simd
+            } else {
+                KernelKind::Scalar
+            }
+        }
+        Some(other) => panic!(
+            "TEMBED_KERNEL must be `scalar` or `simd`, got `{other}`"
+        ),
+    }
+}
+
+/// Whether this host has a SIMD path (AVX2+FMA on x86_64; always true
+/// on aarch64 where NEON is baseline; false elsewhere).
+#[allow(unreachable_code)]
+pub fn simd_available() -> bool {
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            return is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return true;
+        }
+        false
+    })
+}
+
+// ---- public dispatched ops ---------------------------------------------
+
+/// Dot product of two equal-length rows with the active kernel.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_as(active(), a, b)
+}
+
+/// `y += alpha * x` with the active kernel.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_as(active(), alpha, x, y)
+}
+
+/// Blocked GEMV with the active kernel: `out[r] = rows[r] · x` for the
+/// `out.len()` rows stored contiguously (`d` floats each) in `rows`.
+#[inline]
+pub fn gemv(rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+    gemv_as(active(), rows, d, x, out)
+}
+
+/// [`dot`] with an explicit kernel (A/B benches, parity tests).
+/// Bit-identical across kernels by contract.
+#[inline]
+pub fn dot_as(kind: KernelKind, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match kind {
+        KernelKind::Scalar => dot_scalar(a, b),
+        KernelKind::Simd => dot_simd(a, b),
+    }
+}
+
+/// [`axpy`] with an explicit kernel. Bit-identical across kernels by
+/// contract.
+#[inline]
+pub fn axpy_as(kind: KernelKind, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match kind {
+        KernelKind::Scalar => axpy_scalar(alpha, x, y),
+        KernelKind::Simd => axpy_simd(alpha, x, y),
+    }
+}
+
+/// [`gemv`] with an explicit kernel. The SIMD path may diverge from the
+/// scalar reference by up to [`gemv_tolerance`] per output element (FMA
+/// + tree reduction reassociate the sum).
+#[inline]
+pub fn gemv_as(kind: KernelKind, rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(rows.len(), out.len() * d);
+    match kind {
+        KernelKind::Scalar => gemv_scalar(rows, d, x, out),
+        KernelKind::Simd => gemv_simd(rows, d, x, out),
+    }
+}
+
+/// The documented divergence bound for the GEMV path, per output
+/// element: `d · ε · Σ|xₖ·rowₖ|` with a small absolute floor — the
+/// worst-case drift between two differently-associated summations of
+/// the same `d` products (each partial sum is bounded by the absolute
+/// sum, each reassociated add contributes at most one ε of it).
+/// `abs_sum` is `Σ|xₖ·rowₖ|`, best computed in f64 by the caller.
+pub fn gemv_tolerance(d: usize, abs_sum: f32) -> f32 {
+    (d.max(8) as f32) * f32::EPSILON * abs_sum.abs() + 1e-30
+}
+
+// ---- scalar reference ---------------------------------------------------
+
+/// Scalar dot: eight independent accumulators over 8-wide chunks.
+/// Strict left-to-right float addition blocks vectorization, so the
+/// reference itself is written in the reassociated shape the SIMD lanes
+/// mirror — which is exactly what makes lane-for-lane bit parity with
+/// the `mul+add` SIMD paths possible.
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ac = a.chunks_exact(8);
+    let bc = b.chunks_exact(8);
+    let (ra, rb) = (ac.remainder(), bc.remainder());
+    for (ca, cb) in ac.zip(bc) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Scalar `y += alpha * x`: element-wise multiply-then-add (never
+/// fused), the shape the SIMD paths replicate exactly.
+#[inline]
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Scalar GEMV reference: one [`dot_scalar`] per row.
+fn gemv_scalar(rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(&rows[r * d..(r + 1) * d], x);
+    }
+}
+
+// ---- dispatch shims ------------------------------------------------------
+
+#[allow(unreachable_code)]
+#[inline]
+fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: AVX2 presence verified by the cached runtime probe.
+            return unsafe { x86::dot_avx2(a, b) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is part of the aarch64 baseline ISA.
+        return unsafe { neon::dot_neon(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+#[allow(unreachable_code)]
+#[inline]
+fn axpy_simd(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: AVX2 presence verified by the cached runtime probe.
+            return unsafe { x86::axpy_avx2(alpha, x, y) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is part of the aarch64 baseline ISA.
+        return unsafe { neon::axpy_neon(alpha, x, y) };
+    }
+    axpy_scalar(alpha, x, y)
+}
+
+#[allow(unreachable_code)]
+#[inline]
+fn gemv_simd(rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_available() {
+            // SAFETY: AVX2+FMA presence verified by the cached runtime probe.
+            return unsafe { x86::gemv_avx2fma(rows, d, x, out) };
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is part of the aarch64 baseline ISA.
+        return unsafe { neon::gemv_neon(rows, d, x, out) };
+    }
+    gemv_scalar(rows, d, x, out)
+}
+
+// ---- x86_64: AVX2 (+FMA for gemv) ---------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Bit-identical AVX2 dot.
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee AVX2 is available (`simd_available()`).
+    /// Pointer reads: the vector loop covers `i < n8` where
+    /// `n8 = n - n % 8 <= a.len() == b.len()`, so every
+    /// `_mm256_loadu_ps(p.add(i))` reads lanes `i..i+8 <= n8`; the tail
+    /// loop reads single elements `n8..n`. `loadu` carries no alignment
+    /// requirement.
+    ///
+    /// Parity argument: one 8-lane accumulator updated with
+    /// `add(acc, mul(a, b))` performs, per lane `k`, the identical
+    /// rounding sequence as the scalar reference's `acc[k] += a*b`
+    /// (separate IEEE multiply then add — FMA is deliberately not used);
+    /// the lanes are then combined left-to-right exactly like
+    /// `acc.iter().sum()`, and the tail matches the scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let n8 = n - n % 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i < n8 {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        for k in n8..n {
+            tail += *pa.add(k) * *pb.add(k);
+        }
+        lanes.iter().sum::<f32>() + tail
+    }
+
+    /// Bit-identical AVX2 `y += alpha * x`.
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee AVX2. Bounds as in [`dot_avx2`]; the store
+    /// targets the same in-bounds lanes the load read. `x` and `y`
+    /// cannot alias (`&`/`&mut` exclusivity). Parity: `add(y,
+    /// mul(alpha, x))` is element-wise the scalar `*yi += alpha * xi` —
+    /// no accumulation order exists to diverge.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let n8 = n - n % 8;
+        let va = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i < n8 {
+            let vy = _mm256_loadu_ps(py.add(i));
+            let vx = _mm256_loadu_ps(px.add(i));
+            _mm256_storeu_ps(py.add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        for k in n8..n {
+            *py.add(k) += alpha * *px.add(k);
+        }
+    }
+
+    /// FMA-reassociated blocked GEMV: four rows share each load of `x`,
+    /// so a group's negatives cost one pass over the center row instead
+    /// of one per negative.
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee AVX2 **and** FMA. Row pointers `p0..p3`
+    /// point at rows `r..r+4` of `rows`, which the caller sized to
+    /// `out.len() * d` (debug-asserted at the dispatch layer and
+    /// re-clamped here); vector loads stay below `d8 <= d`, the scalar
+    /// tail covers `d8..d`. This is the ULP-tolerant op: `fmadd` skips
+    /// the product rounding and [`hsum`] reduces as a tree, both of
+    /// which reassociate relative to the scalar reference — bounded by
+    /// `gemv_tolerance`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemv_avx2fma(rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+        let n = out.len().min(rows.len() / d.max(1));
+        let d8 = d - d % 8;
+        let px = x.as_ptr();
+        let mut r = 0usize;
+        while r + 4 <= n {
+            let p0 = rows.as_ptr().add(r * d);
+            let p1 = p0.add(d);
+            let p2 = p1.add(d);
+            let p3 = p2.add(d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i < d8 {
+                let vx = _mm256_loadu_ps(px.add(i));
+                a0 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(i)), vx, a0);
+                a1 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(i)), vx, a1);
+                a2 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(i)), vx, a2);
+                a3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(i)), vx, a3);
+                i += 8;
+            }
+            let mut t = [0.0f32; 4];
+            for k in d8..d {
+                let xv = *px.add(k);
+                t[0] += *p0.add(k) * xv;
+                t[1] += *p1.add(k) * xv;
+                t[2] += *p2.add(k) * xv;
+                t[3] += *p3.add(k) * xv;
+            }
+            out[r] = hsum(a0) + t[0];
+            out[r + 1] = hsum(a1) + t[1];
+            out[r + 2] = hsum(a2) + t[2];
+            out[r + 3] = hsum(a3) + t[3];
+            r += 4;
+        }
+        while r < n {
+            let p = rows.as_ptr().add(r * d);
+            let mut a = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i < d8 {
+                a = _mm256_fmadd_ps(_mm256_loadu_ps(p.add(i)), _mm256_loadu_ps(px.add(i)), a);
+                i += 8;
+            }
+            let mut t = 0.0f32;
+            for k in d8..d {
+                t += *p.add(k) * *px.add(k);
+            }
+            out[r] = hsum(a) + t;
+            r += 1;
+        }
+    }
+
+    /// Tree-reduce the 8 lanes of `v` (8 → 4 → 2 → 1).
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee AVX2. Pure register shuffles — no memory
+    /// access.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+}
+
+// ---- aarch64: NEON -------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Bit-identical NEON dot: two 4-lane accumulators standing in for
+    /// the scalar reference's `acc[0..4]` / `acc[4..8]`.
+    ///
+    /// # Safety
+    ///
+    /// NEON is baseline on aarch64 (no feature probe exists to fail).
+    /// Pointer reads: the vector loop covers `i < n8` with both loads at
+    /// `i` and `i + 4`, i.e. lanes `i..i+8 <= n8 <= len`; the tail loop
+    /// covers `n8..n` one element at a time. `vld1q_f32` is unaligned.
+    /// Parity: `vaddq(acc, vmulq(a, b))` performs per lane the exact
+    /// scalar multiply-then-add (no `vfmaq` fusion), and the eight lanes
+    /// are combined left-to-right like `acc.iter().sum()`.
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let n8 = n - n % 8;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i < n8 {
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4))),
+            );
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut tail = 0.0f32;
+        for k in n8..n {
+            tail += *pa.add(k) * *pb.add(k);
+        }
+        lanes.iter().sum::<f32>() + tail
+    }
+
+    /// Bit-identical NEON `y += alpha * x` (separate `vmulq`/`vaddq`,
+    /// never `vfmaq`).
+    ///
+    /// # Safety
+    ///
+    /// NEON is baseline on aarch64. Bounds as in [`dot_neon`]; the store
+    /// writes the lanes the load read; `x`/`y` cannot alias.
+    pub unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let n4 = n - n % 4;
+        let va = vdupq_n_f32(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i < n4 {
+            let vy = vld1q_f32(py.add(i));
+            let vx = vld1q_f32(px.add(i));
+            vst1q_f32(py.add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+            i += 4;
+        }
+        for k in n4..n {
+            *py.add(k) += alpha * *px.add(k);
+        }
+    }
+
+    /// FMA-reassociated blocked GEMV, four rows per pass (ULP-tolerant:
+    /// `vfmaq` + `vaddvq` horizontal reduce, bounded by
+    /// `gemv_tolerance`).
+    ///
+    /// # Safety
+    ///
+    /// NEON is baseline on aarch64. Row pointers as in the AVX2 variant:
+    /// rows `r..r+4` of a buffer the dispatch layer sized to
+    /// `out.len() * d` (re-clamped here); vector loads stay below
+    /// `d4 <= d`, the scalar tail covers `d4..d`.
+    pub unsafe fn gemv_neon(rows: &[f32], d: usize, x: &[f32], out: &mut [f32]) {
+        let n = out.len().min(rows.len() / d.max(1));
+        let d4 = d - d % 4;
+        let px = x.as_ptr();
+        let mut r = 0usize;
+        while r + 4 <= n {
+            let p0 = rows.as_ptr().add(r * d);
+            let p1 = p0.add(d);
+            let p2 = p1.add(d);
+            let p3 = p2.add(d);
+            let mut a0 = vdupq_n_f32(0.0);
+            let mut a1 = vdupq_n_f32(0.0);
+            let mut a2 = vdupq_n_f32(0.0);
+            let mut a3 = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i < d4 {
+                let vx = vld1q_f32(px.add(i));
+                a0 = vfmaq_f32(a0, vld1q_f32(p0.add(i)), vx);
+                a1 = vfmaq_f32(a1, vld1q_f32(p1.add(i)), vx);
+                a2 = vfmaq_f32(a2, vld1q_f32(p2.add(i)), vx);
+                a3 = vfmaq_f32(a3, vld1q_f32(p3.add(i)), vx);
+                i += 4;
+            }
+            let mut t = [0.0f32; 4];
+            for k in d4..d {
+                let xv = *px.add(k);
+                t[0] += *p0.add(k) * xv;
+                t[1] += *p1.add(k) * xv;
+                t[2] += *p2.add(k) * xv;
+                t[3] += *p3.add(k) * xv;
+            }
+            out[r] = vaddvq_f32(a0) + t[0];
+            out[r + 1] = vaddvq_f32(a1) + t[1];
+            out[r + 2] = vaddvq_f32(a2) + t[2];
+            out[r + 3] = vaddvq_f32(a3) + t[3];
+            r += 4;
+        }
+        while r < n {
+            let p = rows.as_ptr().add(r * d);
+            let mut a = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i < d4 {
+                a = vfmaq_f32(a, vld1q_f32(p.add(i)), vld1q_f32(px.add(i)));
+                i += 4;
+            }
+            let mut t = 0.0f32;
+            for k in d4..d {
+                t += *p.add(k) * *px.add(k);
+            }
+            out[r] = vaddvq_f32(a) + t;
+            r += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    /// Dims that stress every remainder-lane path: below one lane, odd,
+    /// exactly one vector, one over, mixed.
+    const DIMS: [usize; 14] = [1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100, 128];
+
+    fn gen_row(g: &mut crate::util::quickcheck::Gen, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                // mix normal, large, tiny-subnormal, and zero magnitudes
+                match g.usize_in(0, 9) {
+                    0 => g.f32_in(-1e15, 1e15),
+                    1 => g.f32_in(-1e-40, 1e-40),
+                    2 => 0.0,
+                    _ => g.f32_in(-2.0, 2.0),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn select_resolves_overrides() {
+        assert_eq!(select(Some("scalar")), KernelKind::Scalar);
+        let auto = select(None);
+        let simd = select(Some("simd"));
+        assert_eq!(auto, simd);
+        if !simd_available() {
+            assert_eq!(simd, KernelKind::Scalar);
+        }
+        assert_eq!(select(Some("")), auto);
+    }
+
+    #[test]
+    #[should_panic(expected = "TEMBED_KERNEL")]
+    fn select_rejects_unknown_override() {
+        select(Some("avx512"));
+    }
+
+    #[test]
+    fn names_are_consistent() {
+        assert_eq!(kind_name(KernelKind::Scalar), "scalar");
+        assert!(["scalar", "avx2+fma", "neon"].contains(&kind_name(KernelKind::Simd)));
+        assert!(["scalar", "avx2+fma", "neon"].contains(&active_name()));
+    }
+
+    #[test]
+    fn dot_bit_identical_scalar_vs_simd() {
+        forall(60, 11, |g| {
+            let d = *g.pick(&DIMS);
+            let a = gen_row(g, d);
+            let b = gen_row(g, d);
+            let s = dot_as(KernelKind::Scalar, &a, &b);
+            let v = dot_as(KernelKind::Simd, &a, &b);
+            assert_eq!(
+                s.to_bits(),
+                v.to_bits(),
+                "dot parity broke at d={d}: scalar {s} vs simd {v}"
+            );
+        });
+    }
+
+    #[test]
+    fn axpy_bit_identical_scalar_vs_simd() {
+        forall(60, 12, |g| {
+            let d = *g.pick(&DIMS);
+            let alpha = g.f32_in(-3.0, 3.0);
+            let x = gen_row(g, d);
+            let y0 = gen_row(g, d);
+            let mut ys = y0.clone();
+            let mut yv = y0;
+            axpy_as(KernelKind::Scalar, alpha, &x, &mut ys);
+            axpy_as(KernelKind::Simd, alpha, &x, &mut yv);
+            for (k, (s, v)) in ys.iter().zip(&yv).enumerate() {
+                assert_eq!(
+                    s.to_bits(),
+                    v.to_bits(),
+                    "axpy parity broke at d={d} lane {k}: {s} vs {v}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_scalar_matches_per_row_dot_bitwise() {
+        forall(40, 13, |g| {
+            let d = *g.pick(&DIMS);
+            let n = g.usize_in(1, 7);
+            let rows = gen_row(g, n * d);
+            let x = gen_row(g, d);
+            let mut out = vec![0.0f32; n];
+            gemv_as(KernelKind::Scalar, &rows, d, &x, &mut out);
+            for r in 0..n {
+                let want = dot_as(KernelKind::Scalar, &rows[r * d..(r + 1) * d], &x);
+                assert_eq!(out[r].to_bits(), want.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_simd_within_documented_tolerance() {
+        forall(60, 14, |g| {
+            let d = *g.pick(&DIMS);
+            let n = g.usize_in(1, 9); // crosses the 4-row blocking boundary
+            let rows = gen_row(g, n * d);
+            let x = gen_row(g, d);
+            let mut s = vec![0.0f32; n];
+            let mut v = vec![0.0f32; n];
+            gemv_as(KernelKind::Scalar, &rows, d, &x, &mut s);
+            gemv_as(KernelKind::Simd, &rows, d, &x, &mut v);
+            for r in 0..n {
+                let abs_sum: f64 = rows[r * d..(r + 1) * d]
+                    .iter()
+                    .zip(&x)
+                    .map(|(a, b)| (*a as f64 * *b as f64).abs())
+                    .sum();
+                let tol = gemv_tolerance(d, abs_sum as f32);
+                assert!(
+                    (s[r] - v[r]).abs() <= tol,
+                    "gemv drift beyond bound at d={d} row {r}: scalar {} simd {} tol {tol}",
+                    s[r],
+                    v[r]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn subnormal_and_extreme_inputs_stay_exact_for_exact_ops() {
+        // hand-picked worst cases: pure subnormals, huge magnitudes, and
+        // a d that exercises both vector and tail lanes
+        let d = 11;
+        let a: Vec<f32> = (0..d)
+            .map(|i| if i % 2 == 0 { 1.0e-42 } else { -3.4e15 })
+            .collect();
+        let b: Vec<f32> = (0..d)
+            .map(|i| if i % 3 == 0 { -7.7e-41 } else { 2.9e14 })
+            .collect();
+        let s = dot_as(KernelKind::Scalar, &a, &b);
+        let v = dot_as(KernelKind::Simd, &a, &b);
+        assert_eq!(s.to_bits(), v.to_bits());
+        let mut ys = b.clone();
+        let mut yv = b.clone();
+        axpy_as(KernelKind::Scalar, 1.0e20, &a, &mut ys);
+        axpy_as(KernelKind::Simd, 1.0e20, &a, &mut yv);
+        for (x, y) in ys.iter().zip(&yv) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn gemv_handles_degenerate_shapes() {
+        // no rows at all
+        let mut out: Vec<f32> = vec![];
+        gemv_as(KernelKind::Simd, &[], 4, &[0.0; 4], &mut out);
+        assert!(out.is_empty());
+        // d = 1 single row
+        let mut out = vec![0.0f32];
+        gemv_as(KernelKind::Simd, &[2.0], 1, &[3.0], &mut out);
+        assert_eq!(out[0], 6.0);
+    }
+}

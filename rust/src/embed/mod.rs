@@ -4,6 +4,7 @@
 //! compute backend and numerics oracle.
 
 pub mod checkpoint;
+pub mod kernels;
 pub mod sgns;
 
 use crate::partition::HierarchyPlan;
@@ -62,11 +63,10 @@ impl EmbeddingStore {
         dst.copy_from_slice(data);
     }
 
-    /// Dot-product score of an edge (the link-prediction scorer).
+    /// Dot-product score of an edge (the link-prediction scorer), on the
+    /// active `kernels` dispatch.
     pub fn score(&self, u: u32, v: u32) -> f32 {
-        let a = self.vertex_row(u as usize);
-        let b = self.context_row(v as usize);
-        a.iter().zip(b).map(|(x, y)| x * y).sum()
+        kernels::dot(self.vertex_row(u as usize), self.context_row(v as usize))
     }
 
     pub fn storage_bytes(&self) -> u64 {

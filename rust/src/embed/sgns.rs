@@ -10,6 +10,21 @@
 //! The integration test `pjrt_equivalence` checks `GatheredBackend`
 //! against the AOT executable, which pytest checks against the pure-jnp
 //! oracle — closing the three-layer correctness loop.
+//!
+//! All row arithmetic (positive dot, negative-block GEMV, gradient
+//! axpy) goes through [`crate::embed::kernels`] — the runtime-dispatched
+//! scalar/AVX2+FMA/NEON layer. A group's shared negative rows are
+//! gathered into a contiguous `[negs, d]` block once per `GROUP_SIZE`
+//! samples and every sample of the group scores against that snapshot
+//! via one GEMV, so negatives are loaded once per group instead of once
+//! per (sample, negative) pair. Consequence of the snapshot: if an
+//! eagerly-updated positive row also appears as a negative row *of the
+//! same group*, the update becomes visible to the *next* group rather
+//! than mid-group (the buffered-negative treatment `GatheredBackend`
+//! already uses); tests pin native-vs-gathered agreement on distinct
+//! rows and scalar-vs-SIMD agreement always.
+
+use crate::embed::kernels::{self, KernelKind};
 
 /// Samples per negative-sharing group. Must match
 /// `python/compile/kernels/sgns.py::GROUP_SIZE`.
@@ -142,54 +157,45 @@ fn log_sigmoid_fast(x: f32) -> f32 {
     }
 }
 
-/// Dot product of two equal-length rows. Four independent accumulators
-/// over 8-wide chunks: strict left-to-right float addition blocks SIMD, so
-/// we hand LLVM a reassociated form it can vectorize (≈3× on d=128).
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let ac = a.chunks_exact(8);
-    let bc = b.chunks_exact(8);
-    let (ra, rb) = (ac.remainder(), bc.remainder());
-    for (ca, cb) in ac.zip(bc) {
-        for k in 0..8 {
-            acc[k] += ca[k] * cb[k];
-        }
-    }
-    let mut tail = 0.0f32;
-    for (x, y) in ra.iter().zip(rb) {
-        tail += x * y;
-    }
-    acc.iter().sum::<f32>() + tail
-}
-
-/// `y += alpha * x` over rows.
-#[inline]
-fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
-}
-
 /// Pure-Rust backend (no PJRT): eager per-sample application of the
 /// vertex/positive updates, buffered group-negative updates. Fast path —
-/// all inner loops are contiguous-row dot/axpy so they auto-vectorize
-/// (see EXPERIMENTS.md §Perf for the before/after).
-#[derive(Debug, Default, Clone)]
+/// all row arithmetic dispatches through `embed::kernels` (AVX2+FMA or
+/// NEON when the host has them, `TEMBED_KERNEL` to override; see
+/// docs/PERF.md for the dispatch matrix and parity contract).
+#[derive(Debug, Clone)]
 pub struct NativeBackend {
+    /// which kernel implementation row math runs on
+    kernel: KernelKind,
     /// scratch: negative-gradient accumulator `[G * negs, d]`
     gcn: Vec<f32>,
-    /// scratch: per-sample negative logits `[negs]`
+    /// scratch: per-sample negative logits (pre-sigmoid scores) `[negs]`
     neg_logit: Vec<f32>,
     /// scratch: the sample's vertex-gradient row `[d]`
     gv_row: Vec<f32>,
+    /// scratch: the current group's gathered negative rows `[negs, d]`
+    neg_rows: Vec<f32>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::with_kernel(kernels::active())
+    }
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Backend pinned to an explicit kernel (A/B benches, parity tests).
+    pub fn with_kernel(kernel: KernelKind) -> Self {
+        NativeBackend {
+            kernel,
+            gcn: Vec::new(),
+            neg_logit: Vec::new(),
+            gv_row: Vec::new(),
+            neg_rows: Vec::new(),
+        }
     }
 }
 
@@ -207,59 +213,59 @@ impl StepBackend for NativeBackend {
         lr: f32,
     ) -> f32 {
         let d = dim;
+        let k = self.kernel;
         debug_assert_eq!(vn.len() % negs.max(1), 0);
         self.gcn.clear();
         self.gcn.resize(vn.len() * d, 0.0);
         self.neg_logit.resize(negs, 0.0);
         self.gv_row.resize(d, 0.0);
+        self.neg_rows.resize(negs * d, 0.0);
         let mut loss = 0.0f32;
+        let mut cur_group = usize::MAX;
 
         for i in 0..real.min(u.len()) {
             let group = i / GROUP_SIZE;
-            let gvn = &vn[group * negs..(group + 1) * negs];
+            if group != cur_group {
+                cur_group = group;
+                // gather the group's shared negative rows once — the GEMV
+                // operand every sample of the group scores against
+                for (j, &vnj) in vn[group * negs..(group + 1) * negs].iter().enumerate() {
+                    let cj = vnj as usize * d;
+                    self.neg_rows[j * d..(j + 1) * d].copy_from_slice(&context[cj..cj + d]);
+                }
+            }
             let ui = u[i] as usize * d;
             let vi = vp[i] as usize * d;
             let vb = &vertex[ui..ui + d];
             // pos logit
-            let pos = dot(vb, &context[vi..vi + d]);
+            let pos = kernels::dot_as(k, vb, &context[vi..vi + d]);
             let gpos = sigmoid_fast(pos) - 1.0;
             loss += -log_sigmoid_fast(pos);
             // gv_row = gpos * cp  (start the vertex-gradient accumulator)
             for (g, c) in self.gv_row.iter_mut().zip(&context[vi..vi + d]) {
                 *g = gpos * c;
             }
-            // negatives: row-wise dot + two axpy per negative
+            // negatives: one blocked GEMV scores vb against every shared
+            // negative row of the group in a single pass
+            kernels::gemv_as(k, &self.neg_rows, d, vb, &mut self.neg_logit);
             let gbase = group * negs;
-            for (j, &vnj) in gvn.iter().enumerate() {
-                let cj = vnj as usize * d;
-                let cn = &context[cj..cj + d];
-                let s = dot(vb, cn);
+            for j in 0..negs {
+                let s = self.neg_logit[j];
                 let gneg = sigmoid_fast(s);
-                self.neg_logit[j] = gneg;
                 loss += -log_sigmoid_fast(-s);
-                axpy(gneg, cn, &mut self.gv_row);
-                axpy(gneg, vb, &mut self.gcn[(gbase + j) * d..(gbase + j + 1) * d]);
+                kernels::axpy_as(k, gneg, &self.neg_rows[j * d..(j + 1) * d], &mut self.gv_row);
+                kernels::axpy_as(k, gneg, vb, &mut self.gcn[(gbase + j) * d..(gbase + j + 1) * d]);
             }
             // eager updates: context[vp] -= lr*gpos*vb ; vertex[u] -= lr*gv
-            // (vb's shared borrow ends above; re-slice mutably below)
-            let (gpos_lr, lr_) = (lr * gpos, lr);
-            {
-                let cp = &mut context[vi..vi + d];
-                for (c, &v) in cp.iter_mut().zip(vertex[ui..ui + d].iter()) {
-                    *c -= gpos_lr * v;
-                }
-            }
-            {
-                let vrow = &mut vertex[ui..ui + d];
-                for (v, g) in vrow.iter_mut().zip(&self.gv_row) {
-                    *v -= lr_ * g;
-                }
-            }
+            // (vb's shared borrow ends above; re-slice mutably below —
+            // `c - a*v == c + (-a)*v` exactly, so axpy keeps old bits)
+            kernels::axpy_as(k, -(lr * gpos), &vertex[ui..ui + d], &mut context[vi..vi + d]);
+            kernels::axpy_as(k, -lr, &self.gv_row, &mut vertex[ui..ui + d]);
         }
         // scatter the buffered group-negative gradients
         for (slot, &vnj) in vn.iter().enumerate() {
             let cj = vnj as usize * d;
-            axpy(-lr, &self.gcn[slot * d..(slot + 1) * d], &mut context[cj..cj + d]);
+            kernels::axpy_as(k, -lr, &self.gcn[slot * d..(slot + 1) * d], &mut context[cj..cj + d]);
         }
         loss
     }
@@ -272,9 +278,41 @@ impl StepBackend for NativeBackend {
 /// Batch-gathered step mirroring the L2 semantics *exactly* (all gradients
 /// from pre-update embeddings, then one scatter-add pass). `NativeBackend`
 /// applies vertex/pos updates eagerly, which differs only when a minibatch
-/// repeats a row; tests bound the drift and both converge.
+/// repeats a row; tests bound the drift and both converge. Runs on the
+/// process-wide active kernel; [`step_gathered_with`] pins one.
 #[allow(clippy::too_many_arguments)]
 pub fn step_gathered(
+    vertex: &mut [f32],
+    context: &mut [f32],
+    dim: usize,
+    u: &[i32],
+    vp: &[i32],
+    vn: &[i32],
+    negs: usize,
+    real: usize,
+    lr: f32,
+) -> f32 {
+    step_gathered_with(
+        kernels::active(),
+        vertex,
+        context,
+        dim,
+        u,
+        vp,
+        vn,
+        negs,
+        real,
+        lr,
+    )
+}
+
+/// [`step_gathered`] pinned to an explicit kernel (A/B benches, parity
+/// tests). Because nothing is updated until the scatter pass, gathering
+/// a group's negative rows into the GEMV block is exact here — no
+/// snapshot semantics to document.
+#[allow(clippy::too_many_arguments)]
+pub fn step_gathered_with(
+    kind: KernelKind,
     vertex: &mut [f32],
     context: &mut [f32],
     dim: usize,
@@ -291,51 +329,49 @@ pub fn step_gathered(
     let mut gv = vec![0.0f32; b * d];
     let mut gcp = vec![0.0f32; b * d];
     let mut gcn = vec![0.0f32; vn.len() * d];
+    let mut neg_rows = vec![0.0f32; negs * d];
+    let mut neg_score = vec![0.0f32; negs];
+    let mut cur_group = usize::MAX;
     for i in 0..b {
         let group = i / GROUP_SIZE;
-        let gvn = &vn[group * negs..(group + 1) * negs];
+        if group != cur_group {
+            cur_group = group;
+            for (j, &vnj) in vn[group * negs..(group + 1) * negs].iter().enumerate() {
+                let cj = vnj as usize * d;
+                neg_rows[j * d..(j + 1) * d].copy_from_slice(&context[cj..cj + d]);
+            }
+        }
         let ui = u[i] as usize * d;
         let vi = vp[i] as usize * d;
-        let mut pos = 0.0;
-        for k in 0..d {
-            pos += vertex[ui + k] * context[vi + k];
-        }
+        let vb = &vertex[ui..ui + d];
+        let pos = kernels::dot_as(kind, vb, &context[vi..vi + d]);
         let gpos = sigmoid(pos) - 1.0;
         loss += -log_sigmoid(pos);
-        for (j, &vnj) in gvn.iter().enumerate() {
-            let cj = vnj as usize * d;
-            let mut s = 0.0;
-            for k in 0..d {
-                s += vertex[ui + k] * context[cj + k];
-            }
+        kernels::gemv_as(kind, &neg_rows, d, vb, &mut neg_score);
+        for (j, &s) in neg_score.iter().enumerate() {
             let gneg = sigmoid(s);
             loss += -log_sigmoid(-s);
-            for k in 0..d {
-                gv[i * d + k] += gneg * context[cj + k];
-                gcn[(group * negs + j) * d + k] += gneg * vertex[ui + k];
-            }
+            kernels::axpy_as(kind, gneg, &neg_rows[j * d..(j + 1) * d], &mut gv[i * d..(i + 1) * d]);
+            kernels::axpy_as(
+                kind,
+                gneg,
+                vb,
+                &mut gcn[(group * negs + j) * d..(group * negs + j + 1) * d],
+            );
         }
-        for k in 0..d {
-            gv[i * d + k] += gpos * context[vi + k];
-            gcp[i * d + k] = gpos * vertex[ui + k];
-        }
+        kernels::axpy_as(kind, gpos, &context[vi..vi + d], &mut gv[i * d..(i + 1) * d]);
+        kernels::axpy_as(kind, gpos, vb, &mut gcp[i * d..(i + 1) * d]);
     }
-    // scatter-add
+    // scatter-add (`x - lr*g == x + (-lr)*g` exactly)
     for i in 0..b {
         let o = u[i] as usize * d;
-        for k in 0..d {
-            vertex[o + k] -= lr * gv[i * d + k];
-        }
+        kernels::axpy_as(kind, -lr, &gv[i * d..(i + 1) * d], &mut vertex[o..o + d]);
         let o = vp[i] as usize * d;
-        for k in 0..d {
-            context[o + k] -= lr * gcp[i * d + k];
-        }
+        kernels::axpy_as(kind, -lr, &gcp[i * d..(i + 1) * d], &mut context[o..o + d]);
     }
     for (slot, &vnj) in vn.iter().enumerate() {
         let o = vnj as usize * d;
-        for k in 0..d {
-            context[o + k] -= lr * gcn[slot * d + k];
-        }
+        kernels::axpy_as(kind, -lr, &gcn[slot * d..(slot + 1) * d], &mut context[o..o + d]);
     }
     loss
 }
@@ -484,6 +520,84 @@ mod tests {
         assert_eq!(groups_for(32), 1);
         assert_eq!(groups_for(33), 2);
         assert_eq!(groups_for(1024), 32);
+    }
+
+    #[test]
+    fn property_native_step_scalar_vs_simd_agree() {
+        // dot/axpy are bit-exact across kernels; the GEMV negative scores
+        // are ULP-tolerant, so one full step may drift by a hair — bound
+        // it tightly (kernels.rs pins the per-op contract itself)
+        forall(25, 78, |g| {
+            let d = *g.pick(&[3usize, 8, 17, 32]);
+            let p = 120;
+            let b = g.usize_in(1, 2 * GROUP_SIZE + 5); // crosses group bounds
+            let negs = g.usize_in(1, 6);
+            let mut rng = Rng::new(g.u64());
+            let u: Vec<i32> = (0..b).map(|_| rng.index(p) as i32).collect();
+            let vp: Vec<i32> = (0..b).map(|_| rng.index(p) as i32).collect();
+            let vn: Vec<i32> =
+                (0..groups_for(b) * negs).map(|_| rng.index(p) as i32).collect();
+            let (mut v1, mut c1) = setup(p, d, g.u64());
+            let (mut v2, mut c2) = (v1.clone(), c1.clone());
+            let lr = g.f32_in(0.0, 0.3);
+            let mut sb = NativeBackend::with_kernel(KernelKind::Scalar);
+            let mut vb = NativeBackend::with_kernel(KernelKind::Simd);
+            let l1 = sb.step(&mut v1, &mut c1, d, &u, &vp, &vn, negs, b, lr);
+            let l2 = vb.step(&mut v2, &mut c2, d, &u, &vp, &vn, negs, b, lr);
+            assert!(
+                (l1 - l2).abs() <= 1e-3 * l1.abs().max(1.0),
+                "loss drift: scalar {l1} vs simd {l2}"
+            );
+            for (a, b_) in v1.iter().zip(&v2).chain(c1.iter().zip(&c2)) {
+                assert!((a - b_).abs() < 2e-5, "model drift {a} vs {b_}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_gathered_scalar_vs_simd_agree() {
+        forall(25, 79, |g| {
+            let d = *g.pick(&[2usize, 9, 16, 33]);
+            let p = 100;
+            let b = g.usize_in(1, GROUP_SIZE + 3);
+            let negs = g.usize_in(1, 4);
+            let mut rng = Rng::new(g.u64());
+            let u: Vec<i32> = (0..b).map(|_| rng.index(p) as i32).collect();
+            let vp: Vec<i32> = (0..b).map(|_| rng.index(p) as i32).collect();
+            let vn: Vec<i32> =
+                (0..groups_for(b) * negs).map(|_| rng.index(p) as i32).collect();
+            let (mut v1, mut c1) = setup(p, d, g.u64());
+            let (mut v2, mut c2) = (v1.clone(), c1.clone());
+            let lr = g.f32_in(0.0, 0.3);
+            let l1 = step_gathered_with(
+                KernelKind::Scalar,
+                &mut v1,
+                &mut c1,
+                d,
+                &u,
+                &vp,
+                &vn,
+                negs,
+                b,
+                lr,
+            );
+            let l2 = step_gathered_with(
+                KernelKind::Simd,
+                &mut v2,
+                &mut c2,
+                d,
+                &u,
+                &vp,
+                &vn,
+                negs,
+                b,
+                lr,
+            );
+            assert!((l1 - l2).abs() <= 1e-3 * l1.abs().max(1.0));
+            for (a, b_) in v1.iter().zip(&v2).chain(c1.iter().zip(&c2)) {
+                assert!((a - b_).abs() < 2e-5);
+            }
+        });
     }
 
     #[test]

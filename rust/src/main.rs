@@ -192,6 +192,10 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         graph.num_edges(),
         graph.degree_stats().gini
     );
+    println!(
+        "sgns kernel: {} (override with TEMBED_KERNEL=scalar|simd; see docs/PERF.md)",
+        tembed::embed::kernels::active_name()
+    );
     let fixed_edges = matches!(flags.get("samples"), Some("edges"));
     tembed::ensure!(
         cfg.peer_list().len() != 1,

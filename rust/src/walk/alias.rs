@@ -2,8 +2,31 @@
 //!
 //! Used by the negative sampler (unigram^0.75 over shard-local degrees),
 //! degree-weighted walk starts, and the Chung–Lu generator.
+//!
+//! # Parallel, deterministic build
+//!
+//! GraphVite treats alias-table construction as a first-class parallel
+//! stage, and at paper scale it is: the unigram path spends nearly all
+//! its time in `powf`, and the O(n) scan (sum, scale, small/large
+//! classification) dominates the rest. Those embarrassingly parallel
+//! legs fan out over `util::pool` threads; only the final Vose pairing
+//! loop — trivial per element and inherently order-dependent — stays
+//! serial.
+//!
+//! Determinism is part of the contract: all reductions are **blocked at
+//! a fixed `ALIAS_BLOCK`-element granularity** (partial sums computed
+//! per block, combined in block order; per-block small/large lists
+//! concatenated in block order), so the table is bit-identical for any
+//! thread count, including the serial build — pinned by the
+//! `parallel_build_bit_identical_to_serial` property test.
 
+use crate::util::pool;
 use crate::util::Rng;
+
+/// Fixed reduction granularity of the parallel build. Independent of
+/// thread count by design — this, not the thread split, defines the
+/// float-summation order.
+const ALIAS_BLOCK: usize = 4096;
 
 /// Precomputed alias table over a weight vector.
 #[derive(Debug, Clone)]
@@ -15,27 +38,86 @@ pub struct AliasTable {
 impl AliasTable {
     /// Build from non-negative weights. Zero-total weight falls back to
     /// uniform (callers may legitimately hand an all-isolated shard).
+    /// Parallelizes the scan legs over the default thread pool; see the
+    /// module docs for the determinism argument.
     pub fn new(weights: &[f64]) -> Self {
+        Self::with_threads(weights, pool::default_threads())
+    }
+
+    /// [`AliasTable::new`] with an explicit thread count. The result is
+    /// bit-identical for every `threads` value (fixed-block reductions);
+    /// `threads <= 1` — or any input of at most one block — takes a
+    /// spawn-free serial path, so tiny per-group tables (the Chung–Lu
+    /// generator builds thousands) pay no scope overhead.
+    pub fn with_threads(weights: &[f64], threads: usize) -> Self {
         let n = weights.len();
         assert!(n > 0, "alias table over empty weights");
-        let total: f64 = weights.iter().sum();
-        let scaled: Vec<f64> = if total <= 0.0 {
-            vec![1.0; n]
-        } else {
-            weights.iter().map(|w| w * n as f64 / total).collect()
+        let nblocks = crate::util::ceil_div(n, ALIAS_BLOCK);
+        let parallel = threads > 1 && nblocks > 1;
+        let block = |b: usize| (b * ALIAS_BLOCK, ((b + 1) * ALIAS_BLOCK).min(n));
+
+        // 1. total weight: per-block partial sums, combined in block order
+        let block_sum = |b: usize| {
+            let (lo, hi) = block(b);
+            let mut s = 0.0f64;
+            for &w in &weights[lo..hi] {
+                s += w;
+            }
+            s
         };
-        let mut prob = vec![0f32; n];
-        let mut alias = vec![0u32; n];
-        let mut small: Vec<usize> = Vec::new();
-        let mut large: Vec<usize> = Vec::new();
-        let mut p = scaled;
-        for (i, &v) in p.iter().enumerate() {
-            if v < 1.0 {
-                small.push(i);
-            } else {
-                large.push(i);
+        let partials: Vec<f64> = if parallel {
+            pool::parallel_map(nblocks, threads, block_sum)
+        } else {
+            (0..nblocks).map(block_sum).collect()
+        };
+        let total: f64 = partials.iter().sum();
+
+        // 2. scale to mean 1 (element-wise — trivially deterministic)
+        let mut p = vec![0f64; n];
+        if total <= 0.0 {
+            p.fill(1.0);
+        } else if parallel {
+            pool::parallel_slices(&mut p, threads, |_, off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = weights[off + i] * n as f64 / total;
+                }
+            });
+        } else {
+            for (i, v) in p.iter_mut().enumerate() {
+                *v = weights[i] * n as f64 / total;
             }
         }
+
+        // 3. small/large classification: per-block lists, concatenated in
+        // block order == the serial 0..n push order
+        let classify = |b: usize| {
+            let (lo, hi) = block(b);
+            let mut small = Vec::new();
+            let mut large = Vec::new();
+            for (i, v) in p[lo..hi].iter().enumerate() {
+                if *v < 1.0 {
+                    small.push(lo + i);
+                } else {
+                    large.push(lo + i);
+                }
+            }
+            (small, large)
+        };
+        let lists: Vec<(Vec<usize>, Vec<usize>)> = if parallel {
+            pool::parallel_map(nblocks, threads, classify)
+        } else {
+            (0..nblocks).map(classify).collect()
+        };
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (s, l) in lists {
+            small.extend(s);
+            large.extend(l);
+        }
+
+        // 4. Vose pairing — inherently order-dependent, stays serial
+        let mut prob = vec![0f32; n];
+        let mut alias = vec![0u32; n];
         loop {
             match (small.pop(), large.pop()) {
                 (Some(s), Some(l)) => {
@@ -60,9 +142,29 @@ impl AliasTable {
     }
 
     /// Unigram^power table from integer degrees (word2vec uses power=0.75).
+    /// The `powf` map — where a paper-scale build spends nearly all its
+    /// time — fans out over the default thread pool.
     pub fn unigram(degrees: &[u32], power: f64) -> Self {
-        let w: Vec<f64> = degrees.iter().map(|&d| (d as f64).powf(power)).collect();
-        Self::new(&w)
+        Self::unigram_with_threads(degrees, power, pool::default_threads())
+    }
+
+    /// [`AliasTable::unigram`] with an explicit thread count (A/B
+    /// benches; bit-identical for every `threads` — `powf` is
+    /// element-wise, and the build reduction is fixed-block).
+    pub fn unigram_with_threads(degrees: &[u32], power: f64, threads: usize) -> Self {
+        let mut w = vec![0f64; degrees.len()];
+        if threads > 1 && degrees.len() > ALIAS_BLOCK {
+            pool::parallel_slices(&mut w, threads, |_, off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (degrees[off + i] as f64).powf(power);
+                }
+            });
+        } else {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = (degrees[i] as f64).powf(power);
+            }
+        }
+        Self::with_threads(&w, threads)
     }
 
     #[inline]
@@ -153,6 +255,32 @@ mod tests {
             for _ in 0..100 {
                 assert!(t.sample(&mut rng) < n);
             }
+        });
+    }
+
+    #[test]
+    fn parallel_build_bit_identical_to_serial() {
+        // sizes straddling the ALIAS_BLOCK boundary; weights from fixed
+        // seeds so failures replay
+        forall(12, 7, |g| {
+            let n = *g.pick(&[1usize, 100, 4095, 4096, 4097, 10_000]);
+            let w: Vec<f64> = (0..n).map(|_| g.f64() * 10.0).collect();
+            let serial = AliasTable::with_threads(&w, 1);
+            let parallel = AliasTable::with_threads(&w, 8);
+            assert_eq!(serial.prob, parallel.prob, "prob diverged at n={n}");
+            assert_eq!(serial.alias, parallel.alias, "alias diverged at n={n}");
+        });
+    }
+
+    #[test]
+    fn parallel_unigram_bit_identical_to_serial() {
+        forall(8, 8, |g| {
+            let n = *g.pick(&[257usize, 4097, 9000]);
+            let degrees: Vec<u32> = (0..n).map(|_| g.usize_in(0, 500) as u32).collect();
+            let serial = AliasTable::unigram_with_threads(&degrees, 0.75, 1);
+            let parallel = AliasTable::unigram_with_threads(&degrees, 0.75, 6);
+            assert_eq!(serial.prob, parallel.prob);
+            assert_eq!(serial.alias, parallel.alias);
         });
     }
 

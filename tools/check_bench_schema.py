@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Check a hotpath bench snapshot against a committed baseline.
+
+Schema-and-coverage only — deliberately NO wall-clock assertions (CI
+runners are far too noisy to gate on timings). Verifies:
+
+  * both files parse as JSON and declare schema "tembed-hotpath-v1"
+  * the top-level fields (kernel, arch, host, quick, rows) are present
+  * every (section, name, unit) metric key in the baseline also exists
+    in the candidate, so a harness refactor cannot silently drop or
+    rename a tracked row
+  * every value is a finite number and no metric key is duplicated
+
+Usage: check_bench_schema.py BASELINE.json CANDIDATE.json
+
+Regenerating the committed baselines is documented in docs/PERF.md.
+"""
+
+import json
+import math
+import sys
+
+SCHEMA = "tembed-hotpath-v1"
+
+
+def load(path):
+    """Parse one snapshot, validate its shape, return {key: value}."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        sys.exit(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    for field in ("kernel", "arch", "host", "quick", "rows"):
+        if field not in doc:
+            sys.exit(f"{path}: missing top-level field {field!r}")
+    keys = {}
+    for row in doc["rows"]:
+        for field in ("section", "name", "value", "unit"):
+            if field not in row:
+                sys.exit(f"{path}: row missing {field!r}: {row}")
+        value = row["value"]
+        if not isinstance(value, (int, float)) or isinstance(value, bool) or not math.isfinite(value):
+            sys.exit(f"{path}: non-finite value for {row['name']!r}: {value!r}")
+        key = (row["section"], row["name"], row["unit"])
+        if key in keys:
+            sys.exit(f"{path}: duplicate metric key {key}")
+        keys[key] = value
+    if not keys:
+        sys.exit(f"{path}: no rows")
+    return keys
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    base = load(sys.argv[1])
+    cand = load(sys.argv[2])
+    missing = sorted(k for k in base if k not in cand)
+    if missing:
+        for k in missing:
+            print(f"missing in candidate: {k}", file=sys.stderr)
+        sys.exit(f"{len(missing)} baseline metric(s) absent from {sys.argv[2]}")
+    print(
+        f"ok: all {len(base)} baseline metrics present in {sys.argv[2]} "
+        f"({len(cand)} rows total)"
+    )
+
+
+if __name__ == "__main__":
+    main()
