@@ -3,7 +3,8 @@
 //! (dot/axpy/GEMV, scalar-vs-simd A/B), the native SGNS step, the PJRT
 //! step (when artifacts exist), minibatch assembly, negative sampling,
 //! alias-table builds (serial vs parallel), walk generation, episode
-//! bucketing, the executor stage-window sweep, and checkpoint writes.
+//! bucketing, the executor stage-window sweep, the episode-pipeline A/B
+//! (prefetch off vs depth 1), and checkpoint writes.
 //!
 //! Every measurement goes through one [`Report::add`] call, which both
 //! prints the human table line and records the row for the JSON
@@ -361,6 +362,47 @@ fn main() {
             format!("executor epoch, stage_window={label} peak staged"),
             r.metrics.count("exec_peak_staged") as f64,
             "buffers",
+        );
+    }
+
+    // --- episode pipeline A/B: the serial reference order (prefetch=0:
+    // generate → split → train on one thread) against the async pipeline
+    // (prefetch=1: producer thread stages pools + walks ahead through the
+    // bounded channel while training consumes — docs/PIPELINE.md). Both
+    // runs train the identical model (bit-parity is pinned by
+    // tests/episode_pipeline.rs); the delta here is pure overlap. Two
+    // epochs with walk_epochs=1 so the walk-ahead generation actually
+    // runs inside the measured window.
+    for prefetch in [0usize, 1] {
+        let mut rng = Rng::new(77);
+        let (edges, _) = tembed::gen::dcsbm(2_000, 40_000, 8, 0.8, 2.3, &mut rng);
+        let small = tembed::gen::to_graph(2_000, edges);
+        let cfg = tembed::config::TrainConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            subparts: 2,
+            dim: 32,
+            walk_length: 5,
+            walks_per_node: if quick { 1 } else { 4 },
+            window: 2,
+            episode_size: 50_000,
+            walk_epochs: 1,
+            epochs: 2,
+            episode_prefetch: prefetch,
+            ..tembed::config::TrainConfig::default()
+        };
+        let mut driver =
+            tembed::coordinator::driver::Driver::new(&small, cfg, None).expect("driver");
+        let t = Instant::now();
+        let mut trained = 0u64;
+        for e in 0..2 {
+            trained += driver.run_epoch(e).expect("epoch").samples;
+        }
+        rep.add(
+            "episodes",
+            format!("episode pipeline 2 epochs, prefetch={prefetch}"),
+            trained as f64 / t.elapsed().as_secs_f64(),
+            "samples/s",
         );
     }
 

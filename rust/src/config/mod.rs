@@ -64,6 +64,14 @@ pub struct TrainConfig {
     /// below that worker count are clamped up (see
     /// [`TrainConfig::effective_stage_window`]).
     pub stage_window: Option<usize>,
+    /// Episode-pipeline depth: how many sealed episodes the walk-producer
+    /// thread may run ahead of training (`0` = off, the serial reference
+    /// loop). With any depth ≥ 1 the producer also generates the *next*
+    /// walk generation while the current epoch trains, and the executor's
+    /// feeder consumes head sub-parts prefetched across the episode
+    /// boundary. Any depth is bit-identical to `0` — the parity contract
+    /// and the deadlock-freedom argument live in `docs/PIPELINE.md`.
+    pub episode_prefetch: usize,
     pub episode_size: usize,
     pub epochs: usize,
     pub pipeline: bool,
@@ -108,6 +116,7 @@ impl Default for TrainConfig {
             lr_decay: false,
             subparts: 4,
             stage_window: None,
+            episode_prefetch: 1,
             episode_size: 2_000_000,
             epochs: 1,
             pipeline: true,
@@ -164,8 +173,10 @@ impl TrainConfig {
     /// the sample stream, or the update math — stamped into checkpoint
     /// manifests so `--resume` under a changed schedule is refused at
     /// startup instead of silently training the wrong episode subset.
-    /// Deliberately excludes `epochs` (extending a run is legitimate) and
-    /// the ckpt/cluster-address fields (they do not touch the math).
+    /// Deliberately excludes `epochs` (extending a run is legitimate),
+    /// the ckpt/cluster-address fields (they do not touch the math), and
+    /// the overlap knobs `stage_window`/`episode_prefetch` (any setting is
+    /// bit-identical to any other — see `docs/PIPELINE.md` §parity).
     pub fn resume_digest(&self) -> u64 {
         const OFFSET: u64 = 0xcbf29ce484222325;
         const PRIME: u64 = 0x100000001b3;
@@ -269,6 +280,9 @@ impl TrainConfig {
                 );
                 self.stage_window = Some(w);
             }
+            // 0 is legal here (unlike stage_window): it selects the serial
+            // reference loop with no producer thread.
+            "schedule.episode_prefetch" => self.episode_prefetch = as_usize()?,
             "schedule.episode_size" => self.episode_size = as_usize()?,
             "schedule.epochs" => self.epochs = as_usize()?,
             "schedule.pipeline" => match value {
@@ -334,14 +348,14 @@ impl TrainConfig {
         format!(
             "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\nrank = {}\npeers = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
-             [schedule]\nsubparts = {}\n{}episode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
+             [schedule]\nsubparts = {}\n{}episode_prefetch = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
              [ckpt]\ndir = \"{}\"\ninterval = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
             self.nodes, self.gpus_per_node, self.hardware, self.rank, self.peers,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
-            self.subparts, stage_window, self.episode_size, self.epochs, self.pipeline,
-            self.socket_aware, self.executor,
+            self.subparts, stage_window, self.episode_prefetch, self.episode_size,
+            self.epochs, self.pipeline, self.socket_aware, self.executor,
             self.ckpt_dir, self.ckpt_interval,
             self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
             self.seed, self.threads,
@@ -489,14 +503,38 @@ mod tests {
     }
 
     #[test]
+    fn episode_prefetch_parses_allows_zero_and_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.episode_prefetch, 1, "overlap defaults on at depth 1");
+        // 0 = off is a legal value (the serial reference loop), unlike
+        // stage_window where 0 buffers cannot make progress
+        c.apply_cli("schedule.episode_prefetch=0").unwrap();
+        assert_eq!(c.episode_prefetch, 0);
+        c.apply_cli("schedule.episode_prefetch=2").unwrap();
+        assert_eq!(c.episode_prefetch, 2);
+        assert!(c.apply_cli("schedule.episode_prefetch=-1").is_err());
+        // render → parse round trip keeps the depth
+        let dir = std::env::temp_dir().join("tembed_cfg_prefetch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, c.render()).unwrap();
+        let back = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(back.episode_prefetch, 2);
+    }
+
+    #[test]
     fn resume_digest_tracks_schedule_fields_only() {
         let a = TrainConfig::default();
         let mut b = TrainConfig::default();
         assert_eq!(a.resume_digest(), b.resume_digest());
-        // extending a run and ckpt plumbing are resume-compatible
+        // extending a run, ckpt plumbing, and the overlap knobs are
+        // resume-compatible (any episode_prefetch/stage_window setting is
+        // bit-identical to any other — docs/PIPELINE.md §parity)
         b.epochs = 99;
         b.ckpt_dir = "/tmp/elsewhere".into();
         b.ckpt_interval = 7;
+        b.episode_prefetch = 0;
+        b.stage_window = Some(64);
         assert_eq!(a.resume_digest(), b.resume_digest());
         // anything that reshapes episodes or the math is not
         b.episode_size += 1;

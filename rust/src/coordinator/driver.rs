@@ -5,6 +5,17 @@
 //! while epoch e trains (decoupled engines), and walks are generated for
 //! `walk_epochs` epochs then *reused* across a longer training run
 //! (§V-C2's flexibility argument).
+//!
+//! With `schedule.episode_prefetch ≥ 1` the walk-for-next-epoch overlap
+//! is *real*, not just simulated: [`Driver::run_epoch_from`] spawns the
+//! episode producer thread ([`crate::walk::produce_episodes`]), which
+//! stages sealed episode pools through a bounded channel while the
+//! trainer consumes them, then — after the last pool is handed off —
+//! generates and augments the next walk generation on the same thread
+//! while the tail episodes train. `schedule.episode_prefetch = 0` keeps
+//! the serial reference loop. Both orders are bit-identical; the spec
+//! (state machine, ownership, deadlock-freedom, seeding contract) is
+//! `docs/PIPELINE.md`.
 
 use std::path::PathBuf;
 
@@ -148,8 +159,13 @@ impl<'g> Driver<'g> {
         epoch: usize,
         start_episode: usize,
     ) -> crate::Result<EpochReport> {
-        let mut samples = self.samples_for_epoch(epoch);
-        let mut report = self.trainer.train_epoch_from(&mut samples, epoch, start_episode)?;
+        let mut report = if self.cfg.episode_prefetch == 0 {
+            // serial reference order: generate → split → train, one thread
+            let mut samples = self.samples_for_epoch(epoch);
+            self.trainer.train_epoch_from(&mut samples, epoch, start_episode)?
+        } else {
+            self.run_epoch_overlapped(epoch, start_episode)?
+        };
         // decoupled-engine overlap on the simulated timeline
         if self.walk_sim_secs > report.sim_secs {
             report.metrics.add_secs("walk_stall", self.walk_sim_secs - report.sim_secs);
@@ -175,6 +191,118 @@ impl<'g> Driver<'g> {
         }
         if let Some(eff) = self.trainer.measured_overlap_efficiency() {
             report.metrics.add("exec_overlap_pct", (eff * 100.0).round() as u64);
+        }
+        Ok(report)
+    }
+
+    /// The pipelined epoch: a scoped producer thread splits the corpus,
+    /// builds episode pools, and streams them through a bounded channel of
+    /// depth `schedule.episode_prefetch` while the trainer consumes them
+    /// ([`Trainer::train_epoch_streamed`]). After the last pool is handed
+    /// off — i.e. while the tail episodes are still training — the same
+    /// thread generates and augments the *next* walk generation if the
+    /// coming epoch needs one, making the paper's walks-overlap-training
+    /// claim real wall-clock overlap rather than a simulated max.
+    ///
+    /// Metrics booked here: `pool_build` (staging seconds, overlapped past
+    /// the first `depth` episodes), `walk_gen_overlapped` (next-generation
+    /// walk+augment seconds run concurrently with training), and
+    /// `producer_join_stall` (the exposed remainder — how long training
+    /// waited for the producer after the last episode finished; ~0 when
+    /// the overlap fully hides generation).
+    ///
+    /// Bit-parity with the serial path holds by construction: the producer
+    /// runs the identical epoch-seeded split shuffle, pool building is
+    /// RNG-free, the trainer's worker RNGs advance only inside
+    /// `train_episode` in episode order, and the walk engine is
+    /// self-seeded per generation — see `docs/PIPELINE.md` §"Seeding and
+    /// bit-parity".
+    fn run_epoch_overlapped(
+        &mut self,
+        epoch: usize,
+        start_episode: usize,
+    ) -> crate::Result<EpochReport> {
+        // cold start: this epoch's own corpus is generated synchronously
+        // (the previous epoch's walk-ahead usually made this a cache hit)
+        let samples = self.samples_for_epoch(epoch);
+        let split_seed = self.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C);
+        let episode_size = self.cfg.episode_size;
+        let depth = self.cfg.episode_prefetch;
+        let plan = self.trainer.plan.clone();
+        // walk ahead only when the *next* epoch starts a fresh generation
+        // within the configured horizon (otherwise the cache already holds
+        // its corpus and the producer would waste a generation)
+        let walk_ahead = match &self.source {
+            SampleSource::Walks { engine_cfg, window } => {
+                let we = self.cfg.walk_epochs.max(1);
+                let next_gid = (epoch + 1) / we;
+                if epoch + 1 < self.cfg.epochs && next_gid != epoch / we {
+                    Some((engine_cfg.clone(), *window, next_gid))
+                } else {
+                    None
+                }
+            }
+            SampleSource::Fixed(_) => None,
+        };
+        let graph = self.graph;
+        let trainer = &mut self.trainer;
+        let (tx, rx) = std::sync::mpsc::sync_channel(depth);
+        let (result, join_secs, stats, ahead) = std::thread::scope(|s| {
+            let producer = s.spawn(move || {
+                let stats = crate::walk::produce_episodes(
+                    &plan,
+                    samples,
+                    episode_size,
+                    split_seed,
+                    start_episode,
+                    tx,
+                );
+                // the sender dropped above: the consumer sees end-of-epoch
+                // and trains the tail episodes while we walk ahead
+                let ahead = if stats.aborted {
+                    None // training hung up — don't generate for a dead run
+                } else {
+                    walk_ahead.map(|(ecfg, window, gid)| {
+                        let wall = Timer::start();
+                        let engine = WalkEngine::new(graph, ecfg.clone());
+                        let walks = engine.run_epoch(gid as u64);
+                        let corpus = augment_walks(&walks, window, ecfg.threads);
+                        (gid, corpus, wall.secs())
+                    })
+                };
+                (stats, ahead)
+            });
+            // an error return drops `rx`, which aborts the producer — the
+            // scope join below can then never hang (see docs/PIPELINE.md
+            // §"Deadlock freedom")
+            let result = trainer.train_epoch_streamed(rx, epoch);
+            let join_wall = Timer::start();
+            let (stats, ahead) = producer.join().expect("episode producer panicked");
+            (result, join_wall.secs(), stats, ahead)
+        });
+        let mut report = result?;
+        report.metrics.add_secs("pool_build", stats.pool_build_secs);
+        report.metrics.add_secs("producer_join_stall", join_secs);
+        if let Some((gid, corpus, wall)) = ahead {
+            report.metrics.add_secs("walk_gen_overlapped", wall);
+            self.cached_samples = corpus;
+            self.cached_at_epoch = Some(gid);
+            // the shared overlap rule below charges this generation against
+            // the epoch it actually ran under (same persistence semantics
+            // as the synchronous path)
+            self.walk_sim_secs = wall;
+            if let Some(dir) = &self.spool_dir {
+                // offline mode spools the walk-ahead corpus exactly as the
+                // synchronous generation would have
+                let eps =
+                    crate::util::ceil_div(self.cached_samples.len(), self.cfg.episode_size);
+                let _ = crate::walk::augment::write_episode_files(
+                    dir,
+                    &self.cached_samples,
+                    eps.max(1),
+                    self.graph.num_nodes(),
+                );
+            }
         }
         Ok(report)
     }
@@ -376,6 +504,45 @@ mod tests {
         assert!(format!("{err:#}").contains("different graph"), "{err:#}");
 
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The tentpole parity claim at the system level: a two-epoch run with
+    /// the async pipeline on (producer thread, bounded channel, walk-ahead
+    /// for epoch 1, cross-episode head prefetch) is bit-identical to the
+    /// serial reference — same per-epoch losses and sample counts, same
+    /// final model — while the overlap metrics prove the walk generation
+    /// and pool staging actually ran off the critical path.
+    #[test]
+    fn overlapped_epoch_books_producer_metrics_and_matches_serial() {
+        let g = tiny_graph(6);
+        let mut cfg_on = tiny_cfg();
+        cfg_on.walk_epochs = 1; // fresh generation every epoch → walk-ahead fires
+        cfg_on.epochs = 2;
+        cfg_on.episode_size = 1_000; // several episodes → head prefetch fires
+        cfg_on.episode_prefetch = 1;
+        let mut cfg_off = cfg_on.clone();
+        cfg_off.episode_prefetch = 0;
+
+        let mut a = Driver::new(&g, cfg_on, None).unwrap();
+        let mut b = Driver::new(&g, cfg_off, None).unwrap();
+        let ra = a.run(2).unwrap();
+        let rb = b.run(2).unwrap();
+        for (e, (x, y)) in ra.iter().zip(&rb).enumerate() {
+            assert_eq!(x.samples, y.samples, "epoch {e} sample count diverged");
+            assert_eq!(x.loss_sum, y.loss_sum, "epoch {e} loss diverged");
+        }
+        // the producer's staging cost is booked, and epoch 0's report
+        // shows epoch 1's walk generation running overlapped
+        assert!(ra[0].metrics.secs("pool_build") > 0.0);
+        assert!(ra[0].metrics.secs("walk_gen_overlapped") > 0.0);
+        // epoch 1 is the horizon's last: nothing to walk ahead for
+        assert_eq!(ra[1].metrics.secs("walk_gen_overlapped"), 0.0);
+        // cross-episode head prefetch engaged on the pipelined side only
+        assert!(ra[1].metrics.count("exec_prefetch_hits") > 0);
+        assert_eq!(rb[1].metrics.count("exec_prefetch_hits"), 0);
+        let (sa, sb) = (a.finish().unwrap(), b.finish().unwrap());
+        assert_eq!(sa.vertex, sb.vertex, "pipelined vertex matrix diverged");
+        assert_eq!(sa.context, sb.context, "pipelined context matrix diverged");
     }
 
     #[test]

@@ -18,6 +18,16 @@
 //! `driver` composes the full system: generate/load graph → walk engine →
 //! augmentation → episodes → epochs, with the walk engine's next-epoch
 //! work overlapped against training (the paper's decoupled design).
+//!
+//! With `schedule.episode_prefetch ≥ 1` the epoch runs as the async
+//! episode pipeline: a producer thread ([`crate::walk::produce_episodes`])
+//! splits and 2D-buckets episodes ahead of training, the trainer consumes
+//! them through [`Trainer::train_epoch_streamed`], and the checkpoint
+//! begin/commit fold overlaps the next episode's staging instead of
+//! serializing with it. The state machine, channel ownership,
+//! deadlock-freedom argument, and the seeding contract that keeps any
+//! prefetch depth bit-identical to the serial loop are specified in
+//! `docs/PIPELINE.md`.
 
 pub mod driver;
 pub mod multirank;
@@ -78,6 +88,13 @@ pub struct Trainer {
     /// FNV degree digest of the trained graph (stamped into manifests,
     /// checked on resume).
     graph_digest: u64,
+    /// Cross-episode head carry (`exec::HeadCarry`): chain-head rows the
+    /// previous episode captured for the next episode's feeder. Threaded
+    /// through every executor episode when `cfg.episode_prefetch ≥ 1`;
+    /// cleared whenever the vertex store is rewritten out-of-band
+    /// (checkpoint restore), since carried bytes must equal a fresh
+    /// checkout's.
+    head_carry: crate::exec::HeadCarry,
 }
 
 /// Per-GPU outcome of one scheduled step.
@@ -169,6 +186,7 @@ impl Trainer {
             last_episode_pos: None,
             global_episode: 0,
             graph_digest,
+            head_carry: crate::exec::HeadCarry::new(),
         })
     }
 
@@ -231,6 +249,9 @@ impl Trainer {
             self.rngs[g] = Rng::from_state(*s);
         }
         self.global_episode = reader.watermark() + 1;
+        // the restored vertex matrix invalidates any rows captured from
+        // the pre-restore store: the next episode must check out fresh
+        self.head_carry.clear();
         Ok(())
     }
 
@@ -272,6 +293,22 @@ impl Trainer {
     pub fn phase_table(&self) -> Option<String> {
         match (&self.last_exec, &self.last_sim) {
             (Some(m), Some(s)) => Some(crate::pipeline::phase_table(m, s, self.cfg.overlap())),
+            _ => None,
+        }
+    }
+
+    /// [`Self::phase_table`] with epoch-level overlap rows appended —
+    /// the walk-producer pipeline's bookkeeping (walk generation, pool
+    /// staging, join stall) rendered under the step phases so the overlap
+    /// is visible in the same breakdown. Zero-second rows are skipped.
+    pub fn phase_table_with(&self, rows: &[crate::pipeline::OverlapRow]) -> Option<String> {
+        match (&self.last_exec, &self.last_sim) {
+            (Some(m), Some(s)) => Some(crate::pipeline::phase_table_with_overlap(
+                m,
+                s,
+                self.cfg.overlap(),
+                rows,
+            )),
             _ => None,
         }
     }
@@ -334,28 +371,13 @@ impl Trainer {
         let mut total_samples = 0u64;
         let mut trained = 0u64;
         for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
-            let interval = self.cfg.ckpt_interval.max(1) as u64;
-            // every rank computes the same cadence from the adopted
-            // config: the driver from its own writer, worker ranks from
-            // the plan-adopted ckpt.dir (they hold no writer but must
-            // stream their context shards on exactly the commit episodes)
-            let active = self.checkpointing_enabled()
-                && self.global_episode % interval == interval - 1;
-            if let Some(w) = &self.ckpt {
-                w.sink().begin_episode(self.global_episode, active);
-            }
             let pool = EpisodePool::build(&self.plan, ep);
-            let (ep_sim, ep_loss, ep_samples) = self.train_episode(&pool, lr, active);
+            let (ep_sim, ep_loss, ep_samples) =
+                self.train_one_episode(&pool, epoch, i, episodes.len(), lr)?;
             sim_secs += ep_sim;
             loss_sum += ep_loss;
             total_samples += ep_samples;
             trained += 1;
-            if active {
-                self.commit_checkpoint(epoch, i, episodes.len())?;
-            }
-            self.last_episode_pos =
-                Some((epoch as u64, i as u64, episodes.len() as u64));
-            self.global_episode += 1;
         }
         self.metrics.add("episodes", trained);
         self.metrics.add("samples", total_samples);
@@ -368,6 +390,84 @@ impl Trainer {
             loss_sum,
             metrics: self.metrics.clone(),
         })
+    }
+
+    /// [`Self::train_epoch_from`] over pre-staged episodes: the consumer
+    /// half of the async episode pipeline (`docs/PIPELINE.md`). The walk
+    /// producer ([`crate::walk::produce_episodes`]) owns the sender and
+    /// runs the *same* seeded split the serial path would, so training
+    /// order — and therefore the model — is bit-identical to
+    /// [`Self::train_epoch`]; this side owns the receiver, and dropping it
+    /// (on an error return, or a caller panic unwinding this frame) is the
+    /// abort signal that shuts the producer down. The checkpoint
+    /// begin/commit fold runs here on the consumer thread while the
+    /// producer stages the next episode — the commit is off the staging
+    /// critical path by construction.
+    pub fn train_epoch_streamed(
+        &mut self,
+        episodes: std::sync::mpsc::Receiver<crate::walk::SealedEpisode>,
+        epoch: usize,
+    ) -> crate::Result<EpochReport> {
+        let wall = Timer::start();
+        let lr = self.effective_lr(epoch);
+        let mut sim_secs = 0.0;
+        let mut loss_sum = 0.0;
+        let mut total_samples = 0u64;
+        let mut trained = 0u64;
+        // a disconnect is the producer's end-of-epoch signal (it owns the
+        // sender by value and drops it when the split is exhausted)
+        while let Ok(sealed) = episodes.recv() {
+            let (ep_sim, ep_loss, ep_samples) =
+                self.train_one_episode(&sealed.pool, epoch, sealed.index, sealed.total, lr)?;
+            sim_secs += ep_sim;
+            loss_sum += ep_loss;
+            total_samples += ep_samples;
+            trained += 1;
+        }
+        self.metrics.add("episodes", trained);
+        self.metrics.add("samples", total_samples);
+        self.metrics.add_secs("sim_epoch", sim_secs);
+        Ok(EpochReport {
+            epoch,
+            sim_secs,
+            wall_secs: wall.secs(),
+            samples: total_samples,
+            loss_sum,
+            metrics: self.metrics.clone(),
+        })
+    }
+
+    /// One episode through the full checkpoint cadence: begin → train →
+    /// (maybe) commit → advance the watermark. Shared verbatim by the
+    /// serial loop ([`Self::train_epoch_from`]) and the streamed pipeline
+    /// ([`Self::train_epoch_streamed`]), which is what keeps the two
+    /// paths' observable behavior identical episode for episode.
+    fn train_one_episode(
+        &mut self,
+        pool: &EpisodePool,
+        epoch: usize,
+        episode_in_epoch: usize,
+        episodes_in_epoch: usize,
+        lr: f32,
+    ) -> crate::Result<(f64, f64, u64)> {
+        let interval = self.cfg.ckpt_interval.max(1) as u64;
+        // every rank computes the same cadence from the adopted
+        // config: the driver from its own writer, worker ranks from
+        // the plan-adopted ckpt.dir (they hold no writer but must
+        // stream their context shards on exactly the commit episodes)
+        let active =
+            self.checkpointing_enabled() && self.global_episode % interval == interval - 1;
+        if let Some(w) = &self.ckpt {
+            w.sink().begin_episode(self.global_episode, active);
+        }
+        let out = self.train_episode(pool, lr, active);
+        if active {
+            self.commit_checkpoint(epoch, episode_in_epoch, episodes_in_epoch)?;
+        }
+        self.last_episode_pos =
+            Some((epoch as u64, episode_in_epoch as u64, episodes_in_epoch as u64));
+        self.global_episode += 1;
+        Ok(out)
     }
 
     /// Whether this run's episodes follow a checkpoint cadence: rank 0
@@ -561,9 +661,12 @@ impl Trainer {
                 Some(h) if ckpt_active && !h.is_driver() => Some(self.global_episode),
                 _ => None,
             },
+            // the episode pipeline's feeder half: carry chain heads across
+            // the boundary instead of draining to empty (parity-neutral)
+            head_prefetch: self.cfg.episode_prefetch >= 1,
         };
         let view = self.cluster_handle.as_deref().map(|h| h.view());
-        let run = crate::exec::run_episode_ranked(
+        let run = crate::exec::run_episode_carry(
             &ctx,
             &mut self.store,
             &mut self.contexts,
@@ -571,6 +674,7 @@ impl Trainer {
             &self.samplers,
             &mut self.rngs,
             view.as_ref(),
+            &mut self.head_carry,
         );
         let steps = self.plan.steps();
         let mut sim = 0.0;
@@ -602,6 +706,11 @@ impl Trainer {
         // the bounded-feeder gauge: high-water staged buffers vs window
         self.metrics.add_max("exec_peak_staged", run.measure.peak_staged as u64);
         self.metrics.add_max("exec_stage_window", run.measure.stage_window as u64);
+        if run.measure.prefetch_hits > 0 {
+            // heads staged from the cross-episode carry (no checkout
+            // round-trip) — the feeder half of the episode pipeline
+            self.metrics.add("exec_prefetch_hits", run.measure.prefetch_hits as u64);
+        }
         // checkpoint tee accounting (drop-and-count: drops mean the
         // writer skipped this episode's commit, never a blocked worker)
         if run.measure.ckpt_teed > 0 {
@@ -934,6 +1043,37 @@ mod tests {
         assert!(peak >= 1 && peak <= window, "peak {peak} vs window {window}");
         assert!(b.measured_overlap_efficiency().is_none());
         assert!(b.phase_table().is_none(), "serial path has no measured table");
+        let sa = a.finish().unwrap();
+        let sb = b.finish().unwrap();
+        assert_eq!(sa.vertex, sb.vertex);
+        assert_eq!(sa.context, sb.context);
+    }
+
+    /// The streamed (producer-fed) epoch is the serial loop, episode for
+    /// episode: same split seed → same pools → same losses, simulated
+    /// time, and final model. The unit-level half of the prefetch-sweep
+    /// parity pinned end-to-end in `tests/episode_pipeline.rs`.
+    #[test]
+    fn streamed_epoch_matches_the_serial_loop() {
+        let (degrees, samples) = graph_samples(300, 3000, 21);
+        let mut a = Trainer::new(300, &degrees, small_cfg(), None).unwrap();
+        let mut b = Trainer::new(300, &degrees, small_cfg(), None).unwrap();
+        for epoch in 0..2 {
+            let ra = a.train_epoch(&mut samples.clone(), epoch).unwrap();
+            // the producer must run the exact split the serial path ran
+            let split_seed = b.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C);
+            let (tx, rx) = std::sync::mpsc::sync_channel(1);
+            let rb = std::thread::scope(|scope| {
+                let (plan, s, size) = (b.plan.clone(), samples.clone(), b.cfg.episode_size);
+                scope.spawn(move || {
+                    crate::walk::produce_episodes(&plan, s, size, split_seed, 0, tx)
+                });
+                b.train_epoch_streamed(rx, epoch).unwrap()
+            });
+            assert_eq!(ra.loss_sum, rb.loss_sum, "epoch {epoch}: loss drifted");
+            assert_eq!(ra.samples, rb.samples, "epoch {epoch}: sample count drifted");
+            assert_eq!(ra.sim_secs, rb.sim_secs, "epoch {epoch}: simulated time drifted");
+        }
         let sa = a.finish().unwrap();
         let sb = b.finish().unwrap();
         assert_eq!(sa.vertex, sb.vertex);

@@ -33,6 +33,20 @@
 //! GPU count (`TrainConfig::effective_stage_window`) so one credit can be
 //! in flight per worker.
 //!
+//! ## Cross-episode head prefetch
+//!
+//! When the async episode pipeline is on (`schedule.episode_prefetch ≥
+//! 1`, see `docs/PIPELINE.md` §"Head prefetch across the episode
+//! boundary"), the feeder is seeded with a carry map: the previous
+//! episode captured the first `window` need-order heads' chain-end rows
+//! as they checked in, and a head found in the carry is staged from those
+//! bytes instead of a store-writer checkout round-trip — the feeder no
+//! longer drains to empty at the boundary. Carried heads still consume a
+//! window credit (the staged-buffer bound is unchanged); only the memcpy
+//! round-trip disappears. Bit-parity: heads are plan-derived (identical
+//! every episode) and nothing writes the vertex store between episodes,
+//! so carried bytes equal what the checkout would have copied.
+//!
 //! ## Abort safety
 //!
 //! The feeder never blocks on anything a dead worker holds open: a
@@ -63,6 +77,9 @@ pub(crate) struct FeederStats {
     /// Peak staged-but-unconsumed buffers — never exceeds the window by
     /// construction.
     pub peak_staged: usize,
+    /// Heads staged from the cross-episode carry instead of a checkout
+    /// round-trip (zero when the pipeline is off or the carry was empty).
+    pub prefetch_hits: usize,
 }
 
 /// Stage every locally-owned chain head, at most `window` in flight.
@@ -71,12 +88,16 @@ pub(crate) struct FeederStats {
 /// its replicated store). `checkout` copies one sub-part out of the host
 /// store (the store-writer round trip in production; a plain closure in
 /// tests) and returns `None` when the store side is gone (abort).
+/// `carry` holds head rows captured at the previous episode's chain ends
+/// (`exec::HeadCarry`); heads found there skip the checkout round-trip
+/// but still spend a window credit.
 pub(crate) fn run(
     mut checkout: impl FnMut(usize) -> Option<Vec<f32>>,
     heads: &[Head],
     inboxes: &[Option<Sender<RingMsg>>],
     window: usize,
     acks: &Receiver<()>,
+    mut carry: super::HeadCarry,
 ) -> FeederStats {
     let window = window.max(1);
     let mut stats = FeederStats::default();
@@ -95,9 +116,21 @@ pub(crate) fn run(
                 Err(_) => return stats,
             }
         }
-        let Some(buf) = checkout(h.subpart) else {
-            // the store writer is gone (abort mid-episode)
-            return stats;
+        let buf = match carry.remove(&h.subpart) {
+            // carried across the episode boundary at the previous chain
+            // end: the store rows are untouched in between, so these are
+            // exactly the bytes the checkout would copy
+            Some(buf) => {
+                stats.prefetch_hits += 1;
+                buf
+            }
+            None => {
+                let Some(buf) = checkout(h.subpart) else {
+                    // the store writer is gone (abort mid-episode)
+                    return stats;
+                };
+                buf
+            }
         };
         if tx.send((h.subpart, buf)).is_err() {
             // the consuming worker is gone (abort mid-episode)
@@ -146,8 +179,10 @@ mod tests {
             &[Some(tx)],
             2,
             &ack_rx,
+            Default::default(),
         );
         assert_eq!(stats.staged, n);
+        assert_eq!(stats.prefetch_hits, 0, "no carry was seeded");
         assert!(
             stats.peak_staged >= 1 && stats.peak_staged <= 2,
             "gauge {} outside the window",
@@ -176,6 +211,7 @@ mod tests {
             &[Some(tx)],
             8,
             &ack_rx,
+            Default::default(),
         );
         assert_eq!(stats.staged, 0, "no send can land after the worker died");
     }
@@ -195,6 +231,7 @@ mod tests {
             &[Some(tx)],
             1,
             &ack_rx,
+            Default::default(),
         );
         assert_eq!(stats.staged, 1, "one head fits the window, then the feeder must bail");
         assert_eq!(stats.peak_staged, 1);
@@ -220,7 +257,52 @@ mod tests {
             &[Some(tx)],
             8,
             &ack_rx,
+            Default::default(),
         );
         assert_eq!(stats.staged, 1);
+    }
+
+    /// Heads seeded through the cross-episode carry are staged without a
+    /// checkout round-trip (the `prefetch_hits` gauge counts them), with
+    /// byte-exact delivery and unchanged staging order.
+    #[test]
+    fn carried_heads_skip_the_checkout_round_trip() {
+        let plan = HierarchyPlan::new(1, 1, 4, 64);
+        let store = EmbeddingStore::init(64, 4, &mut Rng::new(7));
+        let heads: Vec<Head> =
+            (0..4).map(|sp| Head { first_step: sp, gpu: 0, subpart: sp }).collect();
+        let mut carry = crate::exec::HeadCarry::new();
+        carry.insert(0, store.checkout_vertex(plan.subpart_range(0)));
+        carry.insert(2, store.checkout_vertex(plan.subpart_range(2)));
+        let (tx, rx) = channel();
+        let (ack_tx, ack_rx) = channel();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..4 {
+                let msg = rx.recv().expect("head staged");
+                got.push(msg);
+                ack_tx.send(()).expect("feeder side alive");
+            }
+            got
+        });
+        let mut checkouts = Vec::new();
+        let stats = run(
+            |sp| {
+                checkouts.push(sp);
+                Some(store.checkout_vertex(plan.subpart_range(sp)))
+            },
+            &heads,
+            &[Some(tx)],
+            2,
+            &ack_rx,
+            carry,
+        );
+        assert_eq!(stats.staged, 4);
+        assert_eq!(stats.prefetch_hits, 2);
+        assert_eq!(checkouts, vec![1, 3], "carried heads must not round-trip");
+        let got = consumer.join().expect("consumer thread");
+        for (sp, buf) in got {
+            assert_eq!(buf, store.checkout_vertex(plan.subpart_range(sp)));
+        }
     }
 }

@@ -39,6 +39,12 @@
 //! `tests/feeder_window.rs` pin this, and `tests/internode_smoke.rs`
 //! holds the same parity across two OS processes.
 //!
+//! Across episode boundaries the feeder no longer drains to empty:
+//! with [`ExecCtx::head_prefetch`] set, the first `stage_window` heads'
+//! chain-end rows are captured at check-in (`HeadCarry`) and seed the
+//! next episode's feeder, skipping those checkout round-trips — part of
+//! the async episode pipeline specified in `docs/PIPELINE.md`.
+//!
 //! `docs/ARCHITECTURE.md` draws the full thread/borrow ownership picture
 //! (walk → feeder → worker → store-writer → ckpt tee → serve);
 //! `docs/CKPT_FORMAT.md` specifies the frames the ranked path puts on
@@ -77,6 +83,16 @@ pub(crate) type RingMsg = (usize, Vec<f32>);
 /// dies), so peers blocked in `recv` abort instead of deadlocking.
 pub(crate) const POISON: usize = POISON_SUBPART;
 
+/// Chain-head rows carried across an episode boundary (`subpart → rows`):
+/// the first `stage_window` need-order heads' chain-end rows, captured as
+/// they check in, handed to the next episode's feeder so it starts staging
+/// without draining to empty on store checkouts. Heads are plan-derived
+/// and identical every episode, and nothing writes the vertex store
+/// between episodes, so carried bytes equal what a fresh checkout would
+/// copy — the parity argument is spelled out in `docs/PIPELINE.md`
+/// §"Head prefetch across the episode boundary".
+pub(crate) type HeadCarry = HashMap<usize, Vec<f32>>;
+
 /// Immutable inputs of one episode run.
 pub struct ExecCtx<'a> {
     pub plan: &'a HierarchyPlan,
@@ -103,6 +119,13 @@ pub struct ExecCtx<'a> {
     /// spawn-time copies. `None` = inactive episode, single-process run,
     /// or this rank is the driver.
     pub ctx_stream: Option<u64>,
+    /// Prefetch chain heads across the episode boundary: capture the first
+    /// `stage_window` need-order local heads' rows as their chains check
+    /// in, and serve them to the *next* episode's feeder without a store
+    /// checkout round-trip (see `HeadCarry`). Measurement-only — bit
+    /// parity holds either way — so callers without a next episode (or
+    /// with `schedule.episode_prefetch = 0`) leave it off.
+    pub head_prefetch: bool,
 }
 
 /// One rank's view of the multi-process cluster: one rank per simulated
@@ -185,6 +208,27 @@ pub fn run_episode(
     run_episode_ranked(ctx, store, contexts, backends, samplers, rngs, None)
 }
 
+/// Run one rank's share of an episode with a cross-episode head carry:
+/// `carry` seeds the feeder (heads present in it skip the checkout
+/// round-trip) and is refilled on return with the next episode's first
+/// `stage_window` heads when [`ExecCtx::head_prefetch`] is set (emptied
+/// otherwise). Callers looping episodes thread one map through every call
+/// and must clear it whenever the vertex store is rewritten out-of-band
+/// (checkpoint restore).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_episode_carry(
+    ctx: &ExecCtx<'_>,
+    store: &mut EmbeddingStore,
+    contexts: &mut [Vec<f32>],
+    backends: &mut [Box<dyn StepBackend>],
+    samplers: &[NegativeSampler],
+    rngs: &mut [Rng],
+    cluster: Option<&ClusterView<'_>>,
+    carry: &mut HeadCarry,
+) -> ExecRun {
+    run_inner(ctx, store, contexts, backends, samplers, rngs, cluster, carry)
+}
+
 /// Run one rank's share of an episode. `cluster = None` is the
 /// single-process executor; with a cluster view this rank spawns workers
 /// only for its own node's GPUs, cross-rank hand-offs cross the
@@ -203,6 +247,21 @@ pub fn run_episode_ranked(
     samplers: &[NegativeSampler],
     rngs: &mut [Rng],
     cluster: Option<&ClusterView<'_>>,
+) -> ExecRun {
+    let mut carry = HeadCarry::new();
+    run_inner(ctx, store, contexts, backends, samplers, rngs, cluster, &mut carry)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_inner(
+    ctx: &ExecCtx<'_>,
+    store: &mut EmbeddingStore,
+    contexts: &mut [Vec<f32>],
+    backends: &mut [Box<dyn StepBackend>],
+    samplers: &[NegativeSampler],
+    rngs: &mut [Rng],
+    cluster: Option<&ClusterView<'_>>,
+    carry: &mut HeadCarry,
 ) -> ExecRun {
     let plan = ctx.plan;
     let gpus = plan.total_gpus();
@@ -290,6 +349,22 @@ pub fn run_episode_ranked(
     // scope always joins.
     let heads = std::mem::take(&mut routing.heads);
     let total_chains = heads.len();
+    // The heads the *next* episode's feeder stages first (heads are
+    // plan-derived, so next episode's need order is this episode's): when
+    // cross-episode prefetch is on, their chain-end rows are captured at
+    // check-in and carried over, bounded by the window so the carry stays
+    // O(window) like staging itself.
+    let capture: Vec<usize> = if ctx.head_prefetch {
+        heads
+            .iter()
+            .filter(|h| local_tx[h.gpu].is_some())
+            .take(window)
+            .map(|h| h.subpart)
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let seeded_carry = std::mem::take(carry);
     let store_ref: &mut EmbeddingStore = &mut *store;
     let ckpt = ctx.ckpt;
     let (outs, feed, mut drained): (Vec<WorkerOut>, feeder::FeederStats, storewriter::DrainStats) =
@@ -297,10 +372,10 @@ pub fn run_episode_ranked(
             let ob = &outbox;
             let (ack_tx, ack_rx) = channel::<()>();
             let (op_tx, op_rx) = channel::<storewriter::StoreOp>();
-            let (heads_r, local_tx_r) = (&heads, &local_tx);
+            let (heads_r, local_tx_r, capture_r) = (&heads, &local_tx, &capture);
             let drain_handle = scope.spawn(move || {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    storewriter::run(store_ref, plan, &op_rx, ob, ckpt)
+                    storewriter::run(store_ref, plan, &op_rx, ob, ckpt, capture_r)
                 }));
                 match out {
                     Ok(stats) => stats,
@@ -323,7 +398,7 @@ pub fn run_episode_ranked(
                             .ok()?;
                         reply_rx.recv().ok()
                     };
-                    feeder::run(checkout, heads_r, local_tx_r, window, &ack_rx)
+                    feeder::run(checkout, heads_r, local_tx_r, window, &ack_rx, seeded_carry)
                 }));
                 match out {
                     Ok(stats) => stats,
@@ -378,7 +453,7 @@ pub fn run_episode_ranked(
         h2d_secs: drained.h2d_secs,
         d2h_secs: drained.d2h_secs,
         peak_staged: feed.peak_staged,
-        ..RankMeasure::default()
+        prefetch_hits: feed.prefetch_hits,
     };
 
     let mut traces = Vec::with_capacity(total_steps * gpus);
@@ -400,6 +475,12 @@ pub fn run_episode_ranked(
             let (sp, buf) = frx.recv().expect("peer rank closed before episode completed");
             assert_ne!(sp, POISON, "peer rank aborted the episode");
             store.checkin_vertex(ctx.plan.subpart_range(sp), &buf);
+            if capture.contains(&sp) {
+                // a next-episode head whose chain ended on a peer rank:
+                // the replicated rows are the bytes the next checkout
+                // would copy, so they join the cross-episode carry too
+                drained.captured.insert(sp, buf.clone());
+            }
             // the driver's sink sees every trained sub-part: local chains
             // from the drain, remote chains from this KIND_FINAL fold
             // (booked onto the same drain counters)
@@ -418,6 +499,7 @@ pub fn run_episode_ranked(
                 rank.h2d_secs += peer.h2d_secs;
                 rank.d2h_secs += peer.d2h_secs;
                 rank.peak_staged = rank.peak_staged.max(peer.peak_staged);
+                rank.prefetch_hits += peer.prefetch_hits;
                 traces.extend(peer_traces);
             }
         } else {
@@ -447,6 +529,9 @@ pub fn run_episode_ranked(
         }
         c.hub.clear_episode_routes();
     }
+    // refill the caller's carry for the next episode (empty when
+    // `head_prefetch` is off — the capture set was empty)
+    *carry = std::mem::take(&mut drained.captured);
 
     traces.sort_by_key(|t| (t.step, t.gpu));
     let mut measure = ExecMeasure {
@@ -454,6 +539,7 @@ pub fn run_episode_ranked(
         h2d_secs: rank.h2d_secs,
         d2h_secs: rank.d2h_secs,
         peak_staged: rank.peak_staged,
+        prefetch_hits: rank.prefetch_hits,
         stage_window: window,
         workers: gpus,
         steps: total_steps,

@@ -37,6 +37,7 @@ use crate::partition::HierarchyPlan;
 
 use super::trace::{Phase, PhaseClock};
 use super::worker::Outbox;
+use super::HeadCarry;
 
 /// One request against the episode's host store.
 pub(crate) enum StoreOp {
@@ -63,6 +64,11 @@ pub(crate) struct DrainStats {
     /// Check-ins the bounded checkpoint channel refused (drop-and-count:
     /// the writer never blocks the episode).
     pub ckpt_dropped: usize,
+    /// Chain-end rows captured for the next episode's feeder: the heads
+    /// named in `run`'s capture set, cloned at check-in (the same bytes a
+    /// fresh checkout would copy, since nothing writes the vertex store
+    /// between episodes). See `exec::HeadCarry` / `docs/PIPELINE.md`.
+    pub captured: HeadCarry,
 }
 
 impl DrainStats {
@@ -75,13 +81,17 @@ impl DrainStats {
     }
 }
 
-/// Serve store ops until every sender hangs up.
+/// Serve store ops until every sender hangs up. `capture` names the
+/// sub-parts whose chain-end rows should be cloned into
+/// [`DrainStats::captured`] for the next episode's feeder (the
+/// cross-episode head prefetch; empty when the pipeline is off).
 pub(crate) fn run(
     store: &mut EmbeddingStore,
     plan: &HierarchyPlan,
     ops: &Receiver<StoreOp>,
     outbox: &Outbox,
     ckpt: Option<&CkptSink>,
+    capture: &[usize],
 ) -> DrainStats {
     let mut clock = PhaseClock::new();
     let mut stats = DrainStats::default();
@@ -107,6 +117,12 @@ pub(crate) fn run(
                     for t in &outbox.remotes {
                         t.send(&msg).expect("broadcast chain-end sub-part");
                     }
+                }
+                if capture.contains(&subpart) {
+                    // a next-episode head: carry the freshly-trained rows
+                    // across the boundary (cloned before the ckpt tee
+                    // consumes the buffer)
+                    stats.captured.insert(subpart, rows.clone());
                 }
                 if let Some(sink) = ckpt {
                     stats.book_offer(sink.offer_vertex(subpart, rows));
@@ -145,9 +161,13 @@ mod tests {
         op_tx.send(StoreOp::Checkout { subpart: 1, reply: reply_tx }).unwrap();
         drop(op_tx);
         let ob = empty_outbox();
-        let stats = run(&mut store, &plan, &op_rx, &ob, None);
+        let stats = run(&mut store, &plan, &op_rx, &ob, None, &[0]);
         assert_eq!(stats.finals, 1);
         assert_eq!(stats.ckpt_teed, 0);
+        // sub-part 0 is in the capture set: its trained rows rode into the
+        // cross-episode carry, byte for byte
+        assert_eq!(stats.captured.len(), 1);
+        assert_eq!(stats.captured[&0], trained);
         assert!(stats.d2h_secs > 0.0 && stats.h2d_secs > 0.0);
         // checkout 0 saw the pre-checkin bytes, checkout 1 is untouched
         let got0 = reply_rx.recv().unwrap();
@@ -169,7 +189,7 @@ mod tests {
         drop(op_tx);
         let ob = empty_outbox();
         // must not panic or wedge
-        let stats = run(&mut store, &plan, &op_rx, &ob, None);
+        let stats = run(&mut store, &plan, &op_rx, &ob, None, &[]);
         assert_eq!(stats.finals, 0);
     }
 }

@@ -66,6 +66,7 @@ fn run_windowed(
         stage_window: window,
         ckpt: None,
         ctx_stream: None,
+        head_prefetch: false,
     };
     let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
     (run, contexts)
@@ -205,6 +206,73 @@ fn any_stage_window_is_bit_identical_and_bounded() {
     }
 }
 
+/// Cross-episode head prefetch is measurement-only: threading one carry
+/// through consecutive episodes with `head_prefetch` on yields the same
+/// model bytes and loss trajectory as fresh checkouts every episode,
+/// while the second episode's feeder reports the carried heads as hits.
+#[test]
+fn head_carry_across_episodes_is_bit_identical() {
+    let (plan, store0, degrees, samples) = fixture(1, 2, 2, 96, 1100, 14);
+    let half = samples.len() / 2;
+    let window = 2usize;
+
+    // reference: two serial episodes, prefetch off
+    let mut sref = store0.clone();
+    let (mut cref, mut bref, samp_ref, mut rref) = gpu_state(&plan, &sref, &degrees, 17);
+    let mut ref_losses = Vec::new();
+    for ep in [&samples[..half], &samples[half..]] {
+        let pool = EpisodePool::build(&plan, ep);
+        let ctx = ExecCtx {
+            plan: &plan,
+            pool: &pool,
+            batch: 64,
+            negatives: 3,
+            dim: 8,
+            lr: 0.05,
+            crosses_node: false,
+            stage_window: window,
+            ckpt: None,
+            ctx_stream: None,
+            head_prefetch: false,
+        };
+        let run = run_episode(&ctx, &mut sref, &mut cref, &mut bref, &samp_ref, &mut rref);
+        assert_eq!(run.measure.prefetch_hits, 0);
+        ref_losses.extend(run.traces.iter().map(|t| t.loss));
+    }
+
+    // same two episodes with the carry threaded through
+    let mut s = store0.clone();
+    let (mut c, mut b, samp, mut r) = gpu_state(&plan, &s, &degrees, 17);
+    let mut carry = HeadCarry::new();
+    let mut losses = Vec::new();
+    let mut hits = Vec::new();
+    for ep in [&samples[..half], &samples[half..]] {
+        let pool = EpisodePool::build(&plan, ep);
+        let ctx = ExecCtx {
+            plan: &plan,
+            pool: &pool,
+            batch: 64,
+            negatives: 3,
+            dim: 8,
+            lr: 0.05,
+            crosses_node: false,
+            stage_window: window,
+            ckpt: None,
+            ctx_stream: None,
+            head_prefetch: true,
+        };
+        let run = run_episode_carry(&ctx, &mut s, &mut c, &mut b, &samp, &mut r, None, &mut carry);
+        losses.extend(run.traces.iter().map(|t| t.loss));
+        hits.push(run.measure.prefetch_hits);
+    }
+    assert_eq!(s.vertex, sref.vertex, "carried episodes drifted the vertex matrix");
+    assert_eq!(c, cref, "carried episodes drifted the contexts");
+    assert_eq!(losses, ref_losses, "carried episodes drifted the loss trajectory");
+    assert_eq!(hits[0], 0, "no carry exists before the first episode captures");
+    assert_eq!(hits[1], window, "the carried heads must skip their checkouts");
+    assert_eq!(carry.len(), window, "the second episode re-captured for a third");
+}
+
 /// Backend that blows up on its first step — stands in for a runtime
 /// failure (e.g. a PJRT execute error) inside one worker.
 struct PanickyBackend;
@@ -250,6 +318,7 @@ fn worker_panic_propagates_instead_of_deadlocking() {
         stage_window: 8,
         ckpt: None,
         ctx_stream: None,
+        head_prefetch: false,
     };
     // must panic (poison broadcast unblocks the other workers and the
     // feeder's credits disconnect), not hang
@@ -278,6 +347,7 @@ fn worker_panic_with_tight_window_still_propagates() {
         stage_window: 1,
         ckpt: None,
         ctx_stream: None,
+        head_prefetch: false,
     };
     run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
 }
@@ -354,6 +424,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
                 ckpt: None,
                 // checkpoint-active episode: stream shards at watermark 7
                 ctx_stream: Some(7),
+                head_prefetch: false,
             };
             let view = ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
             let out = run_episode_ranked(
@@ -381,6 +452,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
             stage_window: window,
             ckpt: None,
             ctx_stream: None,
+            head_prefetch: false,
         };
         let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
         let run0 = run_episode_ranked(
@@ -473,6 +545,7 @@ fn episode_tees_chain_ends_into_the_checkpoint_sink() {
         stage_window: 8,
         ckpt: Some(writer.sink()),
         ctx_stream: None,
+        head_prefetch: false,
     };
     let run = run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
     assert_eq!(run.measure.ckpt_teed, plan.total_subparts(), "every chain end teed");

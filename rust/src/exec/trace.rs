@@ -127,6 +127,12 @@ pub struct ExecMeasure {
     /// Peak sub-part buffers the feeder held staged-but-unconsumed at any
     /// moment (the bounded-window gauge; max across ranks).
     pub peak_staged: usize,
+    /// Chain heads staged from the cross-episode carry instead of a store
+    /// checkout round-trip (summed across ranks). Zero unless
+    /// [`crate::exec::ExecCtx::head_prefetch`] was set *and* a previous
+    /// episode seeded the carry — see `docs/PIPELINE.md` §"Head prefetch
+    /// across the episode boundary".
+    pub prefetch_hits: usize,
     /// Effective staging window the feeder ran with.
     pub stage_window: usize,
     pub workers: usize,
@@ -262,6 +268,7 @@ pub(crate) struct RankMeasure {
     pub h2d_secs: f64,
     pub d2h_secs: f64,
     pub peak_staged: usize,
+    pub prefetch_hits: usize,
 }
 
 /// Serialize one rank's traces + episode-level phase seconds for the
@@ -272,6 +279,7 @@ pub(crate) fn encode_measure(traces: &[StepTrace], rank: &RankMeasure) -> Vec<u8
     w.put_f64(rank.h2d_secs);
     w.put_f64(rank.d2h_secs);
     w.put_u64(rank.peak_staged as u64);
+    w.put_u64(rank.prefetch_hits as u64);
     w.put_u64(traces.len() as u64);
     for t in traces {
         w.put_u64(t.step as u64);
@@ -300,6 +308,7 @@ pub(crate) fn decode_measure(payload: &[u8]) -> crate::Result<(Vec<StepTrace>, R
         h2d_secs: r.f64()?,
         d2h_secs: r.f64()?,
         peak_staged: r.u64()? as usize,
+        prefetch_hits: r.u64()? as usize,
     };
     let n = r.u64()? as usize;
     // clamp before allocating so a corrupt count errors on read instead of
@@ -383,7 +392,13 @@ mod tests {
             intra_secs: 7e-6,
             hop_secs: 5e-5,
         }];
-        let rank = RankMeasure { wall_secs: 0.125, h2d_secs: 0.5, d2h_secs: 0.25, peak_staged: 6 };
+        let rank = RankMeasure {
+            wall_secs: 0.125,
+            h2d_secs: 0.5,
+            d2h_secs: 0.25,
+            peak_staged: 6,
+            prefetch_hits: 3,
+        };
         let payload = encode_measure(&traces, &rank);
         let (back, brank) = decode_measure(&payload).unwrap();
         assert_eq!(brank, rank);
@@ -401,8 +416,9 @@ mod tests {
     fn corrupt_trace_counts_are_rejected_before_allocating() {
         let rank = RankMeasure::default();
         let mut payload = encode_measure(&[], &rank);
-        // claim a huge trace count with no bytes behind it
-        let n_off = 4 * 8;
+        // claim a huge trace count with no bytes behind it (the count
+        // sits after the five-field rank header)
+        let n_off = 5 * 8;
         payload[n_off..n_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(decode_measure(&payload).is_err());
     }

@@ -270,6 +270,7 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
     // EpochReport.metrics accumulates across epochs; report hop deltas
     let mut hop_secs_seen = 0.0;
     let mut hop_sends_seen = 0u64;
+    let mut prefetch_hits_seen = 0u64;
     for epoch in start_epoch..cfg.epochs {
         let r = driver.run_epoch_from(epoch, start_episode)?;
         start_episode = 0; // only the resumed epoch starts mid-way
@@ -295,8 +296,32 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         hop_sends_seen += sends;
         // the per-phase validation table: each measured executor phase
         // (sample-load, H2D, compute, D2H, intra-hop, inter-hop) next to
-        // the discrete-event model's fabric-priced counterpart
-        if let Some(table) = driver.trainer.phase_table() {
+        // the discrete-event model's fabric-priced counterpart, plus the
+        // episode pipeline's epoch-level overlap rows when it ran (these
+        // metrics are driver-booked per epoch, not cumulative)
+        let overlap_rows = [
+            tembed::pipeline::OverlapRow {
+                name: "walk-gen",
+                secs: r.metrics.secs("walk_gen_overlapped"),
+                overlapped: true,
+            },
+            tembed::pipeline::OverlapRow {
+                name: "pool-build",
+                secs: r.metrics.secs("pool_build"),
+                overlapped: true,
+            },
+            tembed::pipeline::OverlapRow {
+                name: "producer-join",
+                secs: r.metrics.secs("producer_join_stall"),
+                overlapped: false,
+            },
+            tembed::pipeline::OverlapRow {
+                name: "walk-stall",
+                secs: r.metrics.secs("walk_stall"),
+                overlapped: false,
+            },
+        ];
+        if let Some(table) = driver.trainer.phase_table_with(&overlap_rows) {
             // the staged gauge is a run-wide high-water mark (add_max),
             // not a per-episode reading
             let peak = r.metrics.count("exec_peak_staged");
@@ -306,6 +331,13 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
             );
             print!("{table}");
         }
+        // cross-episode head prefetch: checkouts the feeder skipped because
+        // the store writer carried the rows over the episode boundary
+        let hits = r.metrics.count("exec_prefetch_hits") - prefetch_hits_seen;
+        if hits > 0 {
+            println!("           cross-episode head prefetch: {hits} checkout(s) skipped");
+        }
+        prefetch_hits_seen += hits;
     }
     let plan = driver.trainer.plan.clone();
     // finish() folds every worker rank's final context shards (and

@@ -102,6 +102,43 @@ pub fn phase_table(
     out
 }
 
+/// One epoch-level overlap row appended under the step table: work that
+/// ran on the episode producer thread (walk generation, pool staging)
+/// rather than inside a training step, labelled by whether the epoch's
+/// critical path actually absorbed it. See `docs/PIPELINE.md` and the
+/// README's "Reading the phase breakdown".
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapRow {
+    /// Row label (e.g. `walk-gen`, `pool-build`, `producer-join`).
+    pub name: &'static str,
+    /// Seconds of work the row accounts for.
+    pub secs: f64,
+    /// True when the work ran concurrently with training (hidden);
+    /// false when it extended the epoch (exposed).
+    pub overlapped: bool,
+}
+
+/// [`phase_table`] plus epoch-level overlap rows: the step-phase table as
+/// today, then one row per [`OverlapRow`] with the seconds in the
+/// `measured` column and `overlapped`/`exposed` in the `simulated`
+/// column's slot — walk generation visibly leaving (or re-entering) the
+/// critical path. Rows with zero seconds are skipped so the table stays
+/// honest about what actually ran.
+pub fn phase_table_with_overlap(
+    measured: &PhaseDurations,
+    simulated: &PhaseDurations,
+    overlap: OverlapConfig,
+    rows: &[OverlapRow],
+) -> String {
+    use crate::util::human_secs;
+    let mut out = phase_table(measured, simulated, overlap);
+    for r in rows.iter().filter(|r| r.secs > 0.0) {
+        let tag = if r.overlapped { "overlapped" } else { "exposed" };
+        out.push_str(&format!("  {:<16} {:>12} {:>12}\n", r.name, human_secs(r.secs), tag));
+    }
+    out
+}
+
 /// Which overlaps the executor exploits — the ablation axes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OverlapConfig {
@@ -336,6 +373,24 @@ mod tests {
         assert!(t.contains("step (piped)"), "step totals missing:\n{t}");
         // exactly header + 7 phases + the step row
         assert_eq!(t.lines().count(), 9, "table:\n{t}");
+    }
+
+    #[test]
+    fn overlap_rows_append_without_disturbing_the_base_table() {
+        let m = sample_durations();
+        let s = sample_durations();
+        let rows = [
+            OverlapRow { name: "walk-gen", secs: 0.25, overlapped: true },
+            OverlapRow { name: "producer-join", secs: 0.01, overlapped: false },
+            OverlapRow { name: "pool-build", secs: 0.0, overlapped: true }, // skipped
+        ];
+        let base = phase_table(&m, &s, OverlapConfig::paper());
+        let t = phase_table_with_overlap(&m, &s, OverlapConfig::paper(), &rows);
+        assert!(t.starts_with(&base), "base table must be a prefix:\n{t}");
+        assert_eq!(t.lines().count(), base.lines().count() + 2, "zero rows skipped:\n{t}");
+        assert!(t.contains("walk-gen") && t.contains("overlapped"));
+        assert!(t.contains("producer-join") && t.contains("exposed"));
+        assert!(!t.contains("pool-build"), "zero-second row must not render:\n{t}");
     }
 
     #[test]

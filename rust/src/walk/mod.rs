@@ -6,15 +6,22 @@
 //! **episode-partitioned walk files** so the embedding engine streams one
 //! partition per episode (the paper's "offline asynchronous" mode). The
 //! engine runs on CPU threads, fully independent of the training engine —
-//! the coordinator overlaps next-epoch walking with current-epoch training.
+//! the coordinator overlaps next-epoch walking with current-epoch training
+//! for real when `schedule.episode_prefetch ≥ 1`: [`producer`] stages
+//! sealed episode pools (and the next walk generation) on its own thread
+//! while the current episode trains. The pipeline's state machine,
+//! channel ownership, and bit-parity contract are specified in
+//! `docs/PIPELINE.md`.
 
 pub mod alias;
 pub mod augment;
 pub mod engine;
 pub mod node2vec;
 pub mod partition;
+pub mod producer;
 
 pub use augment::augment_walks;
 pub use engine::{WalkConfig, WalkEngine, WalkSet};
+pub use producer::{produce_episodes, SealedEpisode};
 pub use node2vec::{Node2VecEngine, Node2VecParams};
 pub use partition::degree_guided_split;

@@ -1,0 +1,202 @@
+//! Episode producer — the staging thread of the async episode pipeline.
+//!
+//! When `schedule.episode_prefetch ≥ 1`, the [`crate::coordinator::driver::Driver`]
+//! spawns one producer thread per epoch. The producer performs the epoch's
+//! RNG-free (or self-seeded) staging work *ahead* of training: it splits
+//! the sample corpus into episodes (one shuffle from a dedicated,
+//! epoch-seeded RNG — see the seeding contract in `docs/PIPELINE.md`
+//! §"Seeding and bit-parity"), 2D-buckets each episode into an
+//! [`EpisodePool`], and hands the sealed pools to the trainer through a
+//! bounded [`std::sync::mpsc::sync_channel`] whose depth is the configured
+//! prefetch. With depth 1 this double-buffers episodes: pool `N+1` is
+//! built while pool `N` trains, and the checkpoint commit fold at the end
+//! of episode `N` overlaps episode `N+1`'s staging instead of serializing
+//! with it.
+//!
+//! Shutdown is channel-structured, never signalled: the consumer owns the
+//! [`std::sync::mpsc::Receiver`] by value, so an abort anywhere in training
+//! (worker panic, checkpoint error) drops the receiver, the producer's
+//! next `send` fails, and [`produce_episodes`] returns with
+//! [`ProducerStats::aborted`] set instead of blocking forever — the
+//! episode-channel half of the deadlock-freedom argument in
+//! `docs/PIPELINE.md` §"Deadlock freedom".
+
+use std::sync::mpsc::SyncSender;
+
+use crate::graph::Edge;
+use crate::metrics::Timer;
+use crate::partition::HierarchyPlan;
+use crate::sample::EpisodePool;
+use crate::util::Rng;
+
+/// One episode's training input, fully staged: the 2D-bucketed sample
+/// pool plus its position in the epoch. Everything the trainer needs to
+/// run the episode without touching the corpus or the split RNG.
+pub struct SealedEpisode {
+    /// Episode index within the epoch (resume-skipped episodes are never
+    /// sent, so indices may start above zero).
+    pub index: usize,
+    /// Total episodes in the epoch (the commit metadata needs it).
+    pub total: usize,
+    /// The 2D-bucketed sample blocks for the rotation schedule.
+    pub pool: EpisodePool,
+}
+
+/// What the producer did before returning — staging cost bookkeeping and
+/// the abort flag the driver folds into the epoch's metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProducerStats {
+    /// Episodes the split produced (including resume-skipped ones).
+    pub total_episodes: usize,
+    /// Sealed episodes actually delivered to the trainer.
+    pub sent: usize,
+    /// Seconds spent 2D-bucketing pools (overlapped with training for
+    /// every episode after the first `depth` sends).
+    pub pool_build_secs: f64,
+    /// True when the consumer hung up mid-epoch (training aborted); the
+    /// producer stops staging immediately rather than filling a dead
+    /// channel.
+    pub aborted: bool,
+}
+
+/// Split `samples` into episodes and stream each sealed pool into `tx`,
+/// in episode order. `split_seed` must be the epoch-split seed the serial
+/// path uses (`cfg.seed ^ epoch · 0xE90C`) — the shuffle here *is* that
+/// path's shuffle, draw for draw, which is what makes any prefetch depth
+/// bit-identical to the serial reference (`docs/PIPELINE.md` §"Seeding
+/// and bit-parity").
+///
+/// Owns `tx`: the channel disconnects when this returns, which is the
+/// consumer's end-of-epoch signal. A send failure (receiver dropped) is
+/// the abort path, not an error — see [`ProducerStats::aborted`].
+///
+/// Panics if `start_episode` exceeds the episode count — the same
+/// schedule-divergence backstop the serial path asserts on resume.
+pub fn produce_episodes(
+    plan: &HierarchyPlan,
+    mut samples: Vec<Edge>,
+    episode_size: usize,
+    split_seed: u64,
+    start_episode: usize,
+    tx: SyncSender<SealedEpisode>,
+) -> ProducerStats {
+    let mut rng = Rng::new(split_seed);
+    let episodes = crate::sample::split_episodes(&mut samples, episode_size, &mut rng);
+    assert!(
+        start_episode <= episodes.len(),
+        "resume start episode {start_episode} exceeds the epoch's {} episodes \
+         (schedule/sampling config diverged from the checkpointed run)",
+        episodes.len()
+    );
+    let total = episodes.len();
+    let mut stats = ProducerStats { total_episodes: total, ..Default::default() };
+    for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
+        let t = Timer::start();
+        let pool = EpisodePool::build(plan, ep);
+        stats.pool_build_secs += t.secs();
+        if tx.send(SealedEpisode { index: i, total, pool }).is_err() {
+            stats.aborted = true;
+            return stats;
+        }
+        stats.sent += 1;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::sync_channel;
+
+    use super::*;
+    use crate::gen;
+
+    fn fixture(n: usize, m: usize, seed: u64) -> (HierarchyPlan, Vec<Edge>) {
+        let mut rng = Rng::new(seed);
+        let graph = gen::to_graph(n, gen::erdos_renyi(n, m, &mut rng));
+        let plan = HierarchyPlan::new(1, 2, 2, n);
+        (plan, graph.edges().collect())
+    }
+
+    /// The streamed pools are the serial split, episode for episode: one
+    /// identically-seeded shuffle, same chunking, same 2D bucketing.
+    #[test]
+    fn streamed_pools_match_the_serial_split() {
+        let (plan, samples) = fixture(64, 700, 3);
+        let mut serial = samples.clone();
+        let mut rng = Rng::new(0xE90C);
+        let episodes = crate::sample::split_episodes(&mut serial, 100, &mut rng);
+        assert!(episodes.len() >= 3, "fixture too small to exercise streaming");
+
+        let (tx, rx) = sync_channel(1);
+        let (stats, got) = std::thread::scope(|scope| {
+            let (plan_r, s) = (&plan, samples.clone());
+            let h = scope.spawn(move || produce_episodes(plan_r, s, 100, 0xE90C, 0, tx));
+            let mut got = Vec::new();
+            while let Ok(se) = rx.recv() {
+                got.push(se);
+            }
+            (h.join().expect("producer"), got)
+        });
+        assert!(!stats.aborted);
+        assert_eq!(stats.total_episodes, episodes.len());
+        assert_eq!(stats.sent, episodes.len());
+        assert_eq!(got.len(), episodes.len());
+        for (i, (se, ep)) in got.iter().zip(&episodes).enumerate() {
+            assert_eq!(se.index, i);
+            assert_eq!(se.total, episodes.len());
+            let want = EpisodePool::build(&plan, ep);
+            for sp in 0..plan.total_subparts() {
+                for g in 0..plan.total_gpus() {
+                    assert_eq!(
+                        se.pool.block(sp, g),
+                        want.block(sp, g),
+                        "episode {i} block ({sp},{g}) drifted"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Resume skip: episodes before `start_episode` are split (they shape
+    /// the shuffle) but never staged or sent.
+    #[test]
+    fn resume_skips_already_trained_episodes() {
+        let (plan, samples) = fixture(48, 500, 9);
+        let (tx, rx) = sync_channel(2);
+        let (stats, first) = std::thread::scope(|scope| {
+            let (plan_r, s) = (&plan, samples.clone());
+            let h = scope.spawn(move || produce_episodes(plan_r, s, 80, 0x5EED, 2, tx));
+            let first = rx.recv().expect("at least one episode past the skip").index;
+            while rx.recv().is_ok() {}
+            (h.join().expect("producer"), first)
+        });
+        assert_eq!(first, 2);
+        assert_eq!(stats.sent, stats.total_episodes - 2);
+    }
+
+    /// The abort contract: dropping the receiver mid-epoch makes the
+    /// producer return promptly (send fails) instead of hanging on the
+    /// bounded channel — the shutdown path an executor panic or a failed
+    /// checkpoint commit takes.
+    #[test]
+    fn dropped_receiver_shuts_the_producer_down_without_hanging() {
+        let (plan, samples) = fixture(64, 900, 5);
+        let (tx, rx) = sync_channel(1);
+        let stats = std::thread::scope(|scope| {
+            let (plan_r, s) = (&plan, samples.clone());
+            let h = scope.spawn(move || produce_episodes(plan_r, s, 50, 0xDEAD, 0, tx));
+            // consume one sealed episode, then hang up mid-epoch
+            let se = rx.recv().expect("first episode");
+            assert_eq!(se.index, 0);
+            drop(rx);
+            // the join itself is the assertion: a producer that blocked on
+            // a dead channel would hang the scope forever
+            h.join().expect("producer")
+        });
+        assert!(stats.aborted, "producer must notice the hang-up");
+        assert!(
+            stats.sent < stats.total_episodes,
+            "an aborted epoch must not claim full delivery"
+        );
+    }
+}

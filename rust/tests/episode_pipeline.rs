@@ -1,0 +1,120 @@
+//! Acceptance tests for the async episode pipeline (`docs/PIPELINE.md`):
+//! for every prefetch depth the trained model must be **bit-identical**
+//! to the serial reference. The pipeline moves work between threads —
+//! episode splitting, pool building, walk generation, the cross-episode
+//! head carry — but never reorders an RNG draw or a model write, so
+//! equality here is exact (`==` on the f32 matrices), not a tolerance.
+//! The CI build-test matrix additionally drives the `tembed train` CLI
+//! with `--set schedule.episode_prefetch=0` and `=1` so the end-to-end
+//! binary exercises both orders on every toolchain.
+
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::Driver;
+use tembed::gen;
+use tembed::metrics::EpochReport;
+use tembed::util::Rng;
+
+const EPOCHS: usize = 2;
+
+fn random_graph(seed: u64) -> tembed::graph::CsrGraph {
+    let mut rng = Rng::new(seed);
+    let (edges, _) = gen::dcsbm(240, 2_000, 8, 0.8, 2.3, &mut rng);
+    gen::to_graph(240, edges)
+}
+
+fn pipeline_cfg(seed: u64, prefetch: usize, executor: bool) -> TrainConfig {
+    TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        subparts: 2,
+        dim: 8,
+        walk_length: 5,
+        walks_per_node: 2,
+        window: 2,
+        // several episodes per epoch: the bounded channel and the head
+        // carry both need real episode boundaries to exercise
+        episode_size: 2_000,
+        // fresh walks every epoch: the producer's walk-ahead fires
+        walk_epochs: 1,
+        epochs: EPOCHS,
+        episode_prefetch: prefetch,
+        executor,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn run(graph: &tembed::graph::CsrGraph, cfg: TrainConfig) -> (Vec<EpochReport>, tembed::embed::EmbeddingStore) {
+    let mut d = Driver::new(graph, cfg, None).unwrap();
+    let reports = d.run(EPOCHS).unwrap();
+    (reports, d.finish().unwrap())
+}
+
+/// The tentpole's pinned property: sweeping `schedule.episode_prefetch`
+/// over {0, 1, 2} on random graphs changes *nothing observable* about
+/// training — per-epoch loss sums, sample counts, and the final model are
+/// bit-identical to the depth-0 serial reference.
+#[test]
+fn prefetch_sweep_is_bit_identical_to_serial() {
+    for graph_seed in [11u64, 12, 13] {
+        let graph = random_graph(graph_seed);
+        let (ref_reports, ref_store) = run(&graph, pipeline_cfg(graph_seed, 0, true));
+        assert!(ref_reports.iter().all(|r| r.samples > 0));
+        for depth in [1usize, 2] {
+            let (reports, store) = run(&graph, pipeline_cfg(graph_seed, depth, true));
+            for (e, (got, want)) in reports.iter().zip(&ref_reports).enumerate() {
+                assert_eq!(
+                    got.samples, want.samples,
+                    "graph {graph_seed} depth {depth} epoch {e}: sample count diverged"
+                );
+                assert_eq!(
+                    got.loss_sum, want.loss_sum,
+                    "graph {graph_seed} depth {depth} epoch {e}: loss diverged"
+                );
+            }
+            assert_eq!(
+                store.vertex, ref_store.vertex,
+                "graph {graph_seed} depth {depth}: vertex matrix diverged"
+            );
+            assert_eq!(
+                store.context, ref_store.context,
+                "graph {graph_seed} depth {depth}: context matrix diverged"
+            );
+        }
+    }
+}
+
+/// Same property through the single-threaded reference scheduler
+/// (`executor = false`): the pipeline wraps *episode staging*, not the
+/// executor, so parity must hold for both training backends.
+#[test]
+fn streamed_epochs_match_serial_without_the_executor() {
+    let graph = random_graph(21);
+    let (ref_reports, ref_store) = run(&graph, pipeline_cfg(21, 0, false));
+    let (reports, store) = run(&graph, pipeline_cfg(21, 1, false));
+    for (e, (got, want)) in reports.iter().zip(&ref_reports).enumerate() {
+        assert_eq!(got.loss_sum, want.loss_sum, "epoch {e} loss diverged");
+        assert_eq!(got.samples, want.samples, "epoch {e} sample count diverged");
+    }
+    assert_eq!(store.vertex, ref_store.vertex);
+    assert_eq!(store.context, ref_store.context);
+}
+
+/// The overlap is real, not just parity-neutral: with depth ≥ 1 the
+/// epoch report books the next generation's walk time as overlapped
+/// work, and the depth-0 reference books none.
+#[test]
+fn overlap_metrics_appear_only_with_prefetch_on() {
+    let graph = random_graph(31);
+    let (on, _) = run(&graph, pipeline_cfg(31, 1, true));
+    let (off, _) = run(&graph, pipeline_cfg(31, 0, true));
+    // epoch 0 walks ahead for epoch 1; the last epoch has no successor
+    assert!(on[0].metrics.secs("walk_gen_overlapped") > 0.0);
+    assert!(on[0].metrics.secs("pool_build") > 0.0);
+    assert_eq!(on[EPOCHS - 1].metrics.secs("walk_gen_overlapped"), 0.0);
+    for r in &off {
+        assert_eq!(r.metrics.secs("walk_gen_overlapped"), 0.0);
+        assert_eq!(r.metrics.secs("pool_build"), 0.0);
+        assert_eq!(r.metrics.count("exec_prefetch_hits"), 0);
+    }
+}
