@@ -4,7 +4,8 @@
 //! step (when artifacts exist), minibatch assembly, negative sampling,
 //! alias-table builds (serial vs parallel), walk generation, episode
 //! bucketing, the executor stage-window sweep, the episode-pipeline A/B
-//! (prefetch off vs depth 1), and checkpoint writes.
+//! (prefetch off vs depth 1), checkpoint writes, and the serving tier
+//! (an in-process `Server` under zipfian loadgen: p50/p99/QPS).
 //!
 //! Every measurement goes through one [`Report::add`] call, which both
 //! prints the human table line and records the row for the JSON
@@ -463,7 +464,84 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // --- serving tier: an in-process Server over a unix socket driven
+    // by the zipfian load generator — the tier's latency/QPS claims are
+    // measured, not asserted (docs/SERVING.md §"The load generator")
+    serve_benches(&mut rep);
+
     rep.finish();
+}
+
+#[cfg(unix)]
+fn serve_benches(rep: &mut Report) {
+    use std::time::Duration;
+    use tembed::ckpt::{
+        CkptWriter, CkptWriterConfig, EpisodeMeta, LoadgenConfig, ServeConfig, Server,
+    };
+    use tembed::comm::transport::Addr;
+    use tembed::partition::range_bounds;
+
+    let (n, dim, subparts) = (50_000usize, 64usize, 4usize);
+    let dir =
+        std::env::temp_dir().join(format!("tembed_hotpath_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // one committed generation through the same writer path the trainer uses
+    let sb = range_bounds(n, subparts);
+    let w = CkptWriter::spawn(CkptWriterConfig {
+        dir: dir.clone(),
+        num_nodes: n,
+        dim,
+        subpart_bounds: sb.clone(),
+        context_bounds: range_bounds(n, 1),
+        graph_digest: 1,
+        config_digest: 0,
+        channel_cap: subparts + 4,
+    })
+    .expect("ckpt writer");
+    let mut rng = Rng::new(99);
+    w.sink().begin_episode(0, true);
+    for sp in 0..subparts {
+        let rows: Vec<f32> =
+            (0..(sb[sp + 1] - sb[sp]) * dim).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        w.sink().offer_vertex(sp, rows);
+    }
+    let context: Vec<f32> = (0..n * dim).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+    w.sink()
+        .commit_episode(EpisodeMeta {
+            watermark: 0,
+            epoch: 0,
+            episode_in_epoch: 0,
+            episodes_in_epoch: 1,
+            contexts: vec![context],
+            rng_states: vec![[1, 2, 3, 4]],
+        })
+        .expect("commit");
+    w.finish().expect("writer stats");
+
+    let addr = Addr::Uds(dir.join("serve.sock"));
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig { workers: 4, queue_cap: 8, ..ServeConfig::default() },
+    )
+    .expect("serve tier");
+    let mut cfg = LoadgenConfig::new(addr);
+    cfg.clients = 4;
+    cfg.zipf_s = 1.0;
+    cfg.duration =
+        if rep.quick { Duration::from_millis(400) } else { Duration::from_secs(3) };
+    let report = tembed::ckpt::loadgen::run(&cfg).expect("loadgen");
+    assert_eq!(report.errors, 0, "loadgen protocol errors against the bench server");
+    rep.add("serve", "loadgen p50 latency (c=4 zipf=1.0)", report.p50_us as f64, "us");
+    rep.add("serve", "loadgen p99 latency (c=4 zipf=1.0)", report.p99_us as f64, "us");
+    rep.add("serve", "loadgen throughput (c=4 zipf=1.0)", report.qps, "queries/s");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(not(unix))]
+fn serve_benches(_rep: &mut Report) {
+    println!("(serve tier skipped — the loadgen bench needs unix sockets)");
 }
 
 #[cfg(not(feature = "pjrt"))]

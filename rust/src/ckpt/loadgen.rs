@@ -1,0 +1,302 @@
+//! `tembed loadgen`: a concurrent load generator for the serving tier.
+//!
+//! N client threads each own one connection and hammer the endpoint
+//! with zipfian-keyed edge-score batches (plus an occasional top-k) for
+//! a fixed duration, then the per-query latencies are merged into
+//! p50/p99 and QPS. The zipfian draw matters: production embedding
+//! traffic concentrates on hot keys, which is exactly the access
+//! pattern the shared generation-swapped reader is supposed to absorb
+//! without per-query filesystem work. How to run it and how to read
+//! the numbers: `docs/SERVING.md` §"The load generator".
+//!
+//! Sizing note: the tier serves one connection per pool worker, so keep
+//! `clients` ≤ the server's worker count for a pure latency read.
+//! Excess clients sit in the accept queue (served only as workers free
+//! up) and beyond `queue_cap` they are busy-rejected — those surface in
+//! [`LoadgenReport::errors`], by design.
+
+use std::time::{Duration, Instant};
+
+use crate::comm::transport::Addr;
+use crate::util::Rng;
+
+use super::serve::{QueryClient, ServeStats};
+
+/// Knobs for [`run`].
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Serving endpoint to dial.
+    pub addr: Addr,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Zipf skew `s` (0 = uniform; ~1 is a typical hot-key web skew).
+    pub zipf_s: f64,
+    /// Edge pairs per score query.
+    pub batch: usize,
+    /// Every Nth request is a top-k instead of a score batch (0 = never).
+    pub topk_every: usize,
+    /// `k` for those top-k requests.
+    pub topk_k: usize,
+    /// Deterministic per-client RNG seeding.
+    pub seed: u64,
+    /// Dial timeout per connection.
+    pub connect_timeout: Duration,
+}
+
+impl LoadgenConfig {
+    /// Defaults: 4 clients, 5 s, s=1.0, batches of 16, a top-k every
+    /// 16th request.
+    pub fn new(addr: Addr) -> LoadgenConfig {
+        LoadgenConfig {
+            addr,
+            clients: 4,
+            duration: Duration::from_secs(5),
+            zipf_s: 1.0,
+            batch: 16,
+            topk_every: 16,
+            topk_k: 8,
+            seed: 42,
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Merged result of one [`run`].
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    /// Successful queries across all clients.
+    pub queries: u64,
+    /// Failed queries / refused connections (a client stops at its
+    /// first error — the connection state is unknown after one).
+    pub errors: u64,
+    /// Stale reply frames discarded across all clients.
+    pub stale_discards: u64,
+    /// Wall-clock from first to last client finishing.
+    pub elapsed: Duration,
+    /// Median per-query roundtrip latency, microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile per-query roundtrip latency, microseconds.
+    pub p99_us: u64,
+    /// Successful queries per second of wall-clock.
+    pub qps: f64,
+    /// Manifest watermark before / after the run (moves when a live
+    /// trainer commits generations underneath the tier).
+    pub start_watermark: u64,
+    pub end_watermark: u64,
+    /// Server-side pool counters after the run, if the probe got them.
+    pub pool: Option<ServeStats>,
+}
+
+impl LoadgenReport {
+    /// Human-readable summary (the CLI prints this to stderr; the
+    /// machine-readable path is the hotpath JSON reporter).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "loadgen: {} queries in {:.2}s ({:.0} qps), {} errors\n  p50 {} us, p99 {} us, {} stale frames discarded\n  watermark {} -> {}\n",
+            self.queries,
+            self.elapsed.as_secs_f64(),
+            self.qps,
+            self.errors,
+            self.p50_us,
+            self.p99_us,
+            self.stale_discards,
+            self.start_watermark,
+            self.end_watermark,
+        );
+        if let Some(p) = self.pool {
+            s.push_str(&format!(
+                "  server: {} queries, {} swaps, {} queue rejects, {} connections\n",
+                p.queries, p.swaps, p.queue_rejects, p.connections
+            ));
+        }
+        s
+    }
+}
+
+/// Zipfian sampler over `[0, n)`: `P(i) ∝ 1/(i+1)^s`, drawn by binary
+/// search over a precomputed CDF (one uniform `f64` per draw).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "zipf over an empty domain");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> u32 {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1) as u32
+    }
+}
+
+/// `sorted[(len-1) * p / 100]` — nearest-rank percentile over an
+/// already-sorted latency list; 0 on empty input.
+fn percentile(sorted: &[u64], p: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as u64 * p / 100) as usize]
+}
+
+struct ClientOut {
+    lat_us: Vec<u64>,
+    errors: u64,
+    stale: u64,
+}
+
+/// Drive the load: probe the endpoint for its key space, run
+/// `cfg.clients` threads until `cfg.duration` elapses, merge latencies.
+pub fn run(cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    crate::ensure!(cfg.clients > 0, "loadgen needs at least one client");
+    crate::ensure!(cfg.batch > 0, "loadgen batch must be positive");
+    // a short-lived probe learns the key space, then disconnects so it
+    // does not hold a pool worker for the whole run
+    let (num_nodes, start_watermark) = {
+        let mut probe = QueryClient::connect(&cfg.addr, cfg.connect_timeout)?;
+        let stat = probe.stat()?;
+        probe.shutdown();
+        (stat.num_nodes as usize, stat.watermark)
+    };
+    crate::ensure!(num_nodes >= 2, "checkpoint has {num_nodes} nodes; loadgen needs at least 2");
+    let zipf = Zipf::new(num_nodes, cfg.zipf_s);
+
+    let deadline = Instant::now() + cfg.duration;
+    let t0 = Instant::now();
+    let outs: Vec<ClientOut> = std::thread::scope(|scope| {
+        let zipf = &zipf;
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut out = ClientOut { lat_us: Vec::new(), errors: 0, stale: 0 };
+                    // decorrelate client streams off one user seed
+                    let mut rng =
+                        Rng::new(cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(c as u64 + 1));
+                    let mut client = match QueryClient::connect(&cfg.addr, cfg.connect_timeout) {
+                        Ok(cl) => cl,
+                        Err(_) => {
+                            out.errors += 1;
+                            return out;
+                        }
+                    };
+                    let mut i = 0usize;
+                    while Instant::now() < deadline {
+                        i += 1;
+                        let q0 = Instant::now();
+                        let res = if cfg.topk_every > 0 && i % cfg.topk_every == 0 {
+                            client.topk(zipf.draw(&mut rng), cfg.topk_k).map(|_| ())
+                        } else {
+                            let pairs: Vec<(u32, u32)> = (0..cfg.batch)
+                                .map(|_| (zipf.draw(&mut rng), zipf.draw(&mut rng)))
+                                .collect();
+                            client.edge_scores(&pairs).map(|_| ())
+                        };
+                        match res {
+                            Ok(()) => out.lat_us.push(q0.elapsed().as_micros() as u64),
+                            Err(_) => {
+                                out.errors += 1;
+                                break;
+                            }
+                        }
+                    }
+                    out.stale = client.stale_discards();
+                    client.shutdown();
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen client thread")).collect()
+    });
+    let elapsed = t0.elapsed();
+
+    // a fresh probe reads the end watermark + server counters (the run's
+    // own connections are gone, so this queues briefly at worst)
+    let (end_watermark, pool) = match QueryClient::connect(&cfg.addr, cfg.connect_timeout) {
+        Ok(mut probe) => {
+            let wm = probe.stat().map(|s| s.watermark).unwrap_or(start_watermark);
+            let pool = probe.pool_stat().ok();
+            probe.shutdown();
+            (wm, pool)
+        }
+        Err(_) => (start_watermark, None),
+    };
+
+    let mut lat: Vec<u64> = Vec::new();
+    let mut errors = 0u64;
+    let mut stale = 0u64;
+    for o in &outs {
+        lat.extend_from_slice(&o.lat_us);
+        errors += o.errors;
+        stale += o.stale;
+    }
+    lat.sort_unstable();
+    let queries = lat.len() as u64;
+    Ok(LoadgenReport {
+        queries,
+        errors,
+        stale_discards: stale,
+        elapsed,
+        p50_us: percentile(&lat, 50),
+        p99_us: percentile(&lat, 99),
+        qps: queries as f64 / elapsed.as_secs_f64().max(1e-9),
+        start_watermark,
+        end_watermark,
+        pool: pool.map(|p| ServeStats { stale_discards: stale, ..p }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_prefers_hot_keys_and_stays_in_range() {
+        let n = 100;
+        let zipf = Zipf::new(n, 1.1);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0u64; n];
+        for _ in 0..20_000 {
+            let k = zipf.draw(&mut rng) as usize;
+            assert!(k < n);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[50] * 5, "head {} vs mid {}", counts[0], counts[50]);
+        assert!(counts[0] > 0 && counts[n - 1] < counts[0]);
+    }
+
+    #[test]
+    fn zipf_zero_skew_is_roughly_uniform() {
+        let n = 10;
+        let zipf = Zipf::new(n, 0.0);
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0u64; n];
+        for _ in 0..10_000 {
+            counts[zipf.draw(&mut rng) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((600..=1400).contains(&c), "key {i} drawn {c} times");
+        }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 99), 0);
+        assert_eq!(percentile(&[7], 50), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50), 50);
+        assert_eq!(percentile(&v, 99), 99);
+        assert_eq!(percentile(&v, 100), 100);
+    }
+}

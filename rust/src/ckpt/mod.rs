@@ -17,13 +17,16 @@
 //!   to a temp file and atomically renamed. A crash leaves at most one
 //!   episode unrecoverable: the previous manifest still references a
 //!   complete generation.
-//! * [`reader`] / [`serve`] — [`CkptReader`] opens the newest complete
-//!   manifest without copying the matrices (`cfg(unix)` mmap of the
-//!   segment payloads, with a portable read-and-decode fallback), and
-//!   [`serve`] answers edge-score / top-k / stat queries over the
-//!   `comm::transport` framing (KIND_QUERY/KIND_REPLY) from a checkpoint
-//!   directory that a concurrent `tembed train --ckpt-dir` is still
-//!   appending to, re-opening the manifest whenever the watermark moves.
+//! * [`reader`] / [`serve`] / [`loadgen`] — [`CkptReader`] opens the
+//!   newest complete manifest without copying the matrices (`cfg(unix)`
+//!   mmap of the segment payloads, with a portable read-and-decode
+//!   fallback) and scores through the shared SIMD kernels
+//!   (`embed::kernels`); [`serve`] is the concurrent query tier — one
+//!   process-wide generation-swapped reader ([`serve::SharedReader`]),
+//!   a bounded worker pool, and the KIND_QUERY/KIND_REPLY protocol —
+//!   following a checkpoint directory that a concurrent `tembed train
+//!   --ckpt-dir` is still appending to; [`loadgen`] measures that tier
+//!   (concurrent zipfian clients, p50/p99/QPS). Spec: `docs/SERVING.md`.
 //!
 //! ## Directory layout
 //!
@@ -57,11 +60,13 @@
 //! `tests/ckpt_format_kat.rs`, so spec and code cannot drift apart.
 
 pub mod format;
+pub mod loadgen;
 pub mod reader;
 pub mod serve;
 pub mod writer;
 
 pub use format::Manifest;
+pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use reader::CkptReader;
-pub use serve::QueryClient;
+pub use serve::{PoolStats, QueryClient, ServeConfig, ServeStats, Server, SharedReader};
 pub use writer::{CkptSink, CkptWriter, CkptWriterConfig, EpisodeMeta, Offer, WriterStats};

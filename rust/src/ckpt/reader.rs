@@ -16,7 +16,7 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::embed::EmbeddingStore;
+use crate::embed::{kernels, EmbeddingStore};
 use crate::util::error::Context as _;
 
 use super::format::{
@@ -373,23 +373,46 @@ impl CkptReader {
         &shard.rows.as_slice()[local * dim..(local + 1) * dim]
     }
 
-    /// Edge score `vertex[u] · context[v]` — identical semantics to
-    /// `EmbeddingStore::score`, so a served score matches what the
-    /// trainer would compute from the same generation.
+    /// Edge score `vertex[u] · context[v]` through [`kernels::dot`] — the
+    /// exact routine `EmbeddingStore::score` uses, so a served score is
+    /// bit-identical to what the trainer would compute from the same
+    /// generation (the dot kernel is bit-identical scalar vs SIMD by
+    /// contract; see docs/PERF.md).
     pub fn score(&self, u: u32, v: u32) -> f32 {
-        let a = self.vertex_row(u as usize);
-        let b = self.context_row(v as usize);
-        a.iter().zip(b).map(|(x, y)| x * y).sum()
+        kernels::dot(self.vertex_row(u as usize), self.context_row(v as usize))
     }
 
-    /// Top-k neighbor candidates of `u` by edge score over every node
-    /// (brute-force scan; the simulated scales this repo runs at keep
-    /// this well inside a query budget).
+    /// Top-k neighbor candidates of `u` by edge score over every node.
+    ///
+    /// The scan runs as blocked [`kernels::gemv`] calls over the
+    /// contiguous context-shard rows (one level-2 pass per block instead
+    /// of `n` strided dots), so a candidate's score may differ from the
+    /// [`Self::score`] of the same pair by up to `kernels::gemv_tolerance`
+    /// per element — the same documented ULP story the training step's
+    /// negative leg carries (docs/SERVING.md §"Scoring kernels").
     pub fn topk(&self, u: u32, k: usize) -> Vec<(u32, f32)> {
-        let mut scored: Vec<(u32, f32)> = (0..self.num_nodes() as u32)
-            .filter(|&v| v != u)
-            .map(|v| (v, self.score(u, v)))
-            .collect();
+        const BLOCK_ROWS: usize = 512;
+        let dim = self.dim();
+        let x = self.vertex_row(u as usize);
+        let mut scored: Vec<(u32, f32)> =
+            Vec::with_capacity(self.num_nodes().saturating_sub(1));
+        let mut out = [0.0f32; BLOCK_ROWS];
+        for shard in &self.shards {
+            let rows = shard.rows.as_slice();
+            let n_rows = rows.len() / dim;
+            let mut r0 = 0usize;
+            while r0 < n_rows {
+                let bn = (n_rows - r0).min(BLOCK_ROWS);
+                kernels::gemv(&rows[r0 * dim..(r0 + bn) * dim], dim, x, &mut out[..bn]);
+                for (i, &s) in out[..bn].iter().enumerate() {
+                    let v = (shard.row_start + r0 + i) as u32;
+                    if v != u {
+                        scored.push((v, s));
+                    }
+                }
+                r0 += bn;
+            }
+        }
         let k = k.min(scored.len());
         if k < scored.len() {
             scored.select_nth_unstable_by(k, |a, b| {

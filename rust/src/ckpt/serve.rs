@@ -1,6 +1,6 @@
-//! Query serving over the transport framing: a `tembed serve` process
-//! answers edge-score / top-k / stat queries from a checkpoint directory
-//! that a concurrent `tembed train --ckpt-dir` is still appending to.
+//! The concurrent query tier: a `tembed serve` process answers
+//! edge-score / top-k / stat queries from a checkpoint directory that a
+//! concurrent `tembed train --ckpt-dir` is still appending to.
 //!
 //! Protocol (KIND_QUERY → KIND_REPLY, `tag` echoed, op in `dest`):
 //!
@@ -9,21 +9,43 @@
 //! | 1  | `u32 n`, n × `(u32 u,u32 v)` | `u32 n`, n × `f32 score`          |
 //! | 2  | `u32 node`, `u32 k`          | `u32 m`, m × `(u32 node,f32)`     |
 //! | 3  | —                            | watermark/epoch/episode/nodes/dim |
+//! | 4  | —                            | pool counters: 4 × `u64`          |
 //! | 0  | —                            | error reply: utf-8 message        |
 //!
-//! Every query first refreshes the reader if the manifest watermark moved
-//! — a long-lived connection transparently follows the training run, and
-//! the stat op makes the freshness visible to clients (the concurrent
-//! writer/reader test polls it to watch generations land).
+//! Tier architecture (spec: `docs/SERVING.md`):
+//!
+//! - **One shared reader, swapped by generation.** A single
+//!   [`SharedReader`] owns the current [`CkptReader`] behind
+//!   `RwLock<Arc<_>>`; a watcher thread polls the manifest watermark
+//!   (exponential backoff, [`POLL_MIN`]→[`POLL_MAX`]) and republishes a
+//!   freshly opened reader when it moves. Connections grab the current
+//!   `Arc` once per query — no per-query filesystem peek, and every
+//!   query in a batch is answered from one generation.
+//! - **Bounded concurrency.** [`Server`] runs a fixed
+//!   [`WorkerPool`](crate::util::pool::WorkerPool) pulling accepted
+//!   connections from a bounded queue. When the queue is full the
+//!   accept loop replies with a tag-0 error frame (`"server busy"`) and
+//!   drops the connection — clients see a clean refusal, not a hang.
+//! - **Clean draining.** Shutdown (SIGTERM/SIGINT in the CLI,
+//!   [`Server::shutdown`] in-process) stops the accept loop, lets each
+//!   worker finish its in-flight query, then joins the pool.
+//!
+//! The stat op makes freshness visible to clients (the concurrent
+//! writer/reader test polls it to watch generations land); the pool-stat
+//! op surfaces the tier-wide [`ServeStats`] counters over the wire.
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 use crate::comm::transport::{
     self, Addr, PayloadReader, PayloadWriter, Transport, TransportListener, WireMsg,
     KIND_QUERY, KIND_REPLY, KIND_SHUTDOWN,
 };
+use crate::metrics::Metrics;
+use crate::util::pool::{self, WorkerPool};
 
 use super::format;
 use super::reader::CkptReader;
@@ -36,13 +58,74 @@ pub const OP_SCORES: u32 = 1;
 pub const OP_TOPK: u32 = 2;
 /// Checkpoint freshness / shape probe.
 pub const OP_STAT: u32 = 3;
+/// Pool-wide serving counters ([`ServeStats`] over the wire).
+pub const OP_POOL_STAT: u32 = 4;
 
-/// Per-connection accounting (returned when the client disconnects).
+/// Initial manifest-poll delay (watcher thread and [`wait_for_manifest`]).
+pub const POLL_MIN: Duration = Duration::from_millis(5);
+/// Poll backoff cap: a swap lands at most this long after the commit.
+pub const POLL_MAX: Duration = Duration::from_millis(250);
+
+/// Frames a [`QueryClient`] will skip while hunting for its reply tag
+/// before giving up (a server echoing garbage tags must not spin us).
+pub const STALE_FRAME_CAP: u64 = 64;
+
+fn next_poll(d: Duration) -> Duration {
+    (d * 2).min(POLL_MAX)
+}
+
+/// Pool-wide serving counters, as a plain snapshot. Server side these
+/// come from [`PoolStats`] + the [`SharedReader`] swap count;
+/// `stale_discards` is the client-side tally of skipped stale frames
+/// ([`QueryClient::stale_discards`]) and is zero in server snapshots.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct ServeStats {
+    /// Queries answered (including error replies) across all workers.
     pub queries: u64,
-    /// Times the reader re-opened a newer generation mid-connection.
-    pub reopens: u64,
+    /// Generation swaps published by the watermark watcher.
+    pub swaps: u64,
+    /// Connections refused because the accept queue was full.
+    pub queue_rejects: u64,
+    /// Connections handed to a worker.
+    pub connections: u64,
+    /// Client-side: stale reply frames skipped (see [`QueryClient`]).
+    pub stale_discards: u64,
+}
+
+impl ServeStats {
+    /// Surface the counters through the shared metrics layer (rendered
+    /// by the CLI on drain, merged by tests).
+    pub fn to_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.add("serve_queries", self.queries);
+        m.add("serve_generation_swaps", self.swaps);
+        m.add("serve_queue_rejects", self.queue_rejects);
+        m.add("serve_connections", self.connections);
+        m.add("serve_stale_discards", self.stale_discards);
+        m
+    }
+}
+
+/// Shared atomic counters behind the per-worker serve loops.
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    queries: AtomicU64,
+    queue_rejects: AtomicU64,
+    connections: AtomicU64,
+}
+
+impl PoolStats {
+    /// Snapshot the counters; `swaps` comes from [`SharedReader::swaps`]
+    /// because the watcher owns that count, not the workers.
+    pub fn snapshot(&self, swaps: u64) -> ServeStats {
+        ServeStats {
+            queries: self.queries.load(Ordering::Relaxed),
+            swaps,
+            queue_rejects: self.queue_rejects.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            stale_discards: 0,
+        }
+    }
 }
 
 /// The stat-op reply.
@@ -56,27 +139,120 @@ pub struct ServeStat {
     pub dim: u32,
 }
 
-/// Serve one client connection until it closes (EOF) or sends SHUTDOWN.
-/// Re-opens the checkpoint whenever the on-disk watermark moves.
-pub fn serve_connection(t: &dyn Transport, dir: &Path) -> crate::Result<ServeStats> {
-    let mut reader = CkptReader::open(dir)?;
-    let mut stats = ServeStats::default();
+/// One process-wide mmap'd reader, republished atomically when the
+/// on-disk watermark moves. Cloning the inner `Arc` is the only
+/// per-query cost; the filesystem is only touched by the single watcher
+/// thread, which exits when the last `Arc<SharedReader>` drops.
+pub struct SharedReader {
+    current: RwLock<Arc<CkptReader>>,
+    swaps: AtomicU64,
+    dir: PathBuf,
+}
+
+impl SharedReader {
+    /// Open the checkpoint and start the watermark watcher.
+    pub fn open(dir: &Path) -> crate::Result<Arc<SharedReader>> {
+        let reader = CkptReader::open(dir)?;
+        let shared = Arc::new(SharedReader {
+            current: RwLock::new(Arc::new(reader)),
+            swaps: AtomicU64::new(0),
+            dir: dir.to_path_buf(),
+        });
+        let weak = Arc::downgrade(&shared);
+        std::thread::Builder::new()
+            .name("serve-watcher".into())
+            .spawn(move || watcher_loop(weak))
+            .expect("spawn watermark watcher thread");
+        Ok(shared)
+    }
+
+    /// The current generation's reader. Hold the returned `Arc` for the
+    /// duration of one query so a batch is answered consistently even if
+    /// the watcher swaps mid-flight.
+    pub fn current(&self) -> Arc<CkptReader> {
+        Arc::clone(&self.current.read().expect("shared reader lock"))
+    }
+
+    /// Generation swaps published since open.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// One watcher step: republish if the on-disk watermark moved.
+    /// Returns whether a swap happened (resets the poll backoff).
+    fn poll(&self) -> crate::Result<bool> {
+        let seen = self.current().watermark();
+        match format::peek_watermark(&self.dir) {
+            Ok(w) if w == seen => Ok(false),
+            // a mid-rename peek can transiently fail; keep serving the
+            // published generation and try again next tick
+            Err(_) => Ok(false),
+            Ok(_) => {
+                let fresh = Arc::new(CkptReader::open(&self.dir)?);
+                *self.current.write().expect("shared reader lock") = fresh;
+                self.swaps.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+        }
+    }
+}
+
+fn watcher_loop(weak: Weak<SharedReader>) {
+    let mut delay = POLL_MIN;
     loop {
-        let msg = match t.recv() {
-            Ok(m) => m,
+        std::thread::sleep(delay);
+        let Some(shared) = weak.upgrade() else { return };
+        delay = match shared.poll() {
+            Ok(true) => POLL_MIN,
+            Ok(false) => next_poll(delay),
+            Err(e) => {
+                // losing the open race against writer GC is survivable:
+                // keep the published generation, retry next tick
+                eprintln!("[serve] reopen after watermark move failed (will retry): {e:#}");
+                next_poll(delay)
+            }
+        };
+    }
+}
+
+/// Serve one client connection until it closes (EOF), sends SHUTDOWN, or
+/// the pool's stop flag is raised (the in-flight query still gets its
+/// reply — that is the drain guarantee). Returns queries served on this
+/// connection.
+pub fn serve_connection(
+    t: &dyn Transport,
+    shared: &SharedReader,
+    stats: &PoolStats,
+    stop: &AtomicBool,
+) -> crate::Result<u64> {
+    let mut served = 0u64;
+    loop {
+        let msg = match t.recv_idle() {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                // idle tick: the chance to observe a drain request
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(served);
+                }
+                continue;
+            }
             // client hung up: a normal end of connection
-            Err(_) => return Ok(stats),
+            Err(_) => return Ok(served),
         };
         match msg.kind {
-            KIND_SHUTDOWN => return Ok(stats),
+            KIND_SHUTDOWN => return Ok(served),
             KIND_QUERY => {
-                stats.queries += 1;
-                if reader.refresh()? {
-                    stats.reopens += 1;
-                }
-                let reply = answer(&reader, &msg);
+                served += 1;
+                stats.queries.fetch_add(1, Ordering::Relaxed);
+                // one Arc grab per query: the whole batch is answered
+                // from a single generation
+                let reader = shared.current();
+                let reply = answer(&reader, stats, shared.swaps(), &msg);
                 if t.send(&reply).is_err() {
-                    return Ok(stats);
+                    return Ok(served);
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(served);
                 }
             }
             _ => {} // unknown kinds: ignore (forward compat)
@@ -88,14 +264,19 @@ fn error_reply(tag: u64, e: &crate::Error) -> WireMsg {
     WireMsg { kind: KIND_REPLY, dest: OP_ERROR, tag, payload: format!("{e:#}").into_bytes() }
 }
 
-fn answer(reader: &CkptReader, msg: &WireMsg) -> WireMsg {
-    match answer_inner(reader, msg) {
+fn answer(reader: &CkptReader, stats: &PoolStats, swaps: u64, msg: &WireMsg) -> WireMsg {
+    match answer_inner(reader, stats, swaps, msg) {
         Ok(reply) => reply,
         Err(e) => error_reply(msg.tag, &e),
     }
 }
 
-fn answer_inner(reader: &CkptReader, msg: &WireMsg) -> crate::Result<WireMsg> {
+fn answer_inner(
+    reader: &CkptReader,
+    stats: &PoolStats,
+    swaps: u64,
+    msg: &WireMsg,
+) -> crate::Result<WireMsg> {
     let n_nodes = reader.num_nodes() as u32;
     let mut r = PayloadReader::new(&msg.payload);
     let mut w = PayloadWriter::new();
@@ -130,6 +311,7 @@ fn answer_inner(reader: &CkptReader, msg: &WireMsg) -> crate::Result<WireMsg> {
             }
         }
         OP_STAT => {
+            // byte-stable: exactly 5 × u64 + u32 (see the golden test)
             let m = reader.manifest();
             w.put_u64(m.watermark);
             w.put_u64(m.epoch);
@@ -138,39 +320,280 @@ fn answer_inner(reader: &CkptReader, msg: &WireMsg) -> crate::Result<WireMsg> {
             w.put_u64(m.num_nodes);
             w.put_u32(m.dim);
         }
+        OP_POOL_STAT => {
+            let s = stats.snapshot(swaps);
+            w.put_u64(s.queries);
+            w.put_u64(s.swaps);
+            w.put_u64(s.queue_rejects);
+            w.put_u64(s.connections);
+        }
         op => crate::bail!("unknown query op {op}"),
     }
     Ok(WireMsg { kind: KIND_REPLY, dest: msg.dest, tag: msg.tag, payload: w.finish() })
 }
 
-/// The `tembed serve` accept loop: bind, wait for the first manifest to
-/// land (a concurrent `tembed train --ckpt-dir` may not have committed an
-/// episode yet), then serve each connection on its own thread. Runs until
-/// the process is killed.
-pub fn serve(dir: &Path, addr: &Addr) -> crate::Result<()> {
-    let listener = TransportListener::bind(addr)?;
-    eprintln!("[serve] listening on {addr}, checkpoint dir {}", dir.display());
-    wait_for_manifest(dir, Duration::from_secs(600))?;
-    let m = format::read_manifest(dir)?;
-    eprintln!(
-        "[serve] manifest watermark {} (epoch {}, episode {}/{}): {} nodes, dim {}",
-        m.watermark, m.epoch, m.episode_in_epoch, m.episodes_in_epoch, m.num_nodes, m.dim
-    );
+/// Knobs for [`Server::spawn`]. Defaults: one worker per core capped at
+/// 8, a queue of 2× the workers, a 10-minute bring-up window for the
+/// first manifest, and a 100 ms idle poll so workers notice shutdown.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Fixed worker-pool size (min 1).
+    pub workers: usize,
+    /// Accepted-connection queue depth; beyond it connections are
+    /// refused with a tag-0 `"server busy"` error reply.
+    pub queue_cap: usize,
+    /// How long to wait for the first manifest before giving up.
+    pub manifest_timeout: Duration,
+    /// Per-connection read timeout: the drain-latency upper bound for
+    /// an idle connection.
+    pub idle_poll: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers = pool::default_threads().min(8);
+        ServeConfig {
+            workers,
+            queue_cap: 2 * workers,
+            manifest_timeout: Duration::from_secs(600),
+            idle_poll: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A running serve tier: accept thread + bounded queue + worker pool
+/// over one [`SharedReader`]. Obtain with [`Server::spawn`], stop with
+/// [`Server::shutdown`] (dropping a `Server` without calling `shutdown`
+/// leaks the threads until process exit).
+pub struct Server {
+    addr: Addr,
+    shared: Arc<SharedReader>,
+    stats: Arc<PoolStats>,
+    stop: Arc<AtomicBool>,
+    accept: std::thread::JoinHandle<()>,
+    workers: WorkerPool,
+}
+
+impl Server {
+    /// Bind `addr`, wait for the first manifest under `dir`, then start
+    /// the accept loop and worker pool.
+    pub fn spawn(dir: &Path, addr: &Addr, cfg: ServeConfig) -> crate::Result<Server> {
+        let listener = TransportListener::bind(addr)?;
+        wait_for_manifest(dir, cfg.manifest_timeout)?;
+        let shared = SharedReader::open(dir)?;
+        let stats = Arc::new(PoolStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Arc<dyn Transport>>(cfg.queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = {
+            let shared = Arc::clone(&shared);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            let idle_poll = cfg.idle_poll;
+            WorkerPool::spawn(cfg.workers, "serve-worker", move |_| {
+                worker_loop(&rx, &shared, &stats, &stop, idle_poll)
+            })
+        };
+        let accept = {
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(&listener, &tx, &stats, &stop))
+                .expect("spawn serve accept thread")
+        };
+        Ok(Server { addr: addr.clone(), shared, stats, stop, accept, workers })
+    }
+
+    /// The bind address (as requested).
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// The current generation's reader.
+    pub fn reader(&self) -> Arc<CkptReader> {
+        self.shared.current()
+    }
+
+    /// Live counter snapshot.
+    pub fn stats(&self) -> ServeStats {
+        self.stats.snapshot(self.shared.swaps())
+    }
+
+    /// Drain and stop: no new connections are queued, each worker
+    /// finishes its in-flight query, queued connections get at most one
+    /// reply, then all threads are joined. Returns the final counters.
+    pub fn shutdown(self) -> ServeStats {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept thread blocks in accept(): wake it with a
+        // throwaway connection (accept has no handshake, so this is
+        // cheap), which it drops on seeing the stop flag
+        let _ = transport::dial_transport(&wake_addr(&self.addr), Duration::from_secs(2));
+        let _ = self.accept.join();
+        // the queue sender dropped with the accept loop: workers drain
+        // the backlog, then their recv errors out and they exit
+        self.workers.join();
+        self.stats.snapshot(self.shared.swaps())
+    }
+}
+
+/// The bind address is not always the dial address: a wildcard-host TCP
+/// bind (`0.0.0.0` / `[::]`) must be woken through loopback.
+fn wake_addr(addr: &Addr) -> Addr {
+    match addr {
+        Addr::Tcp(hp) => Addr::Tcp(hp.replace("0.0.0.0", "127.0.0.1").replace("[::]", "[::1]")),
+        #[cfg(unix)]
+        Addr::Uds(_) => addr.clone(),
+    }
+}
+
+fn accept_loop(
+    listener: &TransportListener,
+    tx: &SyncSender<Arc<dyn Transport>>,
+    stats: &PoolStats,
+    stop: &AtomicBool,
+) {
     loop {
-        let t = listener.accept()?;
-        let dir: PathBuf = dir.to_path_buf();
-        std::thread::spawn(move || {
-            if let Err(e) = serve_connection(t.as_ref(), &dir) {
-                eprintln!("[serve] connection error: {e:#}");
+        let conn = match listener.accept() {
+            Ok(c) => c,
+            Err(e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                eprintln!("[serve] accept error: {e:#}");
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
             }
-        });
+        };
+        if stop.load(Ordering::Relaxed) {
+            return; // the shutdown wake-up connection (dropped unserved)
+        }
+        match tx.try_send(conn) {
+            Ok(()) => {}
+            Err(TrySendError::Full(conn)) => {
+                // documented backpressure: refuse loudly with a tag-0
+                // error frame, then drop — the client fails fast
+                // instead of waiting on an unbounded backlog
+                stats.queue_rejects.fetch_add(1, Ordering::Relaxed);
+                let _ = conn.send(&WireMsg {
+                    kind: KIND_REPLY,
+                    dest: OP_ERROR,
+                    tag: 0,
+                    payload: b"server busy: connection queue full".to_vec(),
+                });
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Arc<dyn Transport>>>,
+    shared: &SharedReader,
+    stats: &PoolStats,
+    stop: &AtomicBool,
+    idle_poll: Duration,
+) {
+    loop {
+        // scoped lock: hold the queue mutex only for the recv itself
+        let next = {
+            let q = rx.lock().expect("serve queue lock");
+            q.recv()
+        };
+        let conn = match next {
+            Ok(c) => c,
+            Err(_) => return, // accept loop gone and queue drained
+        };
+        stats.connections.fetch_add(1, Ordering::Relaxed);
+        // accept() lifts the read timeout; restore a short one so
+        // recv_idle lets this worker observe shutdown between frames
+        conn.set_read_timeout(Some(idle_poll));
+        if let Err(e) = serve_connection(conn.as_ref(), shared, stats, stop) {
+            eprintln!("[serve] connection error: {e:#}");
+        }
+    }
+}
+
+/// The `tembed serve` entry point with default [`ServeConfig`].
+pub fn serve(dir: &Path, addr: &Addr) -> crate::Result<()> {
+    serve_with(dir, addr, ServeConfig::default())
+}
+
+/// Bind, wait for the first manifest (a concurrent `tembed train
+/// --ckpt-dir` may not have committed an episode yet), serve until
+/// SIGTERM/SIGINT, then drain and print the final counters.
+pub fn serve_with(dir: &Path, addr: &Addr, cfg: ServeConfig) -> crate::Result<()> {
+    eprintln!(
+        "[serve] binding {addr}, checkpoint dir {} ({} workers, queue {})",
+        dir.display(),
+        cfg.workers.max(1),
+        cfg.queue_cap.max(1)
+    );
+    let server = Server::spawn(dir, addr, cfg)?;
+    {
+        let r = server.reader();
+        let m = r.manifest();
+        eprintln!(
+            "[serve] manifest watermark {} (epoch {}, episode {}/{}): {} nodes, dim {}",
+            m.watermark, m.epoch, m.episode_in_epoch, m.episodes_in_epoch, m.num_nodes, m.dim
+        );
+    }
+    term::install();
+    while !term::fired() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("[serve] termination signal: draining");
+    let stats = server.shutdown();
+    eprintln!("[serve] drained; final counters:\n{}", stats.to_metrics().render());
+    Ok(())
+}
+
+/// SIGTERM/SIGINT latch without a libc dependency: `signal(2)` is in
+/// every unix libc we link anyway, and the handler body is a single
+/// atomic store (async-signal-safe).
+#[cfg(unix)]
+mod term {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FIRED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        FIRED.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    pub fn fired() -> bool {
+        FIRED.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no latch, the process runs until killed.
+#[cfg(not(unix))]
+mod term {
+    pub fn install() {}
+
+    pub fn fired() -> bool {
+        false
     }
 }
 
 /// Poll until a readable manifest exists (the serve-against-live-training
-/// bring-up window).
+/// bring-up window), with the watcher's backoff — a cold directory costs
+/// a handful of syscalls per second, not twenty.
 pub fn wait_for_manifest(dir: &Path, timeout: Duration) -> crate::Result<()> {
     let deadline = Instant::now() + timeout;
+    let mut delay = POLL_MIN;
     loop {
         if format::peek_watermark(dir).is_ok() {
             return Ok(());
@@ -180,15 +603,17 @@ pub fn wait_for_manifest(dir: &Path, timeout: Duration) -> crate::Result<()> {
             "no checkpoint manifest appeared under {} within {timeout:?}",
             dir.display()
         );
-        std::thread::sleep(Duration::from_millis(50));
+        std::thread::sleep(delay.min(deadline.saturating_duration_since(Instant::now())));
+        delay = next_poll(delay);
     }
 }
 
-/// Client side of the query protocol (used by tests and downstream
-/// consumers; each client owns one connection).
+/// Client side of the query protocol (used by tests, `tembed loadgen`,
+/// and downstream consumers; each client owns one connection).
 pub struct QueryClient {
     t: Arc<dyn Transport>,
     next_tag: u64,
+    stale_discards: u64,
 }
 
 impl QueryClient {
@@ -199,17 +624,39 @@ impl QueryClient {
 
     /// Wrap an existing transport (loopback tests).
     pub fn over(t: Arc<dyn Transport>) -> QueryClient {
-        QueryClient { t, next_tag: 1 }
+        QueryClient { t, next_tag: 1, stale_discards: 0 }
+    }
+
+    /// Stale reply frames skipped over this connection's lifetime.
+    pub fn stale_discards(&self) -> u64 {
+        self.stale_discards
     }
 
     fn roundtrip(&mut self, op: u32, payload: Vec<u8>) -> crate::Result<WireMsg> {
         let tag = self.next_tag;
         self.next_tag += 1;
         self.t.send(&WireMsg { kind: KIND_QUERY, dest: op, tag, payload })?;
+        let mut skipped = 0u64;
         loop {
             let reply = self.t.recv()?;
+            if reply.kind == KIND_REPLY && reply.dest == OP_ERROR && reply.tag == 0 {
+                // connection-scoped refusal (backpressure reject): the
+                // server never read a query, so there is no tag to echo
+                crate::bail!(
+                    "server refused connection: {}",
+                    String::from_utf8_lossy(&reply.payload)
+                );
+            }
             if reply.kind != KIND_REPLY || reply.tag != tag {
-                continue; // stale frame from an abandoned request
+                // stale frame from an abandoned request — bounded, so a
+                // misbehaving server errors out instead of spinning us
+                self.stale_discards += 1;
+                skipped += 1;
+                crate::ensure!(
+                    skipped <= STALE_FRAME_CAP,
+                    "gave up after skipping {skipped} stale frames waiting for reply tag {tag} (op {op})"
+                );
+                continue;
             }
             if reply.dest == OP_ERROR {
                 crate::bail!("server refused query: {}", String::from_utf8_lossy(&reply.payload));
@@ -265,6 +712,20 @@ impl QueryClient {
         })
     }
 
+    /// Pool-wide serving counters; `stale_discards` is filled in from
+    /// this client's own tally (the server cannot see it).
+    pub fn pool_stat(&mut self) -> crate::Result<ServeStats> {
+        let reply = self.roundtrip(OP_POOL_STAT, Vec::new())?;
+        let mut r = PayloadReader::new(&reply.payload);
+        Ok(ServeStats {
+            queries: r.u64()?,
+            swaps: r.u64()?,
+            queue_rejects: r.u64()?,
+            connections: r.u64()?,
+            stale_discards: self.stale_discards,
+        })
+    }
+
     /// Ask the server to close this connection.
     pub fn shutdown(&self) {
         let _ = self.t.send(&WireMsg::signal(KIND_SHUTDOWN, 0, 0));
@@ -276,7 +737,7 @@ mod tests {
     use super::*;
     use crate::ckpt::writer::{CkptWriter, CkptWriterConfig, EpisodeMeta};
     use crate::comm::transport::loopback_pair;
-    use crate::embed::EmbeddingStore;
+    use crate::embed::{kernels, EmbeddingStore};
     use crate::partition::range_bounds;
     use crate::util::Rng;
 
@@ -321,10 +782,15 @@ mod tests {
     #[test]
     fn loopback_queries_round_trip() {
         let (dir, store) = fixture("roundtrip", 30, 4);
+        let shared = SharedReader::open(&dir).unwrap();
+        let stats = Arc::new(PoolStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
         let (server_t, client_t) = loopback_pair(0, 1);
         let server = std::thread::spawn({
-            let dir = dir.clone();
-            move || serve_connection(&server_t, &dir).unwrap()
+            let shared = Arc::clone(&shared);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            move || serve_connection(&server_t, &shared, &stats, &stop).unwrap()
         });
         let mut client = QueryClient::over(Arc::new(client_t));
         let stat = client.stat().unwrap();
@@ -342,10 +808,111 @@ mod tests {
         // out-of-range queries come back as server errors, not hangs
         let err = client.edge_scores(&[(0, 999)]).unwrap_err();
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // pool counters travel over the wire (5 queries incl. this one)
+        let pstat = client.pool_stat().unwrap();
+        assert_eq!(pstat.queries, 5);
+        assert_eq!(pstat.swaps, 0);
+        assert_eq!(pstat.stale_discards, 0);
         client.shutdown();
-        let stats = server.join().unwrap();
-        assert_eq!(stats.queries, 4);
-        assert_eq!(stats.reopens, 0);
+        let served = server.join().unwrap();
+        assert_eq!(served, 5);
+        let snap = stats.snapshot(shared.swaps());
+        assert_eq!(snap.queries, 5);
+        assert_eq!(snap.swaps, 0);
+        assert_eq!(snap.queue_rejects, 0);
+    }
+
+    /// Pins the acceptance criterion "serving replies are byte-identical
+    /// before/after the refactor" for score/stat ops. The pre-refactor
+    /// score was a strict left-to-right `iter().zip()` fold; at serving
+    /// dims ≤ 8 the kernel `dot` reduces one 8-lane chunk in the same
+    /// order, so the bits must match exactly — asserted here, then the
+    /// whole reply payload is compared against hand-assembled LE bytes.
+    #[test]
+    fn score_and_stat_replies_are_byte_stable() {
+        let (dir, store) = fixture("golden", 12, 8);
+        let shared = SharedReader::open(&dir).unwrap();
+        let reader = shared.current();
+        let stats = PoolStats::default();
+        let pairs = [(1u32, 2u32), (7, 11)];
+        let mut q = PayloadWriter::new();
+        q.put_u32(pairs.len() as u32);
+        for &(u, v) in &pairs {
+            q.put_u32(u);
+            q.put_u32(v);
+        }
+        let reply = answer(
+            &reader,
+            &stats,
+            shared.swaps(),
+            &WireMsg { kind: KIND_QUERY, dest: OP_SCORES, tag: 9, payload: q.finish() },
+        );
+        assert_eq!((reply.kind, reply.dest, reply.tag), (KIND_REPLY, OP_SCORES, 9));
+        let mut expect = (pairs.len() as u32).to_le_bytes().to_vec();
+        for &(u, v) in &pairs {
+            let a = store.vertex_row(u as usize);
+            let b = store.context_row(v as usize);
+            let kernel = kernels::dot(a, b);
+            let naive: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            assert_eq!(kernel.to_bits(), naive.to_bits(), "dot contract broke at d=8");
+            expect.extend_from_slice(&kernel.to_le_bytes());
+        }
+        assert_eq!(reply.payload, expect);
+
+        let reply = answer(
+            &reader,
+            &stats,
+            shared.swaps(),
+            &WireMsg { kind: KIND_QUERY, dest: OP_STAT, tag: 3, payload: Vec::new() },
+        );
+        let mut expect = Vec::new();
+        for w in [0u64, 0, 0, 1, 12] {
+            expect.extend_from_slice(&w.to_le_bytes());
+        }
+        expect.extend_from_slice(&8u32.to_le_bytes());
+        assert_eq!(reply.payload.len(), 44);
+        assert_eq!(reply.payload, expect);
+    }
+
+    #[test]
+    fn roundtrip_gives_up_after_stale_frame_cap() {
+        let (server_t, client_t) = loopback_pair(0, 1);
+        let feeder = std::thread::spawn(move || {
+            // swallow the query, then reply with nothing but wrong tags
+            let q = server_t.recv().unwrap();
+            for i in 0..(2 * STALE_FRAME_CAP) {
+                server_t
+                    .send(&WireMsg {
+                        kind: KIND_REPLY,
+                        dest: OP_STAT,
+                        tag: q.tag + 1 + i,
+                        payload: Vec::new(),
+                    })
+                    .unwrap();
+            }
+        });
+        let mut client = QueryClient::over(Arc::new(client_t));
+        let err = client.stat().unwrap_err();
+        assert!(format!("{err:#}").contains("stale frames"), "{err:#}");
+        assert!(client.stale_discards() > STALE_FRAME_CAP);
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn serve_stats_surface_through_metrics() {
+        let s = ServeStats {
+            queries: 5,
+            swaps: 2,
+            queue_rejects: 1,
+            connections: 3,
+            stale_discards: 4,
+        };
+        let m = s.to_metrics();
+        assert_eq!(m.count("serve_queries"), 5);
+        assert_eq!(m.count("serve_generation_swaps"), 2);
+        assert_eq!(m.count("serve_queue_rejects"), 1);
+        assert_eq!(m.count("serve_connections"), 3);
+        assert_eq!(m.count("serve_stale_discards"), 4);
     }
 
     #[test]

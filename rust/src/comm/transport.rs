@@ -42,7 +42,7 @@
 //! every waiting consumer instead of deadlocking it.
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -472,6 +472,18 @@ pub trait Transport: Send + Sync {
     /// healthy links are legitimately idle for long stretches (walk
     /// regeneration, slow ranks) and a dead peer surfaces as EOF anyway.
     fn set_read_timeout(&self, _d: Option<std::time::Duration>) {}
+
+    /// [`Transport::recv`] that distinguishes "the link is merely idle"
+    /// from "the link is dead": `Ok(None)` when the configured read
+    /// timeout elapsed before *any* byte of the next frame arrived (the
+    /// stream is still healthy), `Ok(Some(_))` for a frame, `Err` for
+    /// EOF/corruption. The serving tier's workers poll connections with a
+    /// short timeout through this so they can observe shutdown between
+    /// frames without misreading the timeout as a hangup. The default
+    /// (for transports without a timeout concept) blocks like `recv`.
+    fn recv_idle(&self) -> crate::Result<Option<WireMsg>> {
+        self.recv().map(Some)
+    }
 }
 
 /// Framed transport over a connected socket (TCP or Unix-domain).
@@ -525,6 +537,28 @@ impl Transport for SocketTransport {
         let r = self.reader.lock().expect("transport reader lock");
         let _ = r.get_ref().set_read_timeout(d);
     }
+
+    fn recv_idle(&self) -> crate::Result<Option<WireMsg>> {
+        let mut r = self.reader.lock().expect("transport reader lock");
+        // wait for the first byte of the next frame under the configured
+        // timeout; only a timeout with nothing buffered is "idle" — once a
+        // frame has started we commit to reading it whole (clients write a
+        // query as one buffered flush, so a started frame is all but
+        // delivered; a peer that stalls mid-frame loses the connection)
+        match r.fill_buf() {
+            Ok([]) => crate::bail!("peer closed the connection"),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(crate::Error::msg(e).wrap("poll frame header")),
+        }
+        read_frame(&mut *r).map(Some)
+    }
 }
 
 /// In-process transport: a pair of mpsc channels wearing the same trait,
@@ -565,6 +599,23 @@ impl Transport for LoopbackTransport {
             .expect("loopback rx lock")
             .recv()
             .map_err(|_| crate::anyhow!("loopback peer {} closed", self.peer))
+    }
+
+    fn recv_idle(&self) -> crate::Result<Option<WireMsg>> {
+        // loopback has no per-stream timeout config; poll at a fixed short
+        // interval so pooled servers stay responsive to shutdown in tests
+        match self
+            .rx
+            .lock()
+            .expect("loopback rx lock")
+            .recv_timeout(Duration::from_millis(50))
+        {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Err(crate::anyhow!("loopback peer {} closed", self.peer))
+            }
+        }
     }
 }
 

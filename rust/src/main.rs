@@ -7,7 +7,9 @@
 //!                [--peers a0,a1,...] [--samples edges|walks]   # rank-0 driver
 //!                [--ckpt-dir <dir>] [--ckpt-interval N] [--resume <dir>]
 //! tembed worker  --rank R --peers a0,a1,... [--listen ADDR] [--dataset|--graph ...]
-//! tembed serve   --ckpt <dir> --listen ADDR      # query server over a ckpt dir
+//! tembed serve   --ckpt <dir> --listen ADDR [--workers N] [--queue N]
+//! tembed loadgen --addr ADDR [--clients N] [--duration SECS] [--zipf S]
+//!                [--batch N] [--topk-every N] [--seed N]   # measure a server
 //! tembed walk    --dataset <name> --out <dir> [--set k=v]...
 //! tembed eval    --dataset <name> [--epochs N] [--set k=v]...   # link-pred AUC
 //! tembed memory                                            # paper Table I
@@ -109,7 +111,7 @@ fn run(args: &[String]) -> tembed::Result<()> {
         .split_first()
         .ok_or_else(|| {
             tembed::anyhow!(
-                "usage: tembed <train|worker|serve|walk|eval|memory|extrapolate|info> ..."
+                "usage: tembed <train|worker|serve|loadgen|walk|eval|memory|extrapolate|info> ..."
             )
         })?;
     let flags = Flags::parse(rest)?;
@@ -117,6 +119,7 @@ fn run(args: &[String]) -> tembed::Result<()> {
         "train" => cmd_train(&flags),
         "worker" => cmd_worker(&flags),
         "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "walk" => cmd_walk(&flags),
         "eval" => cmd_eval(&flags),
         "memory" => cmd_memory(),
@@ -384,10 +387,11 @@ fn cmd_worker(flags: &Flags) -> tembed::Result<()> {
     })
 }
 
-/// Query server over a (possibly live) checkpoint directory: answers
-/// edge-score, top-k, and stat queries over the transport framing,
-/// re-opening the manifest whenever a concurrent trainer commits a newer
-/// generation. Runs until killed.
+/// The concurrent query tier over a (possibly live) checkpoint
+/// directory: a bounded worker pool answers edge-score, top-k, and stat
+/// queries over the transport framing, sharing one generation-swapped
+/// reader that follows the trainer's commits. Runs until SIGTERM/SIGINT,
+/// then drains cleanly. Spec: `docs/SERVING.md`.
 fn cmd_serve(flags: &Flags) -> tembed::Result<()> {
     let dir = flags
         .get("ckpt")
@@ -396,7 +400,49 @@ fn cmd_serve(flags: &Flags) -> tembed::Result<()> {
         tembed::anyhow!("serve needs --listen ADDR (uds:/path.sock or tcp:host:port)")
     })?;
     let addr = tembed::comm::transport::Addr::parse(listen)?;
-    tembed::ckpt::serve::serve(std::path::Path::new(dir), &addr)
+    let mut cfg = tembed::ckpt::ServeConfig::default();
+    if let Some(v) = flags.get("workers") {
+        cfg.workers = v.parse()?;
+        cfg.queue_cap = 2 * cfg.workers.max(1);
+    }
+    if let Some(v) = flags.get("queue") {
+        cfg.queue_cap = v.parse()?;
+    }
+    tembed::ckpt::serve::serve_with(std::path::Path::new(dir), &addr, cfg)
+}
+
+/// Measure a serving endpoint: concurrent zipfian clients for a fixed
+/// duration, then p50/p99 latency and QPS. Exits non-zero on any
+/// protocol error or if nothing completed (the CI smoke relies on it).
+fn cmd_loadgen(flags: &Flags) -> tembed::Result<()> {
+    let addr_s = flags
+        .get("addr")
+        .ok_or_else(|| tembed::anyhow!("loadgen needs --addr ADDR (the serving endpoint)"))?;
+    let mut cfg =
+        tembed::ckpt::LoadgenConfig::new(tembed::comm::transport::Addr::parse(addr_s)?);
+    if let Some(v) = flags.get("clients") {
+        cfg.clients = v.parse()?;
+    }
+    if let Some(v) = flags.get("duration") {
+        cfg.duration = std::time::Duration::from_secs_f64(v.parse()?);
+    }
+    if let Some(v) = flags.get("zipf") {
+        cfg.zipf_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("batch") {
+        cfg.batch = v.parse()?;
+    }
+    if let Some(v) = flags.get("topk-every") {
+        cfg.topk_every = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    let report = tembed::ckpt::loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    tembed::ensure!(report.errors == 0, "loadgen finished with {} error(s)", report.errors);
+    tembed::ensure!(report.queries > 0, "loadgen completed no queries");
+    Ok(())
 }
 
 fn cmd_walk(flags: &Flags) -> tembed::Result<()> {

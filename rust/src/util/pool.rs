@@ -1,4 +1,6 @@
-//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline),
+//! plus [`WorkerPool`] — a small fixed pool of long-lived named threads
+//! for executor-style consumers (the serving tier's connection workers).
 //!
 //! The walk engine, sample generation, and the per-GPU worker loops all
 //! fan out through `parallel_for` / `parallel_map`, which split an index
@@ -93,6 +95,58 @@ where
     });
 }
 
+/// A fixed set of long-lived named worker threads all running the same
+/// closure (each told its index). Unlike the scoped fork-join helpers
+/// above, the threads outlive the spawning call — the closure is expected
+/// to loop pulling work from a shared queue and return when the queue
+/// closes. [`WorkerPool::join`] then collects them; a worker that
+/// panicked surfaces the panic at join time instead of being lost.
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads.max(1)` workers named `<name>-<index>`.
+    pub fn spawn<F>(threads: usize, name: &str, f: F) -> WorkerPool
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = std::sync::Arc::new(f);
+        let handles = (0..threads.max(1))
+            .map(|i| {
+                let f = std::sync::Arc::clone(&f);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawn pool worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Wait for every worker's closure to return. Propagates the first
+    /// worker panic (after joining the rest) so failures are not silent.
+    pub fn join(self) {
+        let mut panic = None;
+        for h in self.handles {
+            if let Err(p) = h.join() {
+                panic.get_or_insert(p);
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +191,33 @@ mod tests {
         let got: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(got.is_empty());
         parallel_for(0, 4, |_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn worker_pool_drains_a_shared_queue() {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<usize>(8);
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let sum = std::sync::Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::spawn(3, "pool-test", {
+            let rx = std::sync::Arc::clone(&rx);
+            let sum = std::sync::Arc::clone(&sum);
+            move |_| loop {
+                let next = { rx.lock().unwrap().recv() };
+                match next {
+                    Ok(v) => {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                    }
+                    Err(_) => return, // queue closed and drained
+                }
+            }
+        });
+        assert_eq!(pool.len(), 3);
+        assert!(!pool.is_empty());
+        for v in 1..=10 {
+            tx.send(v).unwrap();
+        }
+        drop(tx); // close the queue: workers finish the backlog then exit
+        pool.join();
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
     }
 }

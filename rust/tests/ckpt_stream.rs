@@ -4,11 +4,14 @@
 //! concurrent writer is appending to, following the watermark).
 
 use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tembed::ckpt::serve::serve_connection;
-use tembed::ckpt::{CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta, QueryClient};
+use tembed::ckpt::{
+    CkptReader, CkptWriter, CkptWriterConfig, EpisodeMeta, PoolStats, QueryClient, SharedReader,
+};
 use tembed::comm::transport::loopback_pair;
 use tembed::config::TrainConfig;
 use tembed::coordinator::driver::Driver;
@@ -121,7 +124,8 @@ fn truncated_inflight_generation_recovers_previous_watermark_bit_exactly() {
 }
 
 /// Concurrent writer/reader: a server answers queries over loopback while
-/// generations land, re-opening the manifest as the watermark moves.
+/// generations land, the shared reader's watcher republishing as the
+/// watermark moves.
 #[test]
 fn serve_answers_queries_while_generations_land() {
     let dir = tmp("concurrent");
@@ -177,10 +181,15 @@ fn serve_answers_queries_while_generations_land() {
     };
     ready_rx.recv().unwrap();
 
+    let shared = SharedReader::open(&dir).unwrap();
+    let stats = Arc::new(PoolStats::default());
+    let stop = Arc::new(AtomicBool::new(false));
     let (server_t, client_t) = loopback_pair(0, 1);
     let server = {
-        let dir = dir.clone();
-        std::thread::spawn(move || serve_connection(&server_t, &dir).unwrap())
+        let shared = Arc::clone(&shared);
+        let stats = Arc::clone(&stats);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || serve_connection(&server_t, &shared, &stats, &stop).unwrap())
     };
 
     // the client polls stat until the final watermark is visible, issuing
@@ -208,9 +217,11 @@ fn serve_answers_queries_while_generations_land() {
     let r = CkptReader::open(&dir).unwrap();
     assert_eq!(final_scores[0], r.score(2, 3));
     client.shutdown();
-    let sstats = server.join().unwrap();
-    assert!(sstats.reopens >= 1, "the server never followed the watermark");
-    assert!(sstats.queries as usize >= seen.len());
+    let served = server.join().unwrap();
+    let snap = stats.snapshot(shared.swaps());
+    assert!(snap.swaps >= 1, "the watcher never followed the watermark");
+    assert!(served as usize >= seen.len() + 1);
+    assert_eq!(snap.queries, served);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -248,9 +259,16 @@ fn training_run_serves_queries_concurrently() {
         });
         // serve against the live directory as soon as the first manifest lands
         tembed::ckpt::serve::wait_for_manifest(&dir, Duration::from_secs(60)).unwrap();
+        let shared = SharedReader::open(&dir).unwrap();
+        let stats = Arc::new(PoolStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
         let (server_t, client_t) = loopback_pair(0, 1);
-        let sdir = dir.clone();
-        let server = scope.spawn(move || serve_connection(&server_t, &sdir).unwrap());
+        let server = {
+            let shared = Arc::clone(&shared);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || serve_connection(&server_t, &shared, &stats, &stop).unwrap())
+        };
         let mut client = QueryClient::over(Arc::new(client_t));
         let mut polls = 0u64;
         loop {
@@ -265,8 +283,19 @@ fn training_run_serves_queries_concurrently() {
             std::thread::sleep(Duration::from_millis(3));
         }
         let store = trainer.join().unwrap();
-        // after the writer joined (inside finish), the manifest is the
-        // post-training state: served scores equal the trained model's
+        // after the writer joined (inside finish), the on-disk manifest is
+        // the post-training state; the shared reader republishes it within
+        // one watcher backoff, so poll stat until that watermark shows
+        let final_wm = CkptReader::open(&dir).unwrap().watermark();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if client.stat().unwrap().watermark == final_wm {
+                break;
+            }
+            assert!(Instant::now() < deadline, "watcher never published the final generation");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // served scores now equal the trained model's
         let pairs = [(0u32, 5u32), (20, 40), (149, 0)];
         let served = client.edge_scores(&pairs).unwrap();
         for (i, &(u, v)) in pairs.iter().enumerate() {

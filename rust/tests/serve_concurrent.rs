@@ -1,0 +1,298 @@
+//! Serving-tier stress: a real [`Server`] (accept thread, bounded queue,
+//! worker pool, shared generation-swapped reader) over a unix socket,
+//! hammered by concurrent clients with mixed score/top-k/stat ops while
+//! a live `CkptWriter` commits generations underneath it.
+//!
+//! The consistency trick: every generation `ep` is written with vertex
+//! rows all equal to `ep+1` and context rows all equal to `1.0`, so any
+//! score is exactly `dim * (ep+1)` — a reply decodes to the generation
+//! that produced it. A batch whose scores disagree, or decode to no
+//! committed generation, proves a torn read. Backpressure and shutdown
+//! draining get their own deterministic tests below.
+#![cfg(unix)]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tembed::ckpt::{
+    CkptWriter, CkptWriterConfig, EpisodeMeta, LoadgenConfig, QueryClient, ServeConfig, Server,
+};
+use tembed::comm::transport::Addr;
+use tembed::partition::range_bounds;
+
+const NODES: usize = 64;
+const DIM: usize = 8;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tembed_serve_conc_{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Socket paths live beside (not inside) the checkpoint dir: the writer
+/// creates the dir, and the server must be able to bind before that.
+fn sock(name: &str) -> Addr {
+    Addr::Uds(
+        std::env::temp_dir().join(format!("tembed_sc_{}_{name}.sock", std::process::id())),
+    )
+}
+
+/// Commit `episodes` generations, `gap` apart, with the score-encodes-
+/// generation content described in the module doc.
+fn write_generations(dir: PathBuf, episodes: u64, gap: Duration) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let sb = range_bounds(NODES, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir,
+            num_nodes: NODES,
+            dim: DIM,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(NODES, 1),
+            graph_digest: 9,
+            config_digest: 0,
+            channel_cap: episodes as usize * 3 + 8,
+        })
+        .unwrap();
+        for ep in 0..episodes {
+            if ep > 0 {
+                std::thread::sleep(gap);
+            }
+            w.sink().begin_episode(ep, true);
+            for sp in 0..2 {
+                let len = (sb[sp + 1] - sb[sp]) * DIM;
+                w.sink().offer_vertex(sp, vec![(ep + 1) as f32; len]);
+            }
+            w.sink()
+                .commit_episode(EpisodeMeta {
+                    watermark: ep,
+                    epoch: 0,
+                    episode_in_epoch: ep,
+                    episodes_in_epoch: episodes,
+                    contexts: vec![vec![1.0; NODES * DIM]],
+                    rng_states: vec![[ep + 1, 2, 3, 4]],
+                })
+                .unwrap();
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, episodes);
+    })
+}
+
+/// `score == DIM * (wm+1)` exactly (small integers, exact in f32) —
+/// recover the generation a score was answered from, or None.
+fn generation_of(score: f32, episodes: u64) -> Option<u64> {
+    let v = score / DIM as f32;
+    if v >= 1.0 && v.fract() == 0.0 && (v as u64) <= episodes {
+        Some(v as u64 - 1)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn concurrent_clients_see_consistent_generations_under_live_commits() {
+    let episodes = 10u64;
+    let dir = tmp("stress");
+    let addr = sock("stress");
+    let writer = write_generations(dir.clone(), episodes, Duration::from_millis(10));
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig {
+            workers: 4,
+            queue_cap: 8,
+            idle_poll: Duration::from_millis(25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+
+    const CLIENTS: usize = 4;
+    const ITERS: usize = 60;
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+                let mut last_wm = 0u64;
+                for i in 0..ITERS {
+                    match i % 3 {
+                        0 => {
+                            let stat = client.stat().unwrap();
+                            assert_eq!(stat.num_nodes, NODES as u64);
+                            assert_eq!(stat.dim, DIM as u32);
+                            // one connection = one worker: the shared
+                            // reader only moves forward, so stats must too
+                            assert!(
+                                stat.watermark >= last_wm,
+                                "client {c} saw the watermark go backwards \
+                                 ({last_wm} -> {})",
+                                stat.watermark
+                            );
+                            last_wm = stat.watermark;
+                        }
+                        1 => {
+                            let pairs: Vec<(u32, u32)> = (0..8)
+                                .map(|j| {
+                                    (
+                                        ((c * 13 + i * 7 + j) % NODES) as u32,
+                                        ((c * 5 + i * 11 + j * 3) % NODES) as u32,
+                                    )
+                                })
+                                .collect();
+                            let scores = client.edge_scores(&pairs).unwrap();
+                            // the whole batch must come from ONE generation
+                            let gen = generation_of(scores[0], episodes).unwrap_or_else(|| {
+                                panic!("client {c} got a torn score {}", scores[0])
+                            });
+                            for s in &scores {
+                                assert_eq!(
+                                    generation_of(*s, episodes),
+                                    Some(gen),
+                                    "client {c}: batch mixed generations"
+                                );
+                            }
+                        }
+                        _ => {
+                            let u = ((c * 17 + i) % NODES) as u32;
+                            let top = client.topk(u, 5).unwrap();
+                            assert_eq!(top.len(), 5);
+                            for (v, s) in &top {
+                                assert!(*v != u && (*v as usize) < NODES);
+                                assert!(
+                                    generation_of(*s, episodes).is_some(),
+                                    "client {c}: torn top-k score {s}"
+                                );
+                            }
+                        }
+                    }
+                }
+                client.shutdown();
+            });
+        }
+    });
+
+    writer.join().unwrap();
+    // the watcher republishes within one backoff tick; wait for it so the
+    // swap counter below is deterministic
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.reader().watermark() != episodes - 1 {
+        assert!(Instant::now() < deadline, "watcher never published the final generation");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = server.shutdown();
+    assert!(stats.queries >= (CLIENTS * ITERS) as u64, "lost queries: {stats:?}");
+    assert!(stats.connections >= CLIENTS as u64);
+    assert!(stats.swaps >= 1, "the shared reader never swapped: {stats:?}");
+    assert_eq!(stats.queue_rejects, 0, "unexpected rejects: {stats:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Backpressure is deterministic with one worker and a one-slot queue:
+/// the third connection must be refused with the documented tag-0 busy
+/// reply, and the queued one is served once the worker frees up.
+#[test]
+fn full_queue_rejects_with_busy_reply() {
+    let dir = tmp("busy");
+    let addr = sock("busy");
+    write_generations(dir.clone(), 1, Duration::ZERO).join().unwrap();
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig {
+            workers: 1,
+            queue_cap: 1,
+            idle_poll: Duration::from_millis(25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+
+    // a: occupies the only worker (the answered stat proves it)
+    let mut a = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    a.stat().unwrap();
+    // b: fills the single queue slot (the worker is still held by a)
+    let mut b = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    // c: overflows the queue -> busy-rejected before it even asks
+    let mut c = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let err = c.stat().unwrap_err();
+    assert!(format!("{err:#}").contains("server busy"), "{err:#}");
+    assert_eq!(server.stats().queue_rejects, 1);
+
+    // releasing a frees the worker, which then serves the queued b
+    a.shutdown();
+    let stat = b.stat().unwrap();
+    assert_eq!(stat.num_nodes, NODES as u64);
+    b.shutdown();
+    let stats = server.shutdown();
+    assert_eq!(stats.queue_rejects, 1);
+    assert!(stats.connections >= 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Shutdown must drain, not hang: an idle connected client cannot block
+/// [`Server::shutdown`] (the worker notices the stop flag on its next
+/// idle poll), and the drained client sees a closed connection.
+#[test]
+fn shutdown_drains_with_an_idle_client_connected() {
+    let dir = tmp("drain");
+    let addr = sock("drain");
+    write_generations(dir.clone(), 1, Duration::ZERO).join().unwrap();
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig {
+            workers: 2,
+            queue_cap: 4,
+            idle_poll: Duration::from_millis(25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    client.stat().unwrap();
+    let t0 = Instant::now();
+    let stats = server.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10), "shutdown hung on an idle client");
+    assert_eq!(stats.connections, 1);
+    assert_eq!(stats.queries, 1);
+    // the drained connection is really closed
+    assert!(client.stat().is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The load generator end to end against an in-process tier: nonzero
+/// completed queries, zero protocol errors, sane latency ordering.
+#[test]
+fn loadgen_round_trips_against_a_live_server() {
+    let dir = tmp("loadgen");
+    let addr = sock("loadgen");
+    write_generations(dir.clone(), 1, Duration::ZERO).join().unwrap();
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig {
+            workers: 3,
+            queue_cap: 6,
+            idle_poll: Duration::from_millis(25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut cfg = LoadgenConfig::new(addr);
+    cfg.clients = 2;
+    cfg.duration = Duration::from_millis(300);
+    cfg.zipf_s = 1.0;
+    let report = tembed::ckpt::loadgen::run(&cfg).unwrap();
+    assert_eq!(report.errors, 0, "loadgen saw protocol errors: {report:?}");
+    assert!(report.queries > 0, "loadgen completed nothing: {report:?}");
+    assert!(report.p99_us >= report.p50_us);
+    assert!(report.qps > 0.0);
+    let pool = report.pool.expect("pool counters over the wire");
+    assert!(pool.queries >= report.queries);
+    let stats = server.shutdown();
+    assert!(stats.queries >= report.queries);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -10,8 +10,12 @@ runners are far too noisy to gate on timings). Verifies:
     in the candidate, so a harness refactor cannot silently drop or
     rename a tracked row
   * every value is a finite number and no metric key is duplicated
+  * with --require-section NAME (repeatable), the candidate carries at
+    least one row in each named section — so a whole bench section
+    (e.g. the serving tier's "serve" rows) cannot vanish even if the
+    baseline predates it
 
-Usage: check_bench_schema.py BASELINE.json CANDIDATE.json
+Usage: check_bench_schema.py [--require-section NAME]... BASELINE.json CANDIDATE.json
 
 Regenerating the committed baselines is documented in docs/PERF.md.
 """
@@ -50,18 +54,28 @@ def load(path):
 
 
 def main():
-    if len(sys.argv) != 3:
+    args = sys.argv[1:]
+    required_sections = []
+    while len(args) >= 2 and args[0] == "--require-section":
+        required_sections.append(args[1])
+        args = args[2:]
+    if len(args) != 2:
         sys.exit(__doc__)
-    base = load(sys.argv[1])
-    cand = load(sys.argv[2])
+    base = load(args[0])
+    cand = load(args[1])
     missing = sorted(k for k in base if k not in cand)
     if missing:
         for k in missing:
             print(f"missing in candidate: {k}", file=sys.stderr)
-        sys.exit(f"{len(missing)} baseline metric(s) absent from {sys.argv[2]}")
+        sys.exit(f"{len(missing)} baseline metric(s) absent from {args[1]}")
+    cand_sections = {section for (section, _, _) in cand}
+    absent = sorted(s for s in required_sections if s not in cand_sections)
+    if absent:
+        sys.exit(f"required section(s) {absent} have no rows in {args[1]}")
     print(
-        f"ok: all {len(base)} baseline metrics present in {sys.argv[2]} "
-        f"({len(cand)} rows total)"
+        f"ok: all {len(base)} baseline metrics present in {args[1]} "
+        f"({len(cand)} rows total"
+        + (f", sections {sorted(set(required_sections))} covered)" if required_sections else ")")
     )
 
 
