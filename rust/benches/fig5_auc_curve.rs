@@ -48,8 +48,8 @@ fn main() -> tembed::Result<()> {
             gv.train_epoch(&mut samples.clone(), epoch);
             if epoch % 5 == 4 || epoch == 0 {
                 let store_ours = snapshot(&ours);
-                let a_ours = link_auc(&store_ours, &split);
-                let a_gv = link_auc(&gv.store, &split);
+                let a_ours = link_auc(&store_ours, &split)?;
+                let a_gv = link_auc(&gv.store, &split)?;
                 best_ours = best_ours.max(a_ours);
                 best_gv = best_gv.max(a_gv);
                 println!("{epoch:>5} {a_ours:>10.4} {a_gv:>12.4}");

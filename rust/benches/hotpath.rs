@@ -450,6 +450,7 @@ fn main() {
                     episodes_in_epoch: episodes,
                     contexts: contexts.clone(),
                     rng_states: vec![[1, 2, 3, 4]; 2],
+                    relations: None,
                 })
                 .expect("commit");
         }
@@ -514,6 +515,7 @@ fn serve_benches(rep: &mut Report) {
             episodes_in_epoch: 1,
             contexts: vec![context],
             rng_states: vec![[1, 2, 3, 4]],
+            relations: None,
         })
         .expect("commit");
     w.finish().expect("writer stats");
@@ -590,6 +592,7 @@ fn pjrt_benches(rep: &mut Report, rng: &mut Rng) {
                     u_local: (0..b).map(|_| rng.index(rows) as i32).collect(),
                     v_local: (0..b).map(|_| rng.index(rows) as i32).collect(),
                     real: b,
+                    rel: 0,
                 })
                 .collect();
             let vns: Vec<Vec<i32>> = (0..8)

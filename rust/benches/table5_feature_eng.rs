@@ -50,9 +50,9 @@ fn main() -> tembed::Result<()> {
 
     println!("# Table V — downstream LR AUC after {epochs} epochs (paper: parity within 0.1%)");
     println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");
-    let (cpu_tr, cpu_ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5);
+    let (cpu_tr, cpu_ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5)?;
     println!("{:<24} {:>12.5} {:>12.5}   (paper 0.81147 / 0.79996)", "CPU Embedding", cpu_tr, cpu_ev);
-    let (gpu_tr, gpu_ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5);
+    let (gpu_tr, gpu_ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5)?;
     println!("{:<24} {:>12.5} {:>12.5}   (paper 0.80996 / 0.80008)", "GPU Embedding (ours)", gpu_tr, gpu_ev);
     println!("\ntrain-AUC gap: {:.4} (claim: competitive, paper gap 0.0015)", (cpu_tr - gpu_tr).abs());
     Ok(())

@@ -65,9 +65,9 @@ fn main() -> tembed::Result<()> {
 
     println!("\nTable V — downstream LR AUC (one-vs-rest on community 0):");
     println!("{:<24} {:>12} {:>12}", "embedding", "train AUC", "eval AUC");
-    let (tr, ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5);
+    let (tr, ev) = feature_engineering_auc(&cpu_store, &labels, 0, 0.7, 5)?;
     println!("{:<24} {:>12.5} {:>12.5}", "CPU Embedding (LINE)", tr, ev);
-    let (tr, ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5);
+    let (tr, ev) = feature_engineering_auc(&gpu_store, &labels, 0, 0.7, 5)?;
     println!("{:<24} {:>12.5} {:>12.5}", "GPU Embedding (ours)", tr, ev);
     println!("\npaper: CPU 0.81147/0.79996 vs GPU 0.80996/0.80008 — parity is the claim");
     Ok(())

@@ -68,7 +68,7 @@ fn main() -> tembed::Result<()> {
         );
     }
     let store = driver.finish()?;
-    let auc = link_auc(&store, &split);
+    let auc = link_auc(&store, &split)?;
     println!("\nheld-out link-prediction AUC: {auc:.4}");
     tembed::ensure!(auc > 0.6, "end-to-end AUC too low: {auc}");
     println!("three-layer composition verified: rust -> PJRT -> XLA(JAX+Pallas) OK");

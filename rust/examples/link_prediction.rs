@@ -64,8 +64,8 @@ fn main() -> tembed::Result<()> {
             if epoch % 5 == 4 || epoch == 0 {
                 // snapshot AUC without consuming the trainers
                 let ours_store = snapshot(&ours);
-                let a_ours = link_auc(&ours_store, &split);
-                let a_gv = link_auc(&gv.store, &split);
+                let a_ours = link_auc(&ours_store, &split)?;
+                let a_gv = link_auc(&gv.store, &split)?;
                 println!("{epoch:>5} | {a_ours:>9.4} | {a_gv:>14.4}");
             }
         }

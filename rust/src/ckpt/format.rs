@@ -12,6 +12,10 @@
 //!                       [crc u32] [gpus * 4 u64 rng states]
 //!                       [per gpu: start u64, count u64, count*dim f32 LE]
 //!                                                         (header 28 B)
+//! relation rel.seg    : [TREL][ver u32][watermark u64][relations u32]
+//!                       [dim u32][crc u32]
+//!                       [per relation: op u32, count u64, count f32 LE]
+//!                                             (v3 only — header 28 B)
 //! MANIFEST            : [TMAN][payload, see Manifest::encode][crc u32]
 //! ```
 //!
@@ -32,17 +36,26 @@ use std::path::Path;
 use crate::comm::transport::{PayloadReader, PayloadWriter};
 use crate::util::error::Context as _;
 
-/// On-disk format version (v1 is the whole-model `TEMB` file in
-/// `embed::checkpoint`; v2 is this segmented layout).
+/// On-disk format version of an untyped checkpoint (v1 is the whole-model
+/// `TEMB` file in `embed::checkpoint`; v2 is this segmented layout).
+/// Untyped runs keep writing v2 byte-identically.
 pub const FORMAT_VERSION: u32 = 2;
+/// Format version of a relation-typed checkpoint: v2 plus one `rel.seg`
+/// relation-parameter segment per generation and two trailing manifest
+/// fields referencing it (`docs/RELATIONS.md` §Checkpoint v3). Vertex and
+/// state segments are byte-identical to v2 and keep their v2 headers.
+pub const FORMAT_VERSION_REL: u32 = 3;
 
 pub const MANIFEST_NAME: &str = "MANIFEST";
 pub const MANIFEST_TMP: &str = "MANIFEST.tmp";
 /// State segment file name inside a generation directory.
 pub const STATE_NAME: &str = "state.seg";
+/// Relation segment file name inside a generation directory (v3 only).
+pub const REL_NAME: &str = "rel.seg";
 
 const SEG_MAGIC: &[u8; 4] = b"TSEG";
 const STATE_MAGIC: &[u8; 4] = b"TSTA";
+const REL_MAGIC: &[u8; 4] = b"TREL";
 const MAN_MAGIC: &[u8; 4] = b"TMAN";
 
 /// Segment header bytes before the f32 payload (a multiple of 4, keeping
@@ -50,6 +63,8 @@ const MAN_MAGIC: &[u8; 4] = b"TMAN";
 pub const SEG_HEADER_LEN: usize = 44;
 /// State-segment header bytes before the rng/shard body.
 pub const STATE_HEADER_LEN: usize = 28;
+/// Relation-segment header bytes before the per-relation body.
+pub const REL_HEADER_LEN: usize = 28;
 
 /// Generation directory for one committed watermark.
 pub fn gen_dir_name(watermark: u64) -> String {
@@ -295,6 +310,107 @@ pub fn read_state_header(bytes: &[u8]) -> crate::Result<StateHeader> {
     })
 }
 
+// ------------------------------------------------------ relations (v3)
+
+/// Parsed relation-segment header (the first [`REL_HEADER_LEN`] bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelHeader {
+    pub watermark: u64,
+    pub relations: u32,
+    pub dim: u32,
+    pub crc: u32,
+}
+
+/// Write the v3 relation-parameter segment: per relation, its operator
+/// code and (possibly empty) parameter vector, declaration order. Returns
+/// `(body crc, file bytes)`; fsynced like every other segment.
+pub fn write_relations(
+    path: &Path,
+    watermark: u64,
+    dim: u32,
+    rels: &[(u32, Vec<f32>)],
+) -> crate::Result<(u32, u64)> {
+    let mut body = Vec::new();
+    for (op, params) in rels {
+        body.extend_from_slice(&op.to_le_bytes());
+        body.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        write_f32s_le(&mut body, params)?;
+    }
+    let crc = crc32(&body);
+
+    let mut header = [0u8; REL_HEADER_LEN];
+    header[0..4].copy_from_slice(REL_MAGIC);
+    header[4..8].copy_from_slice(&FORMAT_VERSION_REL.to_le_bytes());
+    header[8..16].copy_from_slice(&watermark.to_le_bytes());
+    header[16..20].copy_from_slice(&(rels.len() as u32).to_le_bytes());
+    header[20..24].copy_from_slice(&dim.to_le_bytes());
+    header[24..28].copy_from_slice(&crc.to_le_bytes());
+
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&header)?;
+    w.write_all(&body)?;
+    w.flush()?;
+    w.get_ref().sync_all().with_context(|| format!("fsync {}", path.display()))?;
+    Ok((crc, (REL_HEADER_LEN + body.len()) as u64))
+}
+
+/// Parse and sanity-check a relation-segment header.
+pub fn read_rel_header(bytes: &[u8]) -> crate::Result<RelHeader> {
+    crate::ensure!(
+        bytes.len() >= REL_HEADER_LEN,
+        "relation segment truncated inside its header"
+    );
+    crate::ensure!(&bytes[0..4] == REL_MAGIC, "not a tembed relation segment");
+    let version = u32_at(bytes, 4);
+    crate::ensure!(version == FORMAT_VERSION_REL, "unsupported relation segment version {version}");
+    Ok(RelHeader {
+        watermark: u64_at(bytes, 8),
+        relations: u32_at(bytes, 16),
+        dim: u32_at(bytes, 20),
+        crc: u32_at(bytes, 24),
+    })
+}
+
+/// Decode a full relation segment (header + body), verifying the body
+/// CRC. Returns the header and one `(operator code, parameters)` pair per
+/// relation, declaration order.
+pub fn read_relations(bytes: &[u8]) -> crate::Result<(RelHeader, Vec<(u32, Vec<f32>)>)> {
+    let h = read_rel_header(bytes)?;
+    let body = &bytes[REL_HEADER_LEN..];
+    let actual = crc32(body);
+    crate::ensure!(
+        actual == h.crc,
+        "relation segment checksum mismatch (stored {:#010x}, computed {actual:#010x})",
+        h.crc
+    );
+    let mut rels = Vec::with_capacity(h.relations as usize);
+    let mut off = 0usize;
+    for r in 0..h.relations {
+        crate::ensure!(off + 12 <= body.len(), "relation {r} truncated inside its header");
+        let op = u32_at(body, off);
+        let count = u64_at(body, off + 4) as usize;
+        off += 12;
+        crate::ensure!(
+            count <= (body.len() - off) / 4,
+            "relation {r} claims {count} parameters past end of segment"
+        );
+        let mut params = Vec::with_capacity(count);
+        for i in 0..count {
+            params.push(f32::from_le_bytes([
+                body[off + i * 4],
+                body[off + i * 4 + 1],
+                body[off + i * 4 + 2],
+                body[off + i * 4 + 3],
+            ]));
+        }
+        off += count * 4;
+        rels.push((op, params));
+    }
+    crate::ensure!(off == body.len(), "relation segment has {} trailing bytes", body.len() - off);
+    Ok((h, rels))
+}
+
 // ------------------------------------------------------------- manifest
 
 /// One vertex segment referenced by the manifest.
@@ -333,6 +449,11 @@ pub struct Manifest {
     pub segments: Vec<SegmentEntry>,
     pub state_path: String,
     pub state_crc: u32,
+    /// Relation segment path (v3 manifests only; empty in v2). Encoded as
+    /// trailing fields, so every v2 byte offset is unchanged.
+    pub rel_path: String,
+    /// Body CRC of the relation segment (v3 only; 0 in v2).
+    pub rel_crc: u32,
 }
 
 impl Manifest {
@@ -359,6 +480,13 @@ impl Manifest {
         }
         w.put_u32(self.state_crc);
         w.put_bytes(self.state_path.as_bytes());
+        // version-faithful: a v2 manifest encodes exactly the v2 bytes (an
+        // untyped run's checkpoints are unchanged by the relation feature);
+        // only v3 appends the relation-segment reference
+        if self.version >= FORMAT_VERSION_REL {
+            w.put_u32(self.rel_crc);
+            w.put_bytes(self.rel_path.as_bytes());
+        }
         out.extend_from_slice(&w.finish());
         let crc = crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
@@ -377,7 +505,10 @@ impl Manifest {
         );
         let mut r = PayloadReader::new(&body[4..]);
         let version = r.u32()?;
-        crate::ensure!(version == FORMAT_VERSION, "unsupported manifest version {version}");
+        crate::ensure!(
+            version == FORMAT_VERSION || version == FORMAT_VERSION_REL,
+            "unsupported manifest version {version}"
+        );
         let watermark = r.u64()?;
         let epoch = r.u64()?;
         let episode_in_epoch = r.u64()?;
@@ -403,6 +534,14 @@ impl Manifest {
         let state_crc = r.u32()?;
         let state_path = String::from_utf8(r.bytes()?.to_vec())
             .map_err(|_| crate::anyhow!("manifest state path is not utf-8"))?;
+        let (rel_crc, rel_path) = if version >= FORMAT_VERSION_REL {
+            let crc = r.u32()?;
+            let path = String::from_utf8(r.bytes()?.to_vec())
+                .map_err(|_| crate::anyhow!("manifest relation path is not utf-8"))?;
+            (crc, path)
+        } else {
+            (0, String::new())
+        };
         Ok(Manifest {
             version,
             watermark,
@@ -417,6 +556,8 @@ impl Manifest {
             segments,
             state_path,
             state_crc,
+            rel_path,
+            rel_crc,
         })
     }
 }
@@ -553,7 +694,55 @@ mod tests {
             }],
             state_path: "gen-9/state.seg".into(),
             state_crc: 0x5678,
+            rel_path: String::new(),
+            rel_crc: 0,
         }
+    }
+
+    #[test]
+    fn relation_segment_round_trips_with_crc() {
+        let dir = tmp_dir("rel");
+        let path = dir.join(REL_NAME);
+        let rels: Vec<(u32, Vec<f32>)> =
+            vec![(1, vec![0.5, -0.25, 2.0]), (0, vec![]), (2, vec![1.0, 1.0, 1.0])];
+        let (crc, bytes) = write_relations(&path, 13, 3, &rels).unwrap();
+        assert_eq!(bytes as usize, REL_HEADER_LEN + 3 * 12 + 6 * 4);
+        let file = std::fs::read(&path).unwrap();
+        let (h, back) = read_relations(&file).unwrap();
+        assert_eq!(h.watermark, 13);
+        assert_eq!(h.relations, 3);
+        assert_eq!(h.dim, 3);
+        assert_eq!(h.crc, crc);
+        assert_eq!(back, rels);
+        assert_eq!(REL_HEADER_LEN % 4, 0);
+        // corruption in the body is caught by the crc
+        let mut bad = file.clone();
+        bad[REL_HEADER_LEN + 5] ^= 0xFF;
+        assert!(read_relations(&bad).is_err());
+        // truncated body caught before allocation
+        assert!(read_relations(&file[..file.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn v3_manifest_round_trips_and_v2_bytes_are_unchanged() {
+        // a v2 manifest must not encode the relation fields: byte-identical
+        // to what this codec produced before v3 existed
+        let v2 = sample_manifest();
+        let bytes2 = v2.encode();
+        let mut with_ignored = v2.clone();
+        with_ignored.rel_crc = 0xABCD; // ignored at version 2
+        with_ignored.rel_path = "gen-9/rel.seg".into();
+        assert_eq!(with_ignored.encode(), bytes2, "v2 encoding must skip relation fields");
+
+        let mut v3 = sample_manifest();
+        v3.version = FORMAT_VERSION_REL;
+        v3.rel_path = "gen-9/rel.seg".into();
+        v3.rel_crc = 0x9A9A;
+        let bytes3 = v3.encode();
+        assert_eq!(Manifest::decode(&bytes3).unwrap(), v3);
+        // the watermark peek offset is version-independent
+        assert_eq!(u64_at(&bytes3, 8), 9);
+        assert_ne!(bytes2, bytes3);
     }
 
     #[test]

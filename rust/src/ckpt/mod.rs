@@ -35,6 +35,7 @@
 //! <dir>/MANIFEST.tmp        transient; ignored by readers
 //! <dir>/gen-<w>/sp-<s>.seg  vertex sub-part segments of watermark w
 //! <dir>/gen-<w>/state.seg   context shards + RNG states + progress
+//! <dir>/gen-<w>/rel.seg     relation-operator parameters (typed runs, v3)
 //! ```
 //!
 //! Only the generation the manifest references (and, transiently, the one
@@ -65,7 +66,7 @@ pub mod reader;
 pub mod serve;
 pub mod writer;
 
-pub use format::Manifest;
+pub use format::{Manifest, FORMAT_VERSION, FORMAT_VERSION_REL};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use reader::CkptReader;
 pub use serve::{PoolStats, QueryClient, ServeConfig, ServeStats, Server, SharedReader};

@@ -16,11 +16,13 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+use crate::embed::relations::RelModel;
 use crate::embed::{kernels, EmbeddingStore};
+use crate::graph::RelOpKind;
 use crate::util::error::Context as _;
 
 use super::format::{
-    self, Manifest, SegmentEntry, SEG_HEADER_LEN, STATE_HEADER_LEN,
+    self, Manifest, SegmentEntry, FORMAT_VERSION_REL, SEG_HEADER_LEN, STATE_HEADER_LEN,
 };
 
 /// Minimal mmap FFI. The offline crate set has no `libc`, but every Rust
@@ -212,6 +214,11 @@ pub struct CkptReader {
     shards: Vec<CtxShard>,
     ctx_bounds: Vec<usize>,
     rng_states: Vec<[u64; 4]>,
+    /// Raw `(op code, params)` pairs from `rel.seg` (v3 manifests only) —
+    /// what the resume path copies back into the trainer's [`RelModel`].
+    relations: Option<Vec<(u32, Vec<f32>)>>,
+    /// The same parameters assembled for scoring.
+    rel_model: Option<RelModel>,
 }
 
 impl CkptReader {
@@ -293,6 +300,21 @@ impl CkptReader {
         );
         ctx_bounds.push(expect);
 
+        let relations = open_relations(dir, &manifest)?;
+        let rel_model = match &relations {
+            None => None,
+            Some(rels) => {
+                let mut ops = Vec::with_capacity(rels.len());
+                for (code, _) in rels {
+                    ops.push(RelOpKind::from_code(*code).with_context(|| {
+                        format!("relation segment {}", manifest.rel_path)
+                    })?);
+                }
+                let params = rels.iter().map(|(_, p)| p.clone()).collect();
+                Some(RelModel::from_params(ops, params, dim)?)
+            }
+        };
+
         Ok(CkptReader {
             dir: dir.to_path_buf(),
             manifest,
@@ -301,6 +323,8 @@ impl CkptReader {
             shards,
             ctx_bounds,
             rng_states,
+            relations,
+            rel_model,
         })
     }
 
@@ -323,6 +347,33 @@ impl CkptReader {
     /// Per-GPU xoshiro states captured at the committed episode boundary.
     pub fn rng_states(&self) -> &[[u64; 4]] {
         &self.rng_states
+    }
+
+    /// Relation-operator parameters `(op code, params)` in relation-id
+    /// order — `Some` exactly when the manifest is v3 (typed run).
+    pub fn relations(&self) -> Option<&[(u32, Vec<f32>)]> {
+        self.relations.as_deref()
+    }
+
+    /// Number of relations in the checkpoint (0 for untyped v2).
+    pub fn num_relations(&self) -> usize {
+        self.relations.as_ref().map_or(0, Vec::len)
+    }
+
+    /// Relation-typed edge score `op_rel(vertex[u]) · context[v]`, the
+    /// serving-side counterpart of the trainer's typed positive leg.
+    /// Errors on an untyped (v2) checkpoint or an out-of-range relation.
+    pub fn rel_score(&self, u: u32, rel: u16, v: u32) -> crate::Result<f32> {
+        let m = self
+            .rel_model
+            .as_ref()
+            .ok_or_else(|| crate::anyhow!("checkpoint has no relation parameters (v2/untyped)"))?;
+        crate::ensure!(
+            (rel as usize) < m.num_relations(),
+            "relation {rel} out of range ({} relations)",
+            m.num_relations()
+        );
+        Ok(m.score(self.vertex_row(u as usize), rel, self.context_row(v as usize)))
     }
 
     /// One GPU's pinned context shard (GPU order).
@@ -483,6 +534,39 @@ fn open_segment(
     })
 }
 
+/// Read and verify `rel.seg` when the manifest is v3; `None` for v2.
+/// The segment is tiny (one parameter vector per relation), so it is
+/// always read-and-decoded — never mmapped.
+#[allow(clippy::type_complexity)]
+fn open_relations(
+    dir: &Path,
+    manifest: &Manifest,
+) -> crate::Result<Option<Vec<(u32, Vec<f32>)>>> {
+    if manifest.version < FORMAT_VERSION_REL {
+        return Ok(None);
+    }
+    crate::ensure!(
+        !manifest.rel_path.is_empty(),
+        "v3 manifest is missing its relation segment path"
+    );
+    let path = dir.join(&manifest.rel_path);
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+    let (h, rels) = format::read_relations(&bytes)
+        .with_context(|| format!("relation segment {}", path.display()))?;
+    crate::ensure!(
+        h.watermark == manifest.watermark && h.dim == manifest.dim,
+        "relation segment {} does not match its manifest",
+        path.display()
+    );
+    crate::ensure!(
+        h.crc == manifest.rel_crc,
+        "relation segment {} checksum mismatch",
+        path.display()
+    );
+    Ok(Some(rels))
+}
+
 #[allow(clippy::type_complexity)]
 fn open_state(
     dir: &Path,
@@ -592,6 +676,7 @@ mod tests {
             episodes_in_epoch: 4,
             contexts: (0..gpus).map(|g| store.checkout_context(cb[g]..cb[g + 1])).collect(),
             rng_states: (0..gpus as u64).map(|g| [g + 1, g + 2, g + 3, g + 4]).collect(),
+            relations: None,
         })
         .unwrap();
         w.finish().unwrap();
@@ -655,6 +740,84 @@ mod tests {
     }
 
     #[test]
+    fn typed_checkpoint_round_trips_relations_and_scores() {
+        let dir = tmp("typed");
+        let n = 20usize;
+        let dim = 4usize;
+        let mut rng = Rng::new(11);
+        let store = EmbeddingStore::init(n, dim, &mut rng);
+        let sb = range_bounds(n, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(n, 1),
+            graph_digest: 1,
+            config_digest: 0,
+            channel_cap: 64,
+        })
+        .unwrap();
+        let sink = w.sink();
+        sink.begin_episode(0, true);
+        for sp in 0..2 {
+            sink.offer_vertex(sp, store.checkout_vertex(sb[sp]..sb[sp + 1]));
+        }
+        let rels = vec![
+            (RelOpKind::Identity.code(), vec![]),
+            (RelOpKind::Translation.code(), vec![0.5, -1.0, 0.25, 2.0]),
+        ];
+        sink.commit_episode(EpisodeMeta {
+            watermark: 0,
+            epoch: 0,
+            episode_in_epoch: 0,
+            episodes_in_epoch: 1,
+            contexts: vec![store.context.clone()],
+            rng_states: vec![[1, 2, 3, 4]],
+            relations: Some(rels.clone()),
+        })
+        .unwrap();
+        w.finish().unwrap();
+
+        let r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.relations(), Some(rels.as_slice()));
+        assert_eq!(r.num_relations(), 2);
+        // identity relation scores exactly like the untyped dot
+        assert_eq!(r.rel_score(3, 0, 7).unwrap(), r.score(3, 7));
+        // translation shifts the vertex row before the dot
+        let shifted: Vec<f32> = store
+            .vertex_row(3)
+            .iter()
+            .zip(&rels[1].1)
+            .map(|(a, b)| a + b)
+            .collect();
+        assert_eq!(
+            r.rel_score(3, 1, 7).unwrap(),
+            kernels::dot(&shifted, store.context_row(7))
+        );
+        assert!(r.rel_score(3, 2, 7).is_err(), "out-of-range relation refused");
+
+        // corrupting rel.seg fails the open
+        let m = format::read_manifest(&dir).unwrap();
+        let rel_path = dir.join(&m.rel_path);
+        let mut bytes = std::fs::read(&rel_path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&rel_path, &bytes).unwrap();
+        assert!(CkptReader::open(&dir).is_err(), "corrupt rel.seg must fail CRC");
+    }
+
+    #[test]
+    fn untyped_reader_has_no_relations() {
+        let dir = tmp("untyped_rel");
+        write_reference(&dir, 16, 4, 2, 1);
+        let r = CkptReader::open(&dir).unwrap();
+        assert!(r.relations().is_none());
+        assert_eq!(r.num_relations(), 0);
+        assert!(r.rel_score(0, 0, 1).is_err(), "v2 checkpoint refuses relation scores");
+    }
+
+    #[test]
     fn refresh_follows_the_watermark() {
         let dir = tmp("refresh");
         write_reference(&dir, 24, 4, 2, 1);
@@ -685,6 +848,7 @@ mod tests {
                 episodes_in_epoch: 4,
                 contexts: vec![vec![0.0; 24 * 4]],
                 rng_states: vec![[9, 9, 9, 9]],
+                relations: None,
             })
             .unwrap();
         w.finish().unwrap();

@@ -10,6 +10,7 @@
 //! | 2  | `u32 node`, `u32 k`          | `u32 m`, m × `(u32 node,f32)`     |
 //! | 3  | —                            | watermark/epoch/episode/nodes/dim |
 //! | 4  | —                            | pool counters: 4 × `u64`          |
+//! | 5  | `u32 n`, n × `(u32 u,u32 rel,u32 v)` | `u32 n`, n × `f32 score`  |
 //! | 0  | —                            | error reply: utf-8 message        |
 //!
 //! Tier architecture (spec: `docs/SERVING.md`):
@@ -60,6 +61,9 @@ pub const OP_TOPK: u32 = 2;
 pub const OP_STAT: u32 = 3;
 /// Pool-wide serving counters ([`ServeStats`] over the wire).
 pub const OP_POOL_STAT: u32 = 4;
+/// Relation-typed batch scoring: `op_rel(vertex[u]) · context[v]` per
+/// `(u, rel, v)` triple. Errors against an untyped (v2) checkpoint.
+pub const OP_REL_SCORES: u32 = 5;
 
 /// Initial manifest-poll delay (watcher thread and [`wait_for_manifest`]).
 pub const POLL_MIN: Duration = Duration::from_millis(5);
@@ -326,6 +330,24 @@ fn answer_inner(
             w.put_u64(s.swaps);
             w.put_u64(s.queue_rejects);
             w.put_u64(s.connections);
+        }
+        OP_REL_SCORES => {
+            let n = r.u32()? as usize;
+            crate::ensure!(n <= msg.payload.len() / 12, "rel-score query claims {n} triples");
+            w.put_u32(n as u32);
+            for _ in 0..n {
+                let u = r.u32()?;
+                let rel = r.u32()?;
+                let v = r.u32()?;
+                crate::ensure!(
+                    u < n_nodes && v < n_nodes,
+                    "edge ({u},{v}) out of range (checkpoint has {n_nodes} nodes)"
+                );
+                crate::ensure!(rel <= u16::MAX as u32, "relation id {rel} exceeds u16");
+                // rel_score rejects untyped checkpoints and out-of-range
+                // relation ids with its own messages
+                w.put_f32(reader.rel_score(u, rel as u16, v)?);
+            }
         }
         op => crate::bail!("unknown query op {op}"),
     }
@@ -681,6 +703,27 @@ impl QueryClient {
         (0..n).map(|_| r.f32()).collect()
     }
 
+    /// Batch relation-typed scores (`op_rel(vertex[u]) · context[v]` per
+    /// `(u, rel, v)` triple). The server refuses untyped checkpoints.
+    pub fn rel_scores(&mut self, triples: &[(u32, u16, u32)]) -> crate::Result<Vec<f32>> {
+        let mut w = PayloadWriter::new();
+        w.put_u32(triples.len() as u32);
+        for &(u, rel, v) in triples {
+            w.put_u32(u);
+            w.put_u32(rel as u32);
+            w.put_u32(v);
+        }
+        let reply = self.roundtrip(OP_REL_SCORES, w.finish())?;
+        let mut r = PayloadReader::new(&reply.payload);
+        let n = r.u32()? as usize;
+        crate::ensure!(
+            n == triples.len(),
+            "rel-score reply carries {n} of {} scores",
+            triples.len()
+        );
+        (0..n).map(|_| r.f32()).collect()
+    }
+
     /// Top-k neighbor candidates of `node`, best first.
     pub fn topk(&mut self, node: u32, k: usize) -> crate::Result<Vec<(u32, f32)>> {
         let mut w = PayloadWriter::new();
@@ -773,6 +816,7 @@ mod tests {
                 episodes_in_epoch: 1,
                 contexts: vec![store.context.clone()],
                 rng_states: vec![[1, 2, 3, 4]],
+                relations: None,
             })
             .unwrap();
         w.finish().unwrap();
@@ -872,6 +916,94 @@ mod tests {
         expect.extend_from_slice(&8u32.to_le_bytes());
         assert_eq!(reply.payload.len(), 44);
         assert_eq!(reply.payload, expect);
+    }
+
+    #[test]
+    fn rel_scores_round_trip_on_typed_checkpoints() {
+        use crate::graph::RelOpKind;
+        // typed fixture: identity + translation relations alongside the store
+        let dir = std::env::temp_dir().join("tembed_ckpt_serve").join("rel");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(5);
+        let store = EmbeddingStore::init(24, 4, &mut rng);
+        let sb = range_bounds(24, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: 24,
+            dim: 4,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(24, 1),
+            graph_digest: 1,
+            config_digest: 0,
+            channel_cap: 16,
+        })
+        .unwrap();
+        w.sink().begin_episode(0, true);
+        for sp in 0..2 {
+            w.sink().offer_vertex(sp, store.checkout_vertex(sb[sp]..sb[sp + 1]));
+        }
+        w.sink()
+            .commit_episode(EpisodeMeta {
+                watermark: 0,
+                epoch: 0,
+                episode_in_epoch: 0,
+                episodes_in_epoch: 1,
+                contexts: vec![store.context.clone()],
+                rng_states: vec![[1, 2, 3, 4]],
+                relations: Some(vec![
+                    (RelOpKind::Identity.code(), vec![]),
+                    (RelOpKind::Translation.code(), vec![1.0, -0.5, 0.25, 0.0]),
+                ]),
+            })
+            .unwrap();
+        w.finish().unwrap();
+
+        let shared = SharedReader::open(&dir).unwrap();
+        let stats = Arc::new(PoolStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (server_t, client_t) = loopback_pair(0, 1);
+        let server = std::thread::spawn({
+            let shared = Arc::clone(&shared);
+            let stats = Arc::clone(&stats);
+            let stop = Arc::clone(&stop);
+            move || serve_connection(&server_t, &shared, &stats, &stop).unwrap()
+        });
+        let mut client = QueryClient::over(Arc::new(client_t));
+        let triples = [(2u32, 0u16, 7u32), (2, 1, 7), (11, 1, 3)];
+        let scores = client.rel_scores(&triples).unwrap();
+        // identity relation == the plain edge score, bit for bit
+        assert_eq!(scores[0], client.edge_scores(&[(2, 7)]).unwrap()[0]);
+        let reader = shared.current();
+        for (i, &(u, rel, v)) in triples.iter().enumerate() {
+            assert_eq!(scores[i], reader.rel_score(u, rel, v).unwrap(), "triple {i}");
+        }
+        // out-of-range relation comes back as a server error
+        let err = client.rel_scores(&[(0, 9, 1)]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        client.shutdown();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rel_scores_refused_on_untyped_checkpoints() {
+        let (dir, _) = fixture("rel_untyped", 12, 4);
+        let shared = SharedReader::open(&dir).unwrap();
+        let reader = shared.current();
+        let stats = PoolStats::default();
+        let mut q = PayloadWriter::new();
+        q.put_u32(1);
+        q.put_u32(0);
+        q.put_u32(0);
+        q.put_u32(1);
+        let reply = answer(
+            &reader,
+            &stats,
+            shared.swaps(),
+            &WireMsg { kind: KIND_QUERY, dest: OP_REL_SCORES, tag: 1, payload: q.finish() },
+        );
+        assert_eq!(reply.dest, OP_ERROR);
+        let msg = String::from_utf8_lossy(&reply.payload).to_string();
+        assert!(msg.contains("no relation parameters"), "{msg}");
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::util::error::Context as _;
 
 use super::format::{
     self, commit_manifest, gen_dir_name, segment_name, Manifest, SegmentEntry, FORMAT_VERSION,
-    MANIFEST_TMP, STATE_NAME,
+    FORMAT_VERSION_REL, MANIFEST_TMP, REL_NAME, STATE_NAME,
 };
 
 /// Static description of the checkpointed model, fixed at writer spawn.
@@ -83,6 +83,11 @@ pub struct EpisodeMeta {
     pub contexts: Vec<Vec<f32>>,
     /// Per-GPU xoshiro states, GPU order.
     pub rng_states: Vec<[u64; 4]>,
+    /// Relation-operator parameters `(op code, params)` in relation-id
+    /// order, when the run trains a typed graph. `Some` upgrades the
+    /// committed manifest to [`FORMAT_VERSION_REL`] and tees a `rel.seg`;
+    /// `None` keeps the untyped v2 layout byte-identical.
+    pub relations: Option<Vec<(u32, Vec<f32>)>>,
 }
 
 enum WriterMsg {
@@ -344,8 +349,22 @@ fn writer_loop(
                     })
                     .collect();
                 segments.sort_by_key(|s| s.subpart);
+                let (version, rel_path, rel_crc) = match &meta.relations {
+                    None => (FORMAT_VERSION, String::new(), 0),
+                    Some(rels) => {
+                        let rel = format!("{gen}/{REL_NAME}");
+                        let (crc, bytes) = format::write_relations(
+                            &cfg.dir.join(&rel),
+                            meta.watermark,
+                            cfg.dim as u32,
+                            rels,
+                        )?;
+                        stats.bytes += bytes;
+                        (FORMAT_VERSION_REL, rel, crc)
+                    }
+                };
                 let manifest = Manifest {
-                    version: FORMAT_VERSION,
+                    version,
                     watermark: meta.watermark,
                     epoch: meta.epoch,
                     episode_in_epoch: meta.episode_in_epoch,
@@ -358,6 +377,8 @@ fn writer_loop(
                     segments,
                     state_path: state_rel,
                     state_crc,
+                    rel_path,
+                    rel_crc,
                 };
                 stats.bytes += manifest.encode().len() as u64;
                 commit_manifest(&cfg.dir, &manifest)?;
@@ -435,6 +456,7 @@ mod tests {
             episodes_in_epoch,
             contexts,
             rng_states,
+            relations: None,
         })
         .unwrap();
     }
@@ -478,6 +500,7 @@ mod tests {
             episodes_in_epoch: 2,
             contexts: vec![vec![0.0; 40 * 4]],
             rng_states: vec![[1, 2, 3, 4]],
+            relations: None,
         })
         .unwrap();
         let stats = w.finish().unwrap();
@@ -498,6 +521,40 @@ mod tests {
         assert_eq!(w.sink().teed_total(), 0);
         let stats = w.finish().unwrap();
         assert_eq!(stats.segments, 0);
+    }
+
+    #[test]
+    fn typed_commit_writes_rel_segment_and_v3_manifest() {
+        let dir = tmp("typed");
+        let c = cfg(&dir, 20, 2, 2, 1);
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c).unwrap();
+        let sink = w.sink();
+        sink.begin_episode(0, true);
+        for sp in 0..bounds.len() - 1 {
+            let rows = vec![1.0; (bounds[sp + 1] - bounds[sp]) * 2];
+            assert_eq!(sink.offer_vertex(sp, rows), Offer::Teed);
+        }
+        let rels = vec![(1u32, vec![0.5f32, -0.25]), (0u32, vec![])];
+        sink.commit_episode(EpisodeMeta {
+            watermark: 0,
+            epoch: 0,
+            episode_in_epoch: 0,
+            episodes_in_epoch: 1,
+            contexts: vec![vec![0.0; 20 * 2]],
+            rng_states: vec![[1, 2, 3, 4]],
+            relations: Some(rels.clone()),
+        })
+        .unwrap();
+        w.finish().unwrap();
+        let m = format::read_manifest(&dir).unwrap();
+        assert_eq!(m.version, FORMAT_VERSION_REL);
+        assert_eq!(m.rel_path, format!("{}/{}", gen_dir_name(0), REL_NAME));
+        let bytes = std::fs::read(dir.join(&m.rel_path)).unwrap();
+        let (hdr, read) = format::read_relations(&bytes).unwrap();
+        assert_eq!(hdr.crc, m.rel_crc);
+        assert_eq!(hdr.dim, 2);
+        assert_eq!(read, rels);
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::path::PathBuf;
 
 use crate::config::TrainConfig;
 use crate::embed::EmbeddingStore;
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, TypedGraph};
 use crate::metrics::{EpochReport, Timer};
 use crate::util::Rng;
 use crate::walk::{augment_walks, WalkConfig, WalkEngine};
@@ -34,6 +34,10 @@ pub enum SampleSource {
     Walks { engine_cfg: WalkConfig, window: usize },
     /// Pre-materialized samples (tests / external pipelines).
     Fixed(Vec<crate::graph::Edge>),
+    /// Relation-typed edges trained directly (no walk augmentation — KG
+    /// triples are the positive samples, per-relation negatives do the
+    /// rest). Set by [`Driver::new_typed`].
+    FixedTyped(Vec<crate::graph::TypedEdge>),
 }
 
 /// Full-system driver.
@@ -79,6 +83,39 @@ impl<'g> Driver<'g> {
         })
     }
 
+    /// [`Self::new`] over a relation-typed graph: the trainer gets
+    /// per-relation masked negative sampling plus a [`RelModel`]
+    /// (`Trainer::new_typed`), and every epoch trains the typed edges
+    /// directly — no walk augmentation. `graph` is the symmetric CSR of
+    /// the same edges (`TypedGraph::csr(true)`), which supplies the
+    /// degree distribution and keeps the borrow for eval helpers.
+    ///
+    /// [`RelModel`]: crate::embed::relations::RelModel
+    pub fn new_typed(
+        typed: &TypedGraph,
+        graph: &'g CsrGraph,
+        cfg: TrainConfig,
+        runtime: Option<&crate::runtime::Runtime>,
+    ) -> crate::Result<Self> {
+        crate::ensure!(
+            graph.num_nodes() == typed.num_nodes(),
+            "typed graph declares {} nodes but the CSR holds {}",
+            typed.num_nodes(),
+            graph.num_nodes()
+        );
+        let trainer = Trainer::new_typed(typed, &graph.degrees(), cfg.clone(), runtime)?;
+        Ok(Driver {
+            graph,
+            cfg,
+            trainer,
+            source: SampleSource::FixedTyped(typed.edges.clone()),
+            cached_samples: Vec::new(),
+            cached_at_epoch: None,
+            walk_sim_secs: 0.0,
+            spool_dir: None,
+        })
+    }
+
     /// Use fixed samples instead of the walk engine.
     pub fn with_fixed_samples(mut self, samples: Vec<crate::graph::Edge>) -> Self {
         self.source = SampleSource::Fixed(samples);
@@ -89,6 +126,8 @@ impl<'g> Driver<'g> {
     /// `walk_epochs` epochs — the paper's reuse policy).
     fn samples_for_epoch(&mut self, epoch: usize) -> Vec<crate::graph::Edge> {
         match &self.source {
+            // typed epochs go through run_epoch_typed, never here
+            SampleSource::FixedTyped(_) => unreachable!("typed source has no untyped samples"),
             SampleSource::Fixed(s) => s.clone(),
             SampleSource::Walks { engine_cfg, window } => {
                 let gen_id = epoch / self.cfg.walk_epochs.max(1);
@@ -159,7 +198,13 @@ impl<'g> Driver<'g> {
         epoch: usize,
         start_episode: usize,
     ) -> crate::Result<EpochReport> {
-        let mut report = if self.cfg.episode_prefetch == 0 {
+        let typed_samples = match &self.source {
+            SampleSource::FixedTyped(s) => Some(s.clone()),
+            _ => None,
+        };
+        let mut report = if let Some(samples) = typed_samples {
+            self.run_epoch_typed(samples, epoch, start_episode)?
+        } else if self.cfg.episode_prefetch == 0 {
             // serial reference order: generate → split → train, one thread
             let mut samples = self.samples_for_epoch(epoch);
             self.trainer.train_epoch_from(&mut samples, epoch, start_episode)?
@@ -242,7 +287,7 @@ impl<'g> Driver<'g> {
                     None
                 }
             }
-            SampleSource::Fixed(_) => None,
+            SampleSource::Fixed(_) | SampleSource::FixedTyped(_) => None,
         };
         let graph = self.graph;
         let trainer = &mut self.trainer;
@@ -304,6 +349,46 @@ impl<'g> Driver<'g> {
                 );
             }
         }
+        Ok(report)
+    }
+
+    /// One epoch over relation-typed edges: the same seeded episode split
+    /// and the same serial/pipelined alternation as the untyped path
+    /// (`episode_prefetch` selects the producer thread), minus the walk
+    /// machinery — KG triples are the positive samples as-is. The split
+    /// seed and training order contract are identical, which is what the
+    /// single-relation/identity parity test pins against the untyped run.
+    fn run_epoch_typed(
+        &mut self,
+        mut samples: Vec<crate::graph::TypedEdge>,
+        epoch: usize,
+        start_episode: usize,
+    ) -> crate::Result<EpochReport> {
+        if self.cfg.episode_prefetch == 0 {
+            return self.trainer.train_epoch_from(&mut samples, epoch, start_episode);
+        }
+        let split_seed = self.cfg.seed ^ (epoch as u64).wrapping_mul(0xE90C);
+        let episode_size = self.cfg.episode_size;
+        let plan = self.trainer.plan.clone();
+        let trainer = &mut self.trainer;
+        let (tx, rx) = std::sync::mpsc::sync_channel(self.cfg.episode_prefetch);
+        let (result, stats) = std::thread::scope(|s| {
+            let producer = s.spawn(move || {
+                crate::walk::produce_episodes_from(
+                    &plan,
+                    samples,
+                    episode_size,
+                    split_seed,
+                    start_episode,
+                    tx,
+                )
+            });
+            let result = trainer.train_epoch_streamed(rx, epoch);
+            let stats = producer.join().expect("episode producer panicked");
+            (result, stats)
+        });
+        let mut report = result?;
+        report.metrics.add_secs("pool_build", stats.pool_build_secs);
         Ok(report)
     }
 
@@ -401,7 +486,7 @@ mod tests {
         let mut d = Driver::new(&g_train, cfg, None).unwrap();
         d.run(10).unwrap();
         let store = d.finish().unwrap();
-        let auc = crate::eval::link_auc(&store, &split);
+        let auc = crate::eval::link_auc(&store, &split).unwrap();
         assert!(auc > 0.65, "held-out auc {auc}");
     }
 
@@ -543,6 +628,80 @@ mod tests {
         let (sa, sb) = (a.finish().unwrap(), b.finish().unwrap());
         assert_eq!(sa.vertex, sb.vertex, "pipelined vertex matrix diverged");
         assert_eq!(sa.context, sb.context, "pipelined context matrix diverged");
+    }
+
+    /// Deterministic tiny KG: two entity types, a translation relation
+    /// across them, an identity relation within one.
+    fn tiny_typed() -> TypedGraph {
+        let mut text = String::from(
+            "entity user 0 12\nentity item 12 20\n\
+             relation likes user item translation\n\
+             relation follows user user identity\n",
+        );
+        for u in 0..12u32 {
+            let item = 12 + (u * 5 + 3) % 8;
+            text.push_str(&format!("{u} likes {item}\n"));
+            text.push_str(&format!("{u} follows {}\n", (u + 5) % 12));
+        }
+        crate::graph::io::parse_typed_graph(&text).unwrap()
+    }
+
+    #[test]
+    fn typed_driver_trains_and_learns_relation_params() {
+        let tg = tiny_typed();
+        let csr = tg.csr(true);
+        let mut cfg = tiny_cfg();
+        cfg.episode_size = 16;
+        let mut d = Driver::new_typed(&tg, &csr, cfg, None).unwrap();
+        let r0 = d.run_epoch(0).unwrap();
+        assert_eq!(r0.samples, tg.edges.len() as u64, "every typed edge trains");
+        let mut last = r0.clone();
+        for e in 1..8 {
+            last = d.run_epoch(e).unwrap();
+        }
+        assert!(
+            last.mean_loss() < r0.mean_loss(),
+            "first {} last {}",
+            r0.mean_loss(),
+            last.mean_loss()
+        );
+        let m = d.trainer.relations().expect("typed trainer carries a relation model");
+        assert_eq!(m.num_relations(), 2);
+        assert!(
+            m.lock_param(0).iter().any(|&x| x != 0.0),
+            "the translation vector never moved"
+        );
+        assert!(m.lock_param(1).is_empty(), "identity stays parameter-free");
+    }
+
+    /// With a single worker (no concurrent relation-parameter updates)
+    /// the typed pipeline is deterministic, and the pipelined epoch is
+    /// bit-identical to the serial reference — the typed half of the
+    /// prefetch-parity contract.
+    #[test]
+    fn typed_pipelined_epoch_matches_serial() {
+        let tg = tiny_typed();
+        let csr = tg.csr(true);
+        let mut cfg_a = tiny_cfg();
+        cfg_a.gpus_per_node = 1;
+        cfg_a.subparts = 1;
+        cfg_a.episode_size = 8;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.episode_prefetch = 1;
+        let mut a = Driver::new_typed(&tg, &csr, cfg_a, None).unwrap();
+        let mut b = Driver::new_typed(&tg, &csr, cfg_b, None).unwrap();
+        for e in 0..3 {
+            let ra = a.run_epoch(e).unwrap();
+            let rb = b.run_epoch(e).unwrap();
+            assert_eq!(ra.loss_sum, rb.loss_sum, "epoch {e}: loss drifted");
+            assert_eq!(ra.samples, rb.samples, "epoch {e}: sample count drifted");
+        }
+        let pa = a.trainer.relations().unwrap().snapshot();
+        let pb = b.trainer.relations().unwrap().snapshot();
+        assert_eq!(pa, pb, "relation parameters drifted");
+        let (sa, sb) = (a.finish().unwrap(), b.finish().unwrap());
+        assert_eq!(sa.vertex, sb.vertex);
+        assert_eq!(sa.context, sb.context);
     }
 
     #[test]

@@ -39,13 +39,14 @@ use crate::cluster::ClusterSpec;
 use crate::comm::topology::Route;
 use crate::comm::transport::CONTEXT_FINAL;
 use crate::config::{Backend, TrainConfig};
+use crate::embed::relations::RelModel;
 use crate::embed::sgns::{GatheredBackend, NativeBackend, StepBackend};
 use crate::embed::EmbeddingStore;
-use crate::graph::Edge;
+use crate::graph::{RelOpKind, TypedGraph};
 use crate::metrics::{EpochReport, Metrics, Timer};
 use crate::partition::HierarchyPlan;
 use crate::pipeline::{simulate_substep, PhaseBytes, PhaseDurations};
-use crate::sample::{EpisodePool, NegativeSampler};
+use crate::sample::{EpisodePool, NegativeSampler, RelSamplers, Sample};
 use crate::util::error::Context as _;
 use crate::util::Rng;
 
@@ -59,7 +60,7 @@ pub struct Trainer {
     /// Per-GPU pinned context shards (device-resident for all of training).
     contexts: Vec<Vec<f32>>,
     backends: Vec<Box<dyn StepBackend>>,
-    samplers: Vec<NegativeSampler>,
+    samplers: Vec<RelSamplers>,
     rngs: Vec<Rng>,
     pub metrics: Metrics,
     /// Measured per-phase durations of the most recent executor episode
@@ -95,6 +96,12 @@ pub struct Trainer {
     /// (checkpoint restore), since carried bytes must equal a fresh
     /// checkout's.
     head_carry: crate::exec::HeadCarry,
+    /// Relation operators + learned parameters (typed runs only). None =
+    /// the untyped pipeline, whose behavior is bit-identical to before
+    /// relations existed; Some holds one parameter vector per relation,
+    /// trained alongside the embeddings and persisted as the checkpoint's
+    /// v3 relation segment.
+    rel: Option<RelModel>,
 }
 
 /// Per-GPU outcome of one scheduled step.
@@ -116,6 +123,32 @@ impl Trainer {
         cfg: TrainConfig,
         runtime: Option<&crate::runtime::Runtime>,
     ) -> crate::Result<Self> {
+        Self::new_inner(num_nodes, degrees, cfg, runtime, None)
+    }
+
+    /// [`Self::new`] over a relation-typed graph: negative sampling is
+    /// masked per relation to the destination entity's id range, and a
+    /// fresh [`RelModel`] (identity-at-init parameters) trains alongside
+    /// the embeddings. Non-identity operators run only on the native
+    /// backend (the gathered/PJRT steppers have no relation kernels) —
+    /// validated here, at startup. Typed samples go through the same
+    /// [`Self::train_epoch`], which is generic over the sample type.
+    pub fn new_typed(
+        graph: &TypedGraph,
+        degrees: &[u32],
+        cfg: TrainConfig,
+        runtime: Option<&crate::runtime::Runtime>,
+    ) -> crate::Result<Self> {
+        Self::new_inner(graph.num_nodes(), degrees, cfg, runtime, Some(graph))
+    }
+
+    fn new_inner(
+        num_nodes: usize,
+        degrees: &[u32],
+        cfg: TrainConfig,
+        runtime: Option<&crate::runtime::Runtime>,
+        typed: Option<&TypedGraph>,
+    ) -> crate::Result<Self> {
         let cluster = cfg.cluster();
         let plan = HierarchyPlan::new(cfg.nodes, cfg.gpus_per_node, cfg.subparts, num_nodes);
         let mut rng = Rng::new(cfg.seed);
@@ -123,8 +156,22 @@ impl Trainer {
         let gpus = plan.total_gpus();
         let contexts: Vec<Vec<f32>> =
             (0..gpus).map(|g| store.checkout_context(plan.context_range(g))).collect();
-        let samplers: Vec<NegativeSampler> =
-            (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
+        let samplers: Vec<RelSamplers> = match typed {
+            None => (0..gpus)
+                .map(|g| RelSamplers::untyped(NegativeSampler::new(degrees, plan.context_range(g))))
+                .collect(),
+            Some(tg) => (0..gpus)
+                .map(|g| RelSamplers::typed(degrees, plan.context_range(g), tg))
+                .collect(),
+        };
+        let rel = typed.map(|tg| RelModel::new(&tg.ops(), cfg.dim));
+        if let Some(m) = &rel {
+            crate::ensure!(
+                m.all_identity() || cfg.backend == Backend::Native,
+                "non-identity relation operators require compute.backend = \"native\" \
+                 (the configured backend has no relation kernels)"
+            );
+        }
         let rngs: Vec<Rng> = (0..gpus).map(|g| rng.fork(g as u64)).collect();
         if let Some(w) = cfg.stage_window {
             let eff = cfg.effective_stage_window();
@@ -153,7 +200,10 @@ impl Trainer {
                 }
             });
         }
-        let graph_digest = multirank::degrees_digest(num_nodes, degrees);
+        // typed runs fold the relation structure into the digest, so
+        // resume refuses checkpoints of a differently-typed graph
+        let graph_digest = multirank::degrees_digest(num_nodes, degrees)
+            ^ typed.map(|tg| tg.digest()).unwrap_or(0);
         let ckpt = if !cfg.ckpt_dir.is_empty() && cfg.rank == 0 {
             Some(CkptWriter::spawn(CkptWriterConfig {
                 dir: std::path::PathBuf::from(&cfg.ckpt_dir),
@@ -187,7 +237,24 @@ impl Trainer {
             global_episode: 0,
             graph_digest,
             head_carry: crate::exec::HeadCarry::new(),
+            rel,
         })
+    }
+
+    /// The relation model of a typed run (None on untyped runs) — the
+    /// serve/eval layers score `(src, rel, dst)` triples through it.
+    pub fn relations(&self) -> Option<&RelModel> {
+        self.rel.as_ref()
+    }
+
+    /// The relation parameters as the checkpoint writer persists them:
+    /// `(operator code, parameters)` per relation, declaration order.
+    /// None on untyped runs — their checkpoints stay v2, byte-identical
+    /// to before relations existed.
+    fn rel_export(&self) -> Option<Vec<(u32, Vec<f32>)>> {
+        self.rel
+            .as_ref()
+            .map(|m| m.ops().iter().map(|o| o.code()).zip(m.snapshot()).collect())
     }
 
     /// The graph digest manifests are stamped with (and resume checks).
@@ -247,6 +314,47 @@ impl Trainer {
         }
         for (g, s) in reader.rng_states().iter().enumerate() {
             self.rngs[g] = Rng::from_state(*s);
+        }
+        // the relation segment must match the run's typed-ness exactly —
+        // the graph digest already refuses most mismatches, but a v2
+        // checkpoint of the same digest (or a hand-edited dir) must not
+        // silently resume with fresh relation parameters
+        match (&self.rel, reader.relations()) {
+            (None, None) => {}
+            (Some(m), Some(rs)) => {
+                crate::ensure!(
+                    rs.len() == m.num_relations(),
+                    "checkpoint has {} relations, the typed graph declares {}",
+                    rs.len(),
+                    m.num_relations()
+                );
+                for (r, (code, params)) in rs.iter().enumerate() {
+                    let op = RelOpKind::from_code(*code)
+                        .with_context(|| format!("checkpoint relation {r}"))?;
+                    crate::ensure!(
+                        op == m.op(r as u16),
+                        "checkpoint relation {r} was trained with the {} operator, \
+                         the typed graph declares {}",
+                        op.name(),
+                        m.op(r as u16).name()
+                    );
+                    let mut p = m.lock_param(r as u16);
+                    crate::ensure!(
+                        params.len() == p.len(),
+                        "checkpoint relation {r} has {} parameters, the model expects {}",
+                        params.len(),
+                        p.len()
+                    );
+                    p.copy_from_slice(params);
+                }
+            }
+            (Some(_), None) => crate::bail!(
+                "typed run cannot resume from an untyped (v2) checkpoint: \
+                 it has no relation segment to restore"
+            ),
+            (None, Some(_)) => crate::bail!(
+                "untyped run cannot resume from a relation-typed (v3) checkpoint"
+            ),
         }
         self.global_episode = reader.watermark() + 1;
         // the restored vertex matrix invalidates any rows captured from
@@ -335,9 +443,9 @@ impl Trainer {
     /// on a multi-rank driver whose remote context collection broke (a
     /// dead worker or protocol divergence) — single-process runs always
     /// return `Ok`.
-    pub fn train_epoch(
+    pub fn train_epoch<S: Sample>(
         &mut self,
-        samples: &mut Vec<Edge>,
+        samples: &mut Vec<S>,
         epoch: usize,
     ) -> crate::Result<EpochReport> {
         self.train_epoch_from(samples, epoch, 0)
@@ -347,9 +455,9 @@ impl Trainer {
     /// resume path. The episode split is deterministic per epoch (seeded
     /// shuffle), so skipping the first `start_episode` episodes trains
     /// exactly the episodes an uninterrupted run would still have run.
-    pub fn train_epoch_from(
+    pub fn train_epoch_from<S: Sample>(
         &mut self,
-        samples: &mut Vec<Edge>,
+        samples: &mut Vec<S>,
         epoch: usize,
         start_episode: usize,
     ) -> crate::Result<EpochReport> {
@@ -371,7 +479,7 @@ impl Trainer {
         let mut total_samples = 0u64;
         let mut trained = 0u64;
         for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
-            let pool = EpisodePool::build(&self.plan, ep);
+            let pool = EpisodePool::build_from(&self.plan, ep);
             let (ep_sim, ep_loss, ep_samples) =
                 self.train_one_episode(&pool, epoch, i, episodes.len(), lr)?;
             sim_secs += ep_sim;
@@ -544,6 +652,7 @@ impl Trainer {
             episodes_in_epoch: episodes as u64,
             contexts: self.contexts.clone(),
             rng_states: self.rngs.iter().map(|r| r.state()).collect(),
+            relations: self.rel_export(),
         };
         if let Err(e) = w.sink().commit_episode(meta) {
             eprintln!("warning: checkpoint commit failed: {e:#}");
@@ -664,6 +773,7 @@ impl Trainer {
             // the episode pipeline's feeder half: carry chain heads across
             // the boundary instead of draining to empty (parity-neutral)
             head_prefetch: self.cfg.episode_prefetch >= 1,
+            rel: self.rel.as_ref(),
         };
         let view = self.cluster_handle.as_deref().map(|h| h.view());
         let run = crate::exec::run_episode_carry(
@@ -754,6 +864,7 @@ impl Trainer {
         let store = &self.store;
         let cfg = &self.cfg;
         let samplers = &self.samplers;
+        let rel = self.rel.as_ref();
         let crosses = plan.nodes > 1;
         let results: Vec<StepOutcome> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(assignment.len());
@@ -774,25 +885,50 @@ impl Trainer {
                     // minibatches + per-group shared negatives, drawn up
                     // front so the backend can run the whole block in one
                     // device round trip (PJRT buffer chaining); shared
-                    // with the exec worker via sample::assemble_block
-                    let (mbs, vns) = crate::sample::assemble_block(
-                        block,
-                        cfg.batch,
-                        vrange.start,
-                        crange.start,
-                        cfg.negatives,
-                        &samplers[g],
-                        rng,
-                    );
-                    let loss = backend.step_block(
-                        &mut vbuf,
-                        ctx,
-                        cfg.dim,
-                        &mbs,
-                        &vns,
-                        cfg.negatives,
-                        lr,
-                    ) as f64;
+                    // with the exec worker via sample::assemble_block —
+                    // typed pools go through the relation-aware twins
+                    let (mbs, vns) = match pool.rel_block(sp, g) {
+                        None => crate::sample::assemble_block(
+                            block,
+                            cfg.batch,
+                            vrange.start,
+                            crange.start,
+                            cfg.negatives,
+                            samplers[g].base(),
+                            rng,
+                        ),
+                        Some(rels) => crate::sample::assemble_block_rel(
+                            block,
+                            rels,
+                            cfg.batch,
+                            vrange.start,
+                            crange.start,
+                            cfg.negatives,
+                            &samplers[g],
+                            rng,
+                        ),
+                    };
+                    let loss = match rel {
+                        None => backend.step_block(
+                            &mut vbuf,
+                            ctx,
+                            cfg.dim,
+                            &mbs,
+                            &vns,
+                            cfg.negatives,
+                            lr,
+                        ) as f64,
+                        Some(rm) => backend.step_block_rel(
+                            &mut vbuf,
+                            ctx,
+                            cfg.dim,
+                            &mbs,
+                            &vns,
+                            cfg.negatives,
+                            lr,
+                            rm,
+                        ) as f64,
+                    };
                     StepOutcome {
                         subpart: sp,
                         trained: vbuf,
@@ -863,6 +999,7 @@ impl Trainer {
                         episodes_in_epoch: m,
                         contexts: self.contexts.clone(),
                         rng_states: self.rngs.iter().map(|r| r.state()).collect(),
+                        relations: self.rel_export(),
                     };
                     if let Err(e) = sink.commit_episode(meta) {
                         eprintln!("warning: final checkpoint commit failed: {e:#}");
@@ -905,6 +1042,7 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::gen;
+    use crate::graph::Edge;
 
     fn small_cfg() -> TrainConfig {
         TrainConfig {

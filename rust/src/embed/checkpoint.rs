@@ -166,6 +166,7 @@ mod tests {
                 episodes_in_epoch: 1,
                 contexts: vec![store.context.clone()],
                 rng_states: vec![[1, 2, 3, 4]],
+                relations: None,
             })
             .unwrap();
         w.finish().unwrap();

@@ -5,6 +5,7 @@
 
 pub mod checkpoint;
 pub mod kernels;
+pub mod relations;
 pub mod sgns;
 
 use crate::partition::HierarchyPlan;

@@ -1,0 +1,206 @@
+//! Per-relation scoring operators and their learned parameters — the
+//! `RelationOp` layer of the relation-typed pipeline (PBG's cheapest
+//! three operators; math + gradients in `docs/RELATIONS.md`).
+//!
+//! A typed edge `(u, r, v)` scores as `op_r(vertex[u]) · context[v]`:
+//!
+//! * **identity** — `op(u) = u`, parameter-free. This is exactly the
+//!   untyped score, and the training path dispatches identity
+//!   minibatches to the plain [`crate::embed::sgns::StepBackend::step`],
+//!   so an all-identity model is bit-identical to the untyped pipeline.
+//! * **translation** — `op(u) = u + t_r`, one learned `[d]` vector per
+//!   relation, initialized to zeros (identity at init).
+//! * **diagonal** — `op(u) = a_r ⊙ u`, one learned `[d]` scale per
+//!   relation, initialized to ones (identity at init).
+//!
+//! Parameters are tiny (`R × d` floats) and shared across every worker
+//! thread of an episode, so they live behind per-relation `Mutex`es:
+//! a worker snapshots the parameter at minibatch start, accumulates the
+//! relation gradient over the minibatch, and applies it additively under
+//! the lock at minibatch end. Updates are therefore never lost, but a
+//! concurrent multi-relation run reads slightly stale parameters
+//! (hogwild-style) — multi-relation executor runs are *not*
+//! bit-deterministic across thread schedules, unlike the all-identity
+//! configuration (see `docs/RELATIONS.md` §Determinism).
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::graph::RelOpKind;
+
+/// The learned relation parameters of one model: operator kinds and one
+/// (possibly empty) parameter vector per relation.
+#[derive(Debug)]
+pub struct RelModel {
+    dim: usize,
+    ops: Vec<RelOpKind>,
+    params: Vec<Mutex<Vec<f32>>>,
+}
+
+impl RelModel {
+    /// Fresh model at the identity-at-init point: translation vectors
+    /// all-zero, diagonal scales all-one.
+    pub fn new(ops: &[RelOpKind], dim: usize) -> Self {
+        let params = ops
+            .iter()
+            .map(|op| {
+                let init = match op {
+                    RelOpKind::Identity => Vec::new(),
+                    RelOpKind::Translation => vec![0.0f32; dim],
+                    RelOpKind::Diagonal => vec![1.0f32; dim],
+                };
+                Mutex::new(init)
+            })
+            .collect();
+        RelModel { dim, ops: ops.to_vec(), params }
+    }
+
+    /// Rebuild from persisted parameters (checkpoint v3 restore).
+    /// Lengths must match each operator's [`RelOpKind::param_len`].
+    pub fn from_params(
+        ops: Vec<RelOpKind>,
+        params: Vec<Vec<f32>>,
+        dim: usize,
+    ) -> crate::Result<Self> {
+        crate::ensure!(
+            ops.len() == params.len(),
+            "relation model: {} operators but {} parameter vectors",
+            ops.len(),
+            params.len()
+        );
+        for (r, (op, p)) in ops.iter().zip(&params).enumerate() {
+            crate::ensure!(
+                p.len() == op.param_len(dim),
+                "relation {r} ({}): expected {} parameters at dim {dim}, got {}",
+                op.name(),
+                op.param_len(dim),
+                p.len()
+            );
+        }
+        Ok(RelModel { dim, ops, params: params.into_iter().map(Mutex::new).collect() })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_relations(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn ops(&self) -> &[RelOpKind] {
+        &self.ops
+    }
+
+    #[inline]
+    pub fn op(&self, rel: u16) -> RelOpKind {
+        self.ops[rel as usize]
+    }
+
+    /// True when every relation is identity — the configuration whose
+    /// training is bit-identical to the untyped pipeline and the only
+    /// one non-native backends accept (validated at trainer startup).
+    pub fn all_identity(&self) -> bool {
+        self.ops.iter().all(|&op| op == RelOpKind::Identity)
+    }
+
+    /// Lock one relation's parameter vector (empty for identity).
+    pub fn lock_param(&self, rel: u16) -> MutexGuard<'_, Vec<f32>> {
+        self.params[rel as usize].lock().expect("relation param lock poisoned")
+    }
+
+    /// Copy of every relation's parameters, declaration order — the
+    /// checkpoint tee's view (`ckpt::format::write_relations`).
+    pub fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.params.iter().map(|p| p.lock().expect("relation param lock poisoned").clone()).collect()
+    }
+
+    /// Score one `(u, rel, v)` pair from raw embedding rows, applying
+    /// the relation operator exactly as training does: the transformed
+    /// source buffer feeds the same [`crate::embed::kernels::dot`], so
+    /// identity scoring is bit-identical to the untyped
+    /// `EmbeddingStore::score` / `CkptReader::score` path.
+    pub fn score(&self, u_row: &[f32], rel: u16, c_row: &[f32]) -> f32 {
+        match self.op(rel) {
+            RelOpKind::Identity => crate::embed::kernels::dot(u_row, c_row),
+            RelOpKind::Translation => {
+                let p = self.lock_param(rel);
+                let ub: Vec<f32> = u_row.iter().zip(p.iter()).map(|(a, b)| a + b).collect();
+                crate::embed::kernels::dot(&ub, c_row)
+            }
+            RelOpKind::Diagonal => {
+                let p = self.lock_param(rel);
+                let ub: Vec<f32> = u_row.iter().zip(p.iter()).map(|(a, b)| a * b).collect();
+                crate::embed::kernels::dot(&ub, c_row)
+            }
+        }
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|p| p.lock().expect("relation param lock poisoned").len() as u64 * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_model_is_identity_at_init() {
+        let ops = [RelOpKind::Identity, RelOpKind::Translation, RelOpKind::Diagonal];
+        let m = RelModel::new(&ops, 4);
+        assert_eq!(m.num_relations(), 3);
+        assert!(!m.all_identity());
+        assert!(m.lock_param(0).is_empty());
+        assert_eq!(*m.lock_param(1), vec![0.0; 4]);
+        assert_eq!(*m.lock_param(2), vec![1.0; 4]);
+        let u = [0.5f32, -1.0, 2.0, 0.25];
+        let c = [1.0f32, 1.0, 1.0, 1.0];
+        let id = m.score(&u, 0, &c);
+        // zero translation and unit scale both reduce to the identity score
+        assert_eq!(m.score(&u, 1, &c), id);
+        assert_eq!(m.score(&u, 2, &c), id);
+    }
+
+    #[test]
+    fn score_applies_operator() {
+        let m = RelModel::new(&[RelOpKind::Translation, RelOpKind::Diagonal], 2);
+        let u = [1.0f32, 2.0];
+        let c = [3.0f32, 4.0];
+        m.lock_param(0).copy_from_slice(&[10.0, 20.0]);
+        m.lock_param(1).copy_from_slice(&[2.0, 0.5]);
+        assert_eq!(m.score(&u, 0, &c), (1.0 + 10.0) * 3.0 + (2.0 + 20.0) * 4.0);
+        assert_eq!(m.score(&u, 1, &c), 2.0 * 3.0 + 1.0 * 4.0);
+    }
+
+    #[test]
+    fn from_params_validates_lengths() {
+        let ok = RelModel::from_params(
+            vec![RelOpKind::Identity, RelOpKind::Diagonal],
+            vec![vec![], vec![1.0, 1.0, 1.0]],
+            3,
+        );
+        assert!(ok.is_ok());
+        let bad = RelModel::from_params(vec![RelOpKind::Translation], vec![vec![1.0]], 3);
+        let err = bad.unwrap_err().to_string();
+        assert!(err.contains("expected 3 parameters"), "err: {err}");
+        assert!(RelModel::from_params(vec![RelOpKind::Identity], vec![], 3).is_err());
+    }
+
+    #[test]
+    fn all_identity_detection() {
+        assert!(RelModel::new(&[RelOpKind::Identity; 3], 8).all_identity());
+        assert!(!RelModel::new(&[RelOpKind::Identity, RelOpKind::Diagonal], 8).all_identity());
+    }
+
+    #[test]
+    fn snapshot_round_trips() {
+        let m = RelModel::new(&[RelOpKind::Translation], 3);
+        m.lock_param(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        let snap = m.snapshot();
+        let m2 = RelModel::from_params(m.ops().to_vec(), snap, 3).unwrap();
+        assert_eq!(*m2.lock_param(0), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -53,14 +53,16 @@ impl LogisticRegression {
 }
 
 /// Table V harness: train LR on embeddings for `labels`, report
-/// (train AUC, eval AUC) over a deterministic split.
+/// (train AUC, eval AUC) over a deterministic split. Errors when either
+/// split ends up single-class (the degenerate-AUC contract of
+/// [`auc`]) — e.g. a `positive_class` no node carries.
 pub fn feature_engineering_auc(
     store: &EmbeddingStore,
     labels: &[u32],
     positive_class: u32,
     train_frac: f64,
     seed: u64,
-) -> (f64, f64) {
+) -> crate::Result<(f64, f64)> {
     let n = store.num_nodes;
     assert_eq!(labels.len(), n);
     let mut idx: Vec<usize> = (0..n).collect();
@@ -77,7 +79,7 @@ pub fn feature_engineering_auc(
     let tr_x: Vec<Vec<f32>> = tr.iter().map(|&v| feat(v)).collect();
     let tr_y: Vec<bool> = tr.iter().map(|&v| labels[v] == positive_class).collect();
     let model = LogisticRegression::train(&tr_x, &tr_y, 12, 0.1, seed ^ 0xF00D);
-    let split_auc = |ids: &[usize]| {
+    let split_auc = |ids: &[usize]| -> crate::Result<f64> {
         let mut pos = Vec::new();
         let mut neg = Vec::new();
         for &v in ids {
@@ -90,7 +92,7 @@ pub fn feature_engineering_auc(
         }
         auc(&pos, &neg)
     };
-    (split_auc(tr), split_auc(ev))
+    Ok((split_auc(tr)?, split_auc(ev)?))
 }
 
 #[cfg(test)]
@@ -132,9 +134,20 @@ mod tests {
             store.vertex[v * 8 + c] += 1.0; // community-aligned dimension
             store.context[v * 8 + c] += 0.5;
         }
-        let (tr, ev) = feature_engineering_auc(&store, &labels, 0, 0.7, 5);
+        let (tr, ev) = feature_engineering_auc(&store, &labels, 0, 0.7, 5).unwrap();
         assert!(tr > 0.95, "train auc {tr}");
         assert!(ev > 0.9, "eval auc {ev}");
+    }
+
+    #[test]
+    fn single_class_labels_error_instead_of_nan() {
+        let n = 40;
+        let labels: Vec<u32> = vec![1; n];
+        let mut rng = Rng::new(4);
+        let store = EmbeddingStore::init(n, 4, &mut rng);
+        // positive_class 0 never appears -> every split is single-class
+        let err = feature_engineering_auc(&store, &labels, 0, 0.7, 7).unwrap_err();
+        assert!(format!("{err:#}").contains("positive"), "{err:#}");
     }
 
     #[test]
@@ -143,7 +156,7 @@ mod tests {
         let labels: Vec<u32> = (0..n as u32).map(|v| v % 2).collect();
         let mut rng = Rng::new(3);
         let store = EmbeddingStore::init(n, 8, &mut rng);
-        let (_, ev) = feature_engineering_auc(&store, &labels, 0, 0.7, 6);
+        let (_, ev) = feature_engineering_auc(&store, &labels, 0, 0.7, 6).unwrap();
         assert!((ev - 0.5).abs() < 0.15, "eval auc {ev}");
     }
 }

@@ -1,8 +1,10 @@
 //! Evaluation harnesses: AUC, the link-prediction protocol of §V-C2
-//! (GraphVite's protocol, which the paper adopts), and the downstream
-//! feature-engineering task of Table V.
+//! (GraphVite's protocol, which the paper adopts), the downstream
+//! feature-engineering task of Table V, and the filtered KG ranking
+//! protocol (MRR / Hits@K) for relation-typed graphs ([`kg`]).
 
 pub mod downstream;
+pub mod kg;
 
 use crate::embed::EmbeddingStore;
 use crate::graph::{CsrGraph, Edge, NodeId};
@@ -10,8 +12,21 @@ use crate::util::Rng;
 
 /// Area under the ROC curve from positive/negative score samples
 /// (rank-based Mann–Whitney estimator, ties get half credit).
-pub fn auc(pos: &[f32], neg: &[f32]) -> f64 {
-    assert!(!pos.is_empty() && !neg.is_empty(), "auc needs both classes");
+///
+/// Degenerate inputs — an empty class on either side — are an error,
+/// not a NaN: the estimator divides by `|pos| · |neg|`, and a silent
+/// NaN would poison every downstream aggregate that consumes it.
+pub fn auc(pos: &[f32], neg: &[f32]) -> crate::Result<f64> {
+    crate::ensure!(
+        !pos.is_empty(),
+        "auc needs at least one positive score (got 0 positives, {} negatives)",
+        neg.len()
+    );
+    crate::ensure!(
+        !neg.is_empty(),
+        "auc needs at least one negative score (got {} positives, 0 negatives)",
+        pos.len()
+    );
     let mut all: Vec<(f32, bool)> = pos
         .iter()
         .map(|&s| (s, true))
@@ -36,7 +51,7 @@ pub fn auc(pos: &[f32], neg: &[f32]) -> f64 {
     }
     let np = pos.len() as f64;
     let nn = neg.len() as f64;
-    (rank_sum_pos - np * (np + 1.0) / 2.0) / (np * nn)
+    Ok((rank_sum_pos - np * (np + 1.0) / 2.0) / (np * nn))
 }
 
 /// A link-prediction split: train edges + held-out positive test edges +
@@ -80,7 +95,7 @@ pub fn score_edges(store: &EmbeddingStore, edges: &[Edge]) -> Vec<f32> {
 }
 
 /// Link-prediction AUC of a trained model on a split.
-pub fn link_auc(store: &EmbeddingStore, split: &LinkSplit) -> f64 {
+pub fn link_auc(store: &EmbeddingStore, split: &LinkSplit) -> crate::Result<f64> {
     let pos = score_edges(store, &split.test_pos);
     let neg = score_edges(store, &split.test_neg);
     auc(&pos, &neg)
@@ -93,17 +108,29 @@ mod tests {
 
     #[test]
     fn auc_perfect_and_random_and_inverted() {
-        assert_eq!(auc(&[2.0, 3.0], &[0.0, 1.0]), 1.0);
-        assert_eq!(auc(&[0.0, 1.0], &[2.0, 3.0]), 0.0);
-        let a = auc(&[1.0, 0.0], &[1.0, 0.0]);
+        assert_eq!(auc(&[2.0, 3.0], &[0.0, 1.0]).unwrap(), 1.0);
+        assert_eq!(auc(&[0.0, 1.0], &[2.0, 3.0]).unwrap(), 0.0);
+        let a = auc(&[1.0, 0.0], &[1.0, 0.0]).unwrap();
         assert!((a - 0.5).abs() < 1e-9, "ties -> 0.5, got {a}");
     }
 
     #[test]
     fn auc_handles_interleaved() {
         // pos: 3,1 ; neg: 2,0 -> pairs won: (3>2),(3>0),(1>0) = 3/4
-        let a = auc(&[3.0, 1.0], &[2.0, 0.0]);
+        let a = auc(&[3.0, 1.0], &[2.0, 0.0]).unwrap();
         assert!((a - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_rejects_empty_positive_side() {
+        let err = auc(&[], &[1.0, 2.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("positive"), "{err:#}");
+    }
+
+    #[test]
+    fn auc_rejects_empty_negative_side() {
+        let err = auc(&[1.0, 2.0], &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("negative"), "{err:#}");
     }
 
     #[test]
@@ -127,7 +154,7 @@ mod tests {
         let split = link_split(&g, 0.1, &mut rng);
         // untrained: context is zero -> all scores 0 -> AUC 0.5
         let untrained = EmbeddingStore::init(250, 16, &mut rng);
-        let a0 = link_auc(&untrained, &split);
+        let a0 = link_auc(&untrained, &split).unwrap();
         assert!((a0 - 0.5).abs() < 0.05, "untrained auc {a0}");
         // train on the training edges only
         let cfg = crate::config::TrainConfig {
@@ -148,7 +175,7 @@ mod tests {
             t.train_epoch(&mut samples, e).unwrap();
         }
         let store = t.finish().unwrap();
-        let a1 = link_auc(&store, &split);
+        let a1 = link_auc(&store, &split).unwrap();
         assert!(a1 > 0.6, "trained auc {a1}");
         assert!(a1 > a0);
     }

@@ -68,7 +68,7 @@ use crate::embed::sgns::StepBackend;
 use crate::embed::EmbeddingStore;
 use crate::metrics::Timer;
 use crate::partition::HierarchyPlan;
-use crate::sample::{EpisodePool, NegativeSampler};
+use crate::sample::{EpisodePool, RelSamplers};
 use crate::util::Rng;
 
 pub use trace::{ExecMeasure, ExecRun, Phase, PhaseClock, StepTrace};
@@ -126,6 +126,13 @@ pub struct ExecCtx<'a> {
     /// parity holds either way — so callers without a next episode (or
     /// with `schedule.episode_prefetch = 0`) leave it off.
     pub head_prefetch: bool,
+    /// Relation operators + learned parameters for relation-typed
+    /// episodes (`embed::relations`): `Some` exactly when the episode
+    /// pool carries relation lanes ([`EpisodePool::rel_block`]), in
+    /// which case workers assemble per-relation minibatches and step
+    /// through [`StepBackend::step_block_rel`]. `None` = the untyped
+    /// pipeline, byte-for-byte unchanged.
+    pub rel: Option<&'a crate::embed::relations::RelModel>,
 }
 
 /// One rank's view of the multi-process cluster: one rank per simulated
@@ -202,7 +209,7 @@ pub fn run_episode(
     store: &mut EmbeddingStore,
     contexts: &mut [Vec<f32>],
     backends: &mut [Box<dyn StepBackend>],
-    samplers: &[NegativeSampler],
+    samplers: &[RelSamplers],
     rngs: &mut [Rng],
 ) -> ExecRun {
     run_episode_ranked(ctx, store, contexts, backends, samplers, rngs, None)
@@ -221,7 +228,7 @@ pub(crate) fn run_episode_carry(
     store: &mut EmbeddingStore,
     contexts: &mut [Vec<f32>],
     backends: &mut [Box<dyn StepBackend>],
-    samplers: &[NegativeSampler],
+    samplers: &[RelSamplers],
     rngs: &mut [Rng],
     cluster: Option<&ClusterView<'_>>,
     carry: &mut HeadCarry,
@@ -244,7 +251,7 @@ pub fn run_episode_ranked(
     store: &mut EmbeddingStore,
     contexts: &mut [Vec<f32>],
     backends: &mut [Box<dyn StepBackend>],
-    samplers: &[NegativeSampler],
+    samplers: &[RelSamplers],
     rngs: &mut [Rng],
     cluster: Option<&ClusterView<'_>>,
 ) -> ExecRun {
@@ -258,7 +265,7 @@ fn run_inner(
     store: &mut EmbeddingStore,
     contexts: &mut [Vec<f32>],
     backends: &mut [Box<dyn StepBackend>],
-    samplers: &[NegativeSampler],
+    samplers: &[RelSamplers],
     rngs: &mut [Rng],
     cluster: Option<&ClusterView<'_>>,
     carry: &mut HeadCarry,

@@ -9,6 +9,7 @@ use super::*;
 use crate::comm::transport;
 use crate::embed::sgns::NativeBackend;
 use crate::gen;
+use crate::sample::NegativeSampler;
 
 fn fixture(
     nodes: usize,
@@ -31,15 +32,16 @@ fn gpu_state(
     store: &EmbeddingStore,
     degrees: &[u32],
     seed: u64,
-) -> (Vec<Vec<f32>>, Vec<Box<dyn StepBackend>>, Vec<NegativeSampler>, Vec<Rng>) {
+) -> (Vec<Vec<f32>>, Vec<Box<dyn StepBackend>>, Vec<RelSamplers>, Vec<Rng>) {
     let gpus = plan.total_gpus();
     let contexts: Vec<Vec<f32>> =
         (0..gpus).map(|g| store.checkout_context(plan.context_range(g))).collect();
     let backends: Vec<Box<dyn StepBackend>> = (0..gpus)
         .map(|_| Box::new(NativeBackend::new()) as Box<dyn StepBackend>)
         .collect();
-    let samplers: Vec<NegativeSampler> =
-        (0..gpus).map(|g| NegativeSampler::new(degrees, plan.context_range(g))).collect();
+    let samplers: Vec<RelSamplers> = (0..gpus)
+        .map(|g| RelSamplers::untyped(NegativeSampler::new(degrees, plan.context_range(g))))
+        .collect();
     let mut root = Rng::new(seed);
     let rngs: Vec<Rng> = (0..gpus).map(|g| root.fork(g as u64)).collect();
     (contexts, backends, samplers, rngs)
@@ -67,6 +69,7 @@ fn run_windowed(
         ckpt: None,
         ctx_stream: None,
         head_prefetch: false,
+        rel: None,
     };
     let run = run_episode(&ctx, store, &mut contexts, &mut backends, &samplers, &mut rngs);
     (run, contexts)
@@ -234,6 +237,7 @@ fn head_carry_across_episodes_is_bit_identical() {
             ckpt: None,
             ctx_stream: None,
             head_prefetch: false,
+            rel: None,
         };
         let run = run_episode(&ctx, &mut sref, &mut cref, &mut bref, &samp_ref, &mut rref);
         assert_eq!(run.measure.prefetch_hits, 0);
@@ -260,6 +264,7 @@ fn head_carry_across_episodes_is_bit_identical() {
             ckpt: None,
             ctx_stream: None,
             head_prefetch: true,
+            rel: None,
         };
         let run = run_episode_carry(&ctx, &mut s, &mut c, &mut b, &samp, &mut r, None, &mut carry);
         losses.extend(run.traces.iter().map(|t| t.loss));
@@ -319,6 +324,7 @@ fn worker_panic_propagates_instead_of_deadlocking() {
         ckpt: None,
         ctx_stream: None,
         head_prefetch: false,
+        rel: None,
     };
     // must panic (poison broadcast unblocks the other workers and the
     // feeder's credits disconnect), not hang
@@ -348,6 +354,7 @@ fn worker_panic_with_tight_window_still_propagates() {
         ckpt: None,
         ctx_stream: None,
         head_prefetch: false,
+        rel: None,
     };
     run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
 }
@@ -425,6 +432,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
                 // checkpoint-active episode: stream shards at watermark 7
                 ctx_stream: Some(7),
                 head_prefetch: false,
+                rel: None,
             };
             let view = ClusterView { rank: 1, world: 2, peers: peers1_r, hub: hub1_r };
             let out = run_episode_ranked(
@@ -453,6 +461,7 @@ fn ranked_episode_over_loopback_matches_single_process() {
             ckpt: None,
             ctx_stream: None,
             head_prefetch: false,
+            rel: None,
         };
         let view = ClusterView { rank: 0, world: 2, peers: &peers0, hub: &hub0 };
         let run0 = run_episode_ranked(
@@ -546,6 +555,7 @@ fn episode_tees_chain_ends_into_the_checkpoint_sink() {
         ckpt: Some(writer.sink()),
         ctx_stream: None,
         head_prefetch: false,
+        rel: None,
     };
     let run = run_episode(&ctx, &mut store, &mut contexts, &mut backends, &samplers, &mut rngs);
     assert_eq!(run.measure.ckpt_teed, plan.total_subparts(), "every chain end teed");
@@ -560,6 +570,7 @@ fn episode_tees_chain_ends_into_the_checkpoint_sink() {
             episodes_in_epoch: 1,
             contexts: contexts.clone(),
             rng_states: vec![[0; 4]; plan.total_gpus()],
+            relations: None,
         })
         .unwrap();
     let stats = writer.finish().unwrap();

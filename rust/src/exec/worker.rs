@@ -20,7 +20,7 @@ use crate::comm::transport::{self, Transport, WireMsg, KIND_POISON, KIND_SUBPART
 use crate::embed::sgns::StepBackend;
 use crate::metrics::Timer;
 use crate::pipeline::PhaseBytes;
-use crate::sample::{assemble_block, NegativeSampler};
+use crate::sample::{assemble_block, assemble_block_rel, RelSamplers};
 use crate::util::Rng;
 
 use super::storewriter::StoreOp;
@@ -119,7 +119,7 @@ pub(crate) fn worker(
     rng: &mut Rng,
     outbox: &Outbox,
     ctx: &ExecCtx<'_>,
-    samplers: &[NegativeSampler],
+    samplers: &[RelSamplers],
     ack_tx: &Sender<()>,
     store_tx: &Sender<StoreOp>,
 ) -> WorkerOut {
@@ -152,21 +152,36 @@ pub(crate) fn worker(
         let vrange = ctx.plan.subpart_range(sp);
         let block = ctx.pool.block(sp, g);
         // minibatches + per-group shared negatives, drawn in this
-        // worker's schedule order — the exact helper the serial reference
-        // uses, so the two paths cannot drift apart
-        let (mbs, vns) = clock.time(Phase::SampleLoad, || {
-            assemble_block(
+        // worker's schedule order — the exact helpers the serial
+        // reference uses, so the two paths cannot drift apart. Typed
+        // pools (relation lanes present) assemble per-relation and step
+        // through the relation-aware backend entry; the trainer sets
+        // `ctx.rel` exactly for typed pools.
+        let rels = ctx.pool.rel_block(sp, g);
+        debug_assert_eq!(ctx.rel.is_some(), rels.is_some(), "rel model vs pool lanes");
+        let (mbs, vns) = clock.time(Phase::SampleLoad, || match rels {
+            None => assemble_block(
                 block,
+                ctx.batch,
+                vrange.start,
+                crange.start,
+                ctx.negatives,
+                samplers[g].base(),
+                rng,
+            ),
+            Some(rels) => assemble_block_rel(
+                block,
+                rels,
                 ctx.batch,
                 vrange.start,
                 crange.start,
                 ctx.negatives,
                 &samplers[g],
                 rng,
-            )
+            ),
         });
-        let loss = clock.time(Phase::Compute, || {
-            backend.step_block(
+        let loss = clock.time(Phase::Compute, || match ctx.rel {
+            None => backend.step_block(
                 &mut vbuf,
                 shard,
                 ctx.dim,
@@ -174,7 +189,17 @@ pub(crate) fn worker(
                 &vns,
                 ctx.negatives,
                 ctx.lr,
-            ) as f64
+            ) as f64,
+            Some(rel) => backend.step_block_rel(
+                &mut vbuf,
+                shard,
+                ctx.dim,
+                &mbs,
+                &vns,
+                ctx.negatives,
+                ctx.lr,
+                rel,
+            ) as f64,
         });
 
         let bytes = PhaseBytes {

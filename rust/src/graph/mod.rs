@@ -6,6 +6,9 @@
 //! offsets so edge counts past 4B still index correctly.
 
 pub mod io;
+pub mod typed;
+
+pub use typed::{EntityType, RelOpKind, Relation, TypedEdge, TypedGraph};
 
 /// Node identifier. Scaled-down graphs fit u32; offsets are u64.
 pub type NodeId = u32;

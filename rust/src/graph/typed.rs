@@ -1,0 +1,298 @@
+//! Relation-typed, multi-entity graphs — the PyTorch-BigGraph workload
+//! shape: several entity types, each owning a contiguous id range, and
+//! typed edges `(src, rel, dst)` whose relation declares which entity
+//! types it connects and which operator composes into the score.
+//!
+//! The text format (normative spec + worked example: `docs/RELATIONS.md`):
+//!
+//! ```text
+//! # comments and blank lines are skipped
+//! entity   user 0 12            # name, id range [lo, hi)
+//! entity   item 12 20
+//! relation likes   user item translation
+//! relation follows user user identity
+//! 0   likes   12                # src <ws> relation-name <ws> dst
+//! ```
+//!
+//! Entity ranges must tile `[0, num_nodes)` contiguously in declaration
+//! order; every edge is validated against its relation's entity ranges.
+//! Unlike the lenient untyped reader (`io::read_edges_text`), the typed
+//! parser is **strict**: truncated lines, non-numeric ids, unknown
+//! names, out-of-range ids, self-loops, and duplicate triples are each a
+//! specific error, never a panic or a silent skip (pinned by the
+//! malformed-input table test in `io`).
+
+use std::ops::Range;
+
+use super::{CsrGraph, Edge, NodeId};
+
+/// A typed edge `(src, relation index, dst)`. Relation indices follow
+/// declaration order in the graph file; `u16` bounds the relation count
+/// at 65 535, far above any PBG-style workload.
+pub type TypedEdge = (NodeId, u16, NodeId);
+
+/// Per-relation scoring operator (PBG's three cheapest): how a source
+/// row is transformed before the dot-product against the context row.
+/// The math and gradients are specified in `docs/RELATIONS.md` and
+/// implemented by `embed::relations`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelOpKind {
+    /// `op(u) = u` — the untyped pipeline's score, bit-identical.
+    Identity,
+    /// `op(u) = u + t_r` with a learned per-relation vector `t_r`.
+    Translation,
+    /// `op(u) = a_r ⊙ u` with a learned per-relation scale `a_r`.
+    Diagonal,
+}
+
+impl RelOpKind {
+    /// Parse an operator name as written in the graph file.
+    pub fn parse(name: &str) -> crate::Result<RelOpKind> {
+        match name {
+            "identity" => Ok(RelOpKind::Identity),
+            "translation" => Ok(RelOpKind::Translation),
+            "diagonal" => Ok(RelOpKind::Diagonal),
+            other => crate::bail!(
+                "unknown relation operator {other:?} (identity|translation|diagonal)"
+            ),
+        }
+    }
+
+    /// Canonical name (file format + reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            RelOpKind::Identity => "identity",
+            RelOpKind::Translation => "translation",
+            RelOpKind::Diagonal => "diagonal",
+        }
+    }
+
+    /// Stable on-disk code (checkpoint v3 relation segment).
+    pub fn code(self) -> u32 {
+        match self {
+            RelOpKind::Identity => 0,
+            RelOpKind::Translation => 1,
+            RelOpKind::Diagonal => 2,
+        }
+    }
+
+    /// Inverse of [`RelOpKind::code`] (checkpoint v3 reader).
+    pub fn from_code(code: u32) -> crate::Result<RelOpKind> {
+        match code {
+            0 => Ok(RelOpKind::Identity),
+            1 => Ok(RelOpKind::Translation),
+            2 => Ok(RelOpKind::Diagonal),
+            other => crate::bail!("unknown relation operator code {other}"),
+        }
+    }
+
+    /// Learned parameter f32s per relation at embedding dim `d`
+    /// (identity is parameter-free).
+    pub fn param_len(self, dim: usize) -> usize {
+        match self {
+            RelOpKind::Identity => 0,
+            RelOpKind::Translation | RelOpKind::Diagonal => dim,
+        }
+    }
+}
+
+/// One entity type owning the contiguous node-id range `[lo, hi)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntityType {
+    pub name: String,
+    pub lo: NodeId,
+    pub hi: NodeId,
+}
+
+impl EntityType {
+    pub fn range(&self) -> Range<usize> {
+        self.lo as usize..self.hi as usize
+    }
+}
+
+/// One declared relation: which entity types it connects and its
+/// scoring operator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Relation {
+    pub name: String,
+    /// Index into [`TypedGraph::entities`].
+    pub src_type: usize,
+    pub dst_type: usize,
+    pub op: RelOpKind,
+}
+
+/// A parsed, validated typed graph: entity ranges, relation
+/// declarations, and the typed edge list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypedGraph {
+    pub entities: Vec<EntityType>,
+    pub relations: Vec<Relation>,
+    pub edges: Vec<TypedEdge>,
+}
+
+impl TypedGraph {
+    /// Total node count — entity ranges tile `[0, num_nodes)`.
+    pub fn num_nodes(&self) -> usize {
+        self.entities.last().map(|e| e.hi as usize).unwrap_or(0)
+    }
+
+    pub fn num_relations(&self) -> usize {
+        self.relations.len()
+    }
+
+    /// Destination entity-type id range of relation `rel` — the candidate
+    /// pool for its negative sampling and its filtered-ranking eval.
+    pub fn dst_range(&self, rel: u16) -> Range<usize> {
+        self.entities[self.relations[rel as usize].dst_type].range()
+    }
+
+    /// Source entity-type id range of relation `rel`.
+    pub fn src_range(&self, rel: u16) -> Range<usize> {
+        self.entities[self.relations[rel as usize].src_type].range()
+    }
+
+    /// Per-relation operators, declaration order (what `embed::relations`
+    /// and the v3 checkpoint persist).
+    pub fn ops(&self) -> Vec<RelOpKind> {
+        self.relations.iter().map(|r| r.op).collect()
+    }
+
+    /// The edge list with relations erased (CSR construction, degrees,
+    /// link-prediction baselines).
+    pub fn untyped_edges(&self) -> Vec<Edge> {
+        self.edges.iter().map(|&(s, _, d)| (s, d)).collect()
+    }
+
+    /// CSR view over the untyped projection.
+    pub fn csr(&self, symmetric: bool) -> CsrGraph {
+        CsrGraph::from_edges(self.num_nodes(), &self.untyped_edges(), symmetric)
+    }
+
+    /// FNV-1a digest over the typed structure — entity ranges, relation
+    /// declarations (names, types, operators), and every triple. Folded
+    /// into the graph digest a checkpoint manifest carries, so `--resume`
+    /// refuses a run whose typed structure changed.
+    pub fn digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(self.entities.len() as u64);
+        for e in &self.entities {
+            eat(e.lo as u64);
+            eat(e.hi as u64);
+        }
+        eat(self.relations.len() as u64);
+        for r in &self.relations {
+            eat(r.src_type as u64);
+            eat(r.dst_type as u64);
+            eat(r.op.code() as u64);
+        }
+        eat(self.edges.len() as u64);
+        for &(s, r, d) in &self.edges {
+            eat(((s as u64) << 32) | d as u64);
+            eat(r as u64);
+        }
+        h
+    }
+
+    /// A single-entity, single-relation wrapper around an untyped edge
+    /// list — the implicit-relation view the untyped pipeline reduces to
+    /// (one `all` entity over `[0, num_nodes)`, one identity relation).
+    /// Note it inherits the typed invariants: the input must be free of
+    /// self-loops and duplicate edges.
+    pub fn from_untyped(num_nodes: usize, edges: &[Edge], op: RelOpKind) -> TypedGraph {
+        TypedGraph {
+            entities: vec![EntityType { name: "all".into(), lo: 0, hi: num_nodes as NodeId }],
+            relations: vec![Relation {
+                name: "edge".into(),
+                src_type: 0,
+                dst_type: 0,
+                op,
+            }],
+            edges: edges.iter().map(|&(s, d)| (s, 0u16, d)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_type_graph() -> TypedGraph {
+        TypedGraph {
+            entities: vec![
+                EntityType { name: "user".into(), lo: 0, hi: 3 },
+                EntityType { name: "item".into(), lo: 3, hi: 5 },
+            ],
+            relations: vec![
+                Relation {
+                    name: "likes".into(),
+                    src_type: 0,
+                    dst_type: 1,
+                    op: RelOpKind::Translation,
+                },
+                Relation {
+                    name: "follows".into(),
+                    src_type: 0,
+                    dst_type: 0,
+                    op: RelOpKind::Identity,
+                },
+            ],
+            edges: vec![(0, 0, 3), (1, 0, 4), (0, 1, 1)],
+        }
+    }
+
+    #[test]
+    fn ranges_and_projection() {
+        let g = two_type_graph();
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_relations(), 2);
+        assert_eq!(g.dst_range(0), 3..5);
+        assert_eq!(g.dst_range(1), 0..3);
+        assert_eq!(g.src_range(0), 0..3);
+        assert_eq!(g.untyped_edges(), vec![(0, 3), (1, 4), (0, 1)]);
+        let csr = g.csr(true);
+        assert_eq!(csr.num_nodes(), 5);
+        assert_eq!(csr.num_edges(), 6);
+    }
+
+    #[test]
+    fn op_kind_round_trips() {
+        for op in [RelOpKind::Identity, RelOpKind::Translation, RelOpKind::Diagonal] {
+            assert_eq!(RelOpKind::parse(op.name()).unwrap(), op);
+            assert_eq!(RelOpKind::from_code(op.code()).unwrap(), op);
+        }
+        assert!(RelOpKind::parse("transe").is_err());
+        assert!(RelOpKind::from_code(9).is_err());
+        assert_eq!(RelOpKind::Identity.param_len(16), 0);
+        assert_eq!(RelOpKind::Translation.param_len(16), 16);
+        assert_eq!(RelOpKind::Diagonal.param_len(16), 16);
+    }
+
+    #[test]
+    fn digest_tracks_structure() {
+        let a = two_type_graph();
+        let mut b = two_type_graph();
+        assert_eq!(a.digest(), b.digest());
+        b.relations[0].op = RelOpKind::Diagonal;
+        assert_ne!(a.digest(), b.digest());
+        let mut c = two_type_graph();
+        c.edges.push((2, 0, 3));
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn untyped_wrapper_is_single_relation_identity() {
+        let g = TypedGraph::from_untyped(4, &[(0, 1), (2, 3)], RelOpKind::Identity);
+        assert_eq!(g.num_relations(), 1);
+        assert_eq!(g.entities[0].range(), 0..4);
+        assert_eq!(g.edges, vec![(0, 0, 1), (2, 0, 3)]);
+        assert_eq!(g.ops(), vec![RelOpKind::Identity]);
+    }
+}

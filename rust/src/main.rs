@@ -6,12 +6,15 @@
 //! tembed train   --dataset <name> [--epochs N] [--config f.toml] [--set k=v]...
 //!                [--peers a0,a1,...] [--samples edges|walks]   # rank-0 driver
 //!                [--ckpt-dir <dir>] [--ckpt-interval N] [--resume <dir>]
+//!                [--typed-graph <file>]   # relation-typed training
 //! tembed worker  --rank R --peers a0,a1,... [--listen ADDR] [--dataset|--graph ...]
 //! tembed serve   --ckpt <dir> --listen ADDR [--workers N] [--queue N]
 //! tembed loadgen --addr ADDR [--clients N] [--duration SECS] [--zipf S]
 //!                [--batch N] [--topk-every N] [--seed N]   # measure a server
+//! tembed query   --addr ADDR --src U --dst V [--rel R]     # score one pair/triple
 //! tembed walk    --dataset <name> --out <dir> [--set k=v]...
 //! tembed eval    --dataset <name> [--epochs N] [--set k=v]...   # link-pred AUC
+//! tembed eval    --kg <typed-graph> [--epochs N] [--set k=v]... # KG MRR/Hits@K
 //! tembed memory                                            # paper Table I
 //! tembed extrapolate                                       # Table III paper rows
 //! tembed info                                              # datasets & clusters
@@ -111,7 +114,7 @@ fn run(args: &[String]) -> tembed::Result<()> {
         .split_first()
         .ok_or_else(|| {
             tembed::anyhow!(
-                "usage: tembed <train|worker|serve|loadgen|walk|eval|memory|extrapolate|info> ..."
+                "usage: tembed <train|worker|serve|loadgen|query|walk|eval|memory|extrapolate|info> ..."
             )
         })?;
     let flags = Flags::parse(rest)?;
@@ -120,6 +123,7 @@ fn run(args: &[String]) -> tembed::Result<()> {
         "worker" => cmd_worker(&flags),
         "serve" => cmd_serve(&flags),
         "loadgen" => cmd_loadgen(&flags),
+        "query" => cmd_query(&flags),
         "walk" => cmd_walk(&flags),
         "eval" => cmd_eval(&flags),
         "memory" => cmd_memory(),
@@ -187,7 +191,16 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
             }
         }
     }
-    let graph = load_dataset(flags, cfg.seed)?;
+    // relation-typed training: the typed file IS the graph (its erased
+    // edge list builds the CSR) and its triples are the fixed sample set
+    let typed = match flags.get("typed-graph") {
+        Some(p) => Some(tembed::graph::io::read_typed_graph(std::path::Path::new(p))?),
+        None => None,
+    };
+    let graph = match &typed {
+        Some(tg) => tg.csr(true),
+        None => load_dataset(flags, cfg.seed)?,
+    };
     println!("# effective config\n{}", cfg.render());
     println!(
         "graph: {} nodes, {} edges (gini {:.2})",
@@ -195,6 +208,14 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         graph.num_edges(),
         graph.degree_stats().gini
     );
+    if let Some(tg) = &typed {
+        println!(
+            "typed graph: {} entity type(s), {} relation(s), {} triple(s)",
+            tg.entities.len(),
+            tg.num_relations(),
+            tg.edges.len()
+        );
+    }
     println!(
         "sgns kernel: {} (override with TEMBED_KERNEL=scalar|simd; see docs/PERF.md)",
         tembed::embed::kernels::active_name()
@@ -205,6 +226,16 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         "--peers lists a single address; a cluster needs one address per rank \
          (or drop --peers to simulate in-process)"
     );
+    if typed.is_some() {
+        tembed::ensure!(
+            cfg.peer_list().is_empty(),
+            "--typed-graph does not compose with --peers yet (single-process only)"
+        );
+        tembed::ensure!(
+            !fixed_edges,
+            "--typed-graph already trains on its triple list; drop --samples edges"
+        );
+    }
     // open the resume checkpoint before the cluster handshake: the
     // committed watermark rides the PlanMsg so every worker rank restores
     // the same generation (from the shared checkpoint directory) before
@@ -230,7 +261,10 @@ fn cmd_train(flags: &Flags) -> tembed::Result<()> {
         None
     };
     let runtime = open_runtime_if_needed(&cfg)?;
-    let mut driver = Driver::new(&graph, cfg.clone(), runtime.as_ref())?;
+    let mut driver = match &typed {
+        Some(tg) => Driver::new_typed(tg, &graph, cfg.clone(), runtime.as_ref())?,
+        None => Driver::new(&graph, cfg.clone(), runtime.as_ref())?,
+    };
     if fixed_edges {
         driver = driver.with_fixed_samples(graph.edges().collect());
     }
@@ -445,6 +479,41 @@ fn cmd_loadgen(flags: &Flags) -> tembed::Result<()> {
     Ok(())
 }
 
+/// Score one pair (or, with `--rel`, one relation-typed triple) against a
+/// running `tembed serve` endpoint — the CI smoke's end-to-end probe.
+fn cmd_query(flags: &Flags) -> tembed::Result<()> {
+    let addr_s = flags
+        .get("addr")
+        .ok_or_else(|| tembed::anyhow!("query needs --addr ADDR (the serving endpoint)"))?;
+    let addr = tembed::comm::transport::Addr::parse(addr_s)?;
+    let src: u32 = flags
+        .get("src")
+        .ok_or_else(|| tembed::anyhow!("query needs --src <node id>"))?
+        .parse()?;
+    let dst: u32 = flags
+        .get("dst")
+        .ok_or_else(|| tembed::anyhow!("query needs --dst <node id>"))?
+        .parse()?;
+    let mut client =
+        tembed::ckpt::QueryClient::connect(&addr, std::time::Duration::from_secs(10))?;
+    let score = match flags.get("rel") {
+        Some(r) => {
+            let rel: u16 = r.parse()?;
+            let s = client.rel_scores(&[(src, rel, dst)])?[0];
+            println!("score({src}, rel {rel}, {dst}) = {s}");
+            s
+        }
+        None => {
+            let s = client.edge_scores(&[(src, dst)])?[0];
+            println!("score({src}, {dst}) = {s}");
+            s
+        }
+    };
+    client.shutdown();
+    tembed::ensure!(score.is_finite(), "served score is not finite: {score}");
+    Ok(())
+}
+
 fn cmd_walk(flags: &Flags) -> tembed::Result<()> {
     let cfg = build_config(flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
@@ -480,6 +549,9 @@ fn cmd_walk(flags: &Flags) -> tembed::Result<()> {
 }
 
 fn cmd_eval(flags: &Flags) -> tembed::Result<()> {
+    if let Some(path) = flags.get("kg") {
+        return cmd_eval_kg(flags, path);
+    }
     let cfg = build_config(flags)?;
     let graph = load_dataset(flags, cfg.seed)?;
     let mut rng = tembed::util::Rng::new(cfg.seed ^ 0xE7A1);
@@ -500,8 +572,59 @@ fn cmd_eval(flags: &Flags) -> tembed::Result<()> {
         }
     }
     let store = driver.finish()?;
-    let auc = tembed::eval::link_auc(&store, &split);
+    let auc = tembed::eval::link_auc(&store, &split)?;
     println!("link-prediction AUC: {auc:.4}");
+    Ok(())
+}
+
+/// KG ranking protocol: hold out triples, train on the rest, report
+/// filtered MRR / Hits@1 / Hits@10 over the destination entity-type
+/// range of each test triple's relation.
+fn cmd_eval_kg(flags: &Flags, path: &str) -> tembed::Result<()> {
+    let cfg = build_config(flags)?;
+    let tg = tembed::graph::io::read_typed_graph(std::path::Path::new(path))?;
+    println!(
+        "typed graph: {} entity types / {} relations / {} triples / {} nodes",
+        tg.entities.len(),
+        tg.relations.len(),
+        tg.edges.len(),
+        tg.num_nodes()
+    );
+    let mut rng = tembed::util::Rng::new(cfg.seed ^ 0x9C1F);
+    let split = tembed::eval::kg::kg_split(&tg, 0.1, &mut rng);
+    let train = tembed::graph::TypedGraph {
+        entities: tg.entities.clone(),
+        relations: tg.relations.clone(),
+        edges: split.train.clone(),
+    };
+    let graph = train.csr(true);
+    let runtime = open_runtime_if_needed(&cfg)?;
+    let mut driver = Driver::new_typed(&train, &graph, cfg.clone(), runtime.as_ref())?;
+    for epoch in 0..cfg.epochs {
+        let r = driver.run_epoch(epoch)?;
+        if epoch % 10 == 0 || epoch + 1 == cfg.epochs {
+            println!("epoch {:>3}  mean-loss {:.4}", epoch, r.mean_loss());
+        }
+    }
+    // snapshot the relation operators before finish() consumes the driver
+    let rel = {
+        let m = driver
+            .trainer
+            .relations()
+            .ok_or_else(|| tembed::anyhow!("typed driver lost its relation model"))?;
+        tembed::embed::relations::RelModel::from_params(
+            m.ops().to_vec(),
+            m.snapshot(),
+            cfg.dim,
+        )?
+    };
+    let store = driver.finish()?;
+    let m = tembed::eval::kg::filtered_ranking(&store, &rel, &tg, &tg.edges, &split.test)?;
+    println!(
+        "KG filtered ranking over {} test triples: MRR {:.4}  Hits@1 {:.4}  Hits@10 {:.4}",
+        m.triples, m.mrr, m.hits_at_1, m.hits_at_10
+    );
+    tembed::ensure!(m.mrr.is_finite(), "MRR is not finite: {}", m.mrr);
     Ok(())
 }
 

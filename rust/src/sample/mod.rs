@@ -8,10 +8,56 @@
 //! destination in GPU `gpu`'s pinned context shard — the unit of work of
 //! one scheduled step.
 
-use crate::graph::Edge;
+use crate::graph::{Edge, NodeId, TypedEdge, TypedGraph};
 use crate::partition::HierarchyPlan;
 use crate::util::Rng;
 use crate::walk::alias::AliasTable;
+
+/// An edge sample the episode machinery can bucket and batch: untyped
+/// `Edge`s (one implicit relation 0) and relation-typed `TypedEdge`s
+/// flow through the *same* split/pool/assemble code paths. The untyped
+/// impl is the degenerate case, so single-relation typed runs stay
+/// bit-identical to the untyped pipeline (pinned by
+/// `tests/relations_parity.rs`).
+pub trait Sample: Copy + Send + Sync + 'static {
+    /// Whether pools built from this sample type carry relation lanes.
+    const TYPED: bool;
+    fn src(self) -> NodeId;
+    fn dst(self) -> NodeId;
+    fn rel(self) -> u16;
+}
+
+impl Sample for Edge {
+    const TYPED: bool = false;
+    #[inline]
+    fn src(self) -> NodeId {
+        self.0
+    }
+    #[inline]
+    fn dst(self) -> NodeId {
+        self.1
+    }
+    #[inline]
+    fn rel(self) -> u16 {
+        0
+    }
+}
+
+impl Sample for TypedEdge {
+    const TYPED: bool = true;
+    #[inline]
+    fn src(self) -> NodeId {
+        self.0
+    }
+    #[inline]
+    fn dst(self) -> NodeId {
+        self.2
+    }
+    #[inline]
+    fn rel(self) -> u16 {
+        self.1
+    }
+}
 
 /// Samples of one episode, 2D-bucketed by (sub-part, context shard).
 #[derive(Debug)]
@@ -20,25 +66,50 @@ pub struct EpisodePool {
     pub gpus: usize,
     /// `blocks[sp * gpus + gpu]` = samples for step (sp on gpu).
     blocks: Vec<Vec<Edge>>,
+    /// Relation lane parallel to `blocks` — `rel_blocks[i][j]` is the
+    /// relation id of `blocks[i][j]`. Empty for untyped pools, so the
+    /// untyped path carries zero extra bytes and zero extra branches.
+    rel_blocks: Vec<Vec<u16>>,
 }
 
 impl EpisodePool {
     /// Bucket `samples` against the plan's vertex/context ranges.
     pub fn build(plan: &HierarchyPlan, samples: &[Edge]) -> Self {
+        Self::build_from(plan, samples)
+    }
+
+    /// [`EpisodePool::build`] over any [`Sample`] type; typed samples
+    /// additionally populate the per-block relation lanes.
+    pub fn build_from<S: Sample>(plan: &HierarchyPlan, samples: &[S]) -> Self {
         let subparts = plan.total_subparts();
         let gpus = plan.total_gpus();
         let mut blocks = vec![Vec::new(); subparts * gpus];
-        for &(s, d) in samples {
-            let sp = crate::partition::block_of(&plan.vertex_bounds, s);
-            let g = crate::partition::block_of(&plan.context_bounds, d);
-            blocks[sp * gpus + g].push((s, d));
+        let mut rel_blocks = if S::TYPED { vec![Vec::new(); subparts * gpus] } else { Vec::new() };
+        for &sm in samples {
+            let sp = crate::partition::block_of(&plan.vertex_bounds, sm.src());
+            let g = crate::partition::block_of(&plan.context_bounds, sm.dst());
+            blocks[sp * gpus + g].push((sm.src(), sm.dst()));
+            if S::TYPED {
+                rel_blocks[sp * gpus + g].push(sm.rel());
+            }
         }
-        EpisodePool { subparts, gpus, blocks }
+        EpisodePool { subparts, gpus, blocks, rel_blocks }
     }
 
     #[inline]
     pub fn block(&self, subpart: usize, gpu: usize) -> &[Edge] {
         &self.blocks[subpart * self.gpus + gpu]
+    }
+
+    /// Relation lane of a block: `Some` (same length as
+    /// [`EpisodePool::block`]) for typed pools, `None` for untyped.
+    #[inline]
+    pub fn rel_block(&self, subpart: usize, gpu: usize) -> Option<&[u16]> {
+        if self.rel_blocks.is_empty() {
+            None
+        } else {
+            Some(&self.rel_blocks[subpart * self.gpus + gpu])
+        }
     }
 
     pub fn total_samples(&self) -> usize {
@@ -51,7 +122,8 @@ impl EpisodePool {
     }
 
     pub fn storage_bytes(&self) -> u64 {
-        self.blocks.iter().map(|b| b.len() as u64 * 8).sum()
+        self.blocks.iter().map(|b| b.len() as u64 * 8).sum::<u64>()
+            + self.rel_blocks.iter().map(|b| b.len() as u64 * 2).sum::<u64>()
     }
 }
 
@@ -59,11 +131,15 @@ impl EpisodePool {
 /// axis). The tail episode may be short. Samples are shuffled first so
 /// episodes are i.i.d. — the walk engine's degree-guided partitioning
 /// does this at file-write time in the offline mode.
-pub fn split_episodes(
-    samples: &mut Vec<Edge>,
+///
+/// Generic over [`Sample`]: the shuffle consumes the same RNG stream for
+/// the same sample count regardless of the sample type, which is half of
+/// the typed-vs-untyped parity argument (`tests/relations_parity.rs`).
+pub fn split_episodes<S: Sample>(
+    samples: &mut Vec<S>,
     episode_size: usize,
     rng: &mut Rng,
-) -> Vec<Vec<Edge>> {
+) -> Vec<Vec<S>> {
     rng.shuffle(samples);
     samples
         .chunks(episode_size.max(1))
@@ -89,6 +165,32 @@ impl NegativeSampler {
         NegativeSampler { table: AliasTable::unigram(&local, 0.75), shard_lo }
     }
 
+    /// [`NegativeSampler::new`] restricted to the global id range `mask`
+    /// — per-relation sampling draws negatives only from the relation's
+    /// destination entity type. Weights outside `mask ∩ range` are zero;
+    /// a mask covering the whole shard delegates to [`NegativeSampler::new`]
+    /// (bit-identical table — the single-relation parity case). If the
+    /// intersection is empty or all-isolated, the alias build's zero-total
+    /// rule yields uniform over the shard (degenerate, documented in
+    /// `docs/RELATIONS.md`).
+    pub fn new_masked(
+        degrees: &[u32],
+        range: std::ops::Range<usize>,
+        mask: std::ops::Range<usize>,
+    ) -> Self {
+        if mask.start <= range.start && mask.end >= range.end {
+            return Self::new(degrees, range);
+        }
+        let shard_lo = range.start;
+        let local: Vec<u32> = degrees[range].to_vec();
+        let local_mask =
+            mask.start.saturating_sub(shard_lo)..mask.end.saturating_sub(shard_lo);
+        NegativeSampler {
+            table: AliasTable::unigram_masked(&local, 0.75, local_mask),
+            shard_lo,
+        }
+    }
+
     /// Draw `n` shared negatives, as shard-local row indices.
     pub fn sample_local(&self, n: usize, rng: &mut Rng) -> Vec<u32> {
         (0..n).map(|_| self.table.sample(rng) as u32).collect()
@@ -107,6 +209,51 @@ impl NegativeSampler {
     }
 }
 
+/// One context shard's negative samplers, one per relation (PBG-style:
+/// negatives for a typed edge are corruptions of its *destination*, so
+/// they must come from the relation's destination entity type). The
+/// untyped pipeline is the one-sampler degenerate case — `base()` is
+/// that sampler, and `rel(0)` aliases it, so both call sites draw the
+/// identical stream.
+pub struct RelSamplers {
+    per_rel: Vec<NegativeSampler>,
+}
+
+impl RelSamplers {
+    /// Wrap the untyped pipeline's single shard sampler.
+    pub fn untyped(base: NegativeSampler) -> Self {
+        RelSamplers { per_rel: vec![base] }
+    }
+
+    /// Build one masked sampler per relation of `graph` for the shard
+    /// `range` (masks are the relations' destination entity ranges).
+    pub fn typed(degrees: &[u32], range: std::ops::Range<usize>, graph: &TypedGraph) -> Self {
+        let per_rel = (0..graph.num_relations())
+            .map(|r| NegativeSampler::new_masked(degrees, range.clone(), graph.dst_range(r as u16)))
+            .collect();
+        RelSamplers { per_rel }
+    }
+
+    /// The relation-0 sampler — the only one the untyped path touches.
+    #[inline]
+    pub fn base(&self) -> &NegativeSampler {
+        &self.per_rel[0]
+    }
+
+    #[inline]
+    pub fn rel(&self, r: u16) -> &NegativeSampler {
+        &self.per_rel[r as usize]
+    }
+
+    pub fn num_relations(&self) -> usize {
+        self.per_rel.len()
+    }
+
+    pub fn storage_bytes(&self) -> u64 {
+        self.per_rel.iter().map(|s| s.storage_bytes()).sum()
+    }
+}
+
 /// A padded minibatch ready for the runtime: local indices into the
 /// sub-part (u) and context shard (v), padded to the executable's fixed
 /// batch size with the sacrificial last rows (see model.py docstring).
@@ -116,6 +263,9 @@ pub struct MiniBatch {
     pub v_local: Vec<i32>,
     /// Number of real (non-padding) samples.
     pub real: usize,
+    /// Relation id every sample in this minibatch shares (the rel-typed
+    /// assembly groups by relation); always 0 on the untyped path.
+    pub rel: u16,
 }
 
 /// Cut a step's sample block into minibatches of exactly `batch` samples,
@@ -136,7 +286,7 @@ pub fn make_minibatches(
         let real = chunk.len();
         u.resize(batch, pad_u);
         v.resize(batch, pad_v);
-        out.push(MiniBatch { u_local: u, v_local: v, real });
+        out.push(MiniBatch { u_local: u, v_local: v, real, rel: 0 });
     }
     out
 }
@@ -172,6 +322,58 @@ pub fn assemble_block(
         })
         .collect();
     (mbs, vns)
+}
+
+/// Relation-typed [`assemble_block`]: stable-partition the block by
+/// ascending relation id (original order preserved within a relation —
+/// so a single-relation block is the identity permutation), cut each
+/// relation's run into its own padded minibatches tagged with the
+/// relation id, and draw each minibatch's shared negatives from *that
+/// relation's* masked sampler.
+///
+/// With one relation this produces byte-identical minibatches and
+/// consumes the identical RNG stream as [`assemble_block`] over
+/// `samplers.base()` — the assembly half of the typed-vs-untyped parity
+/// contract (`tests/relations_parity.rs`).
+pub fn assemble_block_rel(
+    block: &[Edge],
+    rels: &[u16],
+    batch: usize,
+    subpart_lo: usize,
+    shard_lo: usize,
+    negatives: usize,
+    samplers: &RelSamplers,
+    rng: &mut Rng,
+) -> (Vec<MiniBatch>, Vec<Vec<i32>>) {
+    debug_assert_eq!(block.len(), rels.len());
+    let mut present: Vec<u16> = rels.to_vec();
+    present.sort_unstable();
+    present.dedup();
+    let mut out_mbs = Vec::new();
+    let mut out_vns = Vec::new();
+    for r in present {
+        let sub: Vec<Edge> = block
+            .iter()
+            .zip(rels)
+            .filter(|&(_, &br)| br == r)
+            .map(|(&e, _)| e)
+            .collect();
+        let mut mbs = make_minibatches(&sub, batch, subpart_lo, shard_lo, 0, 0);
+        for mb in &mut mbs {
+            mb.rel = r;
+            let groups = crate::embed::sgns::groups_for(mb.u_local.len());
+            out_vns.push(
+                samplers
+                    .rel(r)
+                    .sample_local(groups * negatives, rng)
+                    .iter()
+                    .map(|&x| x as i32)
+                    .collect(),
+            );
+        }
+        out_mbs.extend(mbs);
+    }
+    (out_mbs, out_vns)
 }
 
 #[cfg(test)]
@@ -244,8 +446,112 @@ mod tests {
         let block = vec![(12u32, 34u32), (13, 35), (14, 36)];
         let mbs = make_minibatches(&block, 2, 10, 30, 7, 9);
         assert_eq!(mbs.len(), 2);
-        assert_eq!(mbs[0], MiniBatch { u_local: vec![2, 3], v_local: vec![4, 5], real: 2 });
-        assert_eq!(mbs[1], MiniBatch { u_local: vec![4, 7], v_local: vec![6, 9], real: 1 });
+        assert_eq!(
+            mbs[0],
+            MiniBatch { u_local: vec![2, 3], v_local: vec![4, 5], real: 2, rel: 0 }
+        );
+        assert_eq!(
+            mbs[1],
+            MiniBatch { u_local: vec![4, 7], v_local: vec![6, 9], real: 1, rel: 0 }
+        );
+    }
+
+    #[test]
+    fn typed_pool_carries_relation_lanes() {
+        let plan = HierarchyPlan::new(1, 2, 1, 20);
+        let typed: Vec<crate::graph::TypedEdge> = vec![(0, 1, 5), (1, 0, 15), (2, 1, 6)];
+        let pool = EpisodePool::build_from(&plan, &typed);
+        assert_eq!(pool.total_samples(), 3);
+        for sp in 0..pool.subparts {
+            for g in 0..pool.gpus {
+                let rels = pool.rel_block(sp, g).expect("typed pool has lanes");
+                assert_eq!(rels.len(), pool.block(sp, g).len());
+            }
+        }
+        // untyped pools expose no lanes
+        let untyped = EpisodePool::build(&plan, &[(0, 5), (1, 15)]);
+        assert!(untyped.rel_block(0, 0).is_none());
+    }
+
+    #[test]
+    fn assemble_block_rel_single_relation_matches_untyped() {
+        let degrees: Vec<u32> = (0..40).map(|i| i % 3 + 1).collect();
+        let base = NegativeSampler::new(&degrees, 0..40);
+        let samplers = RelSamplers::untyped(NegativeSampler::new(&degrees, 0..40));
+        let block: Vec<Edge> = (0..17).map(|i| (i as u32, (i * 2 % 40) as u32)).collect();
+        let rels = vec![0u16; block.len()];
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let (mbs_a, vns_a) = assemble_block(&block, 4, 0, 0, 3, &base, &mut rng_a);
+        let (mbs_b, vns_b) =
+            assemble_block_rel(&block, &rels, 4, 0, 0, 3, &samplers, &mut rng_b);
+        assert_eq!(mbs_a, mbs_b);
+        assert_eq!(vns_a, vns_b);
+    }
+
+    #[test]
+    fn assemble_block_rel_groups_by_relation() {
+        let degrees = vec![1u32; 30];
+        let g = crate::graph::TypedGraph {
+            entities: vec![
+                crate::graph::EntityType { name: "a".into(), lo: 0, hi: 10 },
+                crate::graph::EntityType { name: "b".into(), lo: 10, hi: 30 },
+            ],
+            relations: vec![
+                crate::graph::Relation {
+                    name: "r0".into(),
+                    src_type: 0,
+                    dst_type: 1,
+                    op: crate::graph::RelOpKind::Identity,
+                },
+                crate::graph::Relation {
+                    name: "r1".into(),
+                    src_type: 0,
+                    dst_type: 0,
+                    op: crate::graph::RelOpKind::Translation,
+                },
+            ],
+            edges: vec![],
+        };
+        let samplers = RelSamplers::typed(&degrees, 0..30, &g);
+        assert_eq!(samplers.num_relations(), 2);
+        let block: Vec<Edge> = vec![(0, 12), (1, 2), (2, 13), (3, 4)];
+        let rels: Vec<u16> = vec![0, 1, 0, 1];
+        let mut rng = Rng::new(5);
+        let (mbs, vns) = assemble_block_rel(&block, &rels, 2, 0, 0, 2, &samplers, &mut rng);
+        assert_eq!(mbs.len(), 2);
+        assert_eq!(vns.len(), 2);
+        // relation runs are order-preserving: r0 gets (0,12),(2,13)
+        assert_eq!(mbs[0].rel, 0);
+        assert_eq!(mbs[0].u_local, vec![0, 2]);
+        assert_eq!(mbs[0].v_local, vec![12, 13]);
+        assert_eq!(mbs[1].rel, 1);
+        assert_eq!(mbs[1].u_local, vec![1, 3]);
+        assert_eq!(mbs[1].v_local, vec![2, 4]);
+        // r1's negatives come from its masked sampler: dst type "a" = rows < 10
+        assert!(vns[1].iter().all(|&v| v < 10));
+    }
+
+    #[test]
+    fn rel_samplers_masked_to_dst_entity() {
+        let degrees = vec![2u32; 20];
+        let g = crate::graph::TypedGraph {
+            entities: vec![
+                crate::graph::EntityType { name: "u".into(), lo: 0, hi: 8 },
+                crate::graph::EntityType { name: "i".into(), lo: 8, hi: 20 },
+            ],
+            relations: vec![crate::graph::Relation {
+                name: "likes".into(),
+                src_type: 0,
+                dst_type: 1,
+                op: crate::graph::RelOpKind::Diagonal,
+            }],
+            edges: vec![],
+        };
+        let samplers = RelSamplers::typed(&degrees, 0..20, &g);
+        let mut rng = Rng::new(6);
+        let draws = samplers.rel(0).sample_global(2_000, &mut rng);
+        assert!(draws.iter().all(|&d| (8..20).contains(&(d as usize))));
     }
 
     #[test]

@@ -167,6 +167,36 @@ impl AliasTable {
         Self::with_threads(&w, threads)
     }
 
+    /// [`AliasTable::unigram`] restricted to `mask`: indices outside
+    /// `[mask.start, mask.end)` get zero weight — never sampled (see
+    /// `zero_weight_never_sampled`) — while indices inside keep the same
+    /// element-wise `powf` weights. Backs per-relation negative sampling
+    /// (`sample::RelSamplers`): the mask is the relation's destination
+    /// entity range intersected with the shard. An all-masked (or
+    /// all-zero-inside-mask) input falls back to uniform over the whole
+    /// index range, per the zero-total rule of [`AliasTable::new`].
+    pub fn unigram_masked(degrees: &[u32], power: f64, mask: std::ops::Range<usize>) -> Self {
+        let threads = pool::default_threads();
+        let lo = mask.start.min(degrees.len());
+        let hi = mask.end.min(degrees.len());
+        let mut w = vec![0f64; degrees.len()];
+        if threads > 1 && degrees.len() > ALIAS_BLOCK {
+            pool::parallel_slices(&mut w, threads, |_, off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    let idx = off + i;
+                    if idx >= lo && idx < hi {
+                        *v = (degrees[idx] as f64).powf(power);
+                    }
+                }
+            });
+        } else {
+            for (i, v) in w.iter_mut().enumerate().take(hi).skip(lo) {
+                *v = (degrees[i] as f64).powf(power);
+            }
+        }
+        Self::with_threads(&w, threads)
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.prob.len()
@@ -282,6 +312,36 @@ mod tests {
             assert_eq!(serial.prob, parallel.prob);
             assert_eq!(serial.alias, parallel.alias);
         });
+    }
+
+    #[test]
+    fn masked_unigram_stays_in_mask() {
+        let degrees: Vec<u32> = (0..50).map(|i| i % 5 + 1).collect();
+        let t = AliasTable::unigram_masked(&degrees, 0.75, 10..20);
+        let mut rng = Rng::new(9);
+        for _ in 0..5_000 {
+            let i = t.sample(&mut rng);
+            assert!((10..20).contains(&i), "sampled {i} outside mask");
+        }
+    }
+
+    #[test]
+    fn masked_unigram_full_range_matches_unigram() {
+        let degrees: Vec<u32> = (0..6000).map(|i| (i % 9) as u32).collect();
+        let full = AliasTable::unigram(&degrees, 0.75);
+        let masked = AliasTable::unigram_masked(&degrees, 0.75, 0..degrees.len());
+        assert_eq!(full.prob, masked.prob);
+        assert_eq!(full.alias, masked.alias);
+    }
+
+    #[test]
+    fn masked_unigram_empty_mask_is_uniform() {
+        let degrees = vec![5u32; 8];
+        let t = AliasTable::unigram_masked(&degrees, 0.75, 3..3);
+        let e = empirical(&t, 40_000, 11);
+        for p in e {
+            assert!((p - 1.0 / 8.0).abs() < 0.02);
+        }
     }
 
     #[test]

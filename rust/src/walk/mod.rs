@@ -22,6 +22,6 @@ pub mod producer;
 
 pub use augment::augment_walks;
 pub use engine::{WalkConfig, WalkEngine, WalkSet};
-pub use producer::{produce_episodes, SealedEpisode};
+pub use producer::{produce_episodes, produce_episodes_from, SealedEpisode};
 pub use node2vec::{Node2VecEngine, Node2VecParams};
 pub use partition::degree_guided_split;

@@ -74,7 +74,24 @@ pub struct ProducerStats {
 /// schedule-divergence backstop the serial path asserts on resume.
 pub fn produce_episodes(
     plan: &HierarchyPlan,
-    mut samples: Vec<Edge>,
+    samples: Vec<Edge>,
+    episode_size: usize,
+    split_seed: u64,
+    start_episode: usize,
+    tx: SyncSender<SealedEpisode>,
+) -> ProducerStats {
+    produce_episodes_from(plan, samples, episode_size, split_seed, start_episode, tx)
+}
+
+/// [`produce_episodes`] over any [`crate::sample::Sample`] type — typed
+/// edges stream through the identical split/seal machinery, and the
+/// sealed pools carry per-block relation lanes
+/// ([`EpisodePool::rel_block`]). The shuffle consumes the same RNG
+/// stream for the same corpus length regardless of sample type, so the
+/// single-relation typed epoch is split-identical to the untyped one.
+pub fn produce_episodes_from<S: crate::sample::Sample>(
+    plan: &HierarchyPlan,
+    mut samples: Vec<S>,
     episode_size: usize,
     split_seed: u64,
     start_episode: usize,
@@ -92,7 +109,7 @@ pub fn produce_episodes(
     let mut stats = ProducerStats { total_episodes: total, ..Default::default() };
     for (i, ep) in episodes.iter().enumerate().skip(start_episode) {
         let t = Timer::start();
-        let pool = EpisodePool::build(plan, ep);
+        let pool = EpisodePool::build_from(plan, ep);
         stats.pool_build_secs += t.secs();
         if tx.send(SealedEpisode { index: i, total, pool }).is_err() {
             stats.aborted = true;

@@ -17,6 +17,13 @@ const SEG1_HEX: &str = "54534547020000000700000000000000010000000200000000000000
 const STATE_HEX: &str = "54535441020000000700000000000000010000000200000082ce73830807060504030201181716151413121128272625242322213837363534333231000000000000000004000000000000000000803f0000004000004040000080400000a0400000c0400000e04000000041";
 const MANIFEST_HEX: &str = "544d414e020000000700000000000000010000000000000002000000000000000400000000000000040000000000000002000000887766554433221100ffeeddccbbaa99010000000200000000000000000000000000000002000000000000005235952e1200000067656e2d372f73702d30303030302e7365670100000002000000000000000200000000000000b1491abd1200000067656e2d372f73702d30303030312e73656782ce73830f00000067656e2d372f73746174652e7365672f7d3b2e";
 const CONTEXT_FRAME_HEX: &str = "080200000005000000000000002800000001000000000000000200000000000000030000000000000004000000000000000000803f000000bf";
+/// The v3 relation-segment worked example (docs/RELATIONS.md §Checkpoint
+/// v3): relation 0 translation `[0.5, -0.25]`, relation 1 identity.
+const REL_SEG_HEX: &str = "5452454c030000000700000000000000020000000200000005194dca0100000002000000000000000000003f000080be000000000000000000000000";
+/// The v2 worked-example manifest upgraded to v3: version bumped and the
+/// trailing `(rel_crc, rel_path)` pair appended, everything else
+/// byte-identical (the version-faithful encode contract).
+const MANIFEST_V3_HEX: &str = "544d414e030000000700000000000000010000000000000002000000000000000400000000000000040000000000000002000000887766554433221100ffeeddccbbaa99010000000200000000000000000000000000000002000000000000005235952e1200000067656e2d372f73702d30303030302e7365670100000002000000000000000200000000000000b1491abd1200000067656e2d372f73702d30303030312e73656782ce73830f00000067656e2d372f73746174652e73656705194dca0d00000067656e2d372f72656c2e736567a851e018";
 
 fn unhex(s: &str) -> Vec<u8> {
     assert!(s.len() % 2 == 0);
@@ -132,6 +139,77 @@ fn example_generation_is_a_valid_checkpoint_directory() {
             0x3132_3334_3536_3738
         ]
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rel_segment_example_decodes_and_reencodes_byte_exact() {
+    let bytes = unhex(REL_SEG_HEX);
+    assert_eq!(bytes.len(), 60, "doc says 60 bytes");
+    let (h, rels) = format::read_relations(&bytes).unwrap();
+    assert_eq!(h.watermark, 7);
+    assert_eq!(h.relations, 2);
+    assert_eq!(h.dim, 2);
+    assert_eq!(h.crc, 0xca4d_1905, "documented body CRC");
+    assert_eq!(format::crc32(&bytes[format::REL_HEADER_LEN..]), h.crc);
+    assert_eq!(rels, vec![(1, vec![0.5, -0.25]), (0, vec![])]);
+    // writer side: the same relations serialize to the documented bytes
+    let dir = std::env::temp_dir().join(format!("tembed_kat_rel_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rel.seg");
+    let (crc, n) = format::write_relations(&path, 7, 2, &rels).unwrap();
+    assert_eq!(crc, h.crc);
+    assert_eq!(n, 60);
+    assert_eq!(std::fs::read(&path).unwrap(), bytes, "re-encoded rel.seg drifted from the doc");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v3_manifest_example_decodes_and_reencodes_byte_exact() {
+    let bytes = unhex(MANIFEST_V3_HEX);
+    assert_eq!(bytes.len(), 216, "doc says 216 bytes (195-byte v2 body + 21-byte rel ref)");
+    let m = Manifest::decode(&bytes).unwrap();
+    assert_eq!(m.version, 3);
+    // the v2 fields are untouched by the upgrade
+    assert_eq!(m.watermark, 7);
+    assert_eq!(m.segments.len(), 2);
+    assert_eq!(m.state_path, "gen-7/state.seg");
+    assert_eq!(m.rel_path, "gen-7/rel.seg");
+    assert_eq!(m.rel_crc, 0xca4d_1905, "manifest CRC must match the segment body CRC");
+    assert_eq!(m.encode(), bytes, "re-encoded v3 manifest drifted from the doc");
+    // version-faithful: stamping the same manifest back to v2 must drop
+    // the rel ref and reproduce the documented v2 bytes exactly
+    let mut v2 = m.clone();
+    v2.version = 2;
+    v2.rel_path = String::new();
+    v2.rel_crc = 0;
+    assert_eq!(v2.encode(), unhex(MANIFEST_HEX), "v2 re-encode is not byte-identical");
+}
+
+/// The v3 worked example written beside the v2 files is a complete typed
+/// checkpoint: the reader verifies the relation segment against the
+/// manifest and serves relation-scored queries from it.
+#[test]
+fn v3_example_generation_round_trips_relation_scores() {
+    let dir = std::env::temp_dir().join(format!("tembed_kat_v3_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("gen-7")).unwrap();
+    std::fs::write(dir.join("gen-7/sp-00000.seg"), unhex(SEG0_HEX)).unwrap();
+    std::fs::write(dir.join("gen-7/sp-00001.seg"), unhex(SEG1_HEX)).unwrap();
+    std::fs::write(dir.join("gen-7/state.seg"), unhex(STATE_HEX)).unwrap();
+    std::fs::write(dir.join("gen-7/rel.seg"), unhex(REL_SEG_HEX)).unwrap();
+    std::fs::write(dir.join("MANIFEST"), unhex(MANIFEST_V3_HEX)).unwrap();
+
+    let r = CkptReader::open(&dir).unwrap();
+    assert_eq!(r.watermark(), 7);
+    assert_eq!(r.num_relations(), 2);
+    // relation 1 is identity: bit-identical to the untyped dot
+    assert_eq!(r.rel_score(2, 1, 3).unwrap(), 3.0 * 7.0 + -0.75 * 8.0);
+    // relation 0 translates by [0.5, -0.25] before the dot
+    assert_eq!(r.rel_score(2, 0, 3).unwrap(), 3.5 * 7.0 + -1.0 * 8.0);
+    assert_eq!(r.rel_score(0, 0, 0).unwrap(), -3.0);
+    assert!(r.rel_score(0, 2, 0).is_err(), "relation 2 is out of range");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

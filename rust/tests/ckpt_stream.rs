@@ -65,6 +65,7 @@ fn write_episodes(
             episodes_in_epoch: episodes,
             contexts: vec![vec![ep as f32; n * dim]],
             rng_states: vec![[ep + 1, 2, 3, 4]],
+            relations: None,
         })?;
     }
     let stats = w.finish()?;
@@ -167,6 +168,7 @@ fn serve_answers_queries_while_generations_land() {
                         episodes_in_epoch: episodes,
                         contexts: vec![vec![0.5; n * dim]],
                         rng_states: vec![[ep + 1, 1, 1, 1]],
+                        relations: None,
                     })
                     .unwrap();
             };

@@ -1,0 +1,147 @@
+//! The relation-subsystem parity contract: a single-relation,
+//! identity-operator typed run is **bit-identical** to the untyped
+//! pipeline on the same edges — same per-epoch losses and sample
+//! counts, same final vertex/context matrices — across the executor
+//! on/off and the serial/pipelined episode paths.
+//!
+//! Why this must hold (and what the test would catch): the typed path
+//! reuses the untyped split/pool/assemble machinery through the
+//! `Sample` trait; a whole-shard relation mask delegates to the plain
+//! alias table (`NegativeSampler::new_masked` → `new`), so the
+//! negative RNG stream is shared; and identity minibatches dispatch to
+//! the untyped SGNS kernel without touching relation parameters. Any
+//! drift — an extra RNG draw, a reordered minibatch, a masked table
+//! that is not byte-equal, an identity op that still locks the
+//! relation mutex and perturbs scheduling-sensitive accumulation —
+//! breaks bitwise equality here.
+//!
+//! Multi-relation / non-identity determinism is the driver's
+//! single-worker test (`typed_pipelined_epoch_matches_serial`); this
+//! file pins the reduction to the untyped system, which is the
+//! guarantee that lets untyped users ignore the relation subsystem
+//! entirely.
+
+use tembed::config::TrainConfig;
+use tembed::coordinator::driver::Driver;
+use tembed::gen;
+use tembed::graph::{CsrGraph, RelOpKind, TypedGraph};
+use tembed::util::Rng;
+
+fn fixture() -> (CsrGraph, Vec<tembed::graph::Edge>) {
+    let mut rng = Rng::new(41);
+    let (edges, _) = gen::dcsbm(160, 1200, 8, 0.8, 2.3, &mut rng);
+    let g = gen::to_graph(160, edges);
+    // both directions, no self-loops or duplicates (typed invariants)
+    let samples: Vec<_> = g.edges().collect();
+    (g, samples)
+}
+
+fn cfg(executor: bool, prefetch: usize) -> TrainConfig {
+    TrainConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        dim: 8,
+        subparts: 2,
+        episode_size: 300,
+        executor,
+        episode_prefetch: prefetch,
+        ..TrainConfig::default()
+    }
+}
+
+/// Identity/single-relation typed training == untyped training, bit for
+/// bit, in all four (executor × prefetch) configurations.
+#[test]
+fn identity_typed_run_is_bit_identical_to_untyped() {
+    let (g, samples) = fixture();
+    let tg = TypedGraph::from_untyped(g.num_nodes(), &samples, RelOpKind::Identity);
+    assert_eq!(tg.num_relations(), 1);
+    assert_eq!(tg.dst_range(0), 0..g.num_nodes(), "mask must cover the shard");
+
+    for executor in [false, true] {
+        for prefetch in [0usize, 1] {
+            let c = cfg(executor, prefetch);
+            let mut untyped = Driver::new(&g, c.clone(), None)
+                .unwrap()
+                .with_fixed_samples(samples.clone());
+            let mut typed = Driver::new_typed(&tg, &g, c, None).unwrap();
+            for epoch in 0..3 {
+                let ru = untyped.run_epoch(epoch).unwrap();
+                let rt = typed.run_epoch(epoch).unwrap();
+                assert_eq!(
+                    ru.samples, rt.samples,
+                    "executor={executor} prefetch={prefetch} epoch={epoch}: sample count"
+                );
+                assert_eq!(
+                    ru.loss_sum.to_bits(),
+                    rt.loss_sum.to_bits(),
+                    "executor={executor} prefetch={prefetch} epoch={epoch}: loss bits"
+                );
+            }
+            // the identity relation is parameter-free and stays that way
+            let m = typed.trainer.relations().expect("typed trainer has a RelModel");
+            assert_eq!(m.num_relations(), 1);
+            assert!(m.lock_param(0).is_empty());
+            let (su, st) = (untyped.finish().unwrap(), typed.finish().unwrap());
+            assert_eq!(
+                su.vertex, st.vertex,
+                "executor={executor} prefetch={prefetch}: vertex matrices diverged"
+            );
+            assert_eq!(
+                su.context, st.context,
+                "executor={executor} prefetch={prefetch}: context matrices diverged"
+            );
+        }
+    }
+}
+
+/// The same reduction holds through the checkpoint tee — but the layouts
+/// differ by design: a typed run commits a v3 manifest plus `rel.seg`,
+/// the untyped run stays on v2 with no relation segment. The *training*
+/// remains bit-identical (the tee is passive), which is what makes v3 a
+/// strict superset rather than a fork.
+#[test]
+fn identity_typed_checkpoint_is_v3_but_training_matches_untyped() {
+    let (g, samples) = fixture();
+    let tg = TypedGraph::from_untyped(g.num_nodes(), &samples, RelOpKind::Identity);
+    let pid = std::process::id();
+    let dir_u = std::env::temp_dir().join(format!("tembed_relpar_u_{pid}"));
+    let dir_t = std::env::temp_dir().join(format!("tembed_relpar_t_{pid}"));
+    let _ = std::fs::remove_dir_all(&dir_u);
+    let _ = std::fs::remove_dir_all(&dir_t);
+
+    let mut cu = cfg(true, 1);
+    cu.ckpt_dir = dir_u.to_string_lossy().into_owned();
+    let mut ct = cfg(true, 1);
+    ct.ckpt_dir = dir_t.to_string_lossy().into_owned();
+
+    let mut untyped = Driver::new(&g, cu, None)
+        .unwrap()
+        .with_fixed_samples(samples.clone());
+    let mut typed = Driver::new_typed(&tg, &g, ct, None).unwrap();
+    for epoch in 0..2 {
+        let ru = untyped.run_epoch(epoch).unwrap();
+        let rt = typed.run_epoch(epoch).unwrap();
+        assert_eq!(ru.loss_sum.to_bits(), rt.loss_sum.to_bits(), "epoch {epoch}");
+    }
+    let (su, st) = (untyped.finish().unwrap(), typed.finish().unwrap());
+    assert_eq!(su.vertex, st.vertex);
+    assert_eq!(su.context, st.context);
+
+    let ru = tembed::ckpt::CkptReader::open(&dir_u).unwrap();
+    let rt = tembed::ckpt::CkptReader::open(&dir_t).unwrap();
+    assert_eq!(ru.manifest().version, tembed::ckpt::FORMAT_VERSION);
+    assert_eq!(rt.manifest().version, tembed::ckpt::FORMAT_VERSION_REL);
+    assert!(ru.relations().is_none(), "untyped checkpoints carry no rel.seg");
+    let rels = rt.relations().expect("typed checkpoint carries rel.seg");
+    assert_eq!(rels.len(), 1);
+    assert_eq!(rels[0], (RelOpKind::Identity.code(), Vec::new()));
+    // both checkpoints hold the same (bit-identical) embeddings
+    for u in [0usize, 7, 100] {
+        assert_eq!(ru.vertex_row(u), rt.vertex_row(u));
+        assert_eq!(ru.context_row(u), rt.context_row(u));
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_u);
+    let _ = std::fs::remove_dir_all(&dir_t);
+}

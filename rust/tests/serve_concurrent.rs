@@ -72,6 +72,7 @@ fn write_generations(dir: PathBuf, episodes: u64, gap: Duration) -> std::thread:
                     episodes_in_epoch: episodes,
                     contexts: vec![vec![1.0; NODES * DIM]],
                     rng_states: vec![[ep + 1, 2, 3, 4]],
+                    relations: None,
                 })
                 .unwrap();
         }

@@ -42,7 +42,7 @@ fn cluster_shape_invariance_of_quality() {
         for e in 0..15 {
             t.train_epoch(&mut samples.clone(), e).unwrap();
         }
-        let auc = tembed::eval::link_auc(&t.finish().unwrap(), &split);
+        let auc = tembed::eval::link_auc(&t.finish().unwrap(), &split).unwrap();
         aucs.push(auc);
     }
     for &a in &aucs {
@@ -160,8 +160,8 @@ fn baseline_and_ours_learn_comparable_models() {
         ours.train_epoch(&mut samples.clone(), e).unwrap();
         gv.train_epoch(&mut samples.clone(), e);
     }
-    let a_ours = tembed::eval::link_auc(&ours.finish().unwrap(), &split);
-    let a_gv = tembed::eval::link_auc(&gv.finish(), &split);
+    let a_ours = tembed::eval::link_auc(&ours.finish().unwrap(), &split).unwrap();
+    let a_gv = tembed::eval::link_auc(&gv.finish(), &split).unwrap();
     assert!(a_ours > 0.7, "ours {a_ours}");
     assert!(a_gv > 0.7, "graphvite {a_gv}");
     assert!((a_ours - a_gv).abs() < 0.1, "ours {a_ours} vs gv {a_gv}");

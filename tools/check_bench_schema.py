@@ -15,6 +15,13 @@ runners are far too noisy to gate on timings). Verifies:
     (e.g. the serving tier's "serve" rows) cannot vanish even if the
     baseline predates it
 
+A snapshot may carry an optional boolean "placeholder": true marking
+numbers that were never measured on real hardware (the committed
+baselines are placeholders until someone regenerates them per
+docs/PERF.md). Comparing against a placeholder file prints a warning —
+schema checks still run, but nobody should read its values as
+performance truth.
+
 Usage: check_bench_schema.py [--require-section NAME]... BASELINE.json CANDIDATE.json
 
 Regenerating the committed baselines is documented in docs/PERF.md.
@@ -36,6 +43,17 @@ def load(path):
     for field in ("kernel", "arch", "host", "quick", "rows"):
         if field not in doc:
             sys.exit(f"{path}: missing top-level field {field!r}")
+    placeholder = doc.get("placeholder", False)
+    if not isinstance(placeholder, bool):
+        sys.exit(f"{path}: \"placeholder\" must be a JSON boolean, got {placeholder!r}")
+    if placeholder:
+        # warn, don't fail: schema/coverage checks are still meaningful,
+        # but the numbers were never measured on real hardware
+        print(
+            f"warning: {path} is marked \"placeholder\": true — its values "
+            "are unmeasured stand-ins (see docs/PERF.md to regenerate)",
+            file=sys.stderr,
+        )
     keys = {}
     for row in doc["rows"]:
         for field in ("section", "name", "value", "unit"):
