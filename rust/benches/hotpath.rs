@@ -429,6 +429,8 @@ fn main() {
             graph_digest: 1,
             config_digest: 0,
             channel_cap: episodes as usize * (subparts + 1) + 4,
+            delta: false,
+            compact_interval: 8,
         })
         .expect("ckpt writer");
         let rows: Vec<Vec<f32>> = (0..subparts)
@@ -465,6 +467,70 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // --- delta write amplification: the same strict-subset episode
+    // stream (only 1 of 8 sub-parts changes per commit) written with and
+    // without segment dedup — the pair's ratio is what `ckpt.delta`
+    // buys on incremental workloads
+    for delta in [false, true] {
+        use tembed::ckpt::{CkptWriter, CkptWriterConfig, EpisodeMeta};
+        use tembed::partition::range_bounds;
+        let (n, dim, subparts) = (50_000usize, 32usize, 8usize);
+        let dir = std::env::temp_dir()
+            .join(format!("tembed_hotpath_ckpt_amp_{}_{delta}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sb = range_bounds(n, subparts);
+        let cb = range_bounds(n, 2);
+        let episodes = 4u64;
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.clone(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: cb.clone(),
+            graph_digest: 1,
+            config_digest: 0,
+            channel_cap: episodes as usize * (subparts + 1) + 4,
+            delta,
+            compact_interval: 16,
+        })
+        .expect("ckpt writer");
+        let contexts: Vec<Vec<f32>> =
+            (0..2).map(|g| vec![0.5; (cb[g + 1] - cb[g]) * dim]).collect();
+        for ep in 0..episodes {
+            w.sink().begin_episode(ep, true);
+            for sp in 0..subparts {
+                let fill = if sp == 0 { ep as f32 + 1.0 } else { sp as f32 };
+                w.sink().offer_vertex(sp, vec![fill; (sb[sp + 1] - sb[sp]) * dim]);
+            }
+            w.sink()
+                .commit_episode(EpisodeMeta {
+                    watermark: ep,
+                    epoch: 0,
+                    episode_in_epoch: ep,
+                    episodes_in_epoch: episodes,
+                    contexts: contexts.clone(),
+                    rng_states: vec![[1, 2, 3, 4]; 2],
+                    relations: None,
+                })
+                .expect("commit");
+        }
+        let stats = w.finish().expect("writer stats");
+        if delta {
+            assert_eq!(
+                stats.deduped,
+                (episodes - 1) * (subparts as u64 - 1),
+                "delta writer rewrote unchanged sub-parts"
+            );
+        }
+        rep.add(
+            "ckpt",
+            format!("ckpt write amp 1/8 subparts delta={}", if delta { "on" } else { "off" }),
+            stats.bytes as f64 / 1e6 / episodes as f64,
+            "MB/commit",
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // --- serving tier: an in-process Server over a unix socket driven
     // by the zipfian load generator — the tier's latency/QPS claims are
     // measured, not asserted (docs/SERVING.md §"The load generator")
@@ -497,6 +563,8 @@ fn serve_benches(rep: &mut Report) {
         graph_digest: 1,
         config_digest: 0,
         channel_cap: subparts + 4,
+        delta: false,
+        compact_interval: 8,
     })
     .expect("ckpt writer");
     let mut rng = Rng::new(99);

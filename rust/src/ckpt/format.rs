@@ -45,6 +45,16 @@ pub const FORMAT_VERSION: u32 = 2;
 /// fields referencing it (`docs/RELATIONS.md` §Checkpoint v3). Vertex and
 /// state segments are byte-identical to v2 and keep their v2 headers.
 pub const FORMAT_VERSION_REL: u32 = 3;
+/// Format version of a delta-generation checkpoint (`ckpt.delta=true`):
+/// each manifest segment row carries a `source_gen` watermark and may
+/// point into a *prior* generation directory (`gen-<w'>/sp-NNNNN.seg`,
+/// `w' <= w`), so an episode that left a sub-part's CRC unchanged
+/// re-references the old segment file instead of rewriting it
+/// (`docs/CKPT_FORMAT.md` §3b). A v4 manifest always encodes the trailing
+/// relation pair (empty path + crc 0 when untyped) so typed and untyped
+/// delta runs share one layout. Segment/state/rel file formats are
+/// unchanged from v2/v3.
+pub const FORMAT_VERSION_DELTA: u32 = 4;
 
 pub const MANIFEST_NAME: &str = "MANIFEST";
 pub const MANIFEST_TMP: &str = "MANIFEST.tmp";
@@ -107,6 +117,24 @@ pub fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
 /// One-shot CRC-32 (IEEE).
 pub fn crc32(bytes: &[u8]) -> u32 {
     crc32_update(0, bytes)
+}
+
+/// CRC-32 over the little-endian byte image of `xs` — exactly the body
+/// CRC [`write_segment`] would store for the same rows, computed without
+/// touching the filesystem. The delta writer uses this to compare an
+/// offered sub-part against the previous generation's manifest entry
+/// before deciding whether to rewrite or re-reference the segment.
+pub fn crc32_f32s(xs: &[f32]) -> u32 {
+    let mut crc = 0u32;
+    let mut buf = Vec::with_capacity(4096 * 4);
+    for chunk in xs.chunks(4096) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        crc = crc32_update(crc, &buf);
+    }
+    crc
 }
 
 // ------------------------------------------------------------- encoding
@@ -420,6 +448,12 @@ pub struct SegmentEntry {
     pub row_start: u64,
     pub row_count: u64,
     pub crc: u32,
+    /// Watermark of the generation whose directory holds the segment file
+    /// — the value stamped in the segment's own header. Equal to the
+    /// manifest watermark in v2/v3 (and for freshly-written v4 segments);
+    /// strictly smaller for a v4 row that re-references a prior
+    /// generation's unchanged segment. Only encoded in v4 manifests.
+    pub source_gen: u64,
     /// Path relative to the checkpoint directory.
     pub path: String,
 }
@@ -457,6 +491,19 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Every generation directory this manifest's files live in: its own
+    /// watermark (state.seg — and rel.seg, when typed — always live
+    /// there) plus the source generation of each vertex segment row. For
+    /// v2/v3 manifests this is exactly `{watermark}`; for v4 it is the
+    /// delta chain the generation depends on. The refcount GC's live set
+    /// is the union of this over every manifest it must keep readable.
+    pub fn referenced_gens(&self) -> std::collections::BTreeSet<u64> {
+        let mut gens: std::collections::BTreeSet<u64> =
+            self.segments.iter().map(|s| s.source_gen).collect();
+        gens.insert(self.watermark);
+        gens
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::from(*MAN_MAGIC);
         let mut w = PayloadWriter::new();
@@ -476,13 +523,19 @@ impl Manifest {
             w.put_u64(s.row_start);
             w.put_u64(s.row_count);
             w.put_u32(s.crc);
+            // version-faithful: only v4 rows carry the source generation —
+            // a v2/v3 manifest stays byte-identical to the pre-delta codec
+            if self.version >= FORMAT_VERSION_DELTA {
+                w.put_u64(s.source_gen);
+            }
             w.put_bytes(s.path.as_bytes());
         }
         w.put_u32(self.state_crc);
         w.put_bytes(self.state_path.as_bytes());
         // version-faithful: a v2 manifest encodes exactly the v2 bytes (an
         // untyped run's checkpoints are unchanged by the relation feature);
-        // only v3 appends the relation-segment reference
+        // v3 appends the relation-segment reference and v4 always carries
+        // the pair (empty path + crc 0 when untyped)
         if self.version >= FORMAT_VERSION_REL {
             w.put_u32(self.rel_crc);
             w.put_bytes(self.rel_path.as_bytes());
@@ -506,7 +559,9 @@ impl Manifest {
         let mut r = PayloadReader::new(&body[4..]);
         let version = r.u32()?;
         crate::ensure!(
-            version == FORMAT_VERSION || version == FORMAT_VERSION_REL,
+            version == FORMAT_VERSION
+                || version == FORMAT_VERSION_REL
+                || version == FORMAT_VERSION_DELTA,
             "unsupported manifest version {version}"
         );
         let watermark = r.u64()?;
@@ -527,9 +582,17 @@ impl Manifest {
             let row_start = r.u64()?;
             let row_count = r.u64()?;
             let crc = r.u32()?;
+            // v2/v3 rows live in the manifest's own generation by
+            // construction; v4 rows name theirs explicitly
+            let source_gen =
+                if version >= FORMAT_VERSION_DELTA { r.u64()? } else { watermark };
+            crate::ensure!(
+                source_gen <= watermark,
+                "segment source generation {source_gen} is newer than watermark {watermark}"
+            );
             let path = String::from_utf8(r.bytes()?.to_vec())
                 .map_err(|_| crate::anyhow!("manifest segment path is not utf-8"))?;
-            segments.push(SegmentEntry { subpart, row_start, row_count, crc, path });
+            segments.push(SegmentEntry { subpart, row_start, row_count, crc, source_gen, path });
         }
         let state_crc = r.u32()?;
         let state_path = String::from_utf8(r.bytes()?.to_vec())
@@ -690,6 +753,7 @@ mod tests {
                 row_start: 0,
                 row_count: 50,
                 crc: 0x1234,
+                source_gen: 9,
                 path: "gen-9/sp-00000.seg".into(),
             }],
             state_path: "gen-9/state.seg".into(),
@@ -743,6 +807,58 @@ mod tests {
         // the watermark peek offset is version-independent
         assert_eq!(u64_at(&bytes3, 8), 9);
         assert_ne!(bytes2, bytes3);
+    }
+
+    #[test]
+    fn v4_manifest_round_trips_with_cross_generation_rows() {
+        // a v4 manifest whose second row points one generation back
+        let mut v4 = sample_manifest();
+        v4.version = FORMAT_VERSION_DELTA;
+        v4.segments.push(SegmentEntry {
+            subpart: 1,
+            row_start: 50,
+            row_count: 50,
+            crc: 0x4321,
+            source_gen: 7,
+            path: "gen-7/sp-00001.seg".into(),
+        });
+        let bytes4 = v4.encode();
+        let back = Manifest::decode(&bytes4).unwrap();
+        assert_eq!(back, v4);
+        assert_eq!(
+            back.referenced_gens().into_iter().collect::<Vec<_>>(),
+            vec![7, 9],
+            "own watermark + every segment source generation"
+        );
+        // the watermark peek offset is version-independent
+        assert_eq!(u64_at(&bytes4, 8), 9);
+        // v2/v3 manifests reference only their own generation
+        assert_eq!(
+            sample_manifest().referenced_gens().into_iter().collect::<Vec<_>>(),
+            vec![9]
+        );
+        // a source generation from the future is corruption, not a chain
+        let mut future = sample_manifest();
+        future.version = FORMAT_VERSION_DELTA;
+        future.segments[0].source_gen = 10;
+        assert!(Manifest::decode(&future.encode()).is_err());
+        // source_gen is ignored (not encoded) below v4, so a delta-off
+        // writer producing v2 bytes cannot leak chain state
+        let mut v2 = sample_manifest();
+        v2.segments[0].source_gen = 3; // nonsense at v2 — must not encode
+        let mut canonical = sample_manifest();
+        canonical.segments[0].source_gen = 9;
+        assert_eq!(v2.encode(), canonical.encode());
+        assert_eq!(Manifest::decode(&v2.encode()).unwrap().segments[0].source_gen, 9);
+    }
+
+    #[test]
+    fn crc32_f32s_matches_written_segment_crc() {
+        let dir = tmp_dir("crcf32");
+        let rows: Vec<f32> = (0..6000).map(|i| (i as f32).sin()).collect();
+        let (crc, _) = write_segment(&dir.join(segment_name(0)), 1, 0, 0, 4, &rows).unwrap();
+        assert_eq!(crc32_f32s(&rows), crc);
+        assert_eq!(crc32_f32s(&[]), 0);
     }
 
     #[test]

@@ -35,14 +35,20 @@
 //! <dir>/MANIFEST.tmp        transient; ignored by readers
 //! <dir>/gen-<w>/sp-<s>.seg  vertex sub-part segments of watermark w
 //! <dir>/gen-<w>/state.seg   context shards + RNG states + progress
-//! <dir>/gen-<w>/rel.seg     relation-operator parameters (typed runs, v3)
+//! <dir>/gen-<w>/rel.seg     relation-operator parameters (typed runs, v3+)
 //! ```
 //!
-//! Only the generation the manifest references (and, transiently, the one
-//! being written) exists on disk; older generations are garbage-collected
-//! one commit late so a reader that just loaded the manifest never races a
-//! deletion. On unix even that race is benign: an mmap of an unlinked
-//! segment stays valid until unmapped.
+//! Only the generations the manifest references (and, transiently, the
+//! one being written) exist on disk. A v2/v3 manifest references exactly
+//! its own generation; a v4 *delta* manifest (`ckpt.delta=true`) may
+//! re-reference unchanged segments from prior generations, so the live
+//! set is the whole chain. Garbage collection is reachability-based and
+//! runs one commit late — a directory is removed only when neither the
+//! newest manifest nor its predecessor references any file inside it —
+//! so a reader that just loaded a manifest never races a deletion. On
+//! unix even that race is benign: an mmap of an unlinked segment stays
+//! valid until unmapped. `ckpt.compact_interval` bounds chain length by
+//! forcing a periodic full rebase.
 //!
 //! ## Multi-rank checkpoints
 //!
@@ -66,7 +72,7 @@ pub mod reader;
 pub mod serve;
 pub mod writer;
 
-pub use format::{Manifest, FORMAT_VERSION, FORMAT_VERSION_REL};
+pub use format::{Manifest, FORMAT_VERSION, FORMAT_VERSION_DELTA, FORMAT_VERSION_REL};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use reader::CkptReader;
 pub use serve::{PoolStats, QueryClient, ServeConfig, ServeStats, Server, SharedReader};

@@ -350,7 +350,8 @@ impl CkptReader {
     }
 
     /// Relation-operator parameters `(op code, params)` in relation-id
-    /// order — `Some` exactly when the manifest is v3 (typed run).
+    /// order — `Some` exactly when the checkpoint came from a typed run
+    /// (a v3 manifest, or a v4 one with a non-empty rel path).
     pub fn relations(&self) -> Option<&[(u32, Vec<f32>)]> {
         self.relations.as_deref()
     }
@@ -505,12 +506,15 @@ fn open_segment(
     let bytes = file.bytes();
     let h = format::read_segment_header(bytes)
         .with_context(|| format!("segment {}", path.display()))?;
+    // a segment's header watermark is the generation it was *written* in
+    // — the manifest's own watermark for v2/v3 and freshly-written v4
+    // rows, the referenced prior generation for a dedup'd v4 row
     crate::ensure!(
         h.subpart == entry.subpart
             && h.row_start == entry.row_start
             && h.row_count == entry.row_count
             && h.dim == manifest.dim
-            && h.watermark == manifest.watermark,
+            && h.watermark == entry.source_gen,
         "segment {} does not match its manifest entry",
         path.display()
     );
@@ -534,15 +538,19 @@ fn open_segment(
     })
 }
 
-/// Read and verify `rel.seg` when the manifest is v3; `None` for v2.
-/// The segment is tiny (one parameter vector per relation), so it is
-/// always read-and-decoded — never mmapped.
+/// Read and verify `rel.seg` when the manifest carries one; `None` for
+/// v2 and for untyped v4 manifests (whose always-present rel pair is
+/// empty). The segment is tiny (one parameter vector per relation), so it
+/// is always read-and-decoded — never mmapped.
 #[allow(clippy::type_complexity)]
 fn open_relations(
     dir: &Path,
     manifest: &Manifest,
 ) -> crate::Result<Option<Vec<(u32, Vec<f32>)>>> {
     if manifest.version < FORMAT_VERSION_REL {
+        return Ok(None);
+    }
+    if manifest.version >= super::format::FORMAT_VERSION_DELTA && manifest.rel_path.is_empty() {
         return Ok(None);
     }
     crate::ensure!(
@@ -662,6 +670,8 @@ mod tests {
             graph_digest: 0xABCD,
             config_digest: 0,
             channel_cap: 64,
+            delta: false,
+            compact_interval: 8,
         })
         .unwrap();
         let sink = w.sink();
@@ -756,6 +766,8 @@ mod tests {
             graph_digest: 1,
             config_digest: 0,
             channel_cap: 64,
+            delta: false,
+            compact_interval: 8,
         })
         .unwrap();
         let sink = w.sink();
@@ -834,6 +846,8 @@ mod tests {
             graph_digest: 0xABCD,
             config_digest: 0,
             channel_cap: 64,
+            delta: false,
+            compact_interval: 8,
         })
         .unwrap();
         w.sink().begin_episode(6, true);
@@ -855,5 +869,141 @@ mod tests {
         assert!(r.refresh().unwrap(), "new watermark picked up");
         assert_eq!(r.watermark(), 6);
         assert_eq!(r.vertex_row(0), &[2.5; 4]);
+    }
+
+    /// Commit `episodes` delta generations where only sub-part 0 changes
+    /// per episode (fill `100 + ep`) and the rest stay constant (fill
+    /// `sp`), so later manifests re-reference the first generation's
+    /// segments. Returns the sub-part bounds.
+    fn write_delta_chain(
+        dir: &Path,
+        n: usize,
+        dim: usize,
+        subparts: usize,
+        episodes: u64,
+    ) -> Vec<usize> {
+        let sb = range_bounds(n, subparts);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir: dir.to_path_buf(),
+            num_nodes: n,
+            dim,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(n, 1),
+            graph_digest: 0xABCD,
+            config_digest: 0,
+            channel_cap: 64,
+            delta: true,
+            compact_interval: 16,
+        })
+        .unwrap();
+        for ep in 0..episodes {
+            let sink = w.sink();
+            sink.begin_episode(ep, true);
+            for sp in 0..subparts {
+                let fill = if sp == 0 { 100.0 + ep as f32 } else { sp as f32 };
+                sink.offer_vertex(sp, vec![fill; (sb[sp + 1] - sb[sp]) * dim]);
+            }
+            sink.commit_episode(EpisodeMeta {
+                watermark: ep,
+                epoch: 0,
+                episode_in_epoch: ep,
+                episodes_in_epoch: episodes,
+                contexts: vec![vec![0.25; n * dim]],
+                rng_states: vec![[ep + 1, 2, 3, 4]],
+                relations: None,
+            })
+            .unwrap();
+        }
+        w.finish().unwrap();
+        sb
+    }
+
+    #[test]
+    fn reader_resolves_cross_generation_segments() {
+        let dir = tmp("delta_chain");
+        let sb = write_delta_chain(&dir, 48, 4, 3, 3);
+        let m = format::read_manifest(&dir).unwrap();
+        assert!(m.segments[1..].iter().all(|s| s.source_gen == 0), "chain points at gen-0");
+        let r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.watermark(), 2);
+        // changed sub-part serves the newest rows, re-referenced
+        // sub-parts serve the first generation's bytes through their own
+        // mmaps
+        assert_eq!(r.vertex_row(0), &[102.0; 4]);
+        assert_eq!(r.vertex_row(sb[1]), &[1.0; 4]);
+        assert_eq!(r.vertex_row(sb[2]), &[2.0; 4]);
+        // the owned fallback decodes the same chain identically
+        let owned = CkptReader::open_owned(&dir).unwrap();
+        for v in 0..48 {
+            assert_eq!(r.vertex_row(v), owned.vertex_row(v));
+        }
+        let store = r.materialize();
+        assert_eq!(store.vertex_row(sb[1]), &[1.0; 4]);
+    }
+
+    /// Corruption robustness table: every damaged-chain shape must come
+    /// back as a clean `Err` from open — no panic, no partially-read view.
+    #[test]
+    fn corrupt_delta_chains_are_refused_cleanly() {
+        type Corrupt = fn(&Path, &Manifest);
+        let cases: [(&str, Corrupt); 4] = [
+            ("flipped crc byte in a re-referenced segment", |dir, m| {
+                // segments[1] points into gen-0; flip one payload byte
+                let seg = dir.join(&m.segments[1].path);
+                let mut bytes = std::fs::read(&seg).unwrap();
+                let last = bytes.len() - 1;
+                bytes[last] ^= 0x08;
+                std::fs::write(&seg, &bytes).unwrap();
+            }),
+            ("truncated segment", |dir, m| {
+                let seg = dir.join(&m.segments[1].path);
+                let bytes = std::fs::read(&seg).unwrap();
+                std::fs::write(&seg, &bytes[..bytes.len() - 5]).unwrap();
+            }),
+            ("dangling cross-generation pointer", |dir, m| {
+                std::fs::remove_file(dir.join(&m.segments[1].path)).unwrap();
+            }),
+            ("manifest referencing a GC'd generation", |dir, m| {
+                let gen = format::gen_dir_name(m.segments[1].source_gen);
+                std::fs::remove_dir_all(dir.join(gen)).unwrap();
+            }),
+        ];
+        for (name, corrupt) in cases {
+            let dir = tmp(&format!("corrupt_{}", name.split(' ').next().unwrap()));
+            write_delta_chain(&dir, 32, 4, 2, 3);
+            let m = format::read_manifest(&dir).unwrap();
+            assert_eq!(m.segments[1].source_gen, 0, "case '{name}' expects a chain");
+            corrupt(&dir, &m);
+            assert!(CkptReader::open(&dir).is_err(), "case '{name}' must err, not panic");
+        }
+    }
+
+    #[test]
+    fn refresh_onto_a_gcd_chain_keeps_serving_the_old_generation() {
+        let dir = tmp("refresh_gcd");
+        write_delta_chain(&dir, 32, 4, 2, 2);
+        let mut r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.watermark(), 1);
+        // a newer manifest lands whose chain is then (wrongly) collected
+        // underneath it — refresh must fail cleanly and the reader must
+        // keep serving its current generation, exactly like the serve
+        // watcher's keep-old-Arc fallback
+        let mut m = format::read_manifest(&dir).unwrap();
+        m.watermark = 7;
+        for s in &mut m.segments {
+            if s.source_gen == 0 {
+                continue;
+            }
+            s.source_gen = 5; // dangling: gen-5 never existed
+            s.path = format!("{}/{}", format::gen_dir_name(5), segment_name_of(&s.path));
+        }
+        format::commit_manifest(&dir, &m).unwrap();
+        assert!(r.refresh().is_err(), "broken new chain surfaces as Err");
+        assert_eq!(r.watermark(), 1, "previous watermark still served");
+        assert_eq!(r.vertex_row(0), &[101.0; 4]);
+    }
+
+    fn segment_name_of(path: &str) -> &str {
+        path.rsplit('/').next().unwrap()
     }
 }

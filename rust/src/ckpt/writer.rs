@@ -16,7 +16,22 @@
 //! `MANIFEST` on disk references a complete, CRC-valid generation — a
 //! crash loses at most the episode in flight. On spawn the writer sweeps
 //! orphaned generation directories (and a stale `MANIFEST.tmp`) left by a
-//! previous crash, keeping only the generation the manifest references.
+//! previous crash, keeping every generation the committed manifest
+//! references (one directory in v2/v3, the whole delta chain in v4).
+//!
+//! Delta generations (`ckpt.delta=true`): before writing an offered
+//! sub-part the writer CRCs the rows in memory and compares against the
+//! previous committed manifest's entry — an unchanged sub-part is
+//! *re-referenced* (the new v4 manifest row points at the old generation's
+//! segment file) instead of rewritten, so steady-state write amplification
+//! tracks update size, not model size. Garbage collection is then
+//! reachability-based over the generation chain: a generation directory is
+//! removed only when neither the newest manifest nor its predecessor (kept
+//! one commit as a grace period for in-flight readers) references any file
+//! inside it. `ckpt.compact_interval` bounds chain length: once a manifest
+//! references that many distinct generations, the next commit rewrites
+//! every sub-part (a full rebase), letting the tail of the chain be
+//! collected.
 //!
 //! Multi-rank runs: only rank 0 owns a writer. The [`EpisodeMeta`] it
 //! commits carries *every* rank's context shards and RNG states — the
@@ -24,16 +39,17 @@
 //! the same cadence) before calling [`CkptSink::commit_episode`], so a
 //! committed generation is resumable on all ranks, not just the driver.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
 
 use crate::util::error::Context as _;
 
 use super::format::{
     self, commit_manifest, gen_dir_name, segment_name, Manifest, SegmentEntry, FORMAT_VERSION,
-    FORMAT_VERSION_REL, MANIFEST_TMP, REL_NAME, STATE_NAME,
+    FORMAT_VERSION_DELTA, FORMAT_VERSION_REL, MANIFEST_TMP, REL_NAME, STATE_NAME,
 };
 
 /// Static description of the checkpointed model, fixed at writer spawn.
@@ -56,6 +72,16 @@ pub struct CkptWriterConfig {
     /// Bounded channel capacity in messages. 0 = auto (two episodes'
     /// worth of sub-parts).
     pub channel_cap: usize,
+    /// Commit v4 delta generations: unchanged sub-parts (by body CRC vs
+    /// the previous committed manifest) are re-referenced instead of
+    /// rewritten. Off by default — delta-off runs keep writing
+    /// byte-identical v2/v3.
+    pub delta: bool,
+    /// Chain-length bound for delta runs: once a manifest references this
+    /// many distinct generations, the next commit is a full rebase
+    /// (every sub-part rewritten). `1` disables deltas entirely; ignored
+    /// when `delta` is false.
+    pub compact_interval: usize,
 }
 
 impl CkptWriterConfig {
@@ -106,6 +132,18 @@ pub enum Offer {
     Inactive,
 }
 
+/// Counters the writer thread publishes after each commit so the
+/// coordinator can book delta/GC metrics without joining the thread.
+#[derive(Debug, Default)]
+struct SharedCounters {
+    /// Run-total segments re-referenced from a prior generation instead
+    /// of rewritten.
+    deduped: AtomicU64,
+    /// Generation directories on disk after the most recent GC sweep
+    /// (the live chain length, including the grace predecessor).
+    gc_retained: AtomicU64,
+}
+
 /// The bounded, non-blocking front door the executor tees into.
 pub struct CkptSink {
     tx: SyncSender<WriterMsg>,
@@ -113,6 +151,7 @@ pub struct CkptSink {
     watermark: AtomicU64,
     teed: AtomicU64,
     dropped: AtomicU64,
+    counters: Arc<SharedCounters>,
 }
 
 impl CkptSink {
@@ -170,6 +209,19 @@ impl CkptSink {
     pub fn dropped_total(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
+
+    /// Run-total segments the delta writer re-referenced instead of
+    /// rewriting (monotonic; lags the async commit by at most one
+    /// episode).
+    pub fn delta_skipped_total(&self) -> u64 {
+        self.counters.deduped.load(Ordering::Relaxed)
+    }
+
+    /// Generation directories retained by the most recent GC sweep (the
+    /// live chain length, including the one-commit grace predecessor).
+    pub fn gc_retained(&self) -> u64 {
+        self.counters.gc_retained.load(Ordering::Relaxed)
+    }
 }
 
 /// End-of-run accounting from the writer thread.
@@ -183,6 +235,12 @@ pub struct WriterStats {
     pub segments: u64,
     /// Bytes written across segments, state files, and manifests.
     pub bytes: u64,
+    /// Segments re-referenced from a prior generation (delta runs only).
+    pub deduped: u64,
+    /// Generation directories removed by the reachability GC.
+    pub gc_removed: u64,
+    /// Generation directories alive after the last GC sweep.
+    pub gc_retained: u64,
 }
 
 /// Handle owning the writer thread; drop-free shutdown via [`finish`].
@@ -199,13 +257,19 @@ impl CkptWriter {
     pub fn spawn(cfg: CkptWriterConfig) -> crate::Result<CkptWriter> {
         crate::ensure!(cfg.subparts() >= 1, "checkpoint writer needs at least one sub-part");
         crate::ensure!(cfg.dim >= 1, "checkpoint writer needs a positive dim");
+        crate::ensure!(
+            !cfg.delta || cfg.compact_interval >= 1,
+            "ckpt.compact_interval must be at least 1"
+        );
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("create checkpoint dir {}", cfg.dir.display()))?;
         let committed = sweep_crash_leftovers(&cfg.dir)?;
         let (tx, rx) = sync_channel(cfg.effective_cap());
+        let counters = Arc::new(SharedCounters::default());
+        let loop_counters = Arc::clone(&counters);
         let handle = std::thread::Builder::new()
             .name("ckpt-writer".into())
-            .spawn(move || writer_loop(cfg, rx, committed))
+            .spawn(move || writer_loop(cfg, rx, committed, loop_counters))
             .context("spawn checkpoint writer thread")?;
         Ok(CkptWriter {
             sink: CkptSink {
@@ -214,6 +278,7 @@ impl CkptWriter {
                 watermark: AtomicU64::new(0),
                 teed: AtomicU64::new(0),
                 dropped: AtomicU64::new(0),
+                counters,
             },
             handle,
         })
@@ -232,45 +297,79 @@ impl CkptWriter {
 }
 
 /// Remove a stale `MANIFEST.tmp` and any generation directory the
-/// committed manifest does not reference; returns the committed watermark
-/// (if a valid manifest exists).
-fn sweep_crash_leftovers(dir: &Path) -> crate::Result<Option<u64>> {
+/// committed manifest does not reference; returns the committed manifest
+/// (if a valid one exists). Chain-aware: a v4 manifest keeps every
+/// generation its segment rows point into, so an orphan sweep after a
+/// crash never frees a segment the live manifest still references.
+fn sweep_crash_leftovers(dir: &Path) -> crate::Result<Option<Manifest>> {
     let _ = std::fs::remove_file(dir.join(MANIFEST_TMP));
-    let committed = format::read_manifest(dir).ok().map(|m| m.watermark);
-    let keep = committed.map(gen_dir_name);
+    let committed = format::read_manifest(dir).ok();
+    let live: BTreeSet<u64> =
+        committed.as_ref().map(|m| m.referenced_gens()).unwrap_or_default();
+    sweep_unreferenced_gens(dir, &live)?;
+    Ok(committed)
+}
+
+/// Parse a generation directory name back to its watermark.
+fn parse_gen_dir(name: &str) -> Option<u64> {
+    name.strip_prefix("gen-")?.parse().ok()
+}
+
+/// Remove every `gen-*` directory whose watermark is not in `live`;
+/// returns `(removed, retained)` directory counts. The GC primitive: the
+/// caller computes the live set as the union of `referenced_gens()` over
+/// every manifest that must stay readable.
+fn sweep_unreferenced_gens(dir: &Path, live: &BTreeSet<u64>) -> crate::Result<(u64, u64)> {
+    let (mut removed, mut retained) = (0u64, 0u64);
     for entry in std::fs::read_dir(dir)
         .with_context(|| format!("list checkpoint dir {}", dir.display()))?
     {
         let entry = entry?;
         let name = entry.file_name();
         let name = name.to_string_lossy();
-        if name.starts_with("gen-") && Some(name.as_ref()) != keep.as_deref() {
-            let _ = std::fs::remove_dir_all(entry.path());
+        if !name.starts_with("gen-") {
+            continue;
+        }
+        match parse_gen_dir(&name) {
+            Some(w) if live.contains(&w) => retained += 1,
+            _ => {
+                let _ = std::fs::remove_dir_all(entry.path());
+                removed += 1;
+            }
         }
     }
-    Ok(committed)
+    Ok((removed, retained))
 }
 
 struct Staged {
     crc: u32,
     row_start: u64,
     row_count: u64,
+    /// Generation directory holding the segment file — the staging
+    /// watermark for a freshly written segment, the referenced prior
+    /// generation for a dedup'd one.
+    source_gen: u64,
     path: String,
 }
 
 fn writer_loop(
     cfg: CkptWriterConfig,
     rx: Receiver<WriterMsg>,
-    committed_at_spawn: Option<u64>,
+    committed_at_spawn: Option<Manifest>,
+    counters: Arc<SharedCounters>,
 ) -> crate::Result<WriterStats> {
     let mut stats = WriterStats::default();
     let subparts = cfg.subparts();
     let mut staged: HashMap<usize, Staged> = HashMap::new();
     let mut staged_watermark: Option<u64> = None;
-    // GC runs one commit late so a reader holding the just-replaced
-    // manifest can still open its segments
-    let mut committed_gen: Option<u64> = committed_at_spawn;
-    let mut prev_gen: Option<u64> = None;
+    // whether the episode being staged may re-reference `committed`'s
+    // segments (decided once per episode, at its first frame)
+    let mut episode_delta = false;
+    // the two manifests whose generations must stay on disk: the newest
+    // commit and its predecessor — GC runs one commit late so a reader
+    // holding the just-replaced manifest can still open its whole chain
+    let mut committed: Option<Manifest> = committed_at_spawn;
+    let mut grace: Option<Manifest> = None;
     while let Ok(msg) = rx.recv() {
         match msg {
             WriterMsg::Vertex { watermark, subpart, rows } => {
@@ -283,14 +382,50 @@ fn writer_loop(
                     }
                     staged.clear();
                     staged_watermark = Some(watermark);
+                    // delta only extends an existing chain that has room
+                    // under the compaction bound; otherwise this episode
+                    // is a full rebase (every sub-part rewritten)
+                    episode_delta = cfg.delta
+                        && committed
+                            .as_ref()
+                            .is_some_and(|m| m.referenced_gens().len() < cfg.compact_interval);
                     std::fs::create_dir_all(cfg.dir.join(gen_dir_name(watermark)))?;
                 }
                 if subpart >= subparts || rows.len() % cfg.dim != 0 {
                     // malformed frame: poison this episode's set
                     continue;
                 }
-                let rel = format!("{}/{}", gen_dir_name(watermark), segment_name(subpart));
                 let row_start = cfg.subpart_bounds[subpart] as u64;
+                let row_count = (rows.len() / cfg.dim) as u64;
+                if episode_delta {
+                    // unchanged sub-part: point the new manifest at the
+                    // previous generation's file instead of rewriting it
+                    let body_crc = format::crc32_f32s(&rows);
+                    let prev_entry = committed.as_ref().and_then(|m| {
+                        m.segments.iter().find(|e| {
+                            e.subpart as usize == subpart
+                                && e.crc == body_crc
+                                && e.row_start == row_start
+                                && e.row_count == row_count
+                        })
+                    });
+                    if let Some(e) = prev_entry {
+                        staged.insert(
+                            subpart,
+                            Staged {
+                                crc: e.crc,
+                                row_start,
+                                row_count,
+                                source_gen: e.source_gen,
+                                path: e.path.clone(),
+                            },
+                        );
+                        stats.deduped += 1;
+                        counters.deduped.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+                let rel = format!("{}/{}", gen_dir_name(watermark), segment_name(subpart));
                 let (crc, bytes) = format::write_segment(
                     &cfg.dir.join(&rel),
                     watermark,
@@ -303,12 +438,7 @@ fn writer_loop(
                 stats.bytes += bytes;
                 staged.insert(
                     subpart,
-                    Staged {
-                        crc,
-                        row_start,
-                        row_count: (rows.len() / cfg.dim) as u64,
-                        path: rel,
-                    },
+                    Staged { crc, row_start, row_count, source_gen: watermark, path: rel },
                 );
             }
             WriterMsg::Commit(meta) => {
@@ -345,12 +475,13 @@ fn writer_loop(
                         row_start: s.row_start,
                         row_count: s.row_count,
                         crc: s.crc,
+                        source_gen: s.source_gen,
                         path: s.path,
                     })
                     .collect();
                 segments.sort_by_key(|s| s.subpart);
-                let (version, rel_path, rel_crc) = match &meta.relations {
-                    None => (FORMAT_VERSION, String::new(), 0),
+                let (rel_path, rel_crc) = match &meta.relations {
+                    None => (String::new(), 0),
                     Some(rels) => {
                         let rel = format!("{gen}/{REL_NAME}");
                         let (crc, bytes) = format::write_relations(
@@ -360,8 +491,18 @@ fn writer_loop(
                             rels,
                         )?;
                         stats.bytes += bytes;
-                        (FORMAT_VERSION_REL, rel, crc)
+                        (rel, crc)
                     }
+                };
+                // a delta run always commits v4 (even full-rebase
+                // generations, so source_gen stays explicit); delta-off
+                // runs keep the byte-identical v2/v3 layouts
+                let version = if cfg.delta {
+                    FORMAT_VERSION_DELTA
+                } else if meta.relations.is_some() {
+                    FORMAT_VERSION_REL
+                } else {
+                    FORMAT_VERSION
                 };
                 let manifest = Manifest {
                     version,
@@ -383,11 +524,18 @@ fn writer_loop(
                 stats.bytes += manifest.encode().len() as u64;
                 commit_manifest(&cfg.dir, &manifest)?;
                 stats.committed += 1;
-                if let Some(g) = prev_gen {
-                    let _ = std::fs::remove_dir_all(cfg.dir.join(gen_dir_name(g)));
+                // reachability GC: a generation survives only while the
+                // newest manifest or its grace predecessor references a
+                // file inside it
+                grace = committed.replace(manifest);
+                let mut live = committed.as_ref().map(|m| m.referenced_gens()).unwrap_or_default();
+                if let Some(g) = &grace {
+                    live.extend(g.referenced_gens());
                 }
-                prev_gen = committed_gen;
-                committed_gen = Some(meta.watermark);
+                let (removed, retained) = sweep_unreferenced_gens(&cfg.dir, &live)?;
+                stats.gc_removed += removed;
+                stats.gc_retained = retained;
+                counters.gc_retained.store(retained, Ordering::Relaxed);
                 staged_watermark = None;
             }
         }
@@ -422,6 +570,8 @@ mod tests {
             // roomy: these tests assert exact tee counts, so the channel
             // must never be the bottleneck
             channel_cap: 64,
+            delta: false,
+            compact_interval: 8,
         }
     }
 
@@ -555,6 +705,126 @@ mod tests {
         assert_eq!(hdr.crc, m.rel_crc);
         assert_eq!(hdr.dim, 2);
         assert_eq!(read, rels);
+    }
+
+    /// Feed one episode where only sub-part 0's rows change per episode;
+    /// sub-parts 1.. keep a constant fill so a delta writer can dedup
+    /// them against the previous generation.
+    fn feed_partial_episode(
+        sink: &CkptSink,
+        bounds: &[usize],
+        dim: usize,
+        watermark: u64,
+        gpus: usize,
+    ) {
+        sink.begin_episode(watermark, true);
+        for sp in 0..bounds.len() - 1 {
+            let fill = if sp == 0 { 100.0 + watermark as f32 } else { sp as f32 };
+            let rows = vec![fill; (bounds[sp + 1] - bounds[sp]) * dim];
+            assert_eq!(sink.offer_vertex(sp, rows), Offer::Teed);
+        }
+        let gb = range_bounds(*bounds.last().unwrap(), gpus);
+        let contexts: Vec<Vec<f32>> =
+            (0..gpus).map(|g| vec![0.5; (gb[g + 1] - gb[g]) * dim]).collect();
+        sink.commit_episode(EpisodeMeta {
+            watermark,
+            epoch: 0,
+            episode_in_epoch: watermark,
+            episodes_in_epoch: 8,
+            contexts,
+            rng_states: vec![[watermark, 2, 3, 4]; gpus],
+            relations: None,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn delta_commits_re_reference_unchanged_segments() {
+        let dir = tmp("delta");
+        let mut c = cfg(&dir, 48, 4, 3, 1);
+        c.delta = true;
+        c.compact_interval = 8;
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c).unwrap();
+        for ep in 0..4u64 {
+            feed_partial_episode(w.sink(), &bounds, 4, ep, 1);
+        }
+        assert!(w.sink().delta_skipped_total() > 0);
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, 4);
+        // episode 0 writes all 3 sub-parts; episodes 1..3 write only
+        // sub-part 0 and re-reference the other two
+        assert_eq!(stats.segments, 3 + 3);
+        assert_eq!(stats.deduped, 6);
+        let m = format::read_manifest(&dir).unwrap();
+        assert_eq!(m.version, FORMAT_VERSION_DELTA);
+        assert_eq!(m.watermark, 3);
+        assert_eq!(m.segments[0].source_gen, 3, "changed sub-part rewritten");
+        for s in &m.segments[1..] {
+            assert_eq!(s.source_gen, 0, "unchanged sub-parts point at the first generation");
+            assert!(s.path.starts_with("gen-0/"));
+            assert!(dir.join(&s.path).exists());
+        }
+        // GC keeps exactly the chains of the newest manifest and its
+        // grace predecessor: {0,3} ∪ {0,2}
+        assert!(dir.join(gen_dir_name(0)).exists());
+        assert!(dir.join(gen_dir_name(2)).exists());
+        assert!(dir.join(gen_dir_name(3)).exists());
+        assert!(!dir.join(gen_dir_name(1)).exists(), "gen-1 unreferenced, collected");
+        assert_eq!(stats.gc_retained, 3);
+        assert!(stats.gc_removed >= 1);
+    }
+
+    #[test]
+    fn compact_interval_bounds_chain_length_with_full_rebase() {
+        let dir = tmp("compact");
+        let mut c = cfg(&dir, 32, 4, 2, 1);
+        c.delta = true;
+        c.compact_interval = 2;
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c).unwrap();
+        for ep in 0..4u64 {
+            feed_partial_episode(w.sink(), &bounds, 4, ep, 1);
+        }
+        let stats = w.finish().unwrap();
+        // ep0 full (2), ep1 delta (1 + 1 dedup) -> chain {0,1} hits the
+        // bound, ep2 full rebase (2), ep3 delta (1 + 1 dedup)
+        assert_eq!(stats.segments, 2 + 1 + 2 + 1);
+        assert_eq!(stats.deduped, 2);
+        let m = format::read_manifest(&dir).unwrap();
+        assert_eq!(m.referenced_gens().into_iter().collect::<Vec<_>>(), vec![2, 3]);
+        assert!(!dir.join(gen_dir_name(0)).exists());
+        assert!(!dir.join(gen_dir_name(1)).exists());
+        // every manifest a delta run commits is v4, including rebases
+        assert_eq!(m.version, FORMAT_VERSION_DELTA);
+    }
+
+    #[test]
+    fn crash_sweep_keeps_the_referenced_delta_chain() {
+        let dir = tmp("sweep_chain");
+        let mut c = cfg(&dir, 48, 4, 3, 1);
+        c.delta = true;
+        c.compact_interval = 8;
+        let bounds = c.subpart_bounds.clone();
+        let w = CkptWriter::spawn(c.clone()).unwrap();
+        for ep in 0..3u64 {
+            feed_partial_episode(w.sink(), &bounds, 4, ep, 1);
+        }
+        w.finish().unwrap();
+        // simulate a crash that left a partial next generation + torn tmp
+        std::fs::create_dir_all(dir.join("gen-9")).unwrap();
+        std::fs::write(dir.join("gen-9/sp-00000.seg"), b"partial").unwrap();
+        std::fs::write(dir.join(MANIFEST_TMP), b"torn").unwrap();
+        let w = CkptWriter::spawn(c).unwrap();
+        w.finish().unwrap();
+        let m = format::read_manifest(&dir).unwrap();
+        assert_eq!(m.watermark, 2);
+        for s in &m.segments {
+            assert!(dir.join(&s.path).exists(), "sweep kept referenced {}", s.path);
+        }
+        assert!(dir.join(gen_dir_name(0)).exists(), "chain tail survives the sweep");
+        assert!(!dir.join("gen-9").exists(), "orphan generation swept");
+        assert!(!dir.join(MANIFEST_TMP).exists());
     }
 
     #[test]

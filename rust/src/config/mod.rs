@@ -88,6 +88,15 @@ pub struct TrainConfig {
     /// Commit a checkpoint generation every N episodes (1 = every
     /// episode, the at-most-one-episode-lost guarantee).
     pub ckpt_interval: usize,
+    /// Commit v4 delta generations: unchanged sub-part segments are
+    /// re-referenced from the previous generation instead of rewritten
+    /// (docs/CKPT_FORMAT.md §3b). Default off — delta-off runs keep
+    /// writing byte-identical v2/v3.
+    pub ckpt_delta: bool,
+    /// Delta chain-length bound: once a manifest references this many
+    /// distinct generations the next commit is a full rebase, so GC can
+    /// collect the chain tail. 1 = every generation full.
+    pub ckpt_compact_interval: usize,
     // walk engine
     pub walk_length: usize,
     pub walks_per_node: usize,
@@ -124,6 +133,8 @@ impl Default for TrainConfig {
             executor: true,
             ckpt_dir: String::new(),
             ckpt_interval: 1,
+            ckpt_delta: false,
+            ckpt_compact_interval: 8,
             walk_length: 6,
             walks_per_node: 2,
             window: 3,
@@ -309,6 +320,18 @@ impl TrainConfig {
                 );
                 self.ckpt_interval = n;
             }
+            "ckpt.delta" => match value {
+                Bool(b) => self.ckpt_delta = *b,
+                _ => crate::bail!("{path}: expected bool"),
+            },
+            "ckpt.compact_interval" => {
+                let n = as_usize()?;
+                crate::ensure!(
+                    n >= 1,
+                    "{path}: must be at least 1 (1 = rebase every generation)"
+                );
+                self.ckpt_compact_interval = n;
+            }
             "walk.walk_length" => self.walk_length = as_usize()?,
             "walk.walks_per_node" => self.walks_per_node = as_usize()?,
             "walk.window" => self.window = as_usize()?,
@@ -349,14 +372,14 @@ impl TrainConfig {
             "[cluster]\nnodes = {}\ngpus_per_node = {}\nhardware = \"{}\"\nrank = {}\npeers = \"{}\"\n\n\
              [model]\ndim = {}\nnegatives = {}\nbatch = {}\nlearning_rate = {}\nlr_decay = {}\n\n\
              [schedule]\nsubparts = {}\n{}episode_prefetch = {}\nepisode_size = {}\nepochs = {}\npipeline = {}\nsocket_aware = {}\nexecutor = {}\n\n\
-             [ckpt]\ndir = \"{}\"\ninterval = {}\n\n\
+             [ckpt]\ndir = \"{}\"\ninterval = {}\ndelta = {}\ncompact_interval = {}\n\n\
              [walk]\nwalk_length = {}\nwalks_per_node = {}\nwindow = {}\nwalk_epochs = {}\n\n\
              [misc]\nseed = {}\nthreads = {}\nbackend = \"{}\"\nartifacts_dir = \"{}\"\n",
             self.nodes, self.gpus_per_node, self.hardware, self.rank, self.peers,
             self.dim, self.negatives, self.batch, self.learning_rate, self.lr_decay,
             self.subparts, stage_window, self.episode_prefetch, self.episode_size,
             self.epochs, self.pipeline, self.socket_aware, self.executor,
-            self.ckpt_dir, self.ckpt_interval,
+            self.ckpt_dir, self.ckpt_interval, self.ckpt_delta, self.ckpt_compact_interval,
             self.walk_length, self.walks_per_node, self.window, self.walk_epochs,
             self.seed, self.threads,
             match self.backend { Backend::Native => "native", Backend::Gathered => "gathered", Backend::Pjrt => "pjrt" },
@@ -492,7 +515,18 @@ mod tests {
         let err = c.apply_cli("ckpt.interval=0").unwrap_err().to_string();
         assert!(err.contains("at least 1"), "{err}");
         assert_eq!(c.ckpt_interval, 3, "rejected value must not stick");
-        // render → parse round trip keeps both
+        // delta knobs: default off, bounded compaction interval
+        assert!(!c.ckpt_delta, "delta checkpoints default off");
+        assert_eq!(c.ckpt_compact_interval, 8);
+        c.apply_cli("ckpt.delta=true").unwrap();
+        c.apply_cli("ckpt.compact_interval=4").unwrap();
+        assert!(c.ckpt_delta);
+        assert_eq!(c.ckpt_compact_interval, 4);
+        let err = c.apply_cli("ckpt.compact_interval=0").unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+        assert_eq!(c.ckpt_compact_interval, 4, "rejected value must not stick");
+        assert!(c.apply_cli("ckpt.delta=7").is_err(), "delta wants a bool");
+        // render → parse round trip keeps all four
         let dir = std::env::temp_dir().join("tembed_cfg_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("cfg.toml");
@@ -500,6 +534,8 @@ mod tests {
         let back = TrainConfig::from_file(&p).unwrap();
         assert_eq!(back.ckpt_dir, "/tmp/ck");
         assert_eq!(back.ckpt_interval, 3);
+        assert!(back.ckpt_delta);
+        assert_eq!(back.ckpt_compact_interval, 4);
     }
 
     #[test]
@@ -533,6 +569,8 @@ mod tests {
         b.epochs = 99;
         b.ckpt_dir = "/tmp/elsewhere".into();
         b.ckpt_interval = 7;
+        b.ckpt_delta = true;
+        b.ckpt_compact_interval = 3;
         b.episode_prefetch = 0;
         b.stage_window = Some(64);
         assert_eq!(a.resume_digest(), b.resume_digest());

@@ -214,6 +214,8 @@ impl Trainer {
                 graph_digest,
                 config_digest: cfg.resume_digest(),
                 channel_cap: 0, // auto: two episodes' worth of sub-parts
+                delta: cfg.ckpt_delta,
+                compact_interval: cfg.ckpt_compact_interval,
             })?)
         } else {
             None
@@ -658,6 +660,11 @@ impl Trainer {
             eprintln!("warning: checkpoint commit failed: {e:#}");
         }
         self.metrics.add("ckpt_commits_requested", 1);
+        // delta/GC accounting (run totals the writer publishes after each
+        // async commit, so they lag the request above by at most one
+        // episode; add_max keeps the gauges monotone)
+        self.metrics.add_max("ckpt_delta_skipped", w.sink().delta_skipped_total());
+        self.metrics.add_max("ckpt_gc_retained", w.sink().gc_retained());
         Ok(())
     }
 
@@ -1009,11 +1016,14 @@ impl Trainer {
             match w.finish() {
                 Ok(stats) => eprintln!(
                     "checkpoint writer: {} generation(s) committed, {} skipped, \
-                     {} segment(s), {}",
+                     {} segment(s), {} ({} dedup'd, gc {} removed / {} retained)",
                     stats.committed,
                     stats.skipped,
                     stats.segments,
                     crate::util::human_bytes(stats.bytes),
+                    stats.deduped,
+                    stats.gc_removed,
+                    stats.gc_retained,
                 ),
                 Err(e) => eprintln!("warning: checkpoint writer failed: {e:#}"),
             }

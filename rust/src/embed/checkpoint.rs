@@ -152,6 +152,8 @@ mod tests {
             graph_digest: 3,
             config_digest: 0,
             channel_cap: 16,
+            delta: false,
+            compact_interval: 8,
         })
         .unwrap();
         w.sink().begin_episode(0, true);

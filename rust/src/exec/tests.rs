@@ -537,6 +537,8 @@ fn episode_tees_chain_ends_into_the_checkpoint_sink() {
         graph_digest: 0x51,
         config_digest: 0,
         channel_cap: 64,
+        delta: false,
+        compact_interval: 8,
     })
     .unwrap();
     writer.sink().begin_episode(0, true);

@@ -26,8 +26,13 @@
 //! including multi-rank runs, where the resume watermark rides the plan
 //! handshake and every rank restores from the shared directory — and
 //! `tembed serve` answers edge-score / top-k queries from the same
-//! directory while training appends to it. See README §"Checkpointing and
-//! serving while training" and §"Resuming a multi-rank run".
+//! directory while training appends to it. `--set ckpt.delta=true` turns
+//! on v4 delta generations (unchanged sub-part segments re-referenced
+//! from prior generations instead of rewritten, chain length bounded by
+//! `--set ckpt.compact_interval=N`); `--resume` and `serve` work off
+//! delta chains transparently. See README §"Checkpointing and serving
+//! while training", §"Delta checkpoints", and §"Resuming a multi-rank
+//! run".
 //!
 //! The `--peers` list (or `cluster.peers`) turns `train` into the rank-0
 //! driver of a real multi-process cluster: each address is one rank's

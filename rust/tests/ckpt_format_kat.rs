@@ -24,6 +24,19 @@ const REL_SEG_HEX: &str = "5452454c030000000700000000000000020000000200000005194
 /// trailing `(rel_crc, rel_path)` pair appended, everything else
 /// byte-identical (the version-faithful encode contract).
 const MANIFEST_V3_HEX: &str = "544d414e030000000700000000000000010000000000000002000000000000000400000000000000040000000000000002000000887766554433221100ffeeddccbbaa99010000000200000000000000000000000000000002000000000000005235952e1200000067656e2d372f73702d30303030302e7365670100000002000000000000000200000000000000b1491abd1200000067656e2d372f73702d30303030312e73656782ce73830f00000067656e2d372f73746174652e73656705194dca0d00000067656e2d372f72656c2e736567a851e018";
+/// The v4 delta worked example (docs/CKPT_FORMAT.md §3b): episode 3
+/// touched only sub-part 0, so generation 8 rewrites `sp-00000.seg` and
+/// its `state.seg` while re-referencing the unchanged `gen-7/sp-00001.seg`.
+const SEG0_GEN8_HEX: &str = "5453454702000000080000000000000000000000000000000000000002000000000000000200000073c171200000c03f000020c00000003f0000803e";
+const STATE_GEN8_HEX: &str = "54535441020000000800000000000000010000000200000082ce73830807060504030201181716151413121128272625242322213837363534333231000000000000000004000000000000000000803f0000004000004040000080400000a0400000c0400000e04000000041";
+/// The v2 worked-example manifest re-stamped as v4 (a delta-on run's full
+/// rebase): every segment row gains `source_gen = 7` and the trailing
+/// `(rel_crc = 0, rel_path = "")` pair is always present.
+const MANIFEST_V4_FULL_HEX: &str = "544d414e040000000700000000000000010000000000000002000000000000000400000000000000040000000000000002000000887766554433221100ffeeddccbbaa99010000000200000000000000000000000000000002000000000000005235952e07000000000000001200000067656e2d372f73702d30303030302e7365670100000002000000000000000200000000000000b1491abd07000000000000001200000067656e2d372f73702d30303030312e73656782ce73830f00000067656e2d372f73746174652e73656700000000000000007d5ccfa5";
+/// The v4 delta manifest at watermark 8: sub-part 0's row carries
+/// `source_gen = 8` (freshly written), sub-part 1's carries
+/// `source_gen = 7` and still points into the prior generation.
+const MANIFEST_V4_DELTA_HEX: &str = "544d414e040000000800000000000000010000000000000003000000000000000400000000000000040000000000000002000000887766554433221100ffeeddccbbaa990100000002000000000000000000000000000000020000000000000073c1712008000000000000001200000067656e2d382f73702d30303030302e7365670100000002000000000000000200000000000000b1491abd07000000000000001200000067656e2d372f73702d30303030312e73656782ce73830f00000067656e2d382f73746174652e736567000000000000000008da211b";
 
 fn unhex(s: &str) -> Vec<u8> {
     assert!(s.len() % 2 == 0);
@@ -210,6 +223,78 @@ fn v3_example_generation_round_trips_relation_scores() {
     assert_eq!(r.rel_score(2, 0, 3).unwrap(), 3.5 * 7.0 + -1.0 * 8.0);
     assert_eq!(r.rel_score(0, 0, 0).unwrap(), -3.0);
     assert!(r.rel_score(0, 2, 0).is_err(), "relation 2 is out of range");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn v4_manifest_examples_decode_and_reencode_byte_exact() {
+    // the full-rebase v4: same generation as the v2 example, every row
+    // sourced from its own watermark
+    let full = unhex(MANIFEST_V4_FULL_HEX);
+    assert_eq!(full.len(), 219, "doc says 219 bytes (195-byte v2 body + 2×8 source_gen + 8-byte empty rel ref)");
+    let m = Manifest::decode(&full).unwrap();
+    assert_eq!(m.version, 4);
+    assert_eq!(m.watermark, 7);
+    assert_eq!(m.segments[0].source_gen, 7);
+    assert_eq!(m.segments[1].source_gen, 7);
+    assert_eq!(m.rel_path, "", "untyped v4 carries an empty rel ref");
+    assert_eq!(m.rel_crc, 0);
+    assert_eq!(m.referenced_gens().into_iter().collect::<Vec<_>>(), vec![7]);
+    assert_eq!(m.encode(), full, "re-encoded v4 full-rebase manifest drifted from the doc");
+    // version-faithful downgrade: stamping the same manifest back to v2
+    // drops the source_gen columns and the rel ref and reproduces the
+    // documented v2 bytes exactly — a `ckpt.delta=false` run's output
+    let mut v2 = m.clone();
+    v2.version = 2;
+    assert_eq!(v2.encode(), unhex(MANIFEST_HEX), "v4→v2 downgrade is not byte-identical");
+
+    // the delta manifest: one rewritten row, one cross-generation row
+    let delta = unhex(MANIFEST_V4_DELTA_HEX);
+    assert_eq!(delta.len(), 219, "doc says 219 bytes");
+    let m = Manifest::decode(&delta).unwrap();
+    assert_eq!(m.version, 4);
+    assert_eq!(m.watermark, 8);
+    assert_eq!(m.episode_in_epoch, 3);
+    assert_eq!(m.segments[0].path, "gen-8/sp-00000.seg");
+    assert_eq!(m.segments[0].source_gen, 8);
+    assert_eq!(m.segments[0].crc, 0x2071_c173, "documented CRC of the rewritten rows");
+    assert_eq!(m.segments[1].path, "gen-7/sp-00001.seg");
+    assert_eq!(m.segments[1].source_gen, 7, "unchanged sub-part re-references gen-7");
+    assert_eq!(m.segments[1].crc, 0xbd1a_49b1, "dedup'd row keeps the gen-7 payload CRC");
+    assert_eq!(m.state_path, "gen-8/state.seg");
+    assert_eq!(m.referenced_gens().into_iter().collect::<Vec<_>>(), vec![7, 8]);
+    assert_eq!(m.encode(), delta, "re-encoded v4 delta manifest drifted from the doc");
+}
+
+/// The v4 worked example is a complete two-generation chain: the real
+/// reader resolves the cross-generation row transparently, serving
+/// sub-part 0 from gen-8 and sub-part 1 from gen-7's unchanged file.
+#[test]
+fn v4_delta_chain_is_a_valid_checkpoint_directory() {
+    let dir = std::env::temp_dir().join(format!("tembed_kat_v4_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("gen-7")).unwrap();
+    std::fs::create_dir_all(dir.join("gen-8")).unwrap();
+    // gen-7 keeps only the file the chain still references
+    std::fs::write(dir.join("gen-7/sp-00001.seg"), unhex(SEG1_HEX)).unwrap();
+    std::fs::write(dir.join("gen-8/sp-00000.seg"), unhex(SEG0_GEN8_HEX)).unwrap();
+    std::fs::write(dir.join("gen-8/state.seg"), unhex(STATE_GEN8_HEX)).unwrap();
+    std::fs::write(dir.join("MANIFEST"), unhex(MANIFEST_V4_DELTA_HEX)).unwrap();
+
+    let seg8 = unhex(SEG0_GEN8_HEX);
+    let h = read_segment_header(&seg8).unwrap();
+    assert_eq!(h.watermark, 8, "fresh segment is stamped with its own generation");
+    assert_eq!(h.crc, 0x2071_c173);
+    assert_eq!(format::crc32(&seg8[SEG_HEADER_LEN..]), h.crc);
+
+    assert_eq!(format::peek_watermark(&dir).unwrap(), 8);
+    let r = CkptReader::open(&dir).unwrap();
+    assert_eq!(r.watermark(), 8);
+    assert_eq!(r.vertex_row(0), &[1.5, -2.5], "rewritten rows come from gen-8");
+    assert_eq!(r.vertex_row(1), &[0.5, 0.25]);
+    assert_eq!(r.vertex_row(2), &[3.0, -0.75], "unchanged rows come from gen-7");
+    assert_eq!(r.vertex_row(3), &[8.0, 0.125]);
+    assert_eq!(r.context_row(0), &[1.0, 2.0]);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -181,6 +181,142 @@ fn killed_training_resumes_with_final_loss_parity() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The kill/resume smoke with **delta checkpoints** on: the trainer
+/// commits v4 generations (`ckpt.delta=true`, chain bounded at 4), dies
+/// by SIGKILL once the watermark reaches 3, and the resumed run —
+/// restoring from whatever delta chain survived — must reproduce the
+/// uninterrupted run's final-epoch loss and model bit-for-bit.
+#[test]
+fn killed_delta_training_resumes_with_final_loss_parity() {
+    let dir =
+        std::env::temp_dir().join(format!("tembed_ckpt_resume_delta_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_dir = dir.join("ckpt");
+    let gpath = dir.join("graph.bin");
+    let mut rng = Rng::new(2024);
+    let edges = tembed::gen::erdos_renyi(400, 6000, &mut rng);
+    write_edges_bin(&gpath, 400, &edges).unwrap();
+    let graph = tembed::graph::io::load_graph(&gpath, true).unwrap();
+
+    // reference: the same training run, uninterrupted and checkpoint-free
+    // (ckpt.delta is excluded from the resume digest, so the reference
+    // needs no delta flags to stay bit-comparable)
+    let mut ref_cfg = resume_config("");
+    ref_cfg.ckpt_dir = String::new();
+    let mut ref_driver = Driver::new(&graph, ref_cfg, None)
+        .unwrap()
+        .with_fixed_samples(graph.edges().collect());
+    let ref_losses: Vec<f64> =
+        (0..EPOCHS).map(|e| ref_driver.run_epoch(e).unwrap().mean_loss()).collect();
+    let ref_store = ref_driver.finish().unwrap();
+
+    // leg 1: a real process trains with per-episode delta checkpoints...
+    let mut child = KillOnDrop(Some(
+        Command::new(env!("CARGO_BIN_EXE_tembed"))
+            .args([
+                "train",
+                "--graph",
+                gpath.to_str().unwrap(),
+                "--samples",
+                "edges",
+                "--epochs",
+                &EPOCHS.to_string(),
+                "--ckpt-dir",
+                ckpt_dir.to_str().unwrap(),
+                "--ckpt-interval",
+                "1",
+                "--set",
+                "ckpt.delta=true",
+                "--set",
+                "ckpt.compact_interval=4",
+                "--set",
+                "cluster.nodes=1",
+                "--set",
+                "cluster.gpus_per_node=2",
+                "--set",
+                "schedule.subparts=2",
+                "--set",
+                "model.dim=16",
+                "--set",
+                "model.negatives=3",
+                "--set",
+                "model.batch=64",
+                "--set",
+                "schedule.episode_size=400",
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn tembed train"),
+    ));
+
+    // ...and dies by SIGKILL as soon as a few generations are on disk
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut killed_mid_run = false;
+    loop {
+        if let Some(status) = child.0.as_mut().unwrap().try_wait().expect("poll child") {
+            eprintln!("note: trainer finished before the kill landed ({status:?})");
+            break;
+        }
+        if matches!(tembed::ckpt::format::peek_watermark(&ckpt_dir), Ok(w) if w >= 3) {
+            let c = child.0.as_mut().unwrap();
+            c.kill().expect("sigkill trainer");
+            let _ = c.wait();
+            killed_mid_run = true;
+            break;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint watermark appeared in time");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(child);
+
+    // the surviving manifest is a v4 chain, and every generation it
+    // references survived the kill
+    let manifest = tembed::ckpt::format::read_manifest(&ckpt_dir)
+        .expect("a committed manifest survived the kill");
+    assert_eq!(manifest.version, tembed::ckpt::FORMAT_VERSION_DELTA);
+    for seg in &manifest.segments {
+        assert!(ckpt_dir.join(&seg.path).exists(), "chain segment {} missing", seg.path);
+    }
+
+    // leg 2: resume from whatever the crash left behind, delta still on
+    let reader = CkptReader::open(&ckpt_dir).expect("delta chain opens after the kill");
+    let committed = reader.watermark();
+    let mut cfg = resume_config(ckpt_dir.to_str().unwrap());
+    cfg.ckpt_delta = true;
+    cfg.ckpt_compact_interval = 4;
+    let mut driver = Driver::new(&graph, cfg, None)
+        .unwrap()
+        .with_fixed_samples(graph.edges().collect());
+    let (start_epoch, mut start_episode) = driver.resume_from(&reader).unwrap();
+    if killed_mid_run {
+        assert!(start_epoch < EPOCHS, "kill landed mid-run, epochs must remain");
+    }
+    let mut losses = Vec::new();
+    for epoch in start_epoch..EPOCHS {
+        losses.push(driver.run_epoch_from(epoch, start_episode).unwrap().mean_loss());
+        start_episode = 0;
+    }
+    let store = driver.finish().unwrap();
+
+    // parity: the final epoch must reproduce the uninterrupted run
+    // exactly, and so must the model
+    if let Some(last) = losses.last() {
+        let want = ref_losses[EPOCHS - 1];
+        let rel = (last - want).abs() / want.abs().max(1e-9);
+        assert!(
+            rel < 1e-9,
+            "final epoch loss diverged after delta crash-resume at watermark {committed}: \
+             {last} vs {want}"
+        );
+    }
+    assert_eq!(store.vertex, ref_store.vertex, "vertex matrix diverged after delta resume");
+    assert_eq!(store.context, ref_store.context, "context matrix diverged after delta resume");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 const EPOCHS2: usize = 4;
 
 /// The two-rank config of the multi-rank crash test. Identical schedule /

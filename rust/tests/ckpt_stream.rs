@@ -51,6 +51,8 @@ fn write_episodes(
         // every frame of every episode fits: the property asserts exact
         // commit counts, so the bounded channel must never drop here
         channel_cap: episodes as usize * (subparts + 1) + 8,
+        delta: false,
+        compact_interval: 8,
     })?;
     for ep in 0..episodes {
         w.sink().begin_episode(ep, true);
@@ -71,6 +73,73 @@ fn write_episodes(
     let stats = w.finish()?;
     assert_eq!(stats.committed, episodes);
     Ok(())
+}
+
+fn delta_cfg(
+    dir: &PathBuf,
+    n: usize,
+    dim: usize,
+    subparts: usize,
+    episodes: u64,
+    compact_interval: usize,
+) -> CkptWriterConfig {
+    CkptWriterConfig {
+        dir: dir.clone(),
+        num_nodes: n,
+        dim,
+        subpart_bounds: range_bounds(n, subparts),
+        context_bounds: range_bounds(n, 1),
+        graph_digest: 42,
+        config_digest: 0,
+        channel_cap: episodes as usize * (subparts + 1) + 8,
+        delta: true,
+        compact_interval,
+    }
+}
+
+/// One delta-pattern episode: sub-part 0's rows change every episode,
+/// every other sub-part keeps its episode-0 rows — the strict-subset
+/// write pattern the dedup path exists for.
+fn feed_delta_episode(
+    w: &CkptWriter,
+    sb: &[usize],
+    n: usize,
+    dim: usize,
+    subparts: usize,
+    episodes: u64,
+    ep: u64,
+) -> tembed::Result<()> {
+    w.sink().begin_episode(ep, true);
+    for sp in 0..subparts {
+        let len = (sb[sp + 1] - sb[sp]) * dim;
+        let src_ep = if sp == 0 { ep } else { 0 };
+        w.sink().offer_vertex(sp, rows_for(src_ep, sp, len));
+    }
+    w.sink().commit_episode(EpisodeMeta {
+        watermark: ep,
+        epoch: 0,
+        episode_in_epoch: ep,
+        episodes_in_epoch: episodes,
+        contexts: vec![vec![ep as f32; n * dim]],
+        rng_states: vec![[ep + 1, 2, 3, 4]],
+        relations: None,
+    })
+}
+
+fn write_delta_episodes(
+    dir: &PathBuf,
+    n: usize,
+    dim: usize,
+    subparts: usize,
+    episodes: u64,
+    compact_interval: usize,
+) -> tembed::Result<tembed::ckpt::WriterStats> {
+    let sb = range_bounds(n, subparts);
+    let w = CkptWriter::spawn(delta_cfg(dir, n, dim, subparts, episodes, compact_interval))?;
+    for ep in 0..episodes {
+        feed_delta_episode(&w, &sb, n, dim, subparts, episodes, ep)?;
+    }
+    w.finish()
 }
 
 /// Crash-recovery property: after N committed episodes, a crash that
@@ -124,6 +193,164 @@ fn truncated_inflight_generation_recovers_previous_watermark_bit_exactly() {
     });
 }
 
+/// The delta tentpole's acceptance test: a run whose episodes touch a
+/// strict subset of sub-parts commits generations that **re-reference**
+/// — not rewrite — every untouched segment (counted both in the writer
+/// stats and as segment files on disk), while the reachability GC keeps
+/// exactly the chain the live manifests can still see.
+#[test]
+fn delta_generations_reference_instead_of_rewriting_unchanged_segments() {
+    let dir = tmp("delta_subset");
+    let (n, dim, subparts) = (60usize, 4usize, 4usize);
+    let episodes = 5u64;
+    let sb = range_bounds(n, subparts);
+    let stats = write_delta_episodes(&dir, n, dim, subparts, episodes, 16).unwrap();
+    assert_eq!(stats.committed, episodes);
+    // episode 0 writes all 4 sub-parts; episodes 1..5 write only sp 0
+    assert_eq!(stats.segments, 4 + (episodes - 1), "unchanged sub-parts were rewritten");
+    assert_eq!(stats.deduped, (episodes - 1) * (subparts as u64 - 1));
+    assert_eq!(stats.gc_removed, 2, "interior chain links should have been collected");
+    assert_eq!(stats.gc_retained, 3, "live chain is gen-0 + the last two fresh generations");
+
+    // the committed manifest re-references gen-0 for every untouched part
+    let m = tembed::ckpt::format::read_manifest(&dir).unwrap();
+    assert_eq!(m.version, tembed::ckpt::FORMAT_VERSION_DELTA);
+    assert_eq!(m.watermark, episodes - 1);
+    assert_eq!(m.segments[0].source_gen, episodes - 1);
+    for sp in 1..subparts {
+        assert_eq!(m.segments[sp].source_gen, 0, "sub-part {sp} should point at gen-0");
+        assert_eq!(m.segments[sp].path, format!("gen-0/sp-{sp:05}.seg"));
+    }
+    assert_eq!(m.referenced_gens().into_iter().collect::<Vec<_>>(), vec![0, episodes - 1]);
+
+    // written-vs-referenced accounting on disk: the live chain holds the
+    // 4 gen-0 segments plus one fresh sp-00000 per surviving generation
+    // (the one-commit-late grace keeps the predecessor's), yet the
+    // manifest resolves a full 4-entry set
+    let mut on_disk: Vec<String> = vec![];
+    for e in std::fs::read_dir(&dir).unwrap() {
+        let e = e.unwrap();
+        if e.file_type().unwrap().is_dir() {
+            let gen = e.file_name().into_string().unwrap();
+            for f in std::fs::read_dir(e.path()).unwrap() {
+                let name = f.unwrap().file_name().into_string().unwrap();
+                if name.starts_with("sp-") {
+                    on_disk.push(format!("{gen}/{name}"));
+                }
+            }
+        }
+    }
+    assert_eq!(on_disk.len(), subparts + 2, "GC retained more than the reachable chain");
+    for s in &m.segments {
+        assert!(on_disk.contains(&s.path), "referenced segment {} missing on disk", s.path);
+    }
+
+    // and the materialized model is bit-exact to what was offered
+    let r = CkptReader::open(&dir).unwrap();
+    for sp in 0..subparts {
+        let src_ep = if sp == 0 { episodes - 1 } else { 0 };
+        let expect = rows_for(src_ep, sp, (sb[sp + 1] - sb[sp]) * dim);
+        let got: Vec<f32> =
+            (sb[sp]..sb[sp + 1]).flat_map(|v| r.vertex_row(v).to_vec()).collect();
+        assert_eq!(got, expect, "sub-part {sp} drifted through the delta chain");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash battery for the delta chain: a kill mid-delta-commit (partial
+/// next generation, torn `MANIFEST.tmp`) or mid-GC (a half-removed
+/// unreferenced generation) at randomized points must cost nothing —
+/// the newest complete manifest still materializes the pre-crash model
+/// bit-exactly — and the respawned writer's orphan sweep removes every
+/// leftover without ever freeing a segment the live chain references.
+#[test]
+fn crash_mid_delta_commit_or_mid_gc_recovers_and_sweeps_safely() {
+    forall(6, 0xDE17, |g| {
+        let n = g.usize_in(8, 80);
+        let dim = *g.pick(&[2usize, 4]);
+        let subparts = g.usize_in(2, 4).min(n);
+        let episodes = g.usize_in(2, 6) as u64;
+        let compact_interval = g.usize_in(2, 5);
+        let dir = tmp(&format!("crash_delta_{n}_{dim}_{subparts}_{episodes}_{compact_interval}"));
+        write_delta_episodes(&dir, n, dim, subparts, episodes, compact_interval).unwrap();
+        let sb = range_bounds(n, subparts);
+        let last = episodes - 1;
+        let m = tembed::ckpt::format::read_manifest(&dir).unwrap();
+
+        // mid-delta-commit debris: a partial generation for episode N —
+        // one fresh segment truncated mid-payload — plus a torn tmp
+        let partial = dir.join(format!("gen-{episodes}"));
+        std::fs::create_dir_all(&partial).unwrap();
+        let seg = partial.join("sp-00000.seg");
+        let len = (sb[1] - sb[0]) * dim;
+        tembed::ckpt::format::write_segment(
+            &seg,
+            episodes,
+            0,
+            0,
+            dim as u32,
+            &rows_for(episodes, 0, len),
+        )
+        .unwrap();
+        let bytes = std::fs::read(&seg).unwrap();
+        let cut = g.usize_in(1, bytes.len() - 1);
+        std::fs::write(&seg, &bytes[..cut]).unwrap();
+        std::fs::write(dir.join("MANIFEST.tmp"), b"torn-half-written").unwrap();
+        // …and mid-GC debris: an unreferenced generation whose removal
+        // was interrupted partway
+        let refs = m.referenced_gens();
+        let stale = (0..episodes).find(|w| !refs.contains(w));
+        if let Some(wm) = stale {
+            let d = dir.join(format!("gen-{wm}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("state.seg"), b"half-removed").unwrap();
+        }
+
+        let verify = |tag: &str| {
+            let r = CkptReader::open(&dir).unwrap();
+            assert_eq!(r.watermark(), last, "{tag}: wrong watermark");
+            for sp in 0..subparts {
+                let src_ep = if sp == 0 { last } else { 0 };
+                let expect = rows_for(src_ep, sp, (sb[sp + 1] - sb[sp]) * dim);
+                let got: Vec<f32> =
+                    (sb[sp]..sb[sp + 1]).flat_map(|v| r.vertex_row(v).to_vec()).collect();
+                assert_eq!(got, expect, "{tag}: sub-part {sp} drifted");
+            }
+            assert_eq!(r.rng_states()[0], [last + 1, 2, 3, 4], "{tag}: rng state drifted");
+        };
+        verify("post-crash");
+
+        // respawn: the spawn-time sweep removes every orphan, keeps
+        // every referenced file
+        let w =
+            CkptWriter::spawn(delta_cfg(&dir, n, dim, subparts, episodes, compact_interval))
+                .unwrap();
+        assert!(!partial.exists(), "partial in-flight generation survived the sweep");
+        assert!(!dir.join("MANIFEST.tmp").exists(), "torn MANIFEST.tmp survived the sweep");
+        if let Some(wm) = stale {
+            assert!(
+                !dir.join(format!("gen-{wm}")).exists(),
+                "unreferenced generation {wm} survived the sweep"
+            );
+        }
+        for s in &m.segments {
+            assert!(dir.join(&s.path).exists(), "sweep freed referenced segment {}", s.path);
+        }
+        verify("post-sweep");
+
+        // and the chain keeps growing: one more delta episode commits on
+        // top of the recovered chain
+        feed_delta_episode(&w, &sb, n, dim, subparts, episodes + 1, episodes).unwrap();
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, 1);
+        let r = CkptReader::open(&dir).unwrap();
+        assert_eq!(r.watermark(), episodes);
+        let got: Vec<f32> = (sb[0]..sb[1]).flat_map(|v| r.vertex_row(v).to_vec()).collect();
+        assert_eq!(got, rows_for(episodes, 0, len));
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
 /// Concurrent writer/reader: a server answers queries over loopback while
 /// generations land, the shared reader's watcher republishing as the
 /// watermark moves.
@@ -152,6 +379,8 @@ fn serve_answers_queries_while_generations_land() {
                 graph_digest: 7,
                 config_digest: 0,
                 channel_cap: 64,
+                delta: false,
+                compact_interval: 8,
             })
             .unwrap();
             let commit = |ep: u64| {

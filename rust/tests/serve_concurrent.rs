@@ -53,6 +53,8 @@ fn write_generations(dir: PathBuf, episodes: u64, gap: Duration) -> std::thread:
             graph_digest: 9,
             config_digest: 0,
             channel_cap: episodes as usize * 3 + 8,
+            delta: false,
+            compact_interval: 8,
         })
         .unwrap();
         for ep in 0..episodes {
@@ -183,6 +185,176 @@ fn concurrent_clients_see_consistent_generations_under_live_commits() {
         assert!(Instant::now() < deadline, "watcher never published the final generation");
         std::thread::sleep(Duration::from_millis(10));
     }
+    let stats = server.shutdown();
+    assert!(stats.queries >= (CLIENTS * ITERS) as u64, "lost queries: {stats:?}");
+    assert!(stats.connections >= CLIENTS as u64);
+    assert!(stats.swaps >= 1, "the shared reader never swapped: {stats:?}");
+    assert_eq!(stats.queue_rejects, 0, "unexpected rejects: {stats:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Like [`write_generations`], but in delta mode: only sub-part 0
+/// (nodes `0..NODES/2`) is rewritten per episode — its rows encode the
+/// generation as `ep+1` — while sub-part 1 stays at `1.0` forever, so
+/// every committed v4 manifest re-references `gen-0/sp-00001.seg`.
+fn write_delta_generations(
+    dir: PathBuf,
+    episodes: u64,
+    gap: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let sb = range_bounds(NODES, 2);
+        let w = CkptWriter::spawn(CkptWriterConfig {
+            dir,
+            num_nodes: NODES,
+            dim: DIM,
+            subpart_bounds: sb.clone(),
+            context_bounds: range_bounds(NODES, 1),
+            graph_digest: 9,
+            config_digest: 0,
+            channel_cap: episodes as usize * 3 + 8,
+            delta: true,
+            compact_interval: 16,
+        })
+        .unwrap();
+        for ep in 0..episodes {
+            if ep > 0 {
+                std::thread::sleep(gap);
+            }
+            w.sink().begin_episode(ep, true);
+            for sp in 0..2 {
+                let len = (sb[sp + 1] - sb[sp]) * DIM;
+                let fill = if sp == 0 { (ep + 1) as f32 } else { 1.0 };
+                w.sink().offer_vertex(sp, vec![fill; len]);
+            }
+            w.sink()
+                .commit_episode(EpisodeMeta {
+                    watermark: ep,
+                    epoch: 0,
+                    episode_in_epoch: ep,
+                    episodes_in_epoch: episodes,
+                    contexts: vec![vec![1.0; NODES * DIM]],
+                    rng_states: vec![[ep + 1, 2, 3, 4]],
+                    relations: None,
+                })
+                .unwrap();
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.committed, episodes);
+        // every episode after the first dedup'd the untouched sub-part
+        assert_eq!(stats.deduped, episodes - 1);
+    })
+}
+
+/// Satellite of the delta tentpole: the serving tier under a live
+/// **delta** writer. Four mixed-op clients hammer the server while v4
+/// generations land and the reachability GC collects interior chain
+/// links underneath the mmap'd readers; every reply batch must still
+/// decode to a single generation and every connection's watermark must
+/// stay monotone.
+#[test]
+fn concurrent_clients_stay_consistent_while_delta_chain_is_gcd() {
+    let episodes = 10u64;
+    let dir = tmp("delta_stress");
+    let addr = sock("delta_stress");
+    let writer = write_delta_generations(dir.clone(), episodes, Duration::from_millis(10));
+    let server = Server::spawn(
+        &dir,
+        &addr,
+        ServeConfig {
+            workers: 4,
+            queue_cap: 8,
+            idle_poll: Duration::from_millis(25),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+
+    // sub-part 0 is the rewritten half: its rows encode the generation
+    let half = (NODES / 2) as u32;
+    const CLIENTS: usize = 4;
+    const ITERS: usize = 60;
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = QueryClient::connect(&addr, Duration::from_secs(10)).unwrap();
+                let mut last_wm = 0u64;
+                for i in 0..ITERS {
+                    match i % 3 {
+                        0 => {
+                            let stat = client.stat().unwrap();
+                            assert_eq!(stat.num_nodes, NODES as u64);
+                            assert!(
+                                stat.watermark >= last_wm,
+                                "client {c} saw the watermark go backwards \
+                                 ({last_wm} -> {})",
+                                stat.watermark
+                            );
+                            last_wm = stat.watermark;
+                        }
+                        1 => {
+                            // all sources in the rewritten sub-part: the
+                            // whole batch must decode to ONE generation
+                            let pairs: Vec<(u32, u32)> = (0..8)
+                                .map(|j| {
+                                    (
+                                        ((c * 13 + i * 7 + j) as u32) % half,
+                                        ((c * 5 + i * 11 + j * 3) % NODES) as u32,
+                                    )
+                                })
+                                .collect();
+                            let scores = client.edge_scores(&pairs).unwrap();
+                            let gen = generation_of(scores[0], episodes).unwrap_or_else(|| {
+                                panic!("client {c} got a torn score {}", scores[0])
+                            });
+                            for s in &scores {
+                                assert_eq!(
+                                    generation_of(*s, episodes),
+                                    Some(gen),
+                                    "client {c}: batch mixed generations"
+                                );
+                            }
+                        }
+                        _ => {
+                            // sources in the dedup'd sub-part score DIM·1.0
+                            // regardless of generation — served straight
+                            // from the re-referenced gen-0 segment
+                            let u = half + ((c * 17 + i) as u32 % half);
+                            let scores = client.edge_scores(&[(u, 0), (u, 1)]).unwrap();
+                            for s in &scores {
+                                assert_eq!(
+                                    *s,
+                                    DIM as f32,
+                                    "client {c}: dedup'd sub-part drifted"
+                                );
+                            }
+                        }
+                    }
+                }
+                client.shutdown();
+            });
+        }
+    });
+
+    writer.join().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.reader().watermark() != episodes - 1 {
+        assert!(Instant::now() < deadline, "watcher never published the final generation");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // the final manifest is a v4 delta chain: sub-part 1 still points at
+    // gen-0, and the interior links the chain no longer references were
+    // collected while clients were connected
+    let m = tembed::ckpt::format::read_manifest(&dir).unwrap();
+    assert_eq!(m.version, tembed::ckpt::FORMAT_VERSION_DELTA);
+    assert_eq!(m.segments[1].source_gen, 0);
+    assert_eq!(m.segments[1].path, "gen-0/sp-00001.seg");
+    assert!(dir.join("gen-0").exists(), "referenced chain root was GC'd");
+    assert!(
+        !dir.join("gen-1").exists(),
+        "unreferenced interior chain link survived the whole run"
+    );
     let stats = server.shutdown();
     assert!(stats.queries >= (CLIENTS * ITERS) as u64, "lost queries: {stats:?}");
     assert!(stats.connections >= CLIENTS as u64);
